@@ -1,0 +1,95 @@
+//! E6 ablation: what each task-graph optimizer pass buys (paper §2.3's
+//! "eliminate, merge and re-organize" claims, priced individually).
+//!
+//! Workload: the two-task pipeline (vector add -> reduction) whose
+//! intermediate should never visit the host, plus a 4-stage chain.
+//! Reported per optimizer config: action counts, transferred bytes and
+//! steady-state wall time.
+
+use std::rc::Rc;
+
+use jacc::api::*;
+use jacc::bench::{fmt_secs, Harness, Table};
+use jacc::coordinator::lowering::action_histogram;
+
+fn pipeline(dev: &Rc<DeviceContext>, config: OptimizerConfig, stages: usize) -> anyhow::Result<TaskGraph> {
+    let m = dev.runtime.manifest();
+    let n = m.find("pipe_vecadd", "pallas", "scaled")?.inputs[0].shape[0];
+    let x: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
+    let mut g = TaskGraph::new().with_profile("scaled");
+    g.optimizer = config;
+    let mut prev: Option<TaskId> = None;
+    for s in 0..stages {
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+        if s + 1 < stages {
+            t = t.discard_output();
+        }
+        let first = match prev {
+            Some(p) => Param::output("x", p, 0),
+            None => Param::f32_slice("x", &x),
+        };
+        t.set_parameters(vec![first, Param::f32_slice("y", &x)]);
+        prev = Some(g.execute_task_on(t, dev)?);
+    }
+    // Final reduction.
+    let mut r = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    r.set_parameters(vec![Param::output("z", prev.unwrap(), 0)]);
+    g.execute_task_on(r, dev)?;
+    Ok(g)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let h = Harness::new(1, 3, 3);
+    let configs: Vec<(&str, OptimizerConfig)> = vec![
+        ("none (naive)", OptimizerConfig::disabled()),
+        ("compile_hoist only", OptimizerConfig::only("compile_hoist")),
+        ("transfer_elim only", OptimizerConfig::only("transfer_elimination")),
+        ("dead_copy only", OptimizerConfig::only("dead_copy_elimination")),
+        ("copyin_hoist only", OptimizerConfig::only("copyin_hoist")),
+        ("barrier_prune only", OptimizerConfig::only("barrier_prune")),
+        ("ALL passes", OptimizerConfig::default()),
+    ];
+
+    for stages in [2usize, 4] {
+        println!("== optimizer ablation: {stages}-stage vecadd chain + reduce ==");
+        let mut t = Table::new(&[
+            "config", "actions", "copy_in", "copy_out", "h2d bytes", "d2h bytes", "steady/iter",
+        ]);
+        let mut naive_time = None;
+        let mut all_time = None;
+        for (label, config) in &configs {
+            let g = pipeline(&dev, config.clone(), stages)?;
+            let actions = g.optimized_actions()?;
+            let hist = action_histogram(&actions);
+            let rep = g.execute_with_report()?; // warm compile
+            let steady = h.run(label, || {
+                g.execute().expect("exec");
+            });
+            if *label == "none (naive)" {
+                naive_time = Some(steady.per_iter());
+            }
+            if *label == "ALL passes" {
+                all_time = Some(steady.per_iter());
+            }
+            t.row(vec![
+                label.to_string(),
+                actions.len().to_string(),
+                hist.get("copy_in").copied().unwrap_or(0).to_string(),
+                hist.get("copy_out").copied().unwrap_or(0).to_string(),
+                rep.h2d_bytes.to_string(),
+                rep.d2h_bytes.to_string(),
+                fmt_secs(steady.per_iter()),
+            ]);
+        }
+        println!("{}", t.render());
+        let (naive, all) = (naive_time.unwrap(), all_time.unwrap());
+        println!(
+            "all-passes vs naive: {:.2}x faster steady state\n",
+            naive / all
+        );
+        assert!(all <= naive * 1.10, "optimizer must not slow execution down");
+    }
+    println!("ablation_optimizer OK");
+    Ok(())
+}

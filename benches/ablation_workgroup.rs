@@ -1,0 +1,75 @@
+//! E5 ablation: work-group size sensitivity on the correlation matrix
+//! (paper §4.7 footnote 4: "changing Jacc's work group size, to match
+//! that of APARAPI, severely reduced performance").
+//!
+//! The scheduler resolves the task's requested `Dims(group)` to the
+//! pre-lowered `correlation_wg{16,32,64,128}` artifacts; the sweep
+//! shows how tile choice changes the interpret-mode schedule (smaller
+//! tiles => more grid steps => more loop-carried copies; on real TPU
+//! hardware the same sweep trades VMEM residency against MXU/VPU
+//! utilization).
+
+use jacc::api::*;
+use jacc::bench::{driver, fmt_secs, workloads, Harness, Table};
+
+fn main() -> anyhow::Result<()> {
+    let profile = "scaled".to_string();
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let m = dev.runtime.manifest();
+    let terms = m.find("correlation", "pallas", &profile)?.iteration_space[0];
+    let w = workloads::generate(m, "correlation", &profile)?;
+    let h = Harness::new(1, 3, 1);
+
+    println!("== work-group (tile) sweep: correlation, {terms} terms ==");
+    let mut t = Table::new(&["work-group", "grid steps", "steady/iter"]);
+    let mut results = Vec::new();
+    for wg in [16usize, 32, 64, 128] {
+        let key = format!("correlation_wg{wg}.pallas.{profile}");
+        if m.get(&key).is_err() {
+            continue;
+        }
+        let entry = m.get(&key)?;
+        let mut task = Task::create(
+            "correlation",
+            Dims(entry.iteration_space.clone()),
+            Dims::d2(wg, wg),
+        );
+        let seed = 7000 + wg as u64;
+        task.set_parameters(
+            w.params
+                .iter()
+                .zip(&entry.inputs)
+                .enumerate()
+                .map(|(i, (v, d))| Param::persistent(&d.name, seed + i as u64, 0, v.clone()))
+                .collect(),
+        );
+        let mut g = TaskGraph::new().with_profile(&profile);
+        g.execute_task_on(task, &dev)?;
+        g.execute()?; // warm
+        let r = h.run(&format!("wg{wg}"), || {
+            g.execute().expect("exec");
+        });
+        results.push((wg, entry.thread_groups(), r.per_iter()));
+        t.row(vec![
+            format!("{wg}x{wg}"),
+            entry.thread_groups().to_string(),
+            fmt_secs(r.per_iter()),
+        ]);
+    }
+    println!("{}", t.render());
+    anyhow::ensure!(results.len() >= 3, "need the wg sweep artifacts (make artifacts)");
+    // The paper's observation: the small (APARAPI-like) work group is
+    // slower than the tuned one.
+    let t16 = results.iter().find(|r| r.0 == 16).map(|r| r.2);
+    let best = results.iter().map(|r| r.2).fold(f64::INFINITY, f64::min);
+    if let Some(t16) = t16 {
+        println!(
+            "wg 16 vs best: {:.2}x slower (paper: small work groups severely reduce performance)",
+            t16 / best
+        );
+        assert!(t16 >= best, "16x16 cannot be the best tile");
+    }
+    let _ = driver::ai_of(m, "correlation", &profile);
+    println!("ablation_workgroup OK");
+    Ok(())
+}

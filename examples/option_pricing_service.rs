@@ -1,0 +1,130 @@
+//! End-to-end serving driver (DESIGN.md E7): a Black-Scholes option
+//! pricing service running batched requests through the full stack —
+//! request generation, task-graph execution with persistent
+//! device-resident market data, latency percentiles and throughput.
+//!
+//! The strike/expiry books are uploaded once and stay device-resident
+//! (paper §3.2.1 persistent state); only the fresh price vector crosses
+//! the bus per batch. A `--no-persist` run shows the difference.
+//!
+//! Run with:  cargo run --release --example option_pricing_service -- \
+//!                [--batches 64] [--no-persist]
+
+use std::time::Instant;
+
+use jacc::api::*;
+use jacc::baselines::serial;
+use jacc::substrate::cli::Cli;
+use jacc::substrate::prng::Rng;
+use jacc::substrate::stats;
+
+const BATCH: usize = 65_536; // matches the `serve` artifact shape
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("option_pricing_service", "batched Black-Scholes pricing service")
+        .opt("batches", "48", "number of request batches to serve")
+        .flag("no-persist", "re-upload the whole book every batch")
+        .parse();
+    let batches = args.get_usize("batches")?;
+    let persist = !args.has_flag("no-persist");
+
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let entry = dev.runtime.manifest().find("black_scholes", "pallas", "serve")?;
+    anyhow::ensure!(entry.inputs[0].shape[0] == BATCH);
+
+    // The "book": strikes and expiries are static market data.
+    let mut rng = Rng::new(0x5EED);
+    let strike = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+    let expiry = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 0.1, 5.0));
+
+    println!(
+        "serving {batches} batches of {BATCH} options (persistent book: {persist}) on {}",
+        dev.name()
+    );
+
+    // Warm the JIT cache (first-compile latency is reported separately).
+    let (warm, _) = serve_batch(&dev, &strike, &expiry, &mut rng, persist, 0)?;
+    println!("cold start (incl compile): {:.1} ms", warm * 1e3);
+
+    let mut latencies = Vec::with_capacity(batches);
+    let mut total_priced = 0usize;
+    let t0 = Instant::now();
+    for b in 0..batches {
+        let (secs, check) = serve_batch(&dev, &strike, &expiry, &mut rng, persist, b as u64 + 1)?;
+        latencies.push(secs * 1e3); // ms
+        total_priced += BATCH;
+        if b == 0 {
+            // Validate the first batch against the serial pricer.
+            println!("first-batch validation: max |err| = {check:.2e}");
+            anyhow::ensure!(check < 1e-2, "pricing mismatch vs serial baseline");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("== results");
+    println!("throughput: {:.0} options/s ({batches} batches in {wall:.2} s)",
+        total_priced as f64 / wall);
+    println!(
+        "latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+        stats::percentile_sorted(&latencies, 50.0),
+        stats::percentile_sorted(&latencies, 95.0),
+        stats::percentile_sorted(&latencies, 99.0),
+        latencies.last().unwrap()
+    );
+    let mem = dev.memory.borrow();
+    println!(
+        "memory manager: {} uploads ({} B), {} residency hits ({} B saved)",
+        mem.stats.uploads, mem.stats.upload_bytes, mem.stats.residency_hits,
+        mem.stats.residency_hit_bytes
+    );
+    println!("option_pricing_service OK");
+    Ok(())
+}
+
+/// Serve one batch; returns (latency seconds, max abs error vs serial
+/// on batch 1 / 0.0 otherwise).
+fn serve_batch(
+    dev: &std::rc::Rc<DeviceContext>,
+    strike: &HostValue,
+    expiry: &HostValue,
+    rng: &mut Rng,
+    persist: bool,
+    batch_no: u64,
+) -> anyhow::Result<(f64, f32)> {
+    // Fresh spot prices arrive with every request batch.
+    let price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+
+    let mut task = Task::create("black_scholes", Dims::d1(BATCH), Dims::d1(BATCH.min(131_072)));
+    let strike_param = if persist {
+        Param::persistent("strike", 1, 0, strike.clone())
+    } else {
+        Param::host("strike", strike.clone())
+    };
+    let expiry_param = if persist {
+        Param::persistent("t", 2, 0, expiry.clone())
+    } else {
+        Param::host("t", expiry.clone())
+    };
+    task.set_parameters(vec![Param::host("price", price.clone()), strike_param, expiry_param]);
+
+    let mut g = TaskGraph::new().with_profile("serve");
+    let id = g.execute_task_on(task, dev)?;
+    let t0 = Instant::now();
+    let out = g.execute()?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let mut max_err = 0.0f32;
+    if batch_no == 1 {
+        let outs = out.outputs(id).unwrap();
+        let (want_call, _) = serial::black_scholes(
+            price.as_f32()?,
+            strike.as_f32()?,
+            expiry.as_f32()?,
+        );
+        for (g, w) in outs[0].as_f32()?.iter().zip(&want_call) {
+            max_err = max_err.max((g - w).abs());
+        }
+    }
+    Ok((secs, max_err))
+}

@@ -1,0 +1,161 @@
+"""AOT lowering driver: every BenchSpec -> artifacts/*.hlo.txt + manifest.
+
+This is the build-time half of the "JIT compiler" substitution
+(DESIGN.md §1): JAX traces the L2 function (which lowers the L1 Pallas
+kernel inline, interpret mode), the StableHLO module is converted to an
+``XlaComputation`` and dumped as **HLO text**.
+
+HLO *text* — NOT ``lowered.compile().serialize()`` and NOT the proto —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla = "0.1.6"`` rust crate binds) rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+
+Python runs ONCE, at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--profiles tiny,scaled] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import BenchSpec, all_specs
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered, return_tuple: bool = False) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse).
+
+    ``return_tuple=False`` for single-output kernels keeps the root a
+    plain array so the rust runtime can chain the output PjRtBuffer into
+    the next kernel *on device* (persistent-state path). Multi-output
+    kernels produce a tuple root either way.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: BenchSpec) -> str:
+    lowered = jax.jit(spec.fn).lower(*spec.example_args())
+    return to_hlo_text(lowered, return_tuple=len(spec.outputs) > 1)
+
+
+def manifest_entry(spec: BenchSpec, filename: str, hlo_text: str,
+                   lower_ms: float) -> dict:
+    def io(i):
+        return dict(name=i.name, shape=list(i.shape), dtype=i.dtype,
+                    access=i.access)
+
+    bytes_in = sum(_nbytes(i) for i in spec.inputs)
+    bytes_out = sum(_nbytes(o) for o in spec.outputs)
+    return dict(
+        name=spec.name,
+        variant=spec.variant,
+        profile=spec.profile,
+        key=spec.key,
+        file=filename,
+        inputs=[io(i) for i in spec.inputs],
+        outputs=[io(o) for o in spec.outputs],
+        iteration_space=list(spec.iteration_space),
+        workgroup=list(spec.workgroup),
+        tuple_root=len(spec.outputs) > 1,
+        flops=spec.flops,
+        bytes_in=bytes_in,
+        bytes_out=bytes_out,
+        vmem_bytes=spec.vmem_bytes,
+        hlo_sha256=hashlib.sha256(hlo_text.encode()).hexdigest(),
+        hlo_bytes=len(hlo_text),
+        lower_ms=round(lower_ms, 3),
+    )
+
+
+_ITEM = {"f32": 4, "i32": 4, "u32": 4}
+
+
+def _nbytes(i) -> int:
+    n = 1
+    for d in i.shape:
+        n *= d
+    return n * _ITEM[i.dtype]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profiles", default="tiny,scaled",
+                    help="comma list of tiny,scaled,paper")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    ap.add_argument("--only", default=None,
+                    help="only lower specs whose key contains this substring")
+    args = ap.parse_args(argv)
+
+    profiles = [p.strip() for p in args.profiles.split(",") if p.strip()]
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    # Merge with any existing manifest so profiles can be added
+    # incrementally (e.g. `--profiles paper` later). `--force` only
+    # forces re-lowering of the selected specs; other entries survive.
+    entries: dict[str, dict] = {}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            entries = {e["key"]: e for e in old.get("entries", [])}
+        except (json.JSONDecodeError, KeyError):
+            entries = {}
+
+    specs = all_specs(profiles)
+    if args.only:
+        specs = [s for s in specs if args.only in s.key]
+    n_new = 0
+    for spec in specs:
+        filename = f"{spec.key}.hlo.txt"
+        path = os.path.join(out_dir, filename)
+        if (not args.force and spec.key in entries
+                and os.path.exists(path)):
+            continue
+        t0 = time.perf_counter()
+        hlo = lower_spec(spec)
+        dt = (time.perf_counter() - t0) * 1e3
+        with open(path, "w") as f:
+            f.write(hlo)
+        entries[spec.key] = manifest_entry(spec, filename, hlo, dt)
+        n_new += 1
+        print(f"  lowered {spec.key:40s} {len(hlo)/1024:8.1f} KiB "
+              f"{dt:7.1f} ms", flush=True)
+
+    manifest = dict(
+        version=MANIFEST_VERSION,
+        generated_by="compile.aot",
+        jax_version=jax.__version__,
+        entries=sorted(entries.values(), key=lambda e: e["key"]),
+    )
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {manifest_path} ({len(entries)} entries, "
+          f"{n_new} new)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

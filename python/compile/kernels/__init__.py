@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the eight Jacc benchmarks + pure-jnp oracle.
+
+One module per kernel; ``ref`` holds the oracles / APARAPI variants.
+"""
+
+from . import ref  # noqa: F401
+from .black_scholes import black_scholes  # noqa: F401
+from .common import cdiv, round_up, vmem_bytes  # noqa: F401
+from .conv2d import conv2d  # noqa: F401
+from .correlation import correlation  # noqa: F401
+from .histogram import histogram  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .reduction import reduction  # noqa: F401
+from .spmv import spmv_ell  # noqa: F401
+from .vector_add import vector_add  # noqa: F401

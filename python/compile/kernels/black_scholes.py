@@ -1,0 +1,62 @@
+"""Black-Scholes option pricing Pallas kernel (paper §4.2: 16,777,216
+options, call + put; constants from the APARAPI sample).
+
+Pure elementwise math — the GPU version is a 1-thread-per-option map;
+the TPU version is a VPU map over VMEM blocks. The CND is computed via
+``lax.erf`` (a transcendental the paper's compiler would emit as a
+device intrinsic through its "compiler intrinsics" path, §3.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+from .ref import BS_RISKFREE, BS_VOLATILITY, _INV_SQRT2, erf_approx
+
+DEFAULT_BLOCK = 131_072
+
+
+# LOC:BEGIN black_scholes
+def _kernel(s_ref, k_ref, t_ref, call_ref, put_ref):
+    r = jnp.float32(BS_RISKFREE)
+    v = jnp.float32(BS_VOLATILITY)
+    s, k, t = s_ref[...], k_ref[...], t_ref[...]
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    cnd1 = 0.5 * (1.0 + erf_approx(d1 * _INV_SQRT2))
+    cnd2 = 0.5 * (1.0 + erf_approx(d2 * _INV_SQRT2))
+    exprt = jnp.exp(-r * t)
+    call_ref[...] = s * cnd1 - k * exprt * cnd2
+    put_ref[...] = (k * exprt * (1.0 - cnd2)) - s * (1.0 - cnd1)
+
+
+# LOC:END black_scholes
+def black_scholes(price, strike, t, *, block: int = DEFAULT_BLOCK):
+    """Price European call+put for f32 arrays (price, strike, expiry).
+
+    Returns ``(call, put)``.
+    """
+    n = price.shape[0]
+    block = min(block, n)
+    if n % block != 0:
+        pad = cdiv(n, block) * block - n
+        args = [jnp.pad(a, (0, pad), constant_values=1.0)
+                for a in (price, strike, t)]
+        call, put = black_scholes(*args, block=block)
+        return call[:n], put[:n]
+    grid = n // block
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+    )(price, strike, t)

@@ -1,0 +1,60 @@
+"""Shared helpers for the L1 Pallas kernels.
+
+Every kernel in this package is written against the TPU mental model the
+paper's CUDA kernels used threadblocks for (see DESIGN.md
+"Hardware-Adaptation"): the iteration space is divided into *thread
+groups* (paper Fig. 2), which map 1:1 onto Pallas grid steps over
+VMEM-resident blocks described by ``BlockSpec``.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowering turns the
+kernel into plain HLO (a fori_loop over the grid) that any backend runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True everywhere: see module docstring.
+INTERPRET = True
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division — grid sizing for a blocked iteration space."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the next multiple of ``b`` (padding helper)."""
+    return cdiv(a, b) * b
+
+
+def pallas_call(kernel, **kwargs):
+    """``pl.pallas_call`` pinned to interpret mode (single switch point)."""
+    return pl.pallas_call(kernel, interpret=INTERPRET, **kwargs)
+
+
+def vmem_bytes(*shaped) -> int:
+    """Analytic VMEM footprint of a set of blocks (shape, dtype) pairs.
+
+    Used by ``aot.py`` to record the per-kernel VMEM estimate in the
+    artifact manifest (interpret mode gives no hardware numbers).
+    """
+    total = 0
+    for shape, dtype in shaped:
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n * jnp.dtype(dtype).itemsize
+    return total
+
+
+def block_grid(n: int, block: int) -> tuple[int, int]:
+    """(padded_n, grid) for a 1-D iteration space of ``n`` points in
+    groups of ``block`` threads — the paper's ``Dims(n)/Dims(BLOCK)``."""
+    g = cdiv(n, block)
+    return g * block, g

@@ -1,0 +1,66 @@
+"""Histogram Pallas kernel (paper §4.2: 16,777,216 values -> 256 bins).
+
+CUDA histogramming leans on per-block shared-memory atomics with a final
+global merge. The adaptation here keeps the whole bin vector (256 x i32 =
+1 KiB) resident as a persistent output block and has each grid step
+scatter-add its block's counts into it; a real-TPU deployment would use
+the one-hot/iota-compare reduction instead of scatter (VPU friendly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+DEFAULT_BLOCK = 65_536
+DEFAULT_BINS = 256
+
+
+# LOC:BEGIN histogram
+def _kernel(v_ref, o_ref, *, bins: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    v = jnp.clip(v_ref[...], 0, bins - 1)
+    # Scatter-add of +1s (lowers to HLO scatter): the CPU-friendly
+    # analog of the GPU's shared-memory atomicAdd. A TPU deployment
+    # would instead use the one-hot/iota-compare reduction (VPU
+    # friendly); see DESIGN.md §Hardware-Adaptation.
+    counts = jnp.zeros((bins,), jnp.int32).at[v].add(jnp.int32(1))
+    o_ref[...] += counts
+
+
+# LOC:END histogram
+def histogram(values, *, bins: int = DEFAULT_BINS, block: int = DEFAULT_BLOCK):
+    """Frequency counts of i32 ``values`` into ``bins`` bins (i32 out).
+
+    Values are clamped to ``[0, bins)`` — identical to ``ref.histogram``
+    and the rust serial baseline.
+    """
+    n = values.shape[0]
+    block = min(block, n)
+    if n % block != 0:
+        pad = cdiv(n, block) * block - n
+        # Pad with -1: clamps to bin 0... that would distort counts, so
+        # pad with an out-of-band sentinel and mask instead.
+        values = jnp.pad(values, (0, pad), constant_values=-1)
+        n = values.shape[0]
+        # Correct for the sentinel lanes after the call: they all land in
+        # bin 0 after clamping, so subtract them back out.
+        out = histogram(values, bins=bins, block=block)
+        return out.at[0].add(jnp.int32(-pad))
+    grid = n // block
+    kern = functools.partial(_kernel, bins=bins)
+    return pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bins,), jnp.int32),
+    )(values)

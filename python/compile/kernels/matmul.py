@@ -1,0 +1,59 @@
+"""Dense matmul Pallas kernel (paper §4.2: 1024x1024 f32).
+
+The CUDA SDK kernel the paper benchmarks tiles A/B into shared memory
+per threadblock. The TPU adaptation is the canonical MXU schedule: a
+3-D grid over (i, j, k) with 128x128 VMEM tiles; the f32 accumulator
+tile persists across the k axis (zero-init at k == 0). 128x128 matches
+the MXU systolic array; ``preferred_element_type`` keeps accumulation in
+f32 so the kernel is bf16-input-ready on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+DEFAULT_TILE = 128
+
+
+# LOC:BEGIN matmul
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+# LOC:END matmul
+def matmul(a, b, *, tile_m: int = DEFAULT_TILE, tile_n: int = DEFAULT_TILE,
+           tile_k: int = DEFAULT_TILE):
+    """``a @ b`` for f32 ``a:[M,K]``, ``b:[K,N]``; M,N,K need not be
+    tile multiples (padded internally)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    tile_m, tile_n, tile_k = min(tile_m, m), min(tile_n, n), min(tile_k, k)
+    pm, pn, pk = (cdiv(m, tile_m) * tile_m, cdiv(n, tile_n) * tile_n,
+                  cdiv(k, tile_k) * tile_k)
+    if (pm, pk) != (m, k):
+        a = jnp.pad(a, ((0, pm - m), (0, pk - k)))
+    if (pk, pn) != (k, n):
+        b = jnp.pad(b, ((0, pk - k), (0, pn - n)))
+    grid = (pm // tile_m, pn // tile_n, pk // tile_k)
+    out = pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+    )(a, b)
+    return out[:m, :n]

@@ -1,0 +1,49 @@
+"""Sum-reduction Pallas kernel (paper §2.1 running example, §4.2).
+
+The paper's Jacc kernel uses an ``@Atomic(op=ADD)`` field so thousands
+of GPU threads can combine partial sums via shared-memory atomics
+(Listing 3). The TPU adaptation replaces the atomic with *sequential
+grid accumulation*: the scalar output block persists across grid steps,
+is zero-initialised at step 0 and accumulated into at every step —
+semantically the same "all groups combine into one cell" pattern without
+needing hardware atomics (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+DEFAULT_BLOCK = 262_144  # 1 MiB f32 input block per step
+
+
+# LOC:BEGIN reduction
+def _kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], dtype=jnp.float32).reshape((1,))
+
+
+# LOC:END reduction
+def reduction(x, *, block: int = DEFAULT_BLOCK):
+    """Sum of a 1-D f32 array, returned as shape ``(1,)``."""
+    n = x.shape[0]
+    block = min(block, n)
+    if n % block != 0:
+        pad = cdiv(n, block) * block - n
+        x = jnp.pad(x, (0, pad))  # zeros do not change the sum
+        n = x.shape[0]
+    grid = n // block
+    return pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        # Same (single) output block for every grid step: the accumulator.
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+    )(x)

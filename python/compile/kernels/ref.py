@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every benchmark kernel (paper §4.2).
+
+These are the correctness ground truth for the Pallas kernels (pytest
+asserts allclose against them) and double as the *APARAPI variant*
+compute graphs: the APARAPI-like baseline runtime (rust
+``baselines::aparapi``) executes artifacts lowered from these functions —
+straightforward "source-to-source" style code with no explicit VMEM
+tiling, mirroring how APARAPI emits plain OpenCL C from bytecode.
+
+The correlation oracle additionally has a ``correlation_swar`` variant
+that counts bits with the SWAR arithmetic trick instead of
+``lax.population_count`` — that is the code a popc-less translator (the
+paper's APARAPI observation, §4.7) would produce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def vector_add(x, y):
+    """Elementwise float add (paper: Vector Addition, 16,777,216 elems)."""
+    return x + y
+
+
+def reduction(x):
+    """Sum reduction to a single f32 (paper: Reduction, Listing 1)."""
+    return jnp.sum(x, dtype=jnp.float32).reshape((1,))
+
+
+def histogram(values, bins: int = 256):
+    """Frequency counts of int32 values into ``bins`` bins.
+
+    Out-of-range values are clamped, matching the serial baseline.
+    """
+    v = jnp.clip(values, 0, bins - 1)
+    return jnp.zeros((bins,), jnp.int32).at[v].add(jnp.int32(1))
+
+
+def matmul(a, b):
+    """Dense f32 matrix multiply (paper: 1024x1024)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def spmv_ell(values, indices, x):
+    """Sparse matrix-vector multiply in ELL (padded) layout.
+
+    ``values``/``indices`` are ``[rows, width]``; padding lanes carry
+    value 0.0 and index 0, so the gather is always in-bounds and padding
+    contributes nothing.
+    """
+    gathered = jnp.take(x, indices, axis=0)  # [rows, width]
+    return jnp.sum(values * gathered, axis=1)
+
+
+def conv2d(image, filt):
+    """2-D convolution of a HxW image with a 5x5 filter, zero padding,
+    'same' output size (paper: 2048x2048 (x) 5x5)."""
+    fh, fw = filt.shape
+    out = lax.conv_general_dilated(
+        image[None, None, :, :],
+        filt[None, None, :, :],
+        window_strides=(1, 1),
+        padding=((fh // 2, fh // 2), (fw // 2, fw // 2)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0, 0]
+
+
+# Black-Scholes constants as in the APARAPI sample the paper benchmarks:
+BS_RISKFREE = 0.02
+BS_VOLATILITY = 0.30
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+def erf_approx(x):
+    """Abramowitz & Stegun 7.1.26 polynomial erf (|err| < 1.5e-7).
+
+    Used instead of ``lax.erf``: jax >= 0.5 lowers erf to the dedicated
+    HLO ``erf`` instruction, which the xla_extension 0.5.1 text parser
+    (the version the rust ``xla`` crate binds) does not know. The
+    polynomial lowers to plain mul/add/exp — and is also what the CUDA
+    SDK Black-Scholes kernel the paper benchmarks actually computes.
+    """
+    a1, a2, a3 = 0.254829592, -0.284496736, 1.421413741
+    a4, a5, p = -1.453152027, 1.061405429, 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = t * (a1 + t * (a2 + t * (a3 + t * (a4 + t * a5))))
+    y = 1.0 - poly * jnp.exp(-ax * ax)
+    return sign * y
+
+
+def _cnd(d):
+    """Cumulative normal distribution via the polynomial erf."""
+    return 0.5 * (1.0 + erf_approx(d * _INV_SQRT2))
+
+
+def black_scholes(price, strike, t):
+    """Black-Scholes call+put pricing (paper: 16,777,216 options).
+
+    Returns (call, put) as a tuple of f32 arrays.
+    """
+    r, v = BS_RISKFREE, BS_VOLATILITY
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(price / strike) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    exprt = jnp.exp(-r * t)
+    call = price * _cnd(d1) - strike * exprt * _cnd(d2)
+    put = strike * exprt * _cnd(-d2) - price * _cnd(-d1)
+    return call, put
+
+
+def correlation(bits_a, bits_b):
+    """Pairwise intersection counts between two banks of bitsets.
+
+    ``bits_*`` are ``[terms, words]`` uint32 (Lucene OpenBitSet
+    "intersection count"); output ``[terms, terms]`` int32 where
+    ``C[i, j] = sum_w popcount(a[i, w] & b[j, w])``.
+    """
+    both = jnp.bitwise_and(bits_a[:, None, :], bits_b[None, :, :])
+    return jnp.sum(lax.population_count(both).astype(jnp.int32), axis=-1)
+
+
+def _popcount_swar(v):
+    """Branch-free SWAR popcount on uint32 — the fallback a translator
+    without a popc intrinsic emits (paper §4.7's APARAPI gap)."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def correlation_swar(bits_a, bits_b):
+    """Correlation matrix using the SWAR popcount (APARAPI variant)."""
+    both = jnp.bitwise_and(bits_a[:, None, :], bits_b[None, :, :])
+    return jnp.sum(_popcount_swar(both).astype(jnp.int32), axis=-1)
+
+
+def pipeline_sum_scaled(x, y, alpha):
+    """Fused two-task pipeline used by the optimizer ablation (E6):
+    task A: z = x + y   (vector add)
+    task B: s = alpha * sum(z)  (reduction, consumes A's output on-device)
+    """
+    z = x + y
+    return (alpha * jnp.sum(z, dtype=jnp.float32)).reshape((1,))

@@ -1,0 +1,57 @@
+"""Sparse matrix-vector multiply Pallas kernel in ELL layout
+(paper §4.2: bcsstk32, 44609x44609, 1,029,655 non-zeros).
+
+The paper notes SpMV's "irregular memory access pattern (presence of
+lookup tables hindering the ahead-of-time balancing)" makes it the one
+benchmark where the GPU loses to multi-threaded CPU. The TPU adaptation
+leans into ahead-of-time balancing: CSR is converted (host-side, rust
+``substrate::sparse``) to ELL — dense ``[rows, width]`` value/index
+planes — so every row does identical vectorisable work and the gather is
+a single ``take`` from a VMEM-resident ``x``.
+
+``x`` (44609 f32 = ~174 KiB) fits comfortably in VMEM, so it is mapped
+as one unblocked operand; rows are blocked.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+DEFAULT_ROW_BLOCK = 2048
+
+
+# LOC:BEGIN spmv
+def _kernel(v_ref, i_ref, x_ref, o_ref):
+    x = x_ref[...]
+    gathered = jnp.take(x, i_ref[...], axis=0)  # [rows_blk, width]
+    o_ref[...] = jnp.sum(v_ref[...] * gathered, axis=1)
+
+
+# LOC:END spmv
+def spmv_ell(values, indices, x, *, row_block: int = DEFAULT_ROW_BLOCK):
+    """``y = A @ x`` with A in ELL: ``values``/``indices`` are
+    ``[rows, width]`` (f32 / i32), padding lanes are (0.0, 0)."""
+    rows, width = values.shape
+    row_block = min(row_block, rows)
+    if rows % row_block != 0:
+        pad = cdiv(rows, row_block) * row_block - rows
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        return spmv_ell(values, indices, x, row_block=row_block)[:rows]
+    grid = rows // row_block
+    n = x.shape[0]
+    return pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((row_block, width), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, width), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # x: VMEM-resident, unblocked
+        ],
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows, ), jnp.float32),
+    )(values, indices, x)

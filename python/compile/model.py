@@ -1,0 +1,328 @@
+"""L2: the benchmark compute graphs, each in two variants.
+
+* ``pallas`` — calls the L1 Pallas kernel (Jacc-generated-code analog).
+* ``ref``    — the pure-jnp oracle (APARAPI source-to-source analog;
+  the correlation ref variant deliberately uses the SWAR popcount).
+
+Each (benchmark, variant, profile) triple is described by a
+:class:`BenchSpec`; ``aot.py`` lowers every spec to an HLO-text artifact
+and records its metadata (shapes, dtypes, access modes, iteration space,
+work-group, FLOPs, byte traffic, VMEM estimate) in the manifest the rust
+runtime consumes.
+
+Profiles
+--------
+``paper``   exact §4.2 sizes;
+``scaled``  ~1/8 elements so the full suite runs in CI time;
+``tiny``    small shapes for rust integration tests;
+``serve``   Black-Scholes batch shape for the serving example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .kernels.common import vmem_bytes
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class IoSpec:
+    """One kernel parameter or result (paper: @Read/@Write annotations)."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str  # "f32" | "i32" | "u32"
+    access: str = "read"  # read | write | readwrite
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """Everything needed to lower + register one artifact."""
+
+    name: str
+    variant: str  # "pallas" | "ref"
+    profile: str
+    fn: Callable
+    inputs: tuple[IoSpec, ...]
+    outputs: tuple[IoSpec, ...]
+    iteration_space: tuple[int, ...]
+    workgroup: tuple[int, ...]
+    flops: int
+    vmem_bytes: int
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}.{self.variant}.{self.profile}"
+
+    def example_args(self) -> list[jax.ShapeDtypeStruct]:
+        dt = {"f32": F32, "i32": I32, "u32": U32}
+        return [jax.ShapeDtypeStruct(i.shape, dt[i.dtype]) for i in self.inputs]
+
+
+# Benchmark sizes per profile (paper §4.2 exact numbers under "paper").
+PROFILES: dict[str, dict] = {
+    "paper": dict(
+        vec_n=16_777_216, red_n=33_554_432, hist_n=16_777_216, bins=256,
+        mm=1024, sp_rows=44_609, sp_width=64, conv_h=2048, conv_w=2048,
+        bs_n=16_777_216, terms=1024, words=512, pipe_n=1_048_576,
+    ),
+    "scaled": dict(
+        vec_n=2_097_152, red_n=4_194_304, hist_n=2_097_152, bins=256,
+        mm=512, sp_rows=44_609, sp_width=64, conv_h=1024, conv_w=1024,
+        bs_n=2_097_152, terms=256, words=512, pipe_n=262_144,
+    ),
+    "tiny": dict(
+        vec_n=4096, red_n=8192, hist_n=4096, bins=256,
+        mm=128, sp_rows=512, sp_width=16, conv_h=64, conv_w=64,
+        bs_n=4096, terms=64, words=32, pipe_n=4096,
+    ),
+}
+
+# Work-group (thread-group) sizes: the paper's BLOCK_SIZE analog per
+# kernel, recorded in the manifest so the rust scheduler can report
+# occupancy and the work-group ablation (E5) can sweep them.
+#
+# TWO SCHEDULES (DESIGN.md §Hardware-Adaptation):
+# * ``TPU_BLOCKS`` — the VMEM-tiled schedule a real TPU deployment
+#   would use (blocks sized to keep the working set inside 16 MiB
+#   VMEM). The ``tiny`` profile and the correlation work-group
+#   ablation artifacts are lowered with these, so the tiled code paths
+#   are exercised end-to-end.
+# * grid-minimal blocks for ``scaled``/``paper``/``serve`` — the
+#   CPU-interpret deployment variants. interpret=True lowers the grid
+#   to an XLA while-loop whose carried buffers are copied every step,
+#   making the cost O(total_bytes x grid); with block == iteration
+#   space the loop collapses and XLA fuses the kernel body.
+TPU_BLOCKS = dict(
+    vector_add=131_072, reduction=262_144, histogram=65_536,
+    matmul=128, spmv=2048, conv2d=128, black_scholes=131_072,
+    correlation=64,
+)
+
+
+def blocks_for(profile: str) -> dict:
+    if profile == "tiny":
+        return TPU_BLOCKS
+    big = 1 << 62  # min() against the problem size => one grid step
+    return dict(
+        vector_add=big, reduction=big, histogram=big, matmul=big,
+        spmv=big, conv2d=big, black_scholes=big,
+        # 64 measured fastest in the E5 work-group sweep
+        # (benches/ablation_workgroup.rs); 128's larger AND/popcount
+        # cube overflows cache.
+        correlation=64,
+    )
+
+
+def _f(shape, name, access="read"):
+    return IoSpec(name, tuple(shape), "f32", access)
+
+
+def _i(shape, name, access="read"):
+    return IoSpec(name, tuple(shape), "i32", access)
+
+
+def _u(shape, name, access="read"):
+    return IoSpec(name, tuple(shape), "u32", access)
+
+
+def _mk(name, variant, profile, fn, inputs, outputs, iter_space, group,
+        flops, vmem):
+    outs = tuple(
+        dataclasses.replace(o, access="write") for o in outputs)
+    return BenchSpec(name, variant, profile, fn, tuple(inputs), outs,
+                     tuple(iter_space), tuple(group), int(flops), int(vmem))
+
+
+def specs_for_profile(profile: str) -> list[BenchSpec]:
+    """All benchmark specs (both variants) for one profile."""
+    p = PROFILES[profile]
+    BLOCKS = blocks_for(profile)
+    out: list[BenchSpec] = []
+
+    # -- vector add ------------------------------------------------------
+    n = p["vec_n"]
+    blk = min(BLOCKS["vector_add"], n)
+    ins = [_f((n,), "x"), _f((n,), "y")]
+    outs = [_f((n,), "out")]
+    out.append(_mk("vector_add", "pallas", profile,
+                   lambda x, y, b=blk: kernels.vector_add(x, y, block=b),
+                   ins, outs, (n,), (blk,), n,
+                   vmem_bytes(((blk,), F32), ((blk,), F32), ((blk,), F32))))
+    out.append(_mk("vector_add", "ref", profile, ref.vector_add,
+                   ins, outs, (n,), (n,), n, 0))
+
+    # -- reduction ---------------------------------------------------------
+    n = p["red_n"]
+    blk = min(BLOCKS["reduction"], n)
+    ins = [_f((n,), "data")]
+    outs = [_f((1,), "result")]
+    out.append(_mk("reduction", "pallas", profile,
+                   lambda x, b=blk: kernels.reduction(x, block=b),
+                   ins, outs, (n,), (blk,), n,
+                   vmem_bytes(((blk,), F32), ((1,), F32))))
+    out.append(_mk("reduction", "ref", profile, ref.reduction,
+                   ins, outs, (n,), (n,), n, 0))
+
+    # -- histogram ---------------------------------------------------------
+    n, bins = p["hist_n"], p["bins"]
+    blk = min(BLOCKS["histogram"], n)
+    ins = [_i((n,), "values")]
+    outs = [_i((bins,), "counts")]
+    out.append(_mk("histogram", "pallas", profile,
+                   lambda v, b=blk, bb=bins: kernels.histogram(
+                       v, bins=bb, block=b),
+                   ins, outs, (n,), (blk,), 2 * n,
+                   vmem_bytes(((blk,), I32), ((bins,), I32))))
+    out.append(_mk("histogram", "ref", profile,
+                   lambda v, bb=bins: ref.histogram(v, bins=bb),
+                   ins, outs, (n,), (n,), 2 * n, 0))
+
+    # -- matmul ------------------------------------------------------------
+    m = p["mm"]
+    t = min(BLOCKS["matmul"], m)
+    ins = [_f((m, m), "a"), _f((m, m), "b")]
+    outs = [_f((m, m), "c")]
+    out.append(_mk("matmul", "pallas", profile,
+                   lambda a, b, tt=t: kernels.matmul(
+                       a, b, tile_m=tt, tile_n=tt, tile_k=tt),
+                   ins, outs, (m, m), (t, t), 2 * m * m * m,
+                   vmem_bytes(((t, t), F32), ((t, t), F32), ((t, t), F32))))
+    out.append(_mk("matmul", "ref", profile, ref.matmul,
+                   ins, outs, (m, m), (m, m), 2 * m * m * m, 0))
+
+    # -- spmv (ELL) ----------------------------------------------------------
+    rows, width = p["sp_rows"], p["sp_width"]
+    rb = min(BLOCKS["spmv"], rows)
+    ins = [_f((rows, width), "values"), _i((rows, width), "indices"),
+           _f((rows,), "x")]
+    outs = [_f((rows,), "y")]
+    out.append(_mk("spmv", "pallas", profile,
+                   lambda v, i, x, b=rb: kernels.spmv_ell(
+                       v, i, x, row_block=b),
+                   ins, outs, (rows,), (rb,), 2 * rows * width,
+                   vmem_bytes(((rb, width), F32), ((rb, width), I32),
+                              ((rows,), F32), ((rb,), F32))))
+    out.append(_mk("spmv", "ref", profile, ref.spmv_ell,
+                   ins, outs, (rows,), (rows,), 2 * rows * width, 0))
+
+    # -- conv2d --------------------------------------------------------------
+    h, w = p["conv_h"], p["conv_w"]
+    rb = min(BLOCKS["conv2d"], h)
+    ins = [_f((h, w), "image"), _f((5, 5), "filter")]
+    outs = [_f((h, w), "out")]
+    out.append(_mk("conv2d", "pallas", profile,
+                   lambda im, f, b=rb: kernels.conv2d(im, f, row_block=b),
+                   ins, outs, (h, w), (rb, w), 2 * h * w * 25,
+                   vmem_bytes(((h + 4, w + 4), F32), ((5, 5), F32),
+                              ((rb, w), F32))))
+    out.append(_mk("conv2d", "ref", profile, ref.conv2d,
+                   ins, outs, (h, w), (h, w), 2 * h * w * 25, 0))
+
+    # -- black-scholes ---------------------------------------------------------
+    n = p["bs_n"]
+    blk = min(BLOCKS["black_scholes"], n)
+    ins = [_f((n,), "price"), _f((n,), "strike"), _f((n,), "t")]
+    outs = [_f((n,), "call"), _f((n,), "put")]
+    out.append(_mk("black_scholes", "pallas", profile,
+                   lambda s, k, t_, b=blk: kernels.black_scholes(
+                       s, k, t_, block=b),
+                   ins, outs, (n,), (blk,), 40 * n,
+                   vmem_bytes(*[((blk,), F32)] * 5)))
+    out.append(_mk("black_scholes", "ref", profile, ref.black_scholes,
+                   ins, outs, (n,), (n,), 40 * n, 0))
+
+    # -- correlation matrix ------------------------------------------------------
+    terms, words = p["terms"], p["words"]
+    tile = min(BLOCKS["correlation"], terms)
+    ins = [_u((terms, words), "bits_a"), _u((terms, words), "bits_b")]
+    outs = [IoSpec("counts", (terms, terms), "i32", "write")]
+    out.append(_mk("correlation", "pallas", profile,
+                   lambda a, b, tt=tile: kernels.correlation(a, b, tile=tt),
+                   ins, outs, (terms, terms), (tile, tile),
+                   3 * terms * terms * words,
+                   vmem_bytes(((tile, words), U32), ((tile, words), U32),
+                              ((tile, tile), I32))))
+    # APARAPI variant: SWAR popcount (no popc intrinsic), untiled.
+    out.append(_mk("correlation", "ref", profile, ref.correlation_swar,
+                   ins, outs, (terms, terms), (terms, terms),
+                   3 * terms * terms * words, 0))
+
+    # -- pipeline stage artifacts (E6 ablation + examples) ------------------------
+    n = p["pipe_n"]
+    blk = min(BLOCKS["vector_add"], n)
+    ins2 = [_f((n,), "x"), _f((n,), "y")]
+    out.append(_mk("pipe_vecadd", "pallas", profile,
+                   lambda x, y, b=blk: kernels.vector_add(x, y, block=b),
+                   ins2, [_f((n,), "z")], (n,), (blk,), n,
+                   vmem_bytes(*[((blk,), F32)] * 3)))
+    rblk = min(BLOCKS["reduction"], n)
+    out.append(_mk("pipe_reduce", "pallas", profile,
+                   lambda z, b=rblk: kernels.reduction(z, block=b),
+                   [_f((n,), "z")], [_f((1,), "sum")], (n,), (rblk,), n,
+                   vmem_bytes(((rblk,), F32), ((1,), F32))))
+    # Fused single-artifact alternative (what XLA fusion can do when the
+    # whole pipeline is one kernel — upper bound for E6).
+    out.append(_mk("pipe_fused", "ref", profile,
+                   lambda x, y, a: ref.pipeline_sum_scaled(x, y, a),
+                   ins2 + [_f((1,), "alpha")], [_f((1,), "out")],
+                   (n,), (n,), 2 * n, 0))
+
+    return out
+
+
+def serving_specs() -> list[BenchSpec]:
+    """Black-Scholes batch artifact for the option-pricing service."""
+    n = 65_536
+    blk = min(blocks_for("serve")["black_scholes"], n)
+    ins = [_f((n,), "price"), _f((n,), "strike"), _f((n,), "t")]
+    outs = [_f((n,), "call"), _f((n,), "put")]
+    return [
+        _mk("black_scholes", "pallas", "serve",
+            lambda s, k, t_, b=blk: kernels.black_scholes(s, k, t_, block=b),
+            ins, outs, (n,), (blk,), 40 * n,
+            vmem_bytes(*[((blk,), F32)] * 5)),
+    ]
+
+
+def workgroup_ablation_specs(profile: str = "scaled") -> list[BenchSpec]:
+    """Correlation-matrix artifacts at several work-group sizes (E5,
+    paper §4.7 footnote 4)."""
+    p = PROFILES[profile]
+    terms, words = p["terms"], p["words"]
+    out = []
+    for tile in (16, 32, 64, 128):
+        if tile > terms:
+            continue
+        ins = [_u((terms, words), "bits_a"), _u((terms, words), "bits_b")]
+        outs = [IoSpec("counts", (terms, terms), "i32", "write")]
+        out.append(_mk(f"correlation_wg{tile}", "pallas", profile,
+                       lambda a, b, tt=tile: kernels.correlation(
+                           a, b, tile=tt),
+                       ins, outs, (terms, terms), (tile, tile),
+                       3 * terms * terms * words,
+                       vmem_bytes(((tile, words), U32), ((tile, words), U32),
+                                  ((tile, tile), I32))))
+    return out
+
+
+def all_specs(profiles: Sequence[str]) -> list[BenchSpec]:
+    out: list[BenchSpec] = []
+    for prof in profiles:
+        out.extend(specs_for_profile(prof))
+    out.extend(serving_specs())
+    if "scaled" in profiles:
+        out.extend(workgroup_ablation_specs("scaled"))
+    elif "tiny" in profiles:
+        out.extend(workgroup_ablation_specs("tiny"))
+    return out

@@ -1,0 +1,23 @@
+"""Shared fixtures/helpers for the kernel test-suite."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is run from python/ or the repo root.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0x1ACC)
+
+
+def f32(rng, *shape, lo=-1.0, hi=1.0):
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)

@@ -1,0 +1,211 @@
+"""Per-kernel correctness: Pallas kernel vs pure-jnp oracle.
+
+This is the CORE correctness signal for L1 — every kernel, at several
+block sizes (including ones that do not divide the problem size, which
+exercises the padding paths), plus dtype/value edge cases.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+def f32(*shape, lo=-1.0, hi=1.0):
+    return jnp.asarray(RNG.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- vector add
+@pytest.mark.parametrize("n,block", [
+    (1024, 1024), (1024, 128), (1000, 128), (1, 1), (7, 16), (4096, 4096),
+])
+def test_vector_add(n, block):
+    x, y = f32(n), f32(n)
+    got = kernels.vector_add(x, y, block=block)
+    np.testing.assert_allclose(got, ref.vector_add(x, y), rtol=1e-6)
+
+
+def test_vector_add_negatives_and_zeros():
+    x = jnp.asarray(np.array([0.0, -0.0, 1e30, -1e30, 1e-30], np.float32))
+    y = jnp.asarray(np.array([-0.0, 0.0, 1e30, 1e30, -1e-30], np.float32))
+    np.testing.assert_allclose(
+        kernels.vector_add(x, y, block=4), x + y, rtol=0)
+
+
+# ----------------------------------------------------------------- reduction
+@pytest.mark.parametrize("n,block", [
+    (1024, 256), (1000, 256), (1, 1), (65536, 4096), (3, 7),
+])
+def test_reduction(n, block):
+    x = f32(n)
+    got = kernels.reduction(x, block=block)
+    assert got.shape == (1,)
+    np.testing.assert_allclose(got, ref.reduction(x), rtol=1e-4, atol=1e-4)
+
+
+def test_reduction_constant_array():
+    x = jnp.ones((4096,), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.reduction(x, block=512)[0], 4096.0, rtol=0)
+
+
+# ----------------------------------------------------------------- histogram
+@pytest.mark.parametrize("n,block,bins", [
+    (4096, 512, 256), (4000, 512, 256), (256, 256, 16), (1000, 128, 8),
+])
+def test_histogram(n, block, bins):
+    v = jnp.asarray(RNG.integers(0, bins, size=n).astype(np.int32))
+    got = kernels.histogram(v, bins=bins, block=block)
+    want = ref.histogram(v, bins=bins)
+    np.testing.assert_array_equal(got, want)
+    assert int(got.sum()) == n  # mass conservation
+
+
+def test_histogram_clamps_out_of_range():
+    v = jnp.asarray(np.array([-5, 0, 255, 300, 1000], np.int32))
+    got = kernels.histogram(v, bins=256, block=5)
+    assert int(got[0]) == 2      # -5 clamps to 0, plus the real 0
+    assert int(got[255]) == 3    # 255, 300, 1000 clamp to 255
+    assert int(got.sum()) == 5
+
+
+def test_histogram_padding_correction():
+    # n not a multiple of block: sentinel-correction path must not leak
+    # counts into bin 0.
+    v = jnp.zeros((100,), jnp.int32)
+    got = kernels.histogram(v, bins=256, block=64)
+    assert int(got[0]) == 100
+    assert int(got.sum()) == 100
+
+
+# -------------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,k,n,tile", [
+    (64, 64, 64, 32), (100, 60, 70, 32), (128, 128, 128, 128),
+    (1, 1, 1, 1), (33, 17, 65, 16),
+])
+def test_matmul(m, k, n, tile):
+    a, b = f32(m, k), f32(k, n)
+    got = kernels.matmul(a, b, tile_m=tile, tile_n=tile, tile_k=tile)
+    np.testing.assert_allclose(
+        got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    a = f32(64, 64)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        kernels.matmul(a, eye, tile_m=32, tile_n=32, tile_k=32), a,
+        rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------- spmv
+@pytest.mark.parametrize("rows,width,n,rb", [
+    (128, 8, 100, 32), (100, 16, 64, 32), (512, 4, 512, 512), (7, 3, 5, 4),
+])
+def test_spmv_ell(rows, width, n, rb):
+    vals = f32(rows, width)
+    idx = jnp.asarray(RNG.integers(0, n, size=(rows, width)).astype(np.int32))
+    x = f32(n)
+    got = kernels.spmv_ell(vals, idx, x, row_block=rb)
+    np.testing.assert_allclose(
+        got, ref.spmv_ell(vals, idx, x), rtol=1e-4, atol=1e-5)
+
+
+def test_spmv_padding_lanes_are_neutral():
+    # Padding (value 0.0, index 0) must contribute nothing.
+    vals = jnp.asarray(np.array([[2.0, 0.0], [3.0, 0.0]], np.float32))
+    idx = jnp.asarray(np.array([[1, 0], [0, 0]], np.int32))
+    x = jnp.asarray(np.array([10.0, 20.0], np.float32))
+    got = kernels.spmv_ell(vals, idx, x, row_block=2)
+    np.testing.assert_allclose(got, np.array([40.0, 30.0], np.float32))
+
+
+# -------------------------------------------------------------------- conv2d
+@pytest.mark.parametrize("h,w,rb", [
+    (64, 48, 16), (60, 60, 16), (16, 16, 16), (33, 20, 8),
+])
+def test_conv2d(h, w, rb):
+    img, filt = f32(h, w), f32(5, 5)
+    got = kernels.conv2d(img, filt, row_block=rb)
+    np.testing.assert_allclose(
+        got, ref.conv2d(img, filt), rtol=1e-4, atol=1e-5)
+
+
+def test_conv2d_delta_filter_is_identity():
+    img = f32(32, 32)
+    filt = jnp.zeros((5, 5), jnp.float32).at[2, 2].set(1.0)
+    np.testing.assert_allclose(
+        kernels.conv2d(img, filt, row_block=8), img, rtol=1e-6, atol=1e-7)
+
+
+def test_conv2d_3x3_filter():
+    img, filt = f32(32, 32), f32(3, 3)
+    np.testing.assert_allclose(
+        kernels.conv2d(img, filt, row_block=8), ref.conv2d(img, filt),
+        rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- black-scholes
+@pytest.mark.parametrize("n,block", [(1024, 256), (1000, 256), (64, 64)])
+def test_black_scholes(n, block):
+    s = f32(n, lo=5.0, hi=30.0)
+    k = f32(n, lo=1.0, hi=100.0)
+    t = f32(n, lo=0.25, hi=10.0)
+    call, put = kernels.black_scholes(s, k, t, block=block)
+    c_ref, p_ref = ref.black_scholes(s, k, t)
+    np.testing.assert_allclose(call, c_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(put, p_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_black_scholes_put_call_parity():
+    # C - P = S - K * exp(-rT): a structural invariant of the model.
+    n = 512
+    s = f32(n, lo=5.0, hi=30.0)
+    k = f32(n, lo=5.0, hi=30.0)
+    t = f32(n, lo=0.5, hi=2.0)
+    call, put = kernels.black_scholes(s, k, t, block=128)
+    lhs = call - put
+    rhs = s - k * jnp.exp(-ref.BS_RISKFREE * t)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------- correlation mtx
+@pytest.mark.parametrize("ta,tb,words,tile", [
+    (64, 64, 16, 16), (60, 40, 8, 16), (16, 16, 4, 16), (128, 128, 32, 64),
+])
+def test_correlation(ta, tb, words, tile):
+    a = jnp.asarray(RNG.integers(0, 2**32, size=(ta, words),
+                                 dtype=np.uint64).astype(np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, size=(tb, words),
+                                 dtype=np.uint64).astype(np.uint32))
+    got = kernels.correlation(a, b, tile=tile)
+    np.testing.assert_array_equal(got, ref.correlation(a, b))
+
+
+def test_correlation_swar_matches_popcount():
+    a = jnp.asarray(RNG.integers(0, 2**32, size=(32, 8),
+                                 dtype=np.uint64).astype(np.uint32))
+    np.testing.assert_array_equal(
+        ref.correlation_swar(a, a), ref.correlation(a, a))
+
+
+def test_correlation_self_diagonal_is_popcount():
+    a = jnp.asarray(np.array([[0xFFFFFFFF], [0x0], [0xF0F0F0F0]], np.uint32))
+    got = kernels.correlation(a, a, tile=3)
+    assert [int(got[i, i]) for i in range(3)] == [32, 0, 16]
+
+
+# -------------------------------------------------------------- pipeline ref
+def test_pipeline_matches_composition():
+    x, y = f32(1024), f32(1024)
+    alpha = jnp.asarray(np.array([2.5], np.float32))
+    fused = ref.pipeline_sum_scaled(x, y, alpha)
+    chained = alpha * kernels.reduction(
+        kernels.vector_add(x, y, block=256), block=256)
+    np.testing.assert_allclose(fused, chained, rtol=1e-4)

@@ -1,0 +1,126 @@
+"""Hypothesis property sweeps over the Pallas kernels (shapes, blocks,
+value ranges) — DESIGN.md §6.
+
+Shapes stay small: interpret-mode Pallas executes the grid in Python,
+so each example is O(ms) only at these sizes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+floats = st.floats(min_value=-100.0, max_value=100.0,
+                   allow_nan=False, allow_infinity=False, width=32)
+
+
+@st.composite
+def f32_array(draw, min_n=1, max_n=300):
+    n = draw(st.integers(min_n, max_n))
+    data = draw(st.lists(floats, min_size=n, max_size=n))
+    return jnp.asarray(np.array(data, np.float32))
+
+
+@given(x=f32_array(), block=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_vector_add_any_shape_block(x, block):
+    got = kernels.vector_add(x, x, block=block)
+    np.testing.assert_allclose(got, 2 * x, rtol=1e-6)
+
+
+@given(x=f32_array(), block=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_reduction_any_shape_block(x, block):
+    got = kernels.reduction(x, block=block)
+    np.testing.assert_allclose(got, ref.reduction(x), rtol=1e-3, atol=1e-3)
+
+
+@given(n=st.integers(1, 300), bins=st.sampled_from([8, 16, 256]),
+       block=st.integers(1, 64), data=st.data())
+@settings(**SETTINGS)
+def test_histogram_mass_conservation(n, bins, block, data):
+    vals = data.draw(st.lists(
+        st.integers(-5, 300), min_size=n, max_size=n))
+    v = jnp.asarray(np.array(vals, np.int32))
+    got = kernels.histogram(v, bins=bins, block=block)
+    assert int(got.sum()) == n
+    np.testing.assert_array_equal(got, ref.histogram(v, bins=bins))
+
+
+@given(m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+       tile=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_matmul_any_shape(m, k, n, tile, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    got = kernels.matmul(a, b, tile_m=tile, tile_n=tile, tile_k=tile)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-3, atol=1e-3)
+
+
+@given(rows=st.integers(1, 64), width=st.integers(1, 8),
+       n=st.integers(1, 64), rb=st.sampled_from([4, 16, 64]),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_spmv_any_shape(rows, width, n, rb, seed):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal((rows, width)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, size=(rows, width)).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal((n,)).astype(np.float32))
+    got = kernels.spmv_ell(vals, idx, x, row_block=rb)
+    np.testing.assert_allclose(
+        got, ref.spmv_ell(vals, idx, x), rtol=1e-3, atol=1e-4)
+
+
+@given(h=st.integers(5, 40), w=st.integers(5, 40),
+       rb=st.sampled_from([4, 8, 32]),
+       fdim=st.sampled_from([1, 3, 5]), seed=st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_conv2d_any_shape(h, w, rb, fdim, seed):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.standard_normal((h, w)).astype(np.float32))
+    filt = jnp.asarray(rng.standard_normal((fdim, fdim)).astype(np.float32))
+    got = kernels.conv2d(img, filt, row_block=rb)
+    np.testing.assert_allclose(
+        got, ref.conv2d(img, filt), rtol=1e-3, atol=1e-4)
+
+
+@given(n=st.integers(1, 200), block=st.sampled_from([16, 64]),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_black_scholes_bounds(n, block, seed):
+    """0 <= call <= S and 0 <= put <= K·e^{-rT} (arbitrage bounds)."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.uniform(1.0, 100.0, n).astype(np.float32))
+    k = jnp.asarray(rng.uniform(1.0, 100.0, n).astype(np.float32))
+    t = jnp.asarray(rng.uniform(0.1, 10.0, n).astype(np.float32))
+    call, put = kernels.black_scholes(s, k, t, block=block)
+    c_ref, p_ref = ref.black_scholes(s, k, t)
+    np.testing.assert_allclose(call, c_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(put, p_ref, rtol=1e-3, atol=1e-3)
+    assert bool(jnp.all(call >= -1e-3)) and bool(jnp.all(put >= -1e-3))
+    assert bool(jnp.all(call <= s + 1e-3))
+
+
+@given(ta=st.integers(1, 48), tb=st.integers(1, 48),
+       words=st.integers(1, 8), tile=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_correlation_any_shape(ta, tb, words, tile, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2**32, size=(ta, words),
+                                 dtype=np.uint64).astype(np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, size=(tb, words),
+                                 dtype=np.uint64).astype(np.uint32))
+    got = kernels.correlation(a, b, tile=tile)
+    want = ref.correlation(a, b)
+    np.testing.assert_array_equal(got, want)
+    # Symmetry when a == b.
+    got_aa = kernels.correlation(a, a, tile=tile)
+    np.testing.assert_array_equal(got_aa, np.asarray(got_aa).T)

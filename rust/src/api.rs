@@ -1,0 +1,35 @@
+//! Public facade, named to mirror the paper's Java API (Listings 3–4):
+//!
+//! ```java
+//! DeviceContext gpgpu = Cuda.getDevice(0).createDeviceContext();
+//! Task task = Task.create(Reduction.class, methodName,
+//!                         new Dims(array.length), new Dims(BLOCK_SIZE));
+//! task.setParameters(r, data);
+//! tasks = new NewTaskGraph() {{ executeTaskOn(task, gpgpu); }};
+//! tasks.execute();
+//! ```
+//!
+//! becomes
+//!
+//! ```no_run
+//! use jacc::api::*;
+//! # fn main() -> anyhow::Result<()> {
+//! let gpgpu = Cuda::get_device(0)?.create_device_context()?;
+//! let mut task = Task::create("reduction", Dims::d1(8192), Dims::d1(8192))
+//!     .with_atomic("result", AtomicOp::Add);
+//! task.set_parameters(vec![Param::f32_slice("data", &vec![1.0; 8192])]);
+//! let mut tasks = TaskGraph::new().with_profile("tiny");
+//! let id = tasks.execute_task_on(task, &gpgpu)?;
+//! let outputs = tasks.execute()?;
+//! println!("sum = {}", outputs.single(id)?.as_f32()?[0]);
+//! # Ok(()) }
+//! ```
+
+pub use crate::coordinator::{
+    AtomicDecl, AtomicOp, Dims, MemSpace, ExecutionOptions, ExecutionReport, GraphOutputs, OptimizerConfig,
+    Param, ParamSource, Task, TaskGraph, TaskId,
+};
+pub use crate::memory::{DataId, Record};
+pub use crate::runtime::{
+    Access, Cuda, DeviceContext, DeviceHandle, HostValue, Manifest, PjrtRuntime,
+};

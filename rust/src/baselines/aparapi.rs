@@ -1,0 +1,140 @@
+//! APARAPI-like offload runtime (paper §4.7, Fig. 5a).
+//!
+//! AMD's APARAPI translates Java bytecode to OpenCL C source and runs
+//! it eagerly, kernel by kernel. The comparator here mirrors its
+//! runtime characteristics against Jacc's:
+//!
+//! * **eager per-kernel execution** — no task graph, no cross-kernel
+//!   optimization;
+//! * **every call re-transfers every parameter** (no persistent
+//!   device-resident state);
+//! * **"source-to-source" code** — executes the `ref` artifact variant
+//!   (plain jnp translation, no Pallas BlockSpec tiling; for the
+//!   correlation benchmark it uses the SWAR popcount fallback, the
+//!   paper's explanation for Jacc's win there);
+//! * **fixed work-group of 256** — not tunable by the caller;
+//! * a fast, predictable translate+compile path (APARAPI's ~400 ms
+//!   consistency): one compile per kernel, cached.
+
+use std::time::{Duration, Instant};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::buffer::HostValue;
+use crate::runtime::pjrt::PjrtRuntime;
+
+/// Fixed APARAPI work-group size (not tunable — §4.7).
+pub const APARAPI_WORKGROUP: usize = 256;
+
+/// Timing breakdown of one eager kernel execution.
+#[derive(Debug, Clone, Default)]
+pub struct AparapiReport {
+    pub compile: Duration,
+    pub wall: Duration,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+/// The eager offload runtime.
+pub struct AparapiRuntime {
+    runtime: PjrtRuntime,
+    profile: String,
+}
+
+impl AparapiRuntime {
+    pub fn new(profile: &str) -> anyhow::Result<Self> {
+        Ok(Self {
+            runtime: PjrtRuntime::new(Manifest::load_default()?)?,
+            profile: profile.to_string(),
+        })
+    }
+
+    pub fn with_manifest(manifest: Manifest, profile: &str) -> anyhow::Result<Self> {
+        Ok(Self { runtime: PjrtRuntime::new(manifest)?, profile: profile.to_string() })
+    }
+
+    /// `kernel.execute(range)` analog: upload everything, run the `ref`
+    /// variant, download everything. Returns outputs + timing.
+    pub fn execute(
+        &self,
+        kernel: &str,
+        params: &[HostValue],
+    ) -> anyhow::Result<(Vec<HostValue>, AparapiReport)> {
+        let mut report = AparapiReport::default();
+        let t0 = Instant::now();
+        let (k, fresh) = self.runtime.kernel_for(kernel, "ref", &self.profile)?;
+        if fresh {
+            report.compile = k.compile_time;
+        }
+        // No persistence: every parameter crosses the bus every call.
+        let mut literals = Vec::with_capacity(params.len());
+        for (p, decl) in params.iter().zip(&k.entry.inputs) {
+            p.check_decl(decl)?;
+            report.h2d_bytes += p.nbytes() as u64;
+            literals.push(p.to_literal()?);
+        }
+        let outs = k.run_host(&literals)?;
+        for o in &outs {
+            report.d2h_bytes += o.nbytes() as u64;
+        }
+        report.wall = t0.elapsed();
+        Ok((outs, report))
+    }
+
+    /// Compile-cache statistics (for the Fig. 5a incl/excl split).
+    pub fn compile_stats(&self) -> crate::runtime::pjrt::CompileStats {
+        self.runtime.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<AparapiRuntime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(AparapiRuntime::new("tiny").unwrap())
+    }
+
+    #[test]
+    fn eager_vector_add_runs_ref_variant() {
+        let Some(rt) = runtime() else { return };
+        let n = 4096;
+        let x = HostValue::f32(vec![n], (0..n).map(|i| i as f32).collect());
+        let y = HostValue::f32(vec![n], vec![1.0; n]);
+        let (outs, rep) = rt.execute("vector_add", &[x, y]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].as_f32().unwrap()[5], 6.0);
+        assert!(rep.compile > Duration::ZERO, "first call compiles");
+        assert_eq!(rep.h2d_bytes, 2 * 4 * n as u64);
+        // Second call: compile amortized, transfers NOT.
+        let x2 = HostValue::f32(vec![n], vec![2.0; n]);
+        let y2 = HostValue::f32(vec![n], vec![3.0; n]);
+        let (_, rep2) = rt.execute("vector_add", &[x2, y2]).unwrap();
+        assert_eq!(rep2.compile, Duration::ZERO);
+        assert_eq!(rep2.h2d_bytes, 2 * 4 * n as u64, "re-transfers everything");
+    }
+
+    #[test]
+    fn correlation_uses_swar_variant() {
+        let Some(rt) = runtime() else { return };
+        let (k, _) = rt.runtime.kernel_for("correlation", "ref", "tiny").unwrap();
+        // The ref/tiny correlation artifact is the SWAR fallback: its
+        // HLO must NOT contain the popcnt instruction.
+        let text = std::fs::read_to_string(rt.runtime.manifest().hlo_path(&k.entry)).unwrap();
+        assert!(!text.contains("popcnt"), "APARAPI variant must not use popc");
+        // While the Jacc (pallas) variant does.
+        let (kp, _) = rt.runtime.kernel_for("correlation", "pallas", "tiny").unwrap();
+        let textp = std::fs::read_to_string(rt.runtime.manifest().hlo_path(&kp.entry)).unwrap();
+        assert!(textp.contains("popcnt"), "Jacc variant uses popc");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let bad = HostValue::f32(vec![3], vec![0.0; 3]);
+        assert!(rt.execute("vector_add", &[bad.clone(), bad]).is_err());
+    }
+}

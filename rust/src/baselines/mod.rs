@@ -1,0 +1,8 @@
+//! Baselines the paper evaluates against (§4): serial, multi-threaded
+//! Java ports, OpenMP-style, and the APARAPI-like eager offload
+//! runtime.
+
+pub mod aparapi;
+pub mod mt;
+pub mod openmp;
+pub mod serial;

@@ -1,0 +1,373 @@
+//! Multi-threaded CPU baselines — faithful ports of the paper's Java
+//! implementations (Listings 1–2): fixed thread pool, block
+//! distribution, `CyclicBarrier`, and the f32-bits-in-AtomicInteger CAS
+//! combine. These are the "Java MT" rows of Fig. 4a / Table 5b.
+//!
+//! Every function takes `n_threads` so the Fig. 4a scaling sweep can
+//! run 1..24 threads.
+
+use std::sync::atomic::{AtomicI32, Ordering};
+use std::sync::Arc;
+
+use crate::substrate::atomic_float::AtomicF32;
+use crate::substrate::bitset::TermBank;
+use crate::substrate::sparse::Csr;
+use crate::substrate::threadpool::{parallel_for, parallel_map_reduce, CyclicBarrier, ThreadPool};
+
+use super::serial::black_scholes_one;
+
+// LOC:BEGIN mt_vector_add
+/// Parallel vector addition (block distribution).
+pub fn vector_add(n_threads: usize, x: &[f32], y: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), y.len());
+    let mut out = vec![0.0f32; x.len()];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(n_threads, x.len(), |range| {
+        // SAFETY: ranges from the static block distribution are
+        // disjoint, so each thread writes a private slice.
+        let out = unsafe { out_ptr.slice_mut(range.start, range.len()) };
+        for (o, i) in out.iter_mut().zip(range) {
+            *o = x[i] + y[i];
+        }
+    });
+    out
+}
+// LOC:END mt_vector_add
+
+// LOC:BEGIN mt_reduction
+/// The paper's Listing 1+2, ported: a fixed pool runs one `Reduction`
+/// runnable per thread; each reduces its block, then CAS-combines into
+/// a shared float (bits in an atomic int) and awaits the barrier.
+pub fn reduction(n_threads: usize, data: &[f32]) -> f32 {
+    let pool = ThreadPool::new(n_threads);
+    let barrier = Arc::new(CyclicBarrier::new(n_threads + 1));
+    let result = Arc::new(AtomicF32::new(0.0));
+    let n = data.len();
+    // The pool requires 'static jobs; share the input via Arc like the
+    // Java version shares the array reference.
+    let data: Arc<[f32]> = Arc::from(data);
+    for id in 0..n_threads {
+        let barrier = Arc::clone(&barrier);
+        let result = Arc::clone(&result);
+        let data = Arc::clone(&data);
+        pool.execute(move || {
+            let work = n.div_ceil(n_threads);
+            let start = (id * work).min(n);
+            let end = (start + work).min(n);
+            let mut sum = 0.0f32;
+            for i in start..end {
+                sum += data[i];
+            }
+            // compareAndSet loop on float bits (AtomicInteger trick).
+            result.fetch_add(sum);
+            barrier.wait();
+        });
+    }
+    barrier.wait(); // main thread is the (n_threads+1)-th party
+    pool.wait_idle();
+    result.load()
+}
+// LOC:END mt_reduction
+
+// LOC:BEGIN mt_histogram
+/// Per-thread private bins, merged into shared atomic bins (the Java
+/// version's AtomicIntegerArray merge).
+pub fn histogram(n_threads: usize, values: &[i32], bins: usize) -> Vec<i32> {
+    let shared: Vec<AtomicI32> = (0..bins).map(|_| AtomicI32::new(0)).collect();
+    parallel_for(n_threads, values.len(), |range| {
+        let mut local = vec![0i32; bins];
+        for i in range {
+            let b = (values[i].max(0) as usize).min(bins - 1);
+            local[b] += 1;
+        }
+        for (b, &c) in local.iter().enumerate() {
+            if c != 0 {
+                shared[b].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+    });
+    shared.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+}
+// LOC:END mt_histogram
+
+// LOC:BEGIN mt_matmul
+/// Row-parallel dense matmul (each thread owns a block of rows).
+pub fn matmul(n_threads: usize, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    parallel_for(n_threads, m, |rows| {
+        for i in rows {
+            // SAFETY: each row index i is visited by exactly one thread.
+            let crow = unsafe { c_ptr.slice_mut(i * n, n) };
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    });
+    c
+}
+// LOC:END mt_matmul
+
+// LOC:BEGIN mt_spmv
+/// Row-parallel CSR SpMV.
+pub fn spmv(n_threads: usize, csr: &Csr, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; csr.rows];
+    let y_ptr = SendPtr(y.as_mut_ptr());
+    parallel_for(n_threads, csr.rows, |rows| {
+        for r in rows {
+            let mut acc = 0.0f32;
+            for idx in csr.row_ptr[r]..csr.row_ptr[r + 1] {
+                acc += csr.values[idx] * x[csr.col_idx[idx]];
+            }
+            // SAFETY: row r is written by exactly one thread.
+            unsafe { y_ptr.write(r, acc) };
+        }
+    });
+    y
+}
+// LOC:END mt_spmv
+
+// LOC:BEGIN mt_conv2d
+/// Row-parallel 2-D convolution (zero padding, 'same').
+pub fn conv2d(
+    n_threads: usize,
+    img: &[f32],
+    h: usize,
+    w: usize,
+    filt: &[f32],
+    fh: usize,
+    fw: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; h * w];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let (ch, cw) = (fh as isize / 2, fw as isize / 2);
+    parallel_for(n_threads, h, |rows| {
+        for i in rows {
+            // SAFETY: each output row is owned by one thread.
+            let orow = unsafe { out_ptr.slice_mut(i * w, w) };
+            for (j, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for di in 0..fh as isize {
+                    let ii = i as isize + di - ch;
+                    if ii < 0 || ii >= h as isize {
+                        continue;
+                    }
+                    for dj in 0..fw as isize {
+                        let jj = j as isize + dj - cw;
+                        if jj < 0 || jj >= w as isize {
+                            continue;
+                        }
+                        acc += filt[(di * fw as isize + dj) as usize]
+                            * img[(ii * w as isize + jj) as usize];
+                    }
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+// LOC:END mt_conv2d
+
+// LOC:BEGIN mt_black_scholes
+/// Option-parallel Black-Scholes.
+pub fn black_scholes(
+    n_threads: usize,
+    s: &[f32],
+    k: &[f32],
+    t: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let n = s.len();
+    let mut call = vec![0.0f32; n];
+    let mut put = vec![0.0f32; n];
+    let (cp, pp) = (SendPtr(call.as_mut_ptr()), SendPtr(put.as_mut_ptr()));
+    parallel_for(n_threads, n, |range| {
+        for i in range {
+            let (c, p) = black_scholes_one(s[i], k[i], t[i]);
+            // SAFETY: disjoint indices per thread.
+            unsafe {
+                cp.write(i, c);
+                pp.write(i, p);
+            }
+        }
+    });
+    (call, put)
+}
+// LOC:END mt_black_scholes
+
+// LOC:BEGIN mt_correlation
+/// Term-row-parallel correlation matrix (popcount intersections).
+pub fn correlation(n_threads: usize, bank: &TermBank) -> Vec<i32> {
+    let t = bank.terms;
+    let wpt = bank.words_per_term;
+    let mut out = vec![0i32; t * t];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for(n_threads, t, |rows| {
+        for i in rows {
+            let wi = &bank.words[i * wpt..(i + 1) * wpt];
+            // SAFETY: each output row i is owned by one thread.
+            let orow = unsafe { out_ptr.slice_mut(i * t, t) };
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wj = &bank.words[j * wpt..(j + 1) * wpt];
+                let mut acc = 0u32;
+                for (a, b) in wi.iter().zip(wj) {
+                    acc += (a & b).count_ones();
+                }
+                *o = acc as i32;
+            }
+        }
+    });
+    out
+}
+// LOC:END mt_correlation
+
+/// Sum using per-thread partials combined serially — used by tests to
+/// cross-check the atomic version.
+pub fn reduction_partials(n_threads: usize, data: &[f32]) -> f32 {
+    parallel_map_reduce(n_threads, data.len(), |r| {
+        let mut s = 0.0f32;
+        for i in r {
+            s += data[i];
+        }
+        s
+    })
+    .into_iter()
+    .sum()
+}
+
+/// Raw pointer wrapper so disjoint-range writers can share an output
+/// buffer across scoped threads (the unsafe is contained to provably
+/// non-overlapping slices).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// SAFETY: caller guarantees [offset, offset+len) is written by
+    /// exactly one thread.
+    unsafe fn slice_mut<'a>(&self, offset: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+
+    /// SAFETY: caller guarantees index i is written by exactly one thread.
+    unsafe fn write(&self, i: usize, v: T) {
+        *self.0.add(i) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::substrate::prng::Rng;
+    use crate::substrate::sparse::Coo;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn vector_add_matches_serial() {
+        let mut rng = Rng::new(1);
+        let x = rng.f32_vec(10_001, -1.0, 1.0);
+        let y = rng.f32_vec(10_001, -1.0, 1.0);
+        for nt in [1, 2, 7, 16] {
+            close(&vector_add(nt, &x, &y), &serial::vector_add(&x, &y), 0.0);
+        }
+    }
+
+    #[test]
+    fn reduction_matches_serial_tolerance() {
+        let mut rng = Rng::new(2);
+        let x = rng.f32_vec(100_000, -1.0, 1.0);
+        let want = serial::reduction_f64(&x);
+        for nt in [1, 3, 8] {
+            let got = reduction(nt, &x) as f64;
+            assert!((got - want).abs() < 0.5, "nt={nt}: {got} vs {want}");
+            let got2 = reduction_partials(nt, &x) as f64;
+            assert!((got2 - want).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn histogram_matches_serial() {
+        let mut rng = Rng::new(3);
+        let v = rng.i32_vec(50_000, 256);
+        for nt in [1, 4, 13] {
+            assert_eq!(histogram(nt, &v, 256), serial::histogram(&v, 256));
+        }
+    }
+
+    #[test]
+    fn matmul_matches_serial() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (33, 17, 29);
+        let a = rng.f32_vec(m * k, -1.0, 1.0);
+        let b = rng.f32_vec(k * n, -1.0, 1.0);
+        let want = serial::matmul(&a, &b, m, k, n);
+        for nt in [1, 2, 5] {
+            close(&matmul(nt, &a, &b, m, k, n), &want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn spmv_matches_serial() {
+        let mut rng = Rng::new(5);
+        let mut coo = Coo::new(200, 200);
+        for _ in 0..2000 {
+            let r = rng.below(200) as usize;
+            let c = rng.below(200) as usize;
+            coo.push(r, c, rng.uniform(-1.0, 1.0) as f32).unwrap();
+        }
+        let csr = coo.to_csr();
+        let x = rng.f32_vec(200, -1.0, 1.0);
+        let want = serial::spmv(&csr, &x);
+        for nt in [1, 3, 8] {
+            close(&spmv(nt, &csr, &x), &want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn conv2d_matches_serial() {
+        let mut rng = Rng::new(6);
+        let (h, w) = (37, 23);
+        let img = rng.f32_vec(h * w, -1.0, 1.0);
+        let filt = rng.f32_vec(25, -1.0, 1.0);
+        let want = serial::conv2d(&img, h, w, &filt, 5, 5);
+        for nt in [1, 2, 9] {
+            close(&conv2d(nt, &img, h, w, &filt, 5, 5), &want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn black_scholes_matches_serial() {
+        let mut rng = Rng::new(7);
+        let n = 5000;
+        let s = rng.f32_vec(n, 5.0, 30.0);
+        let k = rng.f32_vec(n, 1.0, 100.0);
+        let t = rng.f32_vec(n, 0.25, 10.0);
+        let (wc, wp) = serial::black_scholes(&s, &k, &t);
+        for nt in [1, 6] {
+            let (c, p) = black_scholes(nt, &s, &k, &t);
+            close(&c, &wc, 0.0);
+            close(&p, &wp, 0.0);
+        }
+    }
+
+    #[test]
+    fn correlation_matches_serial() {
+        let bank = TermBank::random(40, 256, 0.3, 8);
+        let want = serial::correlation(&bank);
+        for nt in [1, 4] {
+            assert_eq!(correlation(nt, &bank), want);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! OpenMP-style baselines (paper §4.4, Fig. 4b).
+//!
+//! The paper implements every benchmark in OpenMP 3.2 to "fold away
+//! possible inefficient Java implementations". The characteristic
+//! differences from the Java-port baselines in `mt.rs`:
+//!
+//! * reductions use per-thread partials combined serially (OpenMP's
+//!   `reduction(+:sum)` clause) instead of CAS-on-float-bits;
+//! * the matmul is the `libatlas` SGEMM stand-in: cache-blocked with a
+//!   packed (transposed) B panel;
+//! * everything else is a `#pragma omp parallel for` static schedule.
+
+use crate::substrate::bitset::TermBank;
+use crate::substrate::sparse::Csr;
+use crate::substrate::threadpool::{parallel_for, parallel_map_reduce};
+
+use super::serial::black_scholes_one;
+
+/// `#pragma omp parallel for` vector addition.
+pub fn vector_add(n_threads: usize, x: &[f32], y: &[f32]) -> Vec<f32> {
+    super::mt::vector_add(n_threads, x, y)
+}
+
+/// `reduction(+:sum)`: per-thread partials, serial combine.
+pub fn reduction(n_threads: usize, data: &[f32]) -> f32 {
+    parallel_map_reduce(n_threads, data.len(), |r| {
+        let mut s = 0.0f32;
+        for i in r {
+            s += data[i];
+        }
+        s
+    })
+    .into_iter()
+    .sum()
+}
+
+/// Per-thread private histograms merged serially (no atomics).
+pub fn histogram(n_threads: usize, values: &[i32], bins: usize) -> Vec<i32> {
+    let partials = parallel_map_reduce(n_threads, values.len(), |range| {
+        let mut local = vec![0i32; bins];
+        for i in range {
+            let b = (values[i].max(0) as usize).min(bins - 1);
+            local[b] += 1;
+        }
+        local
+    });
+    let mut out = vec![0i32; bins];
+    for p in partials {
+        for (o, v) in out.iter_mut().zip(p) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Cache-blocked SGEMM (the libatlas stand-in): BM x BK x BN tiles,
+/// k-panel of B packed per tile to make the inner loop unit-stride.
+pub fn sgemm_blocked(
+    n_threads: usize,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    const BM: usize = 64;
+    const BK: usize = 64;
+    let mut c = vec![0.0f32; m * n];
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    let row_blocks = m.div_ceil(BM);
+    parallel_for(n_threads, row_blocks, |blocks| {
+        for blk in blocks {
+            let i0 = blk * BM;
+            let i1 = (i0 + BM).min(m);
+            for k0 in (0..k).step_by(BK) {
+                let k1 = (k0 + BK).min(k);
+                for i in i0..i1 {
+                    // SAFETY: row-block ownership is disjoint.
+                    let crow = unsafe { c_ptr.slice_mut(i * n, n) };
+                    for kk in k0..k1 {
+                        let aik = a[i * k + kk];
+                        let brow = &b[kk * n..kk * n + n];
+                        for j in 0..n {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// `parallel for` CSR SpMV with static row schedule.
+pub fn spmv(n_threads: usize, csr: &Csr, x: &[f32]) -> Vec<f32> {
+    super::mt::spmv(n_threads, csr, x)
+}
+
+/// `parallel for` convolution.
+pub fn conv2d(
+    n_threads: usize,
+    img: &[f32],
+    h: usize,
+    w: usize,
+    filt: &[f32],
+    fh: usize,
+    fw: usize,
+) -> Vec<f32> {
+    super::mt::conv2d(n_threads, img, h, w, filt, fh, fw)
+}
+
+/// `parallel for` Black-Scholes.
+pub fn black_scholes(
+    n_threads: usize,
+    s: &[f32],
+    k: &[f32],
+    t: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let _ = black_scholes_one; // shared formula lives in serial.rs
+    super::mt::black_scholes(n_threads, s, k, t)
+}
+
+/// `parallel for` correlation matrix.
+pub fn correlation(n_threads: usize, bank: &TermBank) -> Vec<i32> {
+    super::mt::correlation(n_threads, bank)
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// SAFETY: caller guarantees [offset, offset+len) is written by
+    /// exactly one thread.
+    unsafe fn slice_mut<'a>(&self, offset: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial;
+    use crate::substrate::prng::Rng;
+
+    #[test]
+    fn sgemm_blocked_matches_serial() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (100, 70, 130);
+        let a = rng.f32_vec(m * k, -1.0, 1.0);
+        let b = rng.f32_vec(k * n, -1.0, 1.0);
+        let want = serial::matmul(&a, &b, m, k, n);
+        for nt in [1, 4] {
+            let got = sgemm_blocked(nt, &a, &b, m, k, n);
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_partials_match() {
+        let mut rng = Rng::new(12);
+        let x = rng.f32_vec(40_000, -1.0, 1.0);
+        let want = serial::reduction_f64(&x);
+        for nt in [1, 2, 12] {
+            assert!(((reduction(nt, &x) as f64) - want).abs() < 0.2);
+        }
+    }
+
+    #[test]
+    fn histogram_merge_matches() {
+        let mut rng = Rng::new(13);
+        let v = rng.i32_vec(30_000, 64);
+        assert_eq!(histogram(5, &v, 64), serial::histogram(&v, 64));
+    }
+}

@@ -1,0 +1,217 @@
+//! Serial CPU baselines — the paper's "serial Java implementations"
+//! (§4, comparison 1) and the correctness ground truth for the rust
+//! integration tests.
+//!
+//! The Black-Scholes CND uses the same Abramowitz-Stegun polynomial as
+//! the L1 kernel so results agree to f32 rounding.
+
+use crate::substrate::bitset::TermBank;
+use crate::substrate::sparse::Csr;
+
+/// Elementwise vector addition.
+pub fn vector_add(x: &[f32], y: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a + b).collect()
+}
+
+/// Sum reduction (f32 accumulator, like the Java baseline).
+pub fn reduction(x: &[f32]) -> f32 {
+    let mut sum = 0.0f32;
+    for v in x {
+        sum += v;
+    }
+    sum
+}
+
+/// Sum reduction with an f64 accumulator (tolerance reference for the
+/// large-input comparisons).
+pub fn reduction_f64(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v as f64).sum()
+}
+
+/// Histogram with clamping (matches `ref.histogram`).
+pub fn histogram(values: &[i32], bins: usize) -> Vec<i32> {
+    let mut out = vec![0i32; bins];
+    for &v in values {
+        let b = (v.max(0) as usize).min(bins - 1);
+        out[b] += 1;
+    }
+    out
+}
+
+/// Dense row-major matmul: c[m,n] = a[m,k] @ b[k,n] (naive i-k-j).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// CSR SpMV (delegates to the sparse substrate).
+pub fn spmv(csr: &Csr, x: &[f32]) -> Vec<f32> {
+    csr.spmv(x)
+}
+
+/// 'same' 2-D convolution with zero padding, row-major image.
+pub fn conv2d(img: &[f32], h: usize, w: usize, filt: &[f32], fh: usize, fw: usize) -> Vec<f32> {
+    assert_eq!(img.len(), h * w);
+    assert_eq!(filt.len(), fh * fw);
+    let (ch, cw) = (fh as isize / 2, fw as isize / 2);
+    let mut out = vec![0.0f32; h * w];
+    for i in 0..h as isize {
+        for j in 0..w as isize {
+            let mut acc = 0.0f32;
+            for di in 0..fh as isize {
+                for dj in 0..fw as isize {
+                    let ii = i + di - ch;
+                    let jj = j + dj - cw;
+                    if ii >= 0 && ii < h as isize && jj >= 0 && jj < w as isize {
+                        acc += filt[(di * fw as isize + dj) as usize]
+                            * img[(ii * w as isize + jj) as usize];
+                    }
+                }
+            }
+            out[(i * w as isize + j) as usize] = acc;
+        }
+    }
+    out
+}
+
+/// Black-Scholes constants (match python/compile/kernels/ref.py).
+pub const BS_RISKFREE: f32 = 0.02;
+pub const BS_VOLATILITY: f32 = 0.30;
+
+const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+/// Abramowitz & Stegun 7.1.26 erf — bit-comparable to the L1 kernel.
+pub fn erf_approx(x: f32) -> f32 {
+    let (a1, a2, a3) = (0.254829592f32, -0.284496736f32, 1.421413741f32);
+    let (a4, a5, p) = (-1.453152027f32, 1.061405429f32, 0.3275911f32);
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + p * ax);
+    let poly = t * (a1 + t * (a2 + t * (a3 + t * (a4 + t * a5))));
+    sign * (1.0 - poly * (-ax * ax).exp())
+}
+
+fn cnd(d: f32) -> f32 {
+    0.5 * (1.0 + erf_approx(d * INV_SQRT2))
+}
+
+/// European call + put prices for one option.
+pub fn black_scholes_one(s: f32, k: f32, t: f32) -> (f32, f32) {
+    let (r, v) = (BS_RISKFREE, BS_VOLATILITY);
+    let sqrt_t = t.sqrt();
+    let d1 = ((s / k).ln() + (r + 0.5 * v * v) * t) / (v * sqrt_t);
+    let d2 = d1 - v * sqrt_t;
+    let exprt = (-r * t).exp();
+    let call = s * cnd(d1) - k * exprt * cnd(d2);
+    let put = k * exprt * (1.0 - cnd(d2)) - s * (1.0 - cnd(d1));
+    (call, put)
+}
+
+/// Vectorized serial Black-Scholes.
+pub fn black_scholes(s: &[f32], k: &[f32], t: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut call = Vec::with_capacity(s.len());
+    let mut put = Vec::with_capacity(s.len());
+    for i in 0..s.len() {
+        let (c, p) = black_scholes_one(s[i], k[i], t[i]);
+        call.push(c);
+        put.push(p);
+    }
+    (call, put)
+}
+
+/// Correlation matrix (popcount intersection counts) — delegates to the
+/// bitset substrate.
+pub fn correlation(bank: &TermBank) -> Vec<i32> {
+    bank.correlation_matrix()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Rng;
+    use crate::substrate::sparse::Coo;
+
+    #[test]
+    fn vector_add_basic() {
+        assert_eq!(vector_add(&[1.0, 2.0], &[3.0, 4.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn reduction_matches_f64_for_small() {
+        let mut rng = Rng::new(1);
+        let x = rng.f32_vec(1000, -1.0, 1.0);
+        let s32 = reduction(&x) as f64;
+        let s64 = reduction_f64(&x);
+        assert!((s32 - s64).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let h = histogram(&[-5, 0, 3, 3, 100], 4);
+        assert_eq!(h, vec![2, 0, 0, 3]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let c = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn conv2d_delta_identity() {
+        let mut rng = Rng::new(2);
+        let img = rng.f32_vec(25, -1.0, 1.0);
+        let mut filt = vec![0.0f32; 9];
+        filt[4] = 1.0;
+        let out = conv2d(&img, 5, 5, &filt, 3, 3);
+        assert_eq!(out, img);
+    }
+
+    #[test]
+    fn conv2d_edges_zero_padded() {
+        let img = vec![1.0f32; 9]; // 3x3 ones
+        let filt = vec![1.0f32; 9]; // 3x3 ones
+        let out = conv2d(&img, 3, 3, &filt, 3, 3);
+        assert_eq!(out[4], 9.0); // center sees all 9
+        assert_eq!(out[0], 4.0); // corner sees 4
+    }
+
+    #[test]
+    fn black_scholes_put_call_parity() {
+        let (c, p) = black_scholes_one(25.0, 20.0, 2.0);
+        let parity = c - p;
+        let expect = 25.0 - 20.0 * (-BS_RISKFREE * 2.0).exp();
+        assert!((parity - expect).abs() < 1e-3, "{parity} vs {expect}");
+        assert!(c > 0.0 && p > 0.0);
+    }
+
+    #[test]
+    fn spmv_delegates() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 2.0).unwrap();
+        coo.push(1, 1, 3.0).unwrap();
+        let csr = coo.to_csr();
+        assert_eq!(spmv(&csr, &[1.0, 1.0]), vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Shared bench drivers: one place that knows how to run each
+//! benchmark through every implementation (serial, MT, OpenMP-style,
+//! Jacc task graph) so the paper-table benches and examples stay thin.
+
+use std::rc::Rc;
+
+use crate::api::*;
+use crate::baselines::{mt, openmp, serial};
+
+use super::workloads::Workload;
+
+/// One serial-baseline iteration.
+pub fn run_serial(name: &str, w: &Workload) {
+    match name {
+        "vector_add" => {
+            std::hint::black_box(serial::vector_add(
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+            ));
+        }
+        "reduction" => {
+            std::hint::black_box(serial::reduction(w.params[0].as_f32().unwrap()));
+        }
+        "histogram" => {
+            std::hint::black_box(serial::histogram(w.params[0].as_i32().unwrap(), 256));
+        }
+        "matmul" => {
+            let (m, k) = (w.params[0].shape()[0], w.params[0].shape()[1]);
+            let n = w.params[1].shape()[1];
+            std::hint::black_box(serial::matmul(
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+                m,
+                k,
+                n,
+            ));
+        }
+        "spmv" => {
+            std::hint::black_box(serial::spmv(
+                w.csr.as_ref().unwrap(),
+                w.params[2].as_f32().unwrap(),
+            ));
+        }
+        "conv2d" => {
+            let s = w.params[0].shape();
+            std::hint::black_box(serial::conv2d(
+                w.params[0].as_f32().unwrap(),
+                s[0],
+                s[1],
+                w.params[1].as_f32().unwrap(),
+                5,
+                5,
+            ));
+        }
+        "black_scholes" => {
+            std::hint::black_box(serial::black_scholes(
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+                w.params[2].as_f32().unwrap(),
+            ));
+        }
+        "correlation" => {
+            std::hint::black_box(serial::correlation(w.bank.as_ref().unwrap()));
+        }
+        other => panic!("no serial baseline for {other}"),
+    }
+}
+
+/// One multi-threaded (Java-port) iteration.
+pub fn run_mt(threads: usize, name: &str, w: &Workload) {
+    match name {
+        "vector_add" => {
+            std::hint::black_box(mt::vector_add(
+                threads,
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+            ));
+        }
+        "reduction" => {
+            std::hint::black_box(mt::reduction(threads, w.params[0].as_f32().unwrap()));
+        }
+        "histogram" => {
+            std::hint::black_box(mt::histogram(threads, w.params[0].as_i32().unwrap(), 256));
+        }
+        "matmul" => {
+            let (m, k) = (w.params[0].shape()[0], w.params[0].shape()[1]);
+            let n = w.params[1].shape()[1];
+            std::hint::black_box(mt::matmul(
+                threads,
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+                m,
+                k,
+                n,
+            ));
+        }
+        "spmv" => {
+            std::hint::black_box(mt::spmv(
+                threads,
+                w.csr.as_ref().unwrap(),
+                w.params[2].as_f32().unwrap(),
+            ));
+        }
+        "conv2d" => {
+            let s = w.params[0].shape();
+            std::hint::black_box(mt::conv2d(
+                threads,
+                w.params[0].as_f32().unwrap(),
+                s[0],
+                s[1],
+                w.params[1].as_f32().unwrap(),
+                5,
+                5,
+            ));
+        }
+        "black_scholes" => {
+            std::hint::black_box(mt::black_scholes(
+                threads,
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+                w.params[2].as_f32().unwrap(),
+            ));
+        }
+        "correlation" => {
+            std::hint::black_box(mt::correlation(threads, w.bank.as_ref().unwrap()));
+        }
+        other => panic!("no MT baseline for {other}"),
+    }
+}
+
+/// One OpenMP-style iteration (blocked SGEMM for matmul, partials
+/// reductions, no atomics).
+pub fn run_openmp(threads: usize, name: &str, w: &Workload) {
+    match name {
+        "matmul" => {
+            let (m, k) = (w.params[0].shape()[0], w.params[0].shape()[1]);
+            let n = w.params[1].shape()[1];
+            std::hint::black_box(openmp::sgemm_blocked(
+                threads,
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+                m,
+                k,
+                n,
+            ));
+        }
+        "reduction" => {
+            std::hint::black_box(openmp::reduction(threads, w.params[0].as_f32().unwrap()));
+        }
+        "histogram" => {
+            std::hint::black_box(openmp::histogram(threads, w.params[0].as_i32().unwrap(), 256));
+        }
+        other => run_mt(threads, other, w),
+    }
+}
+
+/// Build a single-task graph with persistent (device-resident)
+/// parameters — the paper's §4.3 measurement: N kernel iterations with
+/// one transfer each way.
+pub fn build_graph_persistent(
+    dev: &Rc<DeviceContext>,
+    name: &str,
+    profile: &str,
+    variant: &str,
+    w: &Workload,
+) -> anyhow::Result<(TaskGraph, TaskId)> {
+    let entry = dev.runtime.manifest().find(name, variant, profile)?;
+    let mut task = Task::create(
+        name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .with_variant(variant);
+    let seed = name
+        .bytes()
+        .fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64))
+        .wrapping_add(if variant == "ref" { 1 << 40 } else { 0 });
+    task.set_parameters(
+        w.params
+            .iter()
+            .zip(&entry.inputs)
+            .enumerate()
+            .map(|(i, (v, d))| Param::persistent(&d.name, seed * 16 + i as u64, 0, v.clone()))
+            .collect(),
+    );
+    let mut g = TaskGraph::new().with_profile(profile);
+    let id = g.execute_task_on(task, dev)?;
+    Ok((g, id))
+}
+
+/// Arithmetic intensity of a benchmark's artifact (FLOP/byte).
+pub fn ai_of(manifest: &Manifest, name: &str, profile: &str) -> f64 {
+    manifest
+        .find(name, "pallas", profile)
+        .map(|e| e.flops as f64 / (e.bytes_in + e.bytes_out).max(1) as f64)
+        .unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads;
+
+    #[test]
+    fn drivers_run_every_benchmark() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        for name in workloads::BENCHMARKS {
+            let w = workloads::generate(&m, name, "tiny").unwrap();
+            run_serial(name, &w);
+            run_mt(2, name, &w);
+            run_openmp(2, name, &w);
+            assert!(ai_of(&m, name, "tiny") > 0.0);
+        }
+    }
+}

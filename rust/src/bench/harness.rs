@@ -1,0 +1,134 @@
+//! Benchmark harness (criterion replacement): warmup + timed samples +
+//! robust statistics. Iteration counts follow the paper's §4.2 when the
+//! `paper` profile is active, scaled down otherwise; every number is an
+//! average over multiple measurement repetitions (paper §4.3: "an
+//! average across a minimum of ten different experiments" — we default
+//! to 10 samples, overridable with `JACC_BENCH_SAMPLES`).
+
+use std::time::Instant;
+
+use crate::substrate::stats::Summary;
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per sample (each sample may run several iterations).
+    pub samples: Vec<f64>,
+    pub iters_per_sample: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Mean seconds per iteration.
+    pub fn per_iter(&self) -> f64 {
+        self.summary.mean / self.iters_per_sample as f64
+    }
+
+    /// Speedup of `baseline` relative to this result (how many times
+    /// faster this is than the baseline).
+    pub fn speedup_over(&self, baseline: &BenchResult) -> f64 {
+        baseline.per_iter() / self.per_iter()
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Harness {
+    pub warmup: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        let samples = std::env::var("JACC_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10);
+        Self { warmup: 2, samples, iters_per_sample: 1 }
+    }
+}
+
+impl Harness {
+    pub fn new(warmup: usize, samples: usize, iters_per_sample: usize) -> Self {
+        Self { warmup, samples, iters_per_sample }
+    }
+
+    /// Fast harness for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 3, iters_per_sample: 1 }
+    }
+
+    /// Measure `f`, which performs ONE iteration of the workload.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: self.iters_per_sample,
+            summary,
+        }
+    }
+}
+
+/// Time a single closure invocation (returns result + seconds).
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let h = Harness::new(1, 5, 3);
+        let mut count = 0u64;
+        let r = h.run("noop", || {
+            count += 1;
+        });
+        // 1 warmup + 5 samples * 3 iters.
+        assert_eq!(count, 1 + 15);
+        assert_eq!(r.samples.len(), 5);
+        assert_eq!(r.iters_per_sample, 3);
+        assert!(r.per_iter() >= 0.0);
+    }
+
+    #[test]
+    fn speedup_math() {
+        let slow = BenchResult {
+            name: "slow".into(),
+            samples: vec![0.2; 3],
+            iters_per_sample: 1,
+            summary: Summary::of(&[0.2; 3]),
+        };
+        let fast = BenchResult {
+            name: "fast".into(),
+            samples: vec![0.05; 3],
+            iters_per_sample: 1,
+            summary: Summary::of(&[0.05; 3]),
+        };
+        assert!((fast.speedup_over(&slow) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark support: harness (criterion replacement), workload
+//! generators, table rendering, and the LoC accounting for Table 5b.
+
+pub mod driver;
+pub mod harness;
+pub mod loc;
+pub mod table;
+pub mod workloads;
+
+pub use harness::{time_once, BenchResult, Harness};
+pub use table::{fmt_secs, fmt_x, Table};

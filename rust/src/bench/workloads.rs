@@ -1,0 +1,209 @@
+//! Workload generators for the eight benchmarks (paper §4.2 inputs).
+//!
+//! Sizes come from the artifact manifest (so rust inputs always match
+//! the AOT shapes); values are deterministic from fixed seeds so every
+//! bench run and the python oracle see the same data distribution.
+
+use anyhow::Context;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::buffer::HostValue;
+use crate::substrate::bitset::TermBank;
+use crate::substrate::mm::{synthetic_symmetric, SyntheticSpec};
+use crate::substrate::prng::Rng;
+use crate::substrate::sparse::{Csr, Ell};
+
+/// Paper §4.2 iteration counts per benchmark.
+pub fn paper_iterations(name: &str) -> usize {
+    match name {
+        "vector_add" => 300,
+        "reduction" => 500,
+        "histogram" => 400,
+        "matmul" => 50,
+        "spmv" => 1400,
+        "conv2d" => 300,
+        "black_scholes" => 300,
+        "correlation" => 1,
+        _ => 10,
+    }
+}
+
+/// Iterations used per profile (scaled ~10x down off-paper).
+pub fn iterations(name: &str, profile: &str) -> usize {
+    match profile {
+        "paper" => paper_iterations(name),
+        "scaled" => (paper_iterations(name) / 10).max(1),
+        _ => 3,
+    }
+}
+
+/// The eight benchmark names in Table 5b order.
+pub const BENCHMARKS: &[&str] = &[
+    "vector_add",
+    "matmul",
+    "conv2d",
+    "reduction",
+    "histogram",
+    "spmv",
+    "black_scholes",
+    "correlation",
+];
+
+/// Generated inputs for one benchmark at one profile.
+pub struct Workload {
+    pub name: String,
+    /// Kernel parameters in manifest input order.
+    pub params: Vec<HostValue>,
+    /// CSR view (spmv only) for the CPU baselines.
+    pub csr: Option<Csr>,
+    /// Term bank (correlation only) for the CPU baselines.
+    pub bank: Option<TermBank>,
+}
+
+fn shape_of(manifest: &Manifest, name: &str, profile: &str, input: usize) -> anyhow::Result<Vec<usize>> {
+    Ok(manifest
+        .find(name, "pallas", profile)
+        .with_context(|| format!("{name}.{profile} in manifest"))?
+        .inputs[input]
+        .shape
+        .clone())
+}
+
+/// Build the workload for `name` at `profile`.
+pub fn generate(manifest: &Manifest, name: &str, profile: &str) -> anyhow::Result<Workload> {
+    let mut rng = Rng::new(0x1ACC_0000 ^ seed_of(name));
+    let params = match name {
+        "vector_add" | "pipe_vecadd" => {
+            let n = shape_of(manifest, name, profile, 0)?[0];
+            vec![
+                HostValue::f32(vec![n], rng.f32_vec(n, -1.0, 1.0)),
+                HostValue::f32(vec![n], rng.f32_vec(n, -1.0, 1.0)),
+            ]
+        }
+        "reduction" => {
+            let n = shape_of(manifest, name, profile, 0)?[0];
+            vec![HostValue::f32(vec![n], rng.f32_vec(n, -1.0, 1.0))]
+        }
+        "histogram" => {
+            let n = shape_of(manifest, name, profile, 0)?[0];
+            vec![HostValue::i32(vec![n], rng.i32_vec(n, 256))]
+        }
+        "matmul" => {
+            let s = shape_of(manifest, name, profile, 0)?;
+            let (m, k) = (s[0], s[1]);
+            let n = shape_of(manifest, name, profile, 1)?[1];
+            vec![
+                HostValue::f32(vec![m, k], rng.f32_vec(m * k, -1.0, 1.0)),
+                HostValue::f32(vec![k, n], rng.f32_vec(k * n, -1.0, 1.0)),
+            ]
+        }
+        "spmv" => {
+            let s = shape_of(manifest, name, profile, 0)?;
+            let (rows, width) = (s[0], s[1]);
+            let spec = if rows >= 44_609 { SyntheticSpec::bcsstk32() } else { SyntheticSpec::tiny() };
+            anyhow::ensure!(spec.n == rows, "manifest rows {rows} != synthetic {}", spec.n);
+            let coo = synthetic_symmetric(&spec);
+            let csr = coo.to_csr();
+            let ell: Ell = csr.to_ell(width).context("ELL width from manifest")?;
+            let x = rng.f32_vec(rows, -1.0, 1.0);
+            let params = vec![
+                HostValue::f32(vec![rows, width], ell.values.clone()),
+                HostValue::i32(vec![rows, width], ell.indices.clone()),
+                HostValue::f32(vec![rows], x),
+            ];
+            return Ok(Workload { name: name.into(), params, csr: Some(csr), bank: None });
+        }
+        "conv2d" => {
+            let s = shape_of(manifest, name, profile, 0)?;
+            let (h, w) = (s[0], s[1]);
+            vec![
+                HostValue::f32(vec![h, w], rng.f32_vec(h * w, -1.0, 1.0)),
+                HostValue::f32(vec![5, 5], rng.f32_vec(25, -1.0, 1.0)),
+            ]
+        }
+        "black_scholes" => {
+            let n = shape_of(manifest, name, profile, 0)?[0];
+            vec![
+                HostValue::f32(vec![n], rng.f32_vec(n, 5.0, 30.0)),
+                HostValue::f32(vec![n], rng.f32_vec(n, 1.0, 100.0)),
+                HostValue::f32(vec![n], rng.f32_vec(n, 0.25, 10.0)),
+            ]
+        }
+        "correlation" => {
+            let s = shape_of(manifest, name, profile, 0)?;
+            let (terms, words) = (s[0], s[1]);
+            let bank = TermBank::random(terms, words * 32, 0.25, 0xD0C5);
+            let hv = HostValue::u32(vec![terms, words], bank.words.clone());
+            let params = vec![hv.clone(), hv];
+            return Ok(Workload { name: name.into(), params, csr: None, bank: Some(bank) });
+        }
+        other => anyhow::bail!("no workload generator for {other}"),
+    };
+    Ok(Workload { name: name.into(), params, csr: None, bank: None })
+}
+
+fn seed_of(name: &str) -> u64 {
+    name.bytes().fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        dir.join("manifest.json").exists().then(|| Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn all_benchmarks_generate_tiny_workloads_matching_manifest() {
+        let Some(m) = manifest() else { return };
+        for name in BENCHMARKS {
+            let w = generate(&m, name, "tiny").unwrap();
+            let entry = m.find(name, "pallas", "tiny").unwrap();
+            assert_eq!(w.params.len(), entry.inputs.len(), "{name}");
+            for (p, decl) in w.params.iter().zip(&entry.inputs) {
+                p.check_decl(decl).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn workloads_are_deterministic() {
+        let Some(m) = manifest() else { return };
+        let a = generate(&m, "vector_add", "tiny").unwrap();
+        let b = generate(&m, "vector_add", "tiny").unwrap();
+        assert_eq!(a.params[0], b.params[0]);
+    }
+
+    #[test]
+    fn spmv_carries_consistent_csr() {
+        let Some(m) = manifest() else { return };
+        let w = generate(&m, "spmv", "tiny").unwrap();
+        let csr = w.csr.as_ref().unwrap();
+        // ELL(params) SpMV == CSR SpMV on the same x.
+        let x = w.params[2].as_f32().unwrap();
+        let rows = csr.rows;
+        let width = w.params[0].shape()[1];
+        let ell = Ell {
+            rows,
+            cols: csr.cols,
+            width,
+            values: w.params[0].as_f32().unwrap().to_vec(),
+            indices: w.params[1].as_i32().unwrap().to_vec(),
+        };
+        let a = ell.spmv(x);
+        let b = csr.spmv(x);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn iteration_counts() {
+        assert_eq!(paper_iterations("spmv"), 1400);
+        assert_eq!(iterations("spmv", "paper"), 1400);
+        assert_eq!(iterations("spmv", "scaled"), 140);
+        assert_eq!(iterations("correlation", "scaled"), 1);
+    }
+}

@@ -1,0 +1,355 @@
+//! The executor: walks the (optimized) action stream and drives the
+//! device (paper §2.3 "During execution, the runtime system simply
+//! traverses the optimized task graph and executes each node it
+//! encounters").
+//!
+//! Responsibilities:
+//! * compile-on-first-use through the device's PJRT compile cache,
+//! * H2D uploads (host params, schema-projected composite fields,
+//!   persistent-data residency via the memory manager),
+//! * kernel launches on device-resident buffers,
+//! * D2H downloads staged for consumers and surfaced in the results,
+//! * the atomic-graph guarantee: when `run` returns, every kept output
+//!   is host-visible.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+use xla::PjRtBuffer;
+
+
+use crate::runtime::buffer::HostValue;
+use crate::runtime::pjrt::CompiledKernel;
+
+use super::graph::{GraphOutputs, TaskGraph};
+use super::lowering::{Action, BufId, CopySource};
+use super::scheduler;
+use super::task::{ParamSource, TaskId};
+
+/// Execution knobs.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutionOptions {
+    /// Include per-action timing in the report (small overhead).
+    pub detailed_timing: bool,
+}
+
+/// What one graph execution did — the benches' raw material.
+#[derive(Debug, Default)]
+pub struct ExecutionReport {
+    pub outputs: GraphOutputs,
+    pub wall: Duration,
+    /// Time spent in fresh compilations (0 on warm caches) — the
+    /// incl/excl-compile split of Fig. 5a.
+    pub compile: Duration,
+    pub h2d: Duration,
+    pub d2h: Duration,
+    pub launch: Duration,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub actions_executed: usize,
+    pub fresh_compiles: usize,
+    /// Uploads skipped because the memory manager had the data
+    /// resident (persistent state, §3.2.1).
+    pub residency_hits: u64,
+}
+
+impl ExecutionReport {
+    /// Wall time minus compilation — the paper's "exclusive of JIT
+    /// compilation times" metric (§4.3).
+    pub fn wall_excl_compile(&self) -> Duration {
+        self.wall.saturating_sub(self.compile)
+    }
+}
+
+/// Walks actions for one graph execution.
+pub struct Executor<'g> {
+    graph: &'g TaskGraph,
+    #[allow(dead_code)]
+    opts: ExecutionOptions,
+    /// Compiled kernels by artifact key (compiles are deduplicated by
+    /// key, so many tasks may share one kernel).
+    kernels: HashMap<String, Rc<CompiledKernel>>,
+    /// Task -> artifact key (resolved once per run).
+    task_keys: Vec<String>,
+    bufs: HashMap<BufId, Rc<PjRtBuffer>>,
+    staged: HashMap<(TaskId, usize), HostValue>,
+}
+
+impl<'g> Executor<'g> {
+    pub fn new(graph: &'g TaskGraph, opts: ExecutionOptions) -> Self {
+        Self {
+            graph,
+            opts,
+            kernels: HashMap::new(),
+            task_keys: Vec::new(),
+            bufs: HashMap::new(),
+            staged: HashMap::new(),
+        }
+    }
+
+    /// The compiled kernel a task resolves to (after its Compile ran).
+    fn kernel_of(&self, task: TaskId) -> anyhow::Result<&Rc<CompiledKernel>> {
+        let key = self
+            .task_keys
+            .get(task)
+            .ok_or_else(|| anyhow!("task {task} out of range"))?;
+        self.kernels
+            .get(key)
+            .ok_or_else(|| anyhow!("kernel {key} for task {task} not compiled yet"))
+    }
+
+    pub fn run(&mut self, actions: &[Action]) -> anyhow::Result<ExecutionReport> {
+        // Resolve every task's artifact key up front (the lowering did
+        // the same; this keeps executor lookups O(1) even when compile
+        // actions were deduplicated across tasks).
+        self.task_keys = self
+            .graph
+            .nodes
+            .iter()
+            .map(|node| {
+                scheduler::resolve(node.device.runtime.manifest(), &node.task, &self.graph.profile)
+                    .map(|e| e.key.clone())
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut report = ExecutionReport::default();
+        let t_wall = Instant::now();
+        for action in actions {
+            report.actions_executed += 1;
+            match action {
+                Action::Compile { task, key } => self.do_compile(*task, key, &mut report)?,
+                Action::CopyIn { dest, source } => {
+                    self.do_copy_in(*dest, source, &mut report)?
+                }
+                Action::Launch { task, args, outs, .. } => {
+                    self.do_launch(*task, args, outs, &mut report)?
+                }
+                Action::CopyOut { task, bufs } => self.do_copy_out(*task, bufs, &mut report)?,
+                Action::Barrier => {
+                    // PJRT CPU execution is synchronous through
+                    // `to_literal_sync`; the barrier is a host-side
+                    // sequence point (kept for semantics + metrics).
+                    self.graph.metrics.incr("exec.barriers");
+                }
+            }
+        }
+        report.wall = t_wall.elapsed();
+        Ok(report)
+    }
+
+    fn do_compile(
+        &mut self,
+        task: TaskId,
+        key: &str,
+        report: &mut ExecutionReport,
+    ) -> anyhow::Result<()> {
+        let node = self.graph.node(task);
+        let (kernel, fresh) = node.device.runtime.kernel(key)?;
+        if fresh {
+            report.compile += kernel.compile_time;
+            report.fresh_compiles += 1;
+            self.graph.metrics.incr("exec.compiles");
+        } else {
+            self.graph.metrics.incr("exec.compile_cache_hits");
+        }
+        self.kernels.insert(key.to_string(), kernel);
+        Ok(())
+    }
+
+    /// Resolve the host value a CopyIn uploads.
+    fn resolve_source(&self, source: &CopySource) -> anyhow::Result<ResolvedSource> {
+        match source {
+            CopySource::Param { task, param } => {
+                let node = self.graph.node(*task);
+                let p = node
+                    .task
+                    .params
+                    .get(*param)
+                    .ok_or_else(|| anyhow!("task {task} has no param {param}"))?;
+                match &p.source {
+                    ParamSource::Host(v) => Ok(ResolvedSource::Fresh(v.clone())),
+                    ParamSource::Persistent { id, version, value } => Ok(
+                        ResolvedSource::Persistent {
+                            id: *id,
+                            version: *version,
+                            value: value.clone(),
+                            device_task: *task,
+                        },
+                    ),
+                    other => bail!("param source {other:?} cannot be uploaded directly"),
+                }
+            }
+            CopySource::CompositeField { task, param, field } => {
+                let node = self.graph.node(*task);
+                let kernel = self.kernel_of(*task)?;
+                let ParamSource::Composite(record) = &node.task.params[*param].source else {
+                    bail!("param {param} of task {task} is not composite");
+                };
+                let io = &kernel.entry.inputs[*field];
+                // Build/refresh the schema on demand in the device's
+                // memory manager, then project the single field.
+                let mut mem = node.device.memory.borrow_mut();
+                let schema = mem.schemas.get_or_create(&record.type_name);
+                record.build_schema(schema, &kernel.entry.inputs);
+                let v = record
+                    .get(&io.name)
+                    .ok_or_else(|| anyhow!("record missing field {}", io.name))?;
+                v.check_decl(io)
+                    .with_context(|| format!("composite field {}", io.name))?;
+                Ok(ResolvedSource::Fresh(v.clone()))
+            }
+            CopySource::StagedOutput { task, index } => {
+                let v = self
+                    .staged
+                    .get(&(*task, *index))
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "output {index} of task {task} not staged (naive stream out of order?)"
+                        )
+                    })?
+                    .clone();
+                Ok(ResolvedSource::Fresh(v))
+            }
+        }
+    }
+
+    fn do_copy_in(
+        &mut self,
+        dest: BufId,
+        source: &CopySource,
+        report: &mut ExecutionReport,
+    ) -> anyhow::Result<()> {
+        let resolved = self.resolve_source(source)?;
+        match resolved {
+            ResolvedSource::Fresh(value) => {
+                let node_device = self.device_for_source(source);
+                let t0 = Instant::now();
+                let buf = node_device.runtime.upload(&value)?;
+                report.h2d += t0.elapsed();
+                report.h2d_bytes += value.nbytes() as u64;
+                node_device.memory.borrow_mut().note_upload(value.nbytes() as u64);
+                self.graph.metrics.incr("exec.h2d_transfers");
+                self.bufs.insert(dest, Rc::new(buf));
+            }
+            ResolvedSource::Persistent { id, version, value, device_task } => {
+                let device = Rc::clone(&self.graph.node(device_task).device);
+                let hit = device.memory.borrow_mut().lookup(id, version);
+                if let Some(buf) = hit {
+                    report.residency_hits += 1;
+                    self.graph.metrics.incr("exec.residency_hits");
+                    self.bufs.insert(dest, buf);
+                } else {
+                    let t0 = Instant::now();
+                    let buf = Rc::new(device.runtime.upload(&value)?);
+                    report.h2d += t0.elapsed();
+                    report.h2d_bytes += value.nbytes() as u64;
+                    self.graph.metrics.incr("exec.h2d_transfers");
+                    device.memory.borrow_mut().insert(
+                        id,
+                        version,
+                        value.nbytes() as u64,
+                        Rc::clone(&buf),
+                    );
+                    self.bufs.insert(dest, buf);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn device_for_source(&self, source: &CopySource) -> Rc<crate::runtime::DeviceContext> {
+        let task = match source {
+            CopySource::Param { task, .. }
+            | CopySource::CompositeField { task, .. }
+            | CopySource::StagedOutput { task, .. } => *task,
+        };
+        Rc::clone(&self.graph.node(task).device)
+    }
+
+    fn do_launch(
+        &mut self,
+        task: TaskId,
+        args: &[BufId],
+        outs: &[BufId],
+        report: &mut ExecutionReport,
+    ) -> anyhow::Result<()> {
+        let kernel = Rc::clone(self.kernel_of(task)?);
+        let arg_bufs: Vec<&PjRtBuffer> = args
+            .iter()
+            .map(|b| {
+                self.bufs
+                    .get(b)
+                    .map(|rc| rc.as_ref())
+                    .ok_or_else(|| anyhow!("buffer {b} not materialized before launch"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let t0 = Instant::now();
+        let produced = kernel.run_buffers(&arg_bufs)?;
+        report.launch += t0.elapsed();
+        self.graph.metrics.incr("exec.launches");
+        if produced.len() != outs.len() {
+            bail!(
+                "task {task}: launch produced {} buffers, lowering reserved {}",
+                produced.len(),
+                outs.len()
+            );
+        }
+        for (buf, id) in produced.into_iter().zip(outs) {
+            self.bufs.insert(*id, Rc::new(buf));
+        }
+        Ok(())
+    }
+
+    fn do_copy_out(
+        &mut self,
+        task: TaskId,
+        bufs: &[BufId],
+        report: &mut ExecutionReport,
+    ) -> anyhow::Result<()> {
+        let kernel = Rc::clone(self.kernel_of(task)?);
+        let node = self.graph.node(task);
+        let mut host_outputs = Vec::new();
+        let t0 = Instant::now();
+        for b in bufs {
+            let rc = self
+                .bufs
+                .get(b)
+                .ok_or_else(|| anyhow!("buffer {b} not produced before CopyOut"))?;
+            if kernel.entry.tuple_root {
+                let mut lit = rc.to_literal_sync()?;
+                for part in lit.decompose_tuple()? {
+                    host_outputs.push(HostValue::from_literal(&part)?);
+                }
+            } else if let Some(v) = crate::runtime::pjrt::download_fast(rc)? {
+                // Raw-copy fast path: one copy, no intermediate
+                // literal (9x measured in perf_micro; §Perf).
+                host_outputs.push(v);
+            } else {
+                let lit = rc.to_literal_sync()?;
+                host_outputs.push(HostValue::from_literal(&lit)?);
+            }
+        }
+        report.d2h += t0.elapsed();
+        for v in &host_outputs {
+            report.d2h_bytes += v.nbytes() as u64;
+        }
+        node.device.memory.borrow_mut().note_download(
+            host_outputs.iter().map(|v| v.nbytes() as u64).sum(),
+        );
+        self.graph.metrics.incr("exec.d2h_transfers");
+        for (i, v) in host_outputs.iter().enumerate() {
+            self.staged.insert((task, i), v.clone());
+        }
+        report.outputs.by_task.insert(task, host_outputs);
+        Ok(())
+    }
+}
+
+enum ResolvedSource {
+    Fresh(HostValue),
+    Persistent { id: u64, version: u64, value: HostValue, device_task: TaskId },
+}
+
+// Integration tests for the executor live in rust/tests/ — they need
+// built artifacts and exercise full task graphs end-to-end.

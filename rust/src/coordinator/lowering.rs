@@ -1,0 +1,227 @@
+//! Lowering: task graph -> low-level action stream (paper §2.3).
+//!
+//! "From the provided task graph, the runtime system applies a lowering
+//! process where each task is decomposed into a series of lower-level
+//! tasks. Code compilation, data transfers and synchronization barriers
+//! are examples of these lower-level tasks."
+//!
+//! The **naive** stream produced here is deliberately literal: per task
+//! it compiles, uploads every parameter (staging task-output inputs
+//! through the host!), launches, downloads every output, and syncs.
+//! `coordinator::optimizer` then eliminates / merges / re-organizes —
+//! exactly the separation the paper describes, and the one the E6
+//! ablation measures.
+
+use anyhow::bail;
+
+use super::graph::TaskGraph;
+use super::scheduler;
+use super::task::{ParamSource, TaskId};
+
+/// Logical device-buffer id within one execution.
+pub type BufId = usize;
+
+/// Where a `CopyIn` gets its host bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CopySource {
+    /// The task's own parameter `param` (host or persistent data).
+    Param { task: TaskId, param: usize },
+    /// Field `field` (kernel-input position) of the composite parameter
+    /// `param`, projected through its data schema (§3.2.2).
+    CompositeField { task: TaskId, param: usize, field: usize },
+    /// A previously downloaded output (the naive host round-trip for
+    /// inter-task dataflow; the optimizer rewires these on-device).
+    StagedOutput { task: TaskId, index: usize },
+}
+
+/// One low-level action.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Ensure the kernel for `task` is compiled (lazy-JIT; cache hit is
+    /// a no-op). `key` is the artifact key.
+    Compile { task: TaskId, key: String },
+    /// Host -> device transfer into logical buffer `dest`.
+    CopyIn { dest: BufId, source: CopySource },
+    /// Kernel launch. `args[i]` is the buffer for kernel input i;
+    /// `outs` receives the produced buffers (1 entry when the artifact
+    /// root is a tuple, else one per output).
+    Launch { task: TaskId, key: String, args: Vec<BufId>, outs: Vec<BufId> },
+    /// Device -> host transfer of all of `task`'s outputs (staging them
+    /// for consumers and/or the user-visible results).
+    CopyOut { task: TaskId, bufs: Vec<BufId> },
+    /// Host synchronization point.
+    Barrier,
+}
+
+impl Action {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Action::Compile { .. } => "compile",
+            Action::CopyIn { .. } => "copy_in",
+            Action::Launch { .. } => "launch",
+            Action::CopyOut { .. } => "copy_out",
+            Action::Barrier => "barrier",
+        }
+    }
+}
+
+/// Count actions by kind (tests, ablation reporting).
+pub fn action_histogram(actions: &[Action]) -> std::collections::BTreeMap<&'static str, usize> {
+    let mut h = std::collections::BTreeMap::new();
+    for a in actions {
+        *h.entry(a.kind()).or_insert(0) += 1;
+    }
+    h
+}
+
+/// Naive lowering. Validates every task against the manifest via the
+/// scheduler (iteration space, work-group, arity, dtype/shape of host
+/// params, tuple-root chaining rules).
+pub fn lower(graph: &TaskGraph) -> anyhow::Result<Vec<Action>> {
+    let order = graph.toposort()?;
+    let mut actions = Vec::new();
+    let mut next_buf: BufId = 0;
+    // (task, output index) -> producing launch's BufId (None for
+    // tuple-root producers, which cannot chain on-device).
+    let mut out_bufs: Vec<Vec<Option<BufId>>> = vec![Vec::new(); graph.len()];
+
+    for &tid in &order {
+        let node = graph.node(tid);
+        let manifest = node.device.runtime.manifest();
+        let entry = scheduler::resolve(manifest, &node.task, &graph.profile)?;
+        let key = entry.key.clone();
+
+        // Expand parameters: composites become one kernel input per
+        // accessed field; leaf params map 1:1.
+        let n_inputs = entry.inputs.len();
+        let expanded = expand_params(graph, tid, n_inputs)?;
+
+        actions.push(Action::Compile { task: tid, key: key.clone() });
+
+        let mut args = Vec::with_capacity(n_inputs);
+        for slot in expanded {
+            match slot {
+                ExpandedParam::Fresh(source) => {
+                    let dest = next_buf;
+                    next_buf += 1;
+                    actions.push(Action::CopyIn { dest, source });
+                    args.push(dest);
+                }
+                ExpandedParam::FromTask { producer, index } => {
+                    // Naive host round-trip: re-upload the staged output.
+                    let dest = next_buf;
+                    next_buf += 1;
+                    actions.push(Action::CopyIn {
+                        dest,
+                        source: CopySource::StagedOutput { task: producer, index },
+                    });
+                    args.push(dest);
+                }
+            }
+        }
+
+        // Output buffers.
+        let n_raw = if entry.tuple_root { 1 } else { entry.outputs.len() };
+        let outs: Vec<BufId> = (0..n_raw)
+            .map(|_| {
+                let b = next_buf;
+                next_buf += 1;
+                b
+            })
+            .collect();
+        if entry.tuple_root {
+            out_bufs[tid] = vec![None; entry.outputs.len()];
+        } else {
+            out_bufs[tid] = outs.iter().map(|&b| Some(b)).collect();
+        }
+
+        actions.push(Action::Launch { task: tid, key, args, outs: outs.clone() });
+        actions.push(Action::CopyOut { task: tid, bufs: outs });
+        actions.push(Action::Barrier);
+    }
+    Ok(actions)
+}
+
+enum ExpandedParam {
+    Fresh(CopySource),
+    FromTask { producer: TaskId, index: usize },
+}
+
+fn expand_params(
+    graph: &TaskGraph,
+    tid: TaskId,
+    n_inputs: usize,
+) -> anyhow::Result<Vec<ExpandedParam>> {
+    let node = graph.node(tid);
+    let mut out = Vec::new();
+    for (pi, p) in node.task.params.iter().enumerate() {
+        match &p.source {
+            ParamSource::Host(_) | ParamSource::Persistent { .. } => {
+                out.push(ExpandedParam::Fresh(CopySource::Param { task: tid, param: pi }));
+            }
+            ParamSource::Output { task: dep, index } => {
+                let manifest = graph.node(*dep).device.runtime.manifest();
+                let dep_entry =
+                    scheduler::resolve(manifest, &graph.node(*dep).task, &graph.profile)?;
+                if *index >= dep_entry.outputs.len() {
+                    bail!(
+                        "task {tid} param '{}' wants output {index} of task {dep}, which has {}",
+                        p.name,
+                        dep_entry.outputs.len()
+                    );
+                }
+                out.push(ExpandedParam::FromTask { producer: *dep, index: *index });
+            }
+            ParamSource::Composite(record) => {
+                // One kernel input per accessed field, in kernel order.
+                // The schema itself is built on demand in the device's
+                // memory manager (paper §3.2.2); lowering only matches
+                // kernel input names against the record's fields.
+                let manifest = node.device.runtime.manifest();
+                let entry = scheduler::resolve(manifest, &node.task, &graph.profile)?;
+                for (fi, io) in entry.inputs.iter().enumerate() {
+                    if record.fields.contains_key(&io.name) {
+                        out.push(ExpandedParam::Fresh(CopySource::CompositeField {
+                            task: tid,
+                            param: pi,
+                            field: fi,
+                        }));
+                    } else {
+                        bail!(
+                            "composite '{}' missing field '{}' required by kernel",
+                            record.type_name,
+                            io.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+    if out.len() != n_inputs {
+        let node = graph.node(tid);
+        bail!(
+            "task {tid} ({}) provides {} kernel inputs but the artifact expects {n_inputs}",
+            node.task.kernel,
+            out.len()
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts() {
+        let actions = vec![
+            Action::Barrier,
+            Action::Barrier,
+            Action::Compile { task: 0, key: "k".into() },
+        ];
+        let h = action_histogram(&actions);
+        assert_eq!(h["barrier"], 2);
+        assert_eq!(h["compile"], 1);
+        assert_eq!(h.get("launch"), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! The coordinator — the paper's L3 contribution: tasks, task graphs,
+//! lowering to low-level actions, the action-stream optimizer, the
+//! thread-group scheduler and the executor.
+//!
+//! Pipeline (paper §2.3): `TaskGraph::execute()` =
+//! `lower()` -> `optimize()` -> `Executor::run()`.
+
+pub mod executor;
+pub mod graph;
+pub mod lowering;
+pub mod optimizer;
+pub mod scheduler;
+pub mod task;
+
+pub use executor::{ExecutionOptions, ExecutionReport, Executor};
+pub use graph::{GraphOutputs, TaskGraph, TaskNode};
+pub use lowering::{action_histogram, Action, BufId, CopySource};
+pub use optimizer::{optimize, OptimizerConfig};
+pub use task::{AtomicDecl, AtomicOp, Dims, MemSpace, Param, ParamSource, Task, TaskId};

@@ -1,0 +1,354 @@
+//! The action-stream optimizer (paper §2.3).
+//!
+//! "Once lowered, the runtime system traverses the task graph looking
+//! for opportunities to eliminate, merge and re-organize these nodes."
+//!
+//! Passes, in order:
+//! 1. **compile hoisting** — all compilations move to the front and are
+//!    de-duplicated ("early kernel scheduling": kernels are ready
+//!    before the first byte moves).
+//! 2. **redundant-transfer elimination** — a consumer reading a
+//!    producer's output through the naive host round-trip
+//!    (CopyOut -> CopyIn) is rewired to the producer's device buffer
+//!    when both tasks share a device and the producer's root is not a
+//!    tuple. This is the paper's headline data-movement optimization.
+//! 3. **dead-copy elimination** — CopyOuts of tasks whose outputs are
+//!    neither kept for the host nor (any longer) consumed by a staged
+//!    CopyIn are dropped.
+//! 4. **copy-in hoisting** — host-sourced uploads move before the first
+//!    launch (models H2D/compute overlap; on the synchronous CPU client
+//!    this re-organization is observable in the action order).
+//! 5. **barrier pruning** — interior host syncs collapse into the
+//!    single final barrier the atomic-task-graph semantics require.
+//!
+//! Every pass is individually toggleable so the E6 ablation can price
+//! each one.
+
+use std::collections::{BTreeMap, HashMap};
+
+
+use crate::metrics::Metrics;
+
+use super::graph::TaskGraph;
+use super::lowering::{Action, BufId, CopySource};
+use super::scheduler;
+use super::task::TaskId;
+
+/// Which passes run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OptimizerConfig {
+    pub compile_hoist: bool,
+    pub transfer_elimination: bool,
+    pub dead_copy_elimination: bool,
+    pub copyin_hoist: bool,
+    pub barrier_prune: bool,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        Self {
+            compile_hoist: true,
+            transfer_elimination: true,
+            dead_copy_elimination: true,
+            copyin_hoist: true,
+            barrier_prune: true,
+        }
+    }
+}
+
+impl OptimizerConfig {
+    pub fn disabled() -> Self {
+        Self {
+            compile_hoist: false,
+            transfer_elimination: false,
+            dead_copy_elimination: false,
+            copyin_hoist: false,
+            barrier_prune: false,
+        }
+    }
+
+    /// Enable only one pass (ablation).
+    pub fn only(pass: &str) -> Self {
+        let mut c = Self::disabled();
+        match pass {
+            "compile_hoist" => c.compile_hoist = true,
+            "transfer_elimination" => c.transfer_elimination = true,
+            "dead_copy_elimination" => c.dead_copy_elimination = true,
+            "copyin_hoist" => c.copyin_hoist = true,
+            "barrier_prune" => c.barrier_prune = true,
+            other => panic!("unknown pass {other}"),
+        }
+        c
+    }
+}
+
+/// Run the configured passes.
+pub fn optimize(
+    mut actions: Vec<Action>,
+    graph: &TaskGraph,
+    config: &OptimizerConfig,
+    metrics: &Metrics,
+) -> Vec<Action> {
+    if config.compile_hoist {
+        actions = compile_hoist(actions, metrics);
+    }
+    if config.transfer_elimination {
+        actions = transfer_elimination(actions, graph, metrics);
+    }
+    if config.dead_copy_elimination {
+        actions = dead_copy_elimination(actions, graph, metrics);
+    }
+    if config.copyin_hoist {
+        actions = copyin_hoist(actions, metrics);
+    }
+    if config.barrier_prune {
+        actions = barrier_prune(actions, metrics);
+    }
+    actions
+}
+
+/// Pass 1: move compiles to the front, dropping duplicates by key.
+fn compile_hoist(actions: Vec<Action>, metrics: &Metrics) -> Vec<Action> {
+    let mut compiles: Vec<Action> = Vec::new();
+    let mut seen: BTreeMap<String, ()> = BTreeMap::new();
+    let mut rest: Vec<Action> = Vec::new();
+    for a in actions {
+        match a {
+            Action::Compile { ref key, .. } => {
+                if seen.insert(key.clone(), ()).is_none() {
+                    compiles.push(a);
+                } else {
+                    metrics.incr("opt.compiles_deduped");
+                }
+            }
+            other => rest.push(other),
+        }
+    }
+    metrics.add("opt.compiles_hoisted", compiles.len() as u64);
+    compiles.into_iter().chain(rest).collect()
+}
+
+/// Pass 2: rewire StagedOutput CopyIns to the producer's device buffer.
+fn transfer_elimination(
+    actions: Vec<Action>,
+    graph: &TaskGraph,
+    metrics: &Metrics,
+) -> Vec<Action> {
+    // Producer task -> its launch out buffers (only when rewireable).
+    let mut producer_outs: HashMap<TaskId, Vec<BufId>> = HashMap::new();
+    for a in &actions {
+        if let Action::Launch { task, outs, .. } = a {
+            let node = graph.node(*task);
+            let tuple_root = scheduler::resolve(
+                node.device.runtime.manifest(),
+                &node.task,
+                &graph.profile,
+            )
+            .map(|e| e.tuple_root)
+            .unwrap_or(true);
+            if !tuple_root {
+                producer_outs.insert(*task, outs.clone());
+            }
+        }
+    }
+
+    // dest BufId -> replacement BufId for eliminated CopyIns.
+    let mut replace: HashMap<BufId, BufId> = HashMap::new();
+    let mut out = Vec::with_capacity(actions.len());
+    for a in actions {
+        match a {
+            Action::CopyIn {
+                dest,
+                source: CopySource::StagedOutput { task: producer, index },
+            } => {
+                // Every graph currently executes on a single PJRT
+                // client (CPU exposes one device), so the producer and
+                // consumer always share a device; multi-client support
+                // would compare the tasks' DeviceContexts here and keep
+                // the host round-trip across devices.
+                if let Some(outs) = producer_outs.get(&producer) {
+                    if let Some(&src_buf) = outs.get(index) {
+                        replace.insert(dest, src_buf);
+                        metrics.incr("opt.transfers_eliminated");
+                        continue; // drop the CopyIn entirely
+                    }
+                }
+                out.push(Action::CopyIn {
+                    dest,
+                    source: CopySource::StagedOutput { task: producer, index },
+                });
+            }
+            Action::Launch { task, key, args, outs } => {
+                let args = args
+                    .into_iter()
+                    .map(|b| *replace.get(&b).unwrap_or(&b))
+                    .collect();
+                out.push(Action::Launch { task, key, args, outs });
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Pass 3: drop CopyOuts nobody needs.
+fn dead_copy_elimination(
+    actions: Vec<Action>,
+    graph: &TaskGraph,
+    metrics: &Metrics,
+) -> Vec<Action> {
+    // Which producers are still read through staged host copies?
+    let mut staged_needed: HashMap<TaskId, bool> = HashMap::new();
+    for a in &actions {
+        if let Action::CopyIn { source: CopySource::StagedOutput { task, .. }, .. } = a {
+            staged_needed.insert(*task, true);
+        }
+    }
+    let mut out = Vec::with_capacity(actions.len());
+    for a in actions {
+        if let Action::CopyOut { task, .. } = &a {
+            let keep = graph.node(*task).task.keep_output;
+            let needed = staged_needed.get(task).copied().unwrap_or(false);
+            if !keep && !needed {
+                metrics.incr("opt.copies_eliminated");
+                continue;
+            }
+        }
+        out.push(a);
+    }
+    out
+}
+
+/// Pass 4: hoist host-sourced CopyIns ahead of the first Launch.
+fn copyin_hoist(actions: Vec<Action>, metrics: &Metrics) -> Vec<Action> {
+    let first_launch = actions.iter().position(|a| matches!(a, Action::Launch { .. }));
+    let Some(first_launch) = first_launch else { return actions };
+
+    let mut hoisted: Vec<Action> = Vec::new();
+    let mut rest: Vec<Action> = Vec::new();
+    for (i, a) in actions.into_iter().enumerate() {
+        let is_host_copyin = matches!(
+            &a,
+            Action::CopyIn {
+                source: CopySource::Param { .. } | CopySource::CompositeField { .. },
+                ..
+            }
+        );
+        if is_host_copyin && i > first_launch {
+            metrics.incr("opt.copies_hoisted");
+            hoisted.push(a);
+        } else {
+            rest.push(a);
+        }
+    }
+    if hoisted.is_empty() {
+        return rest;
+    }
+    // Insert hoisted copies just before the first launch (after
+    // compiles and the already-early copies).
+    let insert_at = rest
+        .iter()
+        .position(|a| matches!(a, Action::Launch { .. }))
+        .unwrap_or(rest.len());
+    let mut out = Vec::with_capacity(rest.len() + hoisted.len());
+    out.extend(rest.drain(..insert_at));
+    out.extend(hoisted);
+    out.extend(rest);
+    out
+}
+
+/// Pass 5: one final barrier.
+fn barrier_prune(actions: Vec<Action>, metrics: &Metrics) -> Vec<Action> {
+    let total_barriers = actions.iter().filter(|a| matches!(a, Action::Barrier)).count();
+    if total_barriers <= 1 {
+        return actions;
+    }
+    metrics.add("opt.barriers_pruned", (total_barriers - 1) as u64);
+    let mut out: Vec<Action> =
+        actions.into_iter().filter(|a| !matches!(a, Action::Barrier)).collect();
+    out.push(Action::Barrier);
+    out
+}
+
+/// Convenience: counts per kind after optimization (ablation tables).
+pub fn summarize(actions: &[Action]) -> String {
+    let h = super::lowering::action_histogram(actions);
+    h.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::lowering::Action as A;
+
+    fn metrics() -> Metrics {
+        Metrics::new()
+    }
+
+    #[test]
+    fn compile_hoist_dedupes_and_fronts() {
+        let actions = vec![
+            A::Barrier,
+            A::Compile { task: 0, key: "k1".into() },
+            A::Compile { task: 1, key: "k1".into() },
+            A::Compile { task: 2, key: "k2".into() },
+        ];
+        let m = metrics();
+        let out = compile_hoist(actions, &m);
+        assert!(matches!(out[0], A::Compile { .. }));
+        assert!(matches!(out[1], A::Compile { .. }));
+        assert!(matches!(out[2], A::Barrier));
+        assert_eq!(out.len(), 3);
+        assert_eq!(m.counter("opt.compiles_deduped"), 1);
+    }
+
+    #[test]
+    fn barrier_prune_keeps_last() {
+        let actions = vec![A::Barrier, A::Barrier, A::Barrier];
+        let m = metrics();
+        let out = barrier_prune(actions, &m);
+        assert_eq!(out, vec![A::Barrier]);
+        assert_eq!(m.counter("opt.barriers_pruned"), 2);
+    }
+
+    #[test]
+    fn copyin_hoist_moves_host_copies_before_first_launch() {
+        let actions = vec![
+            A::CopyIn { dest: 0, source: CopySource::Param { task: 0, param: 0 } },
+            A::Launch { task: 0, key: "k".into(), args: vec![0], outs: vec![1] },
+            A::CopyIn { dest: 2, source: CopySource::Param { task: 1, param: 0 } },
+            A::Launch { task: 1, key: "k".into(), args: vec![2], outs: vec![3] },
+        ];
+        let m = metrics();
+        let out = copyin_hoist(actions, &m);
+        assert!(matches!(out[0], A::CopyIn { dest: 0, .. }));
+        assert!(matches!(out[1], A::CopyIn { dest: 2, .. }));
+        assert!(matches!(out[2], A::Launch { .. }));
+        assert_eq!(m.counter("opt.copies_hoisted"), 1);
+    }
+
+    #[test]
+    fn copyin_hoist_never_moves_staged_outputs() {
+        let actions = vec![
+            A::Launch { task: 0, key: "k".into(), args: vec![], outs: vec![0] },
+            A::CopyOut { task: 0, bufs: vec![0] },
+            A::CopyIn { dest: 1, source: CopySource::StagedOutput { task: 0, index: 0 } },
+            A::Launch { task: 1, key: "k".into(), args: vec![1], outs: vec![2] },
+        ];
+        let out = copyin_hoist(actions.clone(), &metrics());
+        assert_eq!(out, actions);
+    }
+
+    #[test]
+    fn only_builds_single_pass_configs() {
+        let c = OptimizerConfig::only("barrier_prune");
+        assert!(c.barrier_prune);
+        assert!(!c.compile_hoist && !c.transfer_elimination);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown pass")]
+    fn only_rejects_unknown() {
+        OptimizerConfig::only("nope");
+    }
+}

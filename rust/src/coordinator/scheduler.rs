@@ -1,0 +1,231 @@
+//! Thread-group scheduling (paper §2.2.1, Fig. 2).
+//!
+//! The developer maps each point of the iteration space onto a thread
+//! and groups them (`Dims(global)` / `Dims(group)`). In the AOT world
+//! the group size is baked into the Pallas BlockSpec at lowering time,
+//! so the scheduler's job is to *resolve* a task's requested schedule to
+//! an artifact: exact match on iteration space, and on work-group size —
+//! falling back to `<kernel>_wg<N>` variants when the user tunes the
+//! group (the knob the paper credits for beating APARAPI on the
+//! correlation benchmark, §4.7 fn.4).
+//!
+//! Also provides the block / block-cyclic index maps of Fig. 2 (used by
+//! the CPU baselines and property-tested for exact partitioning).
+
+use anyhow::{anyhow, bail};
+
+use crate::runtime::artifact::{ArtifactEntry, Manifest};
+
+use super::task::Task;
+
+/// Resolve a task to its artifact entry, validating the schedule.
+pub fn resolve<'m>(
+    manifest: &'m Manifest,
+    task: &Task,
+    profile: &str,
+) -> anyhow::Result<&'m ArtifactEntry> {
+    // 1. exact kernel name.
+    let primary = manifest.find(&task.kernel, &task.variant, profile);
+    if let Ok(entry) = primary {
+        if entry.iteration_space != task.global.0 {
+            bail!(
+                "task '{}': iteration space {:?} does not match artifact {:?} \
+                 (profile '{profile}'; re-run `make artifacts` for other sizes)",
+                task.kernel,
+                task.global.0,
+                entry.iteration_space
+            );
+        }
+        if entry.workgroup == task.group.0 {
+            return Ok(entry);
+        }
+        // 2. work-group variant artifacts (`<kernel>_wg<N>`).
+        if task.group.rank() >= 1 {
+            let wg_key =
+                format!("{}_wg{}.{}.{}", task.kernel, task.group.0[0], task.variant, profile);
+            if let Ok(v) = manifest.get(&wg_key) {
+                if v.workgroup == task.group.0 && v.iteration_space == task.global.0 {
+                    return Ok(v);
+                }
+            }
+        }
+        bail!(
+            "task '{}': work-group {:?} not available (artifact has {:?}; \
+             AOT mode needs a pre-lowered variant — add it to \
+             python/compile/model.py::workgroup_ablation_specs)",
+            task.kernel,
+            task.group.0,
+            entry.workgroup
+        );
+    }
+    Err(anyhow!(
+        "kernel '{}' variant '{}' profile '{profile}' not in manifest: {}",
+        task.kernel,
+        task.variant,
+        primary.err().map(|e| e.to_string()).unwrap_or_default()
+    ))
+}
+
+/// Thread groups launched for a (global, group) pair — Fig. 2.
+pub fn thread_groups(global: &[usize], group: &[usize]) -> usize {
+    global
+        .iter()
+        .zip(group)
+        .map(|(&g, &w)| g.div_ceil(w.max(1)))
+        .product()
+}
+
+/// Block mapping: thread `t` of `n_threads` over `n` items gets one
+/// contiguous chunk (the paper's Listing 1 decomposition).
+pub fn block_map(t: usize, n_threads: usize, n: usize) -> std::ops::Range<usize> {
+    let work = n.div_ceil(n_threads);
+    let start = (t * work).min(n);
+    let end = (start + work).min(n);
+    start..end
+}
+
+/// Block-cyclic mapping: thread `t` takes items `t, t+P, t+2P, ...`
+/// (the paper's `array.length / BLOCK_SIZE` re-mapping that "reduces
+/// the number of threads competing to perform atomic operations").
+pub fn block_cyclic_indices(
+    t: usize,
+    n_threads: usize,
+    n: usize,
+) -> impl Iterator<Item = usize> {
+    (t..n).step_by(n_threads.max(1))
+}
+
+/// Human-readable schedule description (`jacc inspect`).
+pub fn describe(entry: &ArtifactEntry) -> String {
+    format!(
+        "{}: iteration space {:?}, work-group {:?} => {} thread groups",
+        entry.key,
+        entry.iteration_space,
+        entry.workgroup,
+        entry.thread_groups()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::Dims;
+    use crate::substrate::proptest::{no_shrink, Runner};
+
+    #[test]
+    fn thread_group_math() {
+        assert_eq!(thread_groups(&[4096], &[1024]), 4);
+        assert_eq!(thread_groups(&[4100], &[1024]), 5);
+        assert_eq!(thread_groups(&[64, 64], &[16, 32]), 4 * 2);
+        assert_eq!(thread_groups(&[1], &[1]), 1);
+    }
+
+    #[test]
+    fn block_map_partitions() {
+        Runner::new("block-map-partitions", 200).run(
+            |rng| (1 + rng.below(64) as usize, 1 + rng.below(10_000) as usize),
+            no_shrink,
+            |&(nt, n)| {
+                let mut covered = 0usize;
+                let mut prev_end = 0usize;
+                for t in 0..nt {
+                    let r = block_map(t, nt, n);
+                    if r.start < r.end {
+                        if r.start != prev_end {
+                            return false;
+                        }
+                        prev_end = r.end;
+                        covered += r.len();
+                    }
+                }
+                covered == n && prev_end == n
+            },
+        );
+    }
+
+    #[test]
+    fn block_cyclic_partitions() {
+        Runner::new("block-cyclic-partitions", 200).run(
+            |rng| (1 + rng.below(32) as usize, rng.below(5_000) as usize),
+            no_shrink,
+            |&(nt, n)| {
+                let mut seen = vec![false; n];
+                for t in 0..nt {
+                    for i in block_cyclic_indices(t, nt, n) {
+                        if seen[i] {
+                            return false;
+                        }
+                        seen[i] = true;
+                    }
+                }
+                seen.iter().all(|&s| s)
+            },
+        );
+    }
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn resolve_exact_match() {
+        let Some(m) = manifest() else { return };
+        let e = m.find("vector_add", "pallas", "tiny").unwrap();
+        let t = Task::create(
+            "vector_add",
+            Dims(e.iteration_space.clone()),
+            Dims(e.workgroup.clone()),
+        );
+        let r = resolve(&m, &t, "tiny").unwrap();
+        assert_eq!(r.key, "vector_add.pallas.tiny");
+    }
+
+    #[test]
+    fn resolve_wrong_iteration_space_fails() {
+        let Some(m) = manifest() else { return };
+        let t = Task::create("vector_add", Dims::d1(123), Dims::d1(123));
+        assert!(resolve(&m, &t, "tiny").is_err());
+    }
+
+    #[test]
+    fn resolve_workgroup_variant() {
+        let Some(m) = manifest() else { return };
+        // The work-group sweep artifacts (correlation_wg*) are lowered
+        // for the scaled profile (python model.workgroup_ablation_specs).
+        if m.get("correlation_wg16.pallas.scaled").is_err() {
+            return;
+        }
+        let e = m.find("correlation", "pallas", "scaled").unwrap();
+        let terms = e.iteration_space[0];
+        let t = Task::create(
+            "correlation",
+            Dims::d2(terms, terms),
+            Dims::d2(16, 16),
+        );
+        let r = resolve(&m, &t, "scaled").unwrap();
+        assert_eq!(r.name, "correlation_wg16");
+    }
+
+    #[test]
+    fn resolve_unavailable_workgroup_fails() {
+        let Some(m) = manifest() else { return };
+        let e = m.find("vector_add", "pallas", "tiny").unwrap();
+        let t = Task::create(
+            "vector_add",
+            Dims(e.iteration_space.clone()),
+            Dims::d1(17),
+        );
+        assert!(resolve(&m, &t, "tiny").is_err());
+    }
+
+    #[test]
+    fn resolve_unknown_kernel_fails() {
+        let Some(m) = manifest() else { return };
+        let t = Task::create("nonexistent", Dims::d1(1), Dims::d1(1));
+        assert!(resolve(&m, &t, "tiny").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Tasks — the paper's first key abstraction (§2).
+//!
+//! "A task encapsulates all the vital information for executing code in
+//! a parallel environment; typically a method reference, a parameter
+//! list and some scheduling metadata." Here the method reference is the
+//! kernel name resolved against the AOT manifest, the parameter list is
+//! [`Param`]s (with `@Read/@Write` access modes and host / persistent /
+//! task-output sources), and the scheduling metadata is the `Dims` pair
+//! of Listing 4 plus optional `@Atomic` declarations.
+
+use crate::memory::{DataId, Record};
+use crate::runtime::artifact::Access;
+use crate::runtime::buffer::HostValue;
+
+/// Iteration-space / thread-group dimensions (paper `new Dims(...)`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dims(pub Vec<usize>);
+
+impl Dims {
+    pub fn d1(x: usize) -> Self {
+        Dims(vec![x])
+    }
+
+    pub fn d2(x: usize, y: usize) -> Self {
+        Dims(vec![x, y])
+    }
+
+    pub fn d3(x: usize, y: usize, z: usize) -> Self {
+        Dims(vec![x, y, z])
+    }
+
+    /// Total points in the iteration space.
+    pub fn total(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// Task identity within a graph (assigned on insertion).
+pub type TaskId = usize;
+
+/// `@Atomic(op = ...)` — Table 1. On the TPU adaptation these map to
+/// sequential-grid block accumulation; the declaration is kept as task
+/// metadata so `jacc inspect` can report which kernels rely on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtomicOp {
+    None,
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AtomicDecl {
+    pub field: String,
+    pub op: AtomicOp,
+}
+
+/// `@Shared` / `@Private` / `@Constant` — Table 1's memory-space
+/// annotations (paper §3.3.1 "Jacc provides the ability to specify
+/// which memory space a variable should reside [in]"). On the TPU
+/// adaptation these guide the BlockSpec memory-space choice (VMEM
+/// blocks vs ANY-space residents vs replicated scalars); the runtime
+/// records them per parameter and validates the constant contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemSpace {
+    /// Device global memory (default).
+    #[default]
+    Global,
+    /// One copy per thread group (CUDA shared mem / VMEM block).
+    Shared,
+    /// One copy per thread (registers / private scratch).
+    Private,
+    /// Read-only broadcast data (constant memory / replicated).
+    Constant,
+}
+
+/// Where a parameter's data comes from.
+#[derive(Debug, Clone)]
+pub enum ParamSource {
+    /// Fresh host data, uploaded for this graph execution.
+    Host(HostValue),
+    /// Host data with a stable identity: stays device-resident across
+    /// graphs (paper §3.2.1 persistent state). `version` bumps force a
+    /// re-upload when the host copy changed.
+    Persistent { id: DataId, version: u64, value: HostValue },
+    /// The `index`-th output of a previous task in the same graph —
+    /// the inter-task dataflow the DAG optimizer exploits (§2.3).
+    Output { task: TaskId, index: usize },
+    /// A composite object, serialized through its data schema
+    /// (used-fields-only, §3.2.2). Expands to one kernel parameter per
+    /// accessed field.
+    Composite(Record),
+}
+
+/// One task parameter with its access annotation.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub access: Access,
+    pub source: ParamSource,
+    pub mem_space: MemSpace,
+}
+
+impl Param {
+    pub fn host(name: &str, value: HostValue) -> Self {
+        Self {
+            name: name.into(),
+            access: Access::Read,
+            source: ParamSource::Host(value),
+            mem_space: MemSpace::Global,
+        }
+    }
+
+    /// `@Read` f32 array parameter from a slice.
+    pub fn f32_slice(name: &str, data: &[f32]) -> Self {
+        Self::host(name, HostValue::f32(vec![data.len()], data.to_vec()))
+    }
+
+    pub fn i32_slice(name: &str, data: &[i32]) -> Self {
+        Self::host(name, HostValue::i32(vec![data.len()], data.to_vec()))
+    }
+
+    pub fn u32_slice(name: &str, data: &[u32]) -> Self {
+        Self::host(name, HostValue::u32(vec![data.len()], data.to_vec()))
+    }
+
+    pub fn persistent(name: &str, id: DataId, version: u64, value: HostValue) -> Self {
+        Self {
+            name: name.into(),
+            access: Access::Read,
+            source: ParamSource::Persistent { id, version, value },
+            mem_space: MemSpace::Global,
+        }
+    }
+
+    /// Consume output `index` of `task` (same graph).
+    pub fn output(name: &str, task: TaskId, index: usize) -> Self {
+        Self {
+            name: name.into(),
+            access: Access::Read,
+            source: ParamSource::Output { task, index },
+            mem_space: MemSpace::Global,
+        }
+    }
+
+    pub fn composite(record: Record) -> Self {
+        Self {
+            name: record.type_name.clone(),
+            access: Access::Read,
+            source: ParamSource::Composite(record),
+            mem_space: MemSpace::Global,
+        }
+    }
+
+    pub fn with_access(mut self, access: Access) -> Self {
+        self.access = access;
+        self
+    }
+
+    /// Annotate the memory space (`@Shared` / `@Private` / `@Constant`,
+    /// Table 1). `Constant` demands read-only access (validated at
+    /// graph insertion).
+    pub fn with_mem_space(mut self, space: MemSpace) -> Self {
+        self.mem_space = space;
+        self
+    }
+
+    /// Bytes this parameter moves host->device if uploaded cold.
+    pub fn nbytes(&self) -> usize {
+        match &self.source {
+            ParamSource::Host(v) | ParamSource::Persistent { value: v, .. } => v.nbytes(),
+            ParamSource::Output { .. } => 0,
+            ParamSource::Composite(r) => r.fields.values().map(|v| v.nbytes()).sum(),
+        }
+    }
+}
+
+/// The task itself (paper Listing 4: `Task.create(class, method,
+/// Dims(global), Dims(group))`).
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Kernel name in the AOT manifest (the "method reference").
+    pub kernel: String,
+    /// Artifact variant: "pallas" (Jacc-generated code) or "ref"
+    /// (the APARAPI-style translation).
+    pub variant: String,
+    pub global: Dims,
+    pub group: Dims,
+    pub params: Vec<Param>,
+    pub atomics: Vec<AtomicDecl>,
+    /// Download this task's outputs to the host at graph end. Setting
+    /// false lets the dead-copy pass drop the D2H transfer when the
+    /// outputs are only consumed on-device.
+    pub keep_output: bool,
+}
+
+impl Task {
+    pub fn create(kernel: &str, global: Dims, group: Dims) -> Self {
+        Self {
+            kernel: kernel.into(),
+            variant: "pallas".into(),
+            global,
+            group,
+            params: Vec::new(),
+            atomics: Vec::new(),
+            keep_output: true,
+        }
+    }
+
+    /// `task.setParameters(...)` (Listing 4 line 9).
+    pub fn set_parameters(&mut self, params: Vec<Param>) -> &mut Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_variant(mut self, variant: &str) -> Self {
+        self.variant = variant.into();
+        self
+    }
+
+    /// Declare an `@Atomic` field (the reduction example's `result`).
+    pub fn with_atomic(mut self, field: &str, op: AtomicOp) -> Self {
+        self.atomics.push(AtomicDecl { field: field.into(), op });
+        self
+    }
+
+    pub fn discard_output(mut self) -> Self {
+        self.keep_output = false;
+        self
+    }
+
+    /// Total cold upload bytes of all parameters.
+    pub fn upload_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.nbytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_helpers() {
+        assert_eq!(Dims::d1(8).total(), 8);
+        assert_eq!(Dims::d2(4, 5).total(), 20);
+        assert_eq!(Dims::d3(2, 3, 4).total(), 24);
+        assert_eq!(Dims::d2(4, 5).rank(), 2);
+    }
+
+    #[test]
+    fn task_builder() {
+        let mut t = Task::create("reduction", Dims::d1(1024), Dims::d1(256))
+            .with_atomic("result", AtomicOp::Add);
+        t.set_parameters(vec![Param::f32_slice("data", &[1.0, 2.0])]);
+        assert_eq!(t.kernel, "reduction");
+        assert_eq!(t.variant, "pallas");
+        assert_eq!(t.atomics[0].op, AtomicOp::Add);
+        assert_eq!(t.upload_bytes(), 8);
+        assert!(t.keep_output);
+        assert!(!t.clone().discard_output().keep_output);
+    }
+
+    #[test]
+    fn param_sources() {
+        let p = Param::f32_slice("x", &[0.0; 4]);
+        assert_eq!(p.nbytes(), 16);
+        assert!(matches!(p.source, ParamSource::Host(_)));
+        let p = Param::output("z", 0, 1);
+        assert_eq!(p.nbytes(), 0);
+        let p = Param::persistent("w", 7, 0, HostValue::f32(vec![2], vec![0.0; 2]));
+        assert_eq!(p.nbytes(), 8);
+    }
+
+    #[test]
+    fn access_override() {
+        let p = Param::f32_slice("x", &[0.0]).with_access(Access::ReadWrite);
+        assert_eq!(p.access, Access::ReadWrite);
+    }
+
+    #[test]
+    fn mem_space_annotations() {
+        let p = Param::f32_slice("filter", &[0.0]);
+        assert_eq!(p.mem_space, MemSpace::Global);
+        let p = p.with_mem_space(MemSpace::Constant);
+        assert_eq!(p.mem_space, MemSpace::Constant);
+    }
+}

@@ -1,0 +1,206 @@
+//! Analytic cost / occupancy model.
+//!
+//! Answers, per kernel and device: expected transfer time, roofline
+//! kernel time, launch overhead, occupancy of the thread-group schedule
+//! and VMEM pressure. Used by `jacc inspect`, the DESIGN.md §Perf
+//! estimates, and the optimizer's transfer-elimination payoff
+//! accounting (how many microseconds each eliminated copy is worth on
+//! the modeled device).
+
+use crate::runtime::artifact::ArtifactEntry;
+
+use super::spec::DeviceSpec;
+
+/// Estimated execution profile of one kernel launch on one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelCostEstimate {
+    /// Host->device bytes (read params) and the time to move them.
+    pub h2d_bytes: u64,
+    pub h2d_us: f64,
+    /// Device->host bytes (write params / outputs) and time.
+    pub d2h_bytes: u64,
+    pub d2h_us: f64,
+    /// Roofline kernel time: max(compute, memory) + launch overhead.
+    pub kernel_us: f64,
+    /// FLOP/byte of the kernel.
+    pub arithmetic_intensity: f64,
+    /// True if compute-bound on this device.
+    pub compute_bound: bool,
+    /// Thread groups launched and schedule occupancy in [0, 1].
+    pub thread_groups: usize,
+    pub occupancy: f64,
+    /// Working set vs scratch (VMEM/shared) capacity, in [0, inf).
+    pub scratch_pressure: f64,
+}
+
+impl KernelCostEstimate {
+    /// End-to-end single-shot estimate (cold data both ways).
+    pub fn total_us(&self) -> f64 {
+        self.h2d_us + self.kernel_us + self.d2h_us
+    }
+
+    /// Steady-state estimate when the optimizer keeps data resident
+    /// (no transfers) — the payoff the task-graph optimizations chase.
+    pub fn resident_us(&self) -> f64 {
+        self.kernel_us
+    }
+}
+
+/// Cost model for a device spec.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub spec: DeviceSpec,
+}
+
+impl CostModel {
+    pub fn new(spec: DeviceSpec) -> Self {
+        Self { spec }
+    }
+
+    fn transfer_us(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        if self.spec.link_bw_gbs.is_infinite() {
+            return self.spec.link_latency_us;
+        }
+        self.spec.link_latency_us + bytes as f64 / (self.spec.link_bw_gbs * 1e3)
+    }
+
+    /// Roofline estimate for an artifact on this device.
+    pub fn estimate(&self, entry: &ArtifactEntry) -> KernelCostEstimate {
+        let h2d_bytes = entry.bytes_in;
+        let d2h_bytes = entry.bytes_out;
+        let total_bytes = (entry.bytes_in + entry.bytes_out) as f64;
+        let flops = entry.flops as f64;
+        let ai = if total_bytes > 0.0 { flops / total_bytes } else { f64::INFINITY };
+        let compute_us = flops / (self.spec.peak_gflops * 1e3);
+        let memory_us = total_bytes / (self.spec.mem_bw_gbs * 1e3);
+        let kernel_us = compute_us.max(memory_us) + self.spec.launch_overhead_us;
+
+        let groups = entry.thread_groups();
+        let slots = self.spec.compute_units * self.spec.max_groups_per_unit;
+        // Occupancy: how evenly the groups fill whole waves of the
+        // machine. 1.0 when groups is a multiple of the slot count.
+        let occupancy = if groups == 0 {
+            0.0
+        } else {
+            let waves = groups.div_ceil(slots);
+            groups as f64 / (waves * slots) as f64
+        };
+        let scratch_pressure = entry.vmem_bytes as f64 / self.spec.scratch_bytes as f64;
+
+        KernelCostEstimate {
+            h2d_bytes,
+            h2d_us: self.transfer_us(h2d_bytes),
+            d2h_bytes,
+            d2h_us: self.transfer_us(d2h_bytes),
+            kernel_us,
+            arithmetic_intensity: ai,
+            compute_bound: ai > self.spec.ridge_point(),
+            thread_groups: groups,
+            occupancy,
+            scratch_pressure,
+        }
+    }
+
+    /// Fraction of roofline the kernel can reach given its intensity
+    /// (min(1, ai/ridge) for memory-bound kernels).
+    pub fn roofline_fraction(&self, entry: &ArtifactEntry) -> f64 {
+        let est = self.estimate(entry);
+        (est.arithmetic_intensity / self.spec.ridge_point()).min(1.0)
+    }
+
+    /// Roofline time of the kernel on ONE core of this device (the
+    /// serial-baseline projection used by Table 5b's modeled column).
+    /// A single core draws only a fraction of the socket bandwidth.
+    pub fn single_core_time_us(&self, entry: &ArtifactEntry) -> f64 {
+        const PER_CORE_BW_FRACTION: f64 = 0.22;
+        let per_core_gflops = self.spec.peak_gflops / self.spec.compute_units as f64;
+        let compute_us = entry.flops as f64 / (per_core_gflops * 1e3);
+        let bytes = (entry.bytes_in + entry.bytes_out) as f64;
+        let memory_us = bytes / (self.spec.mem_bw_gbs * PER_CORE_BW_FRACTION * 1e3);
+        compute_us.max(memory_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{Access, DType, IoDecl};
+
+    fn entry(flops: u64, bytes_in: u64, bytes_out: u64, vmem: u64) -> ArtifactEntry {
+        ArtifactEntry {
+            name: "t".into(),
+            variant: "pallas".into(),
+            profile: "tiny".into(),
+            key: "t.pallas.tiny".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![IoDecl {
+                name: "x".into(),
+                shape: vec![bytes_in as usize / 4],
+                dtype: DType::F32,
+                access: Access::Read,
+            }],
+            outputs: vec![],
+            iteration_space: vec![1024],
+            workgroup: vec![128],
+            tuple_root: false,
+            flops,
+            bytes_in,
+            bytes_out,
+            vmem_bytes: vmem,
+            hlo_bytes: 0,
+            lower_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound_on_k20m() {
+        let m = CostModel::new(DeviceSpec::k20m());
+        // vector-add-like: 1 FLOP per 12 bytes.
+        let est = m.estimate(&entry(1 << 20, 8 << 20, 4 << 20, 1 << 20));
+        assert!(!est.compute_bound);
+        assert!(est.h2d_us > est.d2h_us);
+        assert!(est.total_us() > est.resident_us());
+    }
+
+    #[test]
+    fn matmul_is_compute_bound_on_k20m() {
+        let m = CostModel::new(DeviceSpec::k20m());
+        // 1024^3 matmul: 2 GFLOP over 12 MiB.
+        let est = m.estimate(&entry(2 << 30, 8 << 20, 4 << 20, 192 << 10));
+        assert!(est.compute_bound);
+        assert!(est.arithmetic_intensity > 100.0);
+    }
+
+    #[test]
+    fn occupancy_full_wave_is_one() {
+        let m = CostModel::new(DeviceSpec::k20m());
+        let mut e = entry(1, 4, 4, 0);
+        // 13 SMX * 16 groups = 208 slots; 208 groups = exactly one wave.
+        e.iteration_space = vec![208 * 32];
+        e.workgroup = vec![32];
+        assert!((m.estimate(&e).occupancy - 1.0).abs() < 1e-9);
+        // 209 groups => two waves, half-ish empty.
+        e.iteration_space = vec![209 * 32];
+        assert!(m.estimate(&e).occupancy < 0.6);
+    }
+
+    #[test]
+    fn scratch_pressure_flags_oversized_blocks() {
+        let m = CostModel::new(DeviceSpec::tpu_v4_core());
+        let est = m.estimate(&entry(1, 4, 4, 32 * 1024 * 1024));
+        assert!(est.scratch_pressure > 1.0);
+        let est = m.estimate(&entry(1, 4, 4, 1024 * 1024));
+        assert!(est.scratch_pressure < 1.0);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let m = CostModel::new(DeviceSpec::k20m());
+        let small = m.estimate(&entry(1, 1 << 10, 0, 0));
+        let big = m.estimate(&entry(1, 1 << 30, 0, 0));
+        assert!(big.h2d_us > 100.0 * small.h2d_us);
+    }
+}

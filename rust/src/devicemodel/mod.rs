@@ -1,0 +1,13 @@
+//! Device models: the hardware parameters and analytic cost/occupancy
+//! estimators used for the DESIGN.md roofline discussion and by the
+//! scheduler's reporting. The execution substrate is the PJRT CPU
+//! client (see DESIGN.md substitution #1); these models answer "what
+//! would this schedule look like on the paper's K20m / on a TPU core"
+//! without claiming measured hardware numbers.
+
+pub mod cost;
+pub mod scaling;
+pub mod spec;
+
+pub use cost::{CostModel, KernelCostEstimate};
+pub use spec::DeviceSpec;

@@ -1,0 +1,125 @@
+//! Hardware parameter sheets.
+
+/// Static description of an accelerator (or host) target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Peak f32 throughput in GFLOP/s.
+    pub peak_gflops: f64,
+    /// Device memory bandwidth in GB/s.
+    pub mem_bw_gbs: f64,
+    /// Host<->device interconnect bandwidth in GB/s (PCIe / ICI).
+    pub link_bw_gbs: f64,
+    /// Host<->device transfer latency per operation in microseconds.
+    pub link_latency_us: f64,
+    /// Kernel launch overhead in microseconds.
+    pub launch_overhead_us: f64,
+    /// Device memory capacity in bytes.
+    pub mem_capacity: u64,
+    /// Fast on-chip memory per compute unit (shared mem / VMEM), bytes.
+    pub scratch_bytes: u64,
+    /// Compute units (SMs / TensorCores / host cores).
+    pub compute_units: usize,
+    /// Max resident thread groups per compute unit.
+    pub max_groups_per_unit: usize,
+}
+
+impl DeviceSpec {
+    /// NVIDIA Tesla K20m — the paper's evaluation GPU (§4.1): 13 SMXs,
+    /// 5 GB GDDR5, PCIe gen2 x16, ~3.52 TFLOP/s f32, 208 GB/s.
+    pub fn k20m() -> Self {
+        Self {
+            name: "tesla-k20m",
+            peak_gflops: 3520.0,
+            mem_bw_gbs: 208.0,
+            link_bw_gbs: 6.0, // PCIe 2.0 x16 effective
+            link_latency_us: 10.0,
+            launch_overhead_us: 6.0,
+            mem_capacity: 5 * 1024 * 1024 * 1024,
+            scratch_bytes: 48 * 1024, // shared memory per SMX
+            compute_units: 13,
+            max_groups_per_unit: 16,
+        }
+    }
+
+    /// One TPU-v4-like core — the hardware the Pallas kernels' BlockSpec
+    /// schedules are written for (DESIGN.md §Hardware-Adaptation).
+    pub fn tpu_v4_core() -> Self {
+        Self {
+            name: "tpu-v4-core",
+            peak_gflops: 137_500.0, // bf16 MXU peak / core pair
+            mem_bw_gbs: 1200.0,
+            link_bw_gbs: 50.0,
+            link_latency_us: 2.0,
+            launch_overhead_us: 2.0,
+            mem_capacity: 16 * 1024 * 1024 * 1024,
+            scratch_bytes: 16 * 1024 * 1024, // VMEM
+            compute_units: 1,
+            max_groups_per_unit: 1, // sequential grid
+        }
+    }
+
+    /// The dual Xeon E5-2620 host of the paper (§4.1): 12 cores / 24
+    /// threads @ 2 GHz, used to sanity-scale the CPU baselines.
+    pub fn xeon_e5_2620_duo() -> Self {
+        Self {
+            name: "2x-xeon-e5-2620",
+            peak_gflops: 192.0, // 12 cores * 2 GHz * 8 f32 FLOP/cycle
+            mem_bw_gbs: 42.6,
+            link_bw_gbs: f64::INFINITY,
+            link_latency_us: 0.0,
+            launch_overhead_us: 0.5,
+            mem_capacity: 32 * 1024 * 1024 * 1024,
+            scratch_bytes: 256 * 1024, // L2 per core
+            compute_units: 12,
+            max_groups_per_unit: 2, // 2 hyperthreads
+        }
+    }
+
+    /// The machine the reproduction actually runs on (PJRT CPU): infer
+    /// core count, assume modest per-core throughput. Used only for
+    /// occupancy reporting, never for claimed results.
+    pub fn host() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        Self {
+            name: "pjrt-cpu-host",
+            peak_gflops: cores as f64 * 16.0,
+            mem_bw_gbs: 30.0,
+            link_bw_gbs: f64::INFINITY,
+            link_latency_us: 0.0,
+            launch_overhead_us: 20.0, // PJRT dispatch
+            mem_capacity: 16 * 1024 * 1024 * 1024,
+            scratch_bytes: 1024 * 1024,
+            compute_units: cores,
+            max_groups_per_unit: 1,
+        }
+    }
+
+    /// Arithmetic-intensity break-even point (FLOP/byte) — kernels above
+    /// this are compute-bound on this device.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_gflops / self.mem_bw_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k20m_numbers() {
+        let d = DeviceSpec::k20m();
+        assert_eq!(d.compute_units, 13);
+        assert!(d.ridge_point() > 10.0 && d.ridge_point() < 25.0);
+    }
+
+    #[test]
+    fn host_has_cores() {
+        assert!(DeviceSpec::host().compute_units >= 1);
+    }
+
+    #[test]
+    fn tpu_vmem_is_16mib() {
+        assert_eq!(DeviceSpec::tpu_v4_core().scratch_bytes, 16 * 1024 * 1024);
+    }
+}

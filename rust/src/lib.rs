@@ -1,0 +1,33 @@
+//! # Jacc-RS
+//!
+//! Reproduction of *"Boosting Java Performance using GPGPUs"*
+//! (Clarkson, Kotselidis, Brown, Luján, 2015) — the **Jacc** framework —
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Jacc runtime: tasks, task graphs (DAGs),
+//!   lowering to low-level actions, the action-stream optimizer, the
+//!   memory manager with data schemas, and the PJRT executor.
+//! * **L2 (python/compile)** — the benchmark compute graphs in JAX,
+//!   AOT-lowered to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the paper's
+//!   eight benchmarks.
+//!
+//! Python never runs at execution time: `make artifacts` emits
+//! `artifacts/*.hlo.txt` + `manifest.json`, and this crate loads,
+//! compiles (lazily — the "JIT" analog) and executes them via PJRT.
+//!
+//! See `examples/quickstart.rs` for the task-graph API in action, and
+//! DESIGN.md for the paper-to-module map.
+
+pub mod api;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod devicemodel;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod substrate;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,237 @@
+//! `jacc` — the leader binary: run benchmarks through the task-graph
+//! runtime, inspect artifacts and device models, and print runtime
+//! metrics.
+//!
+//! Subcommands:
+//!   jacc devices                         list devices + models
+//!   jacc inspect  [--profile P]          artifact/cost/occupancy report
+//!   jacc run      --benchmark B [...]    run one benchmark end-to-end
+//!   jacc suite    [--profile P]          run all eight benchmarks
+//!
+//! (The paper-table reproductions live in `cargo bench`; see
+//! benches/*.rs and EXPERIMENTS.md.)
+
+use std::rc::Rc;
+
+use jacc::api::*;
+use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
+use jacc::devicemodel::{CostModel, DeviceSpec};
+use jacc::substrate::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "jacc",
+        "Jacc-RS: heterogeneous task-graph runtime (paper reproduction)",
+    )
+    .opt("benchmark", "", "benchmark name (run): vector_add, reduction, ...")
+    .opt("profile", "scaled", "artifact profile: tiny | scaled | paper")
+    .opt("variant", "pallas", "kernel variant: pallas | ref")
+    .opt("iters", "0", "iterations (0 = paper-derived default)")
+    .flag("verbose", "print runtime metrics after execution")
+    .flag("no-opt", "disable the task-graph optimizer");
+    let args = cli.parse();
+
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("devices") => devices(),
+        Some("inspect") => inspect(args.get_or("profile", "scaled")),
+        Some("run") => run(
+            args.get_or("benchmark", ""),
+            args.get_or("profile", "scaled"),
+            args.get_or("variant", "pallas"),
+            args.get_usize("iters").unwrap_or(0),
+            args.has_flag("verbose"),
+            args.has_flag("no-opt"),
+        ),
+        Some("suite") => suite(args.get_or("profile", "scaled"), args.has_flag("verbose")),
+        other => {
+            eprintln!(
+                "unknown or missing subcommand {other:?}; try: devices | inspect | run | suite"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn devices() -> anyhow::Result<()> {
+    println!("visible devices: {}", Cuda::device_count());
+    let ctx = Cuda::get_device(0)?.create_device_context()?;
+    println!("  [0] {}", ctx.name());
+    println!(
+        "      modeled: {} GFLOP/s, {} GB/s, {} MiB scratch, {} CUs",
+        ctx.spec.peak_gflops,
+        ctx.spec.mem_bw_gbs,
+        ctx.spec.scratch_bytes / (1024 * 1024),
+        ctx.spec.compute_units
+    );
+    println!("      memory manager: {} B capacity", ctx.memory.borrow().capacity());
+    Ok(())
+}
+
+fn inspect(profile: &str) -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let k20m = CostModel::new(DeviceSpec::k20m());
+    let tpu = CostModel::new(DeviceSpec::tpu_v4_core());
+    let mut t = Table::new(&[
+        "artifact", "groups", "AI(F/B)", "bound", "occ(K20m)", "VMEM/16MiB", "est h2d", "est kernel",
+    ]);
+    for e in manifest.profile_entries(profile) {
+        let est = k20m.estimate(e);
+        let est_tpu = tpu.estimate(e);
+        t.row(vec![
+            e.key.clone(),
+            est.thread_groups.to_string(),
+            format!("{:.2}", est.arithmetic_intensity),
+            if est.compute_bound { "compute" } else { "memory" }.into(),
+            format!("{:.2}", est.occupancy),
+            format!("{:.3}", est_tpu.scratch_pressure),
+            fmt_secs(est.h2d_us / 1e6),
+            fmt_secs(est.kernel_us / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(analytic estimates from devicemodel; see DESIGN.md §7)");
+    Ok(())
+}
+
+fn build_graph(
+    dev: &Rc<DeviceContext>,
+    name: &str,
+    profile: &str,
+    variant: &str,
+    no_opt: bool,
+) -> anyhow::Result<(TaskGraph, TaskId, jacc::bench::workloads::Workload)> {
+    let w = workloads::generate(dev.runtime.manifest(), name, profile)?;
+    let entry = dev.runtime.manifest().find(name, variant, profile)?;
+    let mut task = Task::create(
+        name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .with_variant(variant);
+    task.set_parameters(
+        w.params
+            .iter()
+            .zip(&entry.inputs)
+            .map(|(v, d)| Param::host(&d.name, v.clone()))
+            .collect(),
+    );
+    let mut g = TaskGraph::new().with_profile(profile);
+    if no_opt {
+        g = g.without_optimizations();
+    }
+    let id = g.execute_task_on(task, dev)?;
+    Ok((g, id, w))
+}
+
+fn run(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    iters: usize,
+    verbose: bool,
+    no_opt: bool,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(!name.is_empty(), "--benchmark required");
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let (g, id, _) = build_graph(&dev, name, profile, variant, no_opt)?;
+    let iters = if iters == 0 { workloads::iterations(name, profile) } else { iters };
+
+    // First execution: includes the lazy compile (JIT analog).
+    let first = g.execute_with_report()?;
+    println!(
+        "{name}.{variant}.{profile}: first run {} (compile {}, h2d {} B, d2h {} B)",
+        fmt_secs(first.wall.as_secs_f64()),
+        fmt_secs(first.compile.as_secs_f64()),
+        first.h2d_bytes,
+        first.d2h_bytes,
+    );
+    // Steady state over `iters`.
+    let h = Harness::new(1, 3, iters);
+    let r = h.run(name, || {
+        g.execute().expect("steady-state execution");
+    });
+    println!(
+        "steady state: {}/iter over {iters} iters (cv {:.1}%)",
+        fmt_secs(r.per_iter()),
+        r.summary.cv() * 100.0
+    );
+    let _ = id;
+    if verbose {
+        println!("metrics:\n{}", g.metrics.report());
+    }
+    Ok(())
+}
+
+fn suite(profile: &str, verbose: bool) -> anyhow::Result<()> {
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let mut t = Table::new(&["benchmark", "first(incl JIT)", "steady/iter", "vs serial"]);
+    for name in workloads::BENCHMARKS {
+        let (g, _, w) = build_graph(&dev, name, profile, "pallas", false)?;
+        let first = g.execute_with_report()?;
+        let h = Harness::quick();
+        let r = h.run(name, || {
+            g.execute().expect("execution");
+        });
+        // One serial iteration for the speedup column.
+        let serial_secs = run_serial_once(name, &w);
+        t.row(vec![
+            name.to_string(),
+            fmt_secs(first.wall.as_secs_f64()),
+            fmt_secs(r.per_iter()),
+            fmt_x(serial_secs / r.per_iter()),
+        ]);
+        if verbose {
+            println!("-- {name}\n{}", g.metrics.report());
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// One serial-baseline iteration, timed.
+pub fn run_serial_once(name: &str, w: &jacc::bench::workloads::Workload) -> f64 {
+    use jacc::baselines::serial;
+    let (_, secs) = jacc::bench::time_once(|| match name {
+        "vector_add" => {
+            serial::vector_add(w.params[0].as_f32().unwrap(), w.params[1].as_f32().unwrap());
+        }
+        "reduction" => {
+            std::hint::black_box(serial::reduction(w.params[0].as_f32().unwrap()));
+        }
+        "histogram" => {
+            serial::histogram(w.params[0].as_i32().unwrap(), 256);
+        }
+        "matmul" => {
+            let m = w.params[0].shape()[0];
+            let k = w.params[0].shape()[1];
+            let n = w.params[1].shape()[1];
+            serial::matmul(w.params[0].as_f32().unwrap(), w.params[1].as_f32().unwrap(), m, k, n);
+        }
+        "spmv" => {
+            serial::spmv(w.csr.as_ref().unwrap(), w.params[2].as_f32().unwrap());
+        }
+        "conv2d" => {
+            let s = w.params[0].shape();
+            serial::conv2d(
+                w.params[0].as_f32().unwrap(),
+                s[0],
+                s[1],
+                w.params[1].as_f32().unwrap(),
+                5,
+                5,
+            );
+        }
+        "black_scholes" => {
+            serial::black_scholes(
+                w.params[0].as_f32().unwrap(),
+                w.params[1].as_f32().unwrap(),
+                w.params[2].as_f32().unwrap(),
+            );
+        }
+        "correlation" => {
+            serial::correlation(w.bank.as_ref().unwrap());
+        }
+        other => panic!("no serial baseline for {other}"),
+    });
+    secs
+}

@@ -1,0 +1,222 @@
+//! Per-device memory manager (paper §3.2.1).
+//!
+//! Owns the device-resident buffers keyed by a stable *data id*, so
+//! data "stays resident on the device across multiple kernel executions
+//! eliminating the need to constantly copy data between the host and
+//! device". Tracks capacity against the device spec and evicts LRU when
+//! a new allocation would not fit. Consistency follows the paper's
+//! atomic-task-graph rule: host objects must not change while a graph
+//! runs; `version` bumps invalidate stale residents.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use xla::PjRtBuffer;
+
+use super::schema::SchemaRegistry;
+
+/// Stable identity of a host datum across task graphs.
+pub type DataId = u64;
+
+struct Resident {
+    buffer: Rc<PjRtBuffer>,
+    bytes: u64,
+    version: u64,
+    last_use: u64,
+}
+
+/// Transfer/residency statistics (ablation E6 reads these).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryStats {
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    pub downloads: u64,
+    pub download_bytes: u64,
+    pub residency_hits: u64,
+    pub residency_hit_bytes: u64,
+    pub evictions: u64,
+}
+
+/// One device's memory manager.
+pub struct DeviceMemoryManager {
+    capacity: u64,
+    used: u64,
+    clock: u64,
+    resident: HashMap<DataId, Resident>,
+    pub schemas: SchemaRegistry,
+    pub stats: MemoryStats,
+}
+
+impl DeviceMemoryManager {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            capacity,
+            used: 0,
+            clock: 0,
+            resident: HashMap::new(),
+            schemas: SchemaRegistry::new(),
+            stats: MemoryStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Look up a resident buffer for (id, version). A version mismatch
+    /// means the host datum changed since upload: the stale buffer is
+    /// dropped and `None` returned (caller re-uploads).
+    pub fn lookup(&mut self, id: DataId, version: u64) -> Option<Rc<PjRtBuffer>> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.resident.get_mut(&id) {
+            Some(r) if r.version == version => {
+                r.last_use = clock;
+                self.stats.residency_hits += 1;
+                self.stats.residency_hit_bytes += r.bytes;
+                Some(Rc::clone(&r.buffer))
+            }
+            Some(_) => {
+                self.evict(id);
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Insert a freshly-uploaded buffer, evicting LRU entries until it
+    /// fits. Counts the upload in stats.
+    pub fn insert(&mut self, id: DataId, version: u64, bytes: u64, buffer: Rc<PjRtBuffer>) {
+        self.clock += 1;
+        if self.resident.contains_key(&id) {
+            self.evict(id);
+        }
+        while self.used + bytes > self.capacity && !self.resident.is_empty() {
+            let lru = self
+                .resident
+                .iter()
+                .min_by_key(|(_, r)| r.last_use)
+                .map(|(id, _)| *id)
+                .expect("non-empty");
+            self.evict(lru);
+            self.stats.evictions += 1;
+        }
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += bytes;
+        self.used += bytes;
+        self.resident.insert(id, Resident { buffer, bytes, version, last_use: self.clock });
+    }
+
+    /// Record a D2H transfer (for stats symmetry; the buffer itself is
+    /// read by the runtime).
+    pub fn note_download(&mut self, bytes: u64) {
+        self.stats.downloads += 1;
+        self.stats.download_bytes += bytes;
+    }
+
+    /// Record an upload that bypasses residency (one-shot host data).
+    pub fn note_upload(&mut self, bytes: u64) {
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += bytes;
+    }
+
+    /// Drop one resident entry.
+    pub fn evict(&mut self, id: DataId) {
+        if let Some(r) = self.resident.remove(&id) {
+            self.used -= r.bytes;
+        }
+    }
+
+    /// Drop everything (graph-atomicity violation recovery / tests).
+    pub fn clear(&mut self) {
+        self.resident.clear();
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use crate::runtime::buffer::HostValue;
+    use crate::runtime::pjrt::PjrtRuntime;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(PjrtRuntime::with_default_manifest().unwrap())
+    }
+
+    fn upload(rt: &PjrtRuntime, n: usize, fill: f32) -> Rc<PjRtBuffer> {
+        Rc::new(rt.upload(&HostValue::f32(vec![n], vec![fill; n])).unwrap())
+    }
+
+    #[test]
+    fn lookup_miss_then_hit() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        assert!(mm.lookup(1, 0).is_none());
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        assert!(mm.lookup(1, 0).is_some());
+        assert_eq!(mm.stats.residency_hits, 1);
+        assert_eq!(mm.stats.uploads, 1);
+        assert_eq!(mm.used(), 4096);
+    }
+
+    #[test]
+    fn version_mismatch_invalidates() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        assert!(mm.lookup(1, 1).is_none());
+        assert_eq!(mm.resident_count(), 0);
+        assert_eq!(mm.used(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let Some(rt) = runtime() else { return };
+        // Capacity for two 4 KiB buffers only.
+        let mut mm = DeviceMemoryManager::new(8192);
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        mm.insert(2, 0, 4096, upload(&rt, 1024, 2.0));
+        // Touch 1 so 2 becomes LRU.
+        assert!(mm.lookup(1, 0).is_some());
+        mm.insert(3, 0, 4096, upload(&rt, 1024, 3.0));
+        assert_eq!(mm.stats.evictions, 1);
+        assert!(mm.lookup(2, 0).is_none(), "LRU entry 2 evicted");
+        assert!(mm.lookup(1, 0).is_some());
+        assert!(mm.lookup(3, 0).is_some());
+    }
+
+    #[test]
+    fn reinsert_same_id_replaces() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        mm.insert(1, 1, 4096, upload(&rt, 1024, 9.0));
+        assert_eq!(mm.resident_count(), 1);
+        assert_eq!(mm.used(), 4096);
+        assert!(mm.lookup(1, 1).is_some());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        mm.clear();
+        assert_eq!(mm.used(), 0);
+        assert_eq!(mm.resident_count(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Memory management (paper §3.2): per-device manager with persistent
+//! device-resident state, compiler-driven data schemas, and the
+//! used-fields-only serializer.
+
+pub mod manager;
+pub mod schema;
+pub mod serializer;
+
+pub use manager::{DataId, DeviceMemoryManager, MemoryStats};
+pub use schema::{DataSchema, FieldDecl, SchemaRegistry};
+pub use serializer::{
+    deserialize_struct, project_params, serialize_struct, writeback_modified, Record,
+};

@@ -1,0 +1,219 @@
+//! Data schemas — the paper's §3.2.2 compiler-driven layout metadata.
+//!
+//! A schema maps each field of a composite type to a memory location
+//! (offset in a C-like struct) and records which fields the kernel
+//! actually *accesses* and *modifies*. The serializer uses this to
+//! allocate space for every field but only populate (and only copy
+//! back) the ones that are used — the paper's fix for the deep-copy
+//! performance problem.
+//!
+//! Schemas are created **on demand**: when the executor first lowers a
+//! composite parameter for a kernel, it asks the [`SchemaRegistry`] for
+//! the type's schema; if absent, one is built from the declared fields
+//! and the kernel's manifest input list marks the accessed set (the
+//! "compiler requests data schemas from the memory manager" flow).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::runtime::artifact::DType;
+
+/// One field of a composite type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldDecl {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Byte offset in the serialized struct (C-like, 4-byte aligned —
+    /// all supported dtypes are 4 bytes wide).
+    pub offset: usize,
+}
+
+impl FieldDecl {
+    pub fn nbytes(&self) -> usize {
+        self.shape.iter().product::<usize>() * self.dtype.size_bytes()
+    }
+}
+
+/// Schema of one composite type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSchema {
+    pub type_name: String,
+    pub fields: Vec<FieldDecl>,
+    /// Fields the kernel reads (paper: "tracks which fields are
+    /// accessed ... records this information in the data schema").
+    accessed: BTreeSet<String>,
+    /// Fields the kernel writes.
+    modified: BTreeSet<String>,
+}
+
+impl DataSchema {
+    pub fn new(type_name: &str) -> Self {
+        Self {
+            type_name: type_name.into(),
+            fields: Vec::new(),
+            accessed: BTreeSet::new(),
+            modified: BTreeSet::new(),
+        }
+    }
+
+    /// Append a field; offset is assigned struct-style (no reordering,
+    /// mirroring "fields located at a fixed offset from the start").
+    pub fn add_field(&mut self, name: &str, dtype: DType, shape: Vec<usize>) -> &FieldDecl {
+        assert!(
+            self.field(name).is_none(),
+            "duplicate field {name} in schema {}",
+            self.type_name
+        );
+        let offset = self.total_bytes();
+        self.fields.push(FieldDecl { name: name.into(), dtype, shape, offset });
+        self.fields.last().unwrap()
+    }
+
+    pub fn field(&self, name: &str) -> Option<&FieldDecl> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    /// Total struct size (all fields — space is always allocated).
+    pub fn total_bytes(&self) -> usize {
+        self.fields.last().map(|f| f.offset + f.nbytes()).unwrap_or(0)
+    }
+
+    /// Bytes that must actually move host->device (accessed fields).
+    pub fn accessed_bytes(&self) -> usize {
+        self.fields.iter().filter(|f| self.accessed.contains(&f.name)).map(|f| f.nbytes()).sum()
+    }
+
+    /// Bytes that must move device->host after execution (modified).
+    pub fn modified_bytes(&self) -> usize {
+        self.fields.iter().filter(|f| self.modified.contains(&f.name)).map(|f| f.nbytes()).sum()
+    }
+
+    pub fn record_access(&mut self, field: &str, write: bool) {
+        assert!(self.field(field).is_some(), "unknown field {field}");
+        self.accessed.insert(field.into());
+        if write {
+            self.modified.insert(field.into());
+        }
+    }
+
+    pub fn is_accessed(&self, field: &str) -> bool {
+        self.accessed.contains(field)
+    }
+
+    pub fn is_modified(&self, field: &str) -> bool {
+        self.modified.contains(field)
+    }
+
+    pub fn accessed_fields(&self) -> impl Iterator<Item = &FieldDecl> {
+        self.fields.iter().filter(|f| self.accessed.contains(&f.name))
+    }
+
+    /// Transfer saving of the used-fields-only policy vs deep copy.
+    pub fn savings_ratio(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.accessed_bytes() as f64 / total as f64
+    }
+}
+
+/// The memory manager's schema store, keyed by composite type name.
+#[derive(Debug, Default)]
+pub struct SchemaRegistry {
+    schemas: BTreeMap<String, DataSchema>,
+}
+
+impl SchemaRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch-or-create (the on-demand path).
+    pub fn get_or_create(&mut self, type_name: &str) -> &mut DataSchema {
+        self.schemas
+            .entry(type_name.to_string())
+            .or_insert_with(|| DataSchema::new(type_name))
+    }
+
+    pub fn get(&self, type_name: &str) -> Option<&DataSchema> {
+        self.schemas.get(type_name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.schemas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schemas.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn option_batch_schema() -> DataSchema {
+        let mut s = DataSchema::new("OptionBatch");
+        s.add_field("price", DType::F32, vec![1024]);
+        s.add_field("strike", DType::F32, vec![1024]);
+        s.add_field("expiry", DType::F32, vec![1024]);
+        s.add_field("audit_log", DType::I32, vec![4096]); // never touched
+        s
+    }
+
+    #[test]
+    fn offsets_are_sequential() {
+        let s = option_batch_schema();
+        assert_eq!(s.field("price").unwrap().offset, 0);
+        assert_eq!(s.field("strike").unwrap().offset, 4096);
+        assert_eq!(s.field("expiry").unwrap().offset, 8192);
+        assert_eq!(s.total_bytes(), 3 * 4096 + 4 * 4096);
+    }
+
+    #[test]
+    fn unused_fields_do_not_transfer() {
+        let mut s = option_batch_schema();
+        s.record_access("price", false);
+        s.record_access("strike", false);
+        s.record_access("expiry", false);
+        assert_eq!(s.accessed_bytes(), 3 * 4096);
+        assert_eq!(s.modified_bytes(), 0);
+        // The audit_log (16 KiB of 28 KiB) is never moved.
+        assert!((s.savings_ratio() - 16384.0 / 28672.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn modified_tracks_writes() {
+        let mut s = option_batch_schema();
+        s.record_access("price", true);
+        assert!(s.is_accessed("price") && s.is_modified("price"));
+        assert_eq!(s.modified_bytes(), 4096);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate field")]
+    fn duplicate_field_panics() {
+        let mut s = DataSchema::new("T");
+        s.add_field("x", DType::F32, vec![1]);
+        s.add_field("x", DType::F32, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown field")]
+    fn unknown_access_panics() {
+        let mut s = DataSchema::new("T");
+        s.record_access("nope", false);
+    }
+
+    #[test]
+    fn registry_creates_on_demand() {
+        let mut r = SchemaRegistry::new();
+        assert!(r.get("A").is_none());
+        r.get_or_create("A").add_field("x", DType::F32, vec![2]);
+        assert_eq!(r.get("A").unwrap().fields.len(), 1);
+        // Same name returns the same schema.
+        r.get_or_create("A");
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -1,0 +1,267 @@
+//! Composite-type serialization (paper §3.2.2).
+//!
+//! A [`Record`] is the Rust stand-in for a Java object handed to a task:
+//! named fields of typed arrays. Serialization turns it into the flat
+//! C-like struct bytes the schema describes — allocating space for every
+//! field but **populating only the accessed ones** — and into the
+//! per-field `HostValue`s the kernel actually consumes (field order
+//! matched to the kernel's declared inputs). Deserialization copies
+//! *modified* fields back into the record, leaving the rest untouched.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::runtime::artifact::{DType, IoDecl};
+use crate::runtime::buffer::HostValue;
+
+use super::schema::DataSchema;
+
+/// A composite value: the "object" crossing the host/device boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub type_name: String,
+    pub fields: BTreeMap<String, HostValue>,
+}
+
+impl Record {
+    pub fn new(type_name: &str) -> Self {
+        Self { type_name: type_name.into(), fields: BTreeMap::new() }
+    }
+
+    pub fn with(mut self, name: &str, value: HostValue) -> Self {
+        self.fields.insert(name.into(), value);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostValue> {
+        self.fields.get(name)
+    }
+
+    /// Build (or refresh) the schema for this record's type: declare
+    /// every field, then mark as accessed exactly those matching the
+    /// kernel's declared inputs/outputs — the "compiler tracks which
+    /// fields are accessed" flow, driven from the AOT manifest.
+    pub fn build_schema(&self, schema: &mut DataSchema, kernel_ios: &[IoDecl]) {
+        for (name, v) in &self.fields {
+            if schema.field(name).is_none() {
+                schema.add_field(name, v.dtype(), v.shape().to_vec());
+            }
+        }
+        for io in kernel_ios {
+            if schema.field(&io.name).is_some() && io.access.is_read() {
+                schema.record_access(&io.name, io.access.is_write());
+            }
+        }
+    }
+}
+
+/// Serialize the record as flat struct bytes per the schema. Unused
+/// fields are allocated (zeros) but not populated — matching "space is
+/// allocated ... only populated if the fields are actually used".
+pub fn serialize_struct(record: &Record, schema: &DataSchema) -> anyhow::Result<Vec<u8>> {
+    let mut out = vec![0u8; schema.total_bytes()];
+    for f in schema.accessed_fields() {
+        let v = record
+            .fields
+            .get(&f.name)
+            .ok_or_else(|| anyhow!("record missing accessed field {}", f.name))?;
+        if v.dtype() != f.dtype || v.shape() != f.shape.as_slice() {
+            bail!("field {} does not match schema layout", f.name);
+        }
+        let dst = &mut out[f.offset..f.offset + f.nbytes()];
+        copy_to_le_bytes(v, dst);
+    }
+    Ok(out)
+}
+
+/// Read every field back out of struct bytes (full deserialization —
+/// used by tests and the deep-copy baseline comparison).
+pub fn deserialize_struct(bytes: &[u8], schema: &DataSchema) -> anyhow::Result<Record> {
+    if bytes.len() != schema.total_bytes() {
+        bail!("buffer size {} != schema size {}", bytes.len(), schema.total_bytes());
+    }
+    let mut record = Record::new(&schema.type_name);
+    for f in &schema.fields {
+        let src = &bytes[f.offset..f.offset + f.nbytes()];
+        record.fields.insert(f.name.clone(), from_le_bytes(f.dtype, f.shape.clone(), src));
+    }
+    Ok(record)
+}
+
+/// Copy *modified* fields from struct bytes back into the host record —
+/// the post-graph writeback ("all outstanding updates to host memory
+/// are visible before execute completes", §2.1.2).
+pub fn writeback_modified(
+    record: &mut Record,
+    bytes: &[u8],
+    schema: &DataSchema,
+) -> anyhow::Result<usize> {
+    let mut copied = 0;
+    for f in &schema.fields {
+        if !schema.is_modified(&f.name) {
+            continue;
+        }
+        let src = &bytes[f.offset..f.offset + f.nbytes()];
+        record.fields.insert(f.name.clone(), from_le_bytes(f.dtype, f.shape.clone(), src));
+        copied += f.nbytes();
+    }
+    Ok(copied)
+}
+
+/// Project a record onto a kernel's parameter list: the per-field
+/// `HostValue`s, in kernel-declaration order, for exactly the accessed
+/// fields. This is what actually gets uploaded.
+pub fn project_params(
+    record: &Record,
+    schema: &DataSchema,
+    kernel_inputs: &[IoDecl],
+) -> anyhow::Result<Vec<HostValue>> {
+    kernel_inputs
+        .iter()
+        .map(|io| {
+            if schema.field(&io.name).is_none() || !schema.is_accessed(&io.name) {
+                bail!("kernel input {} not an accessed field of {}", io.name, record.type_name);
+            }
+            let v = record
+                .fields
+                .get(&io.name)
+                .ok_or_else(|| anyhow!("record missing field {}", io.name))?;
+            v.check_decl(io)?;
+            Ok(v.clone())
+        })
+        .collect()
+}
+
+fn copy_to_le_bytes(v: &HostValue, dst: &mut [u8]) {
+    match v {
+        HostValue::F32 { data, .. } => {
+            for (i, x) in data.iter().enumerate() {
+                dst[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        HostValue::I32 { data, .. } => {
+            for (i, x) in data.iter().enumerate() {
+                dst[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        HostValue::U32 { data, .. } => {
+            for (i, x) in data.iter().enumerate() {
+                dst[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn from_le_bytes(dtype: DType, shape: Vec<usize>, src: &[u8]) -> HostValue {
+    let n = src.len() / 4;
+    match dtype {
+        DType::F32 => HostValue::f32(
+            shape,
+            (0..n).map(|i| f32::from_le_bytes(src[i * 4..i * 4 + 4].try_into().unwrap())).collect(),
+        ),
+        DType::I32 => HostValue::i32(
+            shape,
+            (0..n).map(|i| i32::from_le_bytes(src[i * 4..i * 4 + 4].try_into().unwrap())).collect(),
+        ),
+        DType::U32 => HostValue::u32(
+            shape,
+            (0..n).map(|i| u32::from_le_bytes(src[i * 4..i * 4 + 4].try_into().unwrap())).collect(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Access;
+
+    fn ios() -> Vec<IoDecl> {
+        vec![
+            IoDecl { name: "price".into(), shape: vec![4], dtype: DType::F32, access: Access::Read },
+            IoDecl { name: "strike".into(), shape: vec![4], dtype: DType::F32, access: Access::ReadWrite },
+        ]
+    }
+
+    fn record() -> Record {
+        Record::new("OptionBatch")
+            .with("price", HostValue::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]))
+            .with("strike", HostValue::f32(vec![4], vec![9.0; 4]))
+            .with("audit", HostValue::i32(vec![8], vec![7; 8]))
+    }
+
+    #[test]
+    fn schema_marks_only_kernel_fields() {
+        let r = record();
+        let mut s = DataSchema::new("OptionBatch");
+        r.build_schema(&mut s, &ios());
+        assert!(s.is_accessed("price"));
+        assert!(s.is_accessed("strike"));
+        assert!(s.is_modified("strike") && !s.is_modified("price"));
+        assert!(!s.is_accessed("audit"));
+    }
+
+    #[test]
+    fn serialize_skips_unused_fields() {
+        let r = record();
+        let mut s = DataSchema::new("OptionBatch");
+        r.build_schema(&mut s, &ios());
+        let bytes = serialize_struct(&r, &s).unwrap();
+        assert_eq!(bytes.len(), s.total_bytes());
+        let back = deserialize_struct(&bytes, &s).unwrap();
+        // Accessed fields round-trip.
+        assert_eq!(back.get("price"), r.get("price"));
+        // Unused field was allocated but NOT populated => zeros.
+        assert_eq!(back.get("audit").unwrap().as_i32().unwrap(), &[0; 8]);
+    }
+
+    #[test]
+    fn writeback_touches_only_modified() {
+        let mut r = record();
+        let mut s = DataSchema::new("OptionBatch");
+        r.build_schema(&mut s, &ios());
+        // Simulate the device doubling the strike field in struct bytes.
+        let mut bytes = serialize_struct(&r, &s).unwrap();
+        let f = s.field("strike").unwrap().clone();
+        for i in 0..4 {
+            let off = f.offset + i * 4;
+            let v = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            bytes[off..off + 4].copy_from_slice(&(v * 2.0).to_le_bytes());
+        }
+        // Also scribble on price — must NOT come back (not modified).
+        bytes[0..4].copy_from_slice(&123.0f32.to_le_bytes());
+        let copied = writeback_modified(&mut r, &bytes, &s).unwrap();
+        assert_eq!(copied, 16);
+        assert_eq!(r.get("strike").unwrap().as_f32().unwrap(), &[18.0; 4]);
+        assert_eq!(r.get("price").unwrap().as_f32().unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn project_params_orders_by_kernel_decl() {
+        let r = record();
+        let mut s = DataSchema::new("OptionBatch");
+        r.build_schema(&mut s, &ios());
+        let params = project_params(&r, &s, &ios()).unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].as_f32().unwrap()[0], 1.0); // price first
+        assert_eq!(params[1].as_f32().unwrap()[0], 9.0);
+    }
+
+    #[test]
+    fn project_rejects_missing_field() {
+        let r = Record::new("T").with("price", HostValue::f32(vec![4], vec![0.0; 4]));
+        let mut s = DataSchema::new("T");
+        r.build_schema(&mut s, &ios());
+        assert!(project_params(&r, &s, &ios()).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let r = Record::new("T")
+            .with("price", HostValue::f32(vec![3], vec![0.0; 3]))
+            .with("strike", HostValue::f32(vec![4], vec![0.0; 4]));
+        let mut s = DataSchema::new("T");
+        r.build_schema(&mut s, &ios());
+        assert!(project_params(&r, &s, &ios()).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Runtime metrics: counters + timers the coordinator increments while
+//! lowering/optimizing/executing task graphs. `jacc run --verbose` and
+//! the ablation benches read these to show exactly which actions the
+//! optimizer removed (paper §2.3 "eliminate, merge and re-organize").
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Counter + timer registry (single-threaded, like the executor).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: RefCell<BTreeMap<&'static str, u64>>,
+    timers: RefCell<BTreeMap<&'static str, Duration>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &'static str, v: u64) {
+        *self.counters.borrow_mut().entry(name).or_insert(0) += v;
+    }
+
+    pub fn time(&self, name: &'static str, d: Duration) {
+        *self.timers.borrow_mut().entry(name).or_insert(Duration::ZERO) += d;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.borrow().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer(&self, name: &str) -> Duration {
+        self.timers.borrow().get(name).copied().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn counters(&self) -> BTreeMap<&'static str, u64> {
+        self.counters.borrow().clone()
+    }
+
+    pub fn reset(&self) {
+        self.counters.borrow_mut().clear();
+        self.timers.borrow_mut().clear();
+    }
+
+    /// Render a compact report (verbose mode).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.borrow().iter() {
+            out.push_str(&format!("  {k:32} {v}\n"));
+        }
+        for (k, d) in self.timers.borrow().iter() {
+            out.push_str(&format!("  {k:32} {:.3} ms\n", d.as_secs_f64() * 1e3));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.incr("a");
+        m.add("b", 5);
+        assert_eq!(m.counter("a"), 2);
+        assert_eq!(m.counter("b"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let m = Metrics::new();
+        m.time("t", Duration::from_millis(2));
+        m.time("t", Duration::from_millis(3));
+        assert_eq!(m.timer("t"), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.reset();
+        assert_eq!(m.counter("a"), 0);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let m = Metrics::new();
+        m.incr("transfers_eliminated");
+        assert!(m.report().contains("transfers_eliminated"));
+    }
+}

@@ -1,0 +1,314 @@
+//! Artifact manifest loading.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every AOT-lowered kernel: shapes, dtypes, access modes (the
+//! compiler-derived half of the paper's `@Read/@Write` annotations,
+//! §3.2.2), iteration space / work-group (the `Dims` pair of Listing 4),
+//! FLOP and byte counts, and the analytic VMEM estimate. This module
+//! parses that manifest with the from-scratch JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::substrate::json::Value;
+
+/// Element type of a kernel parameter (subset the benchmarks use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+}
+
+/// Parameter access mode — the paper's `@Read/@Write/@ReadWrite`
+/// annotations (Table 1), as recorded by the compiler in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+    ReadWrite,
+}
+
+impl Access {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "read" => Access::Read,
+            "write" => Access::Write,
+            "readwrite" => Access::ReadWrite,
+            other => bail!("unsupported access {other}"),
+        })
+    }
+
+    pub fn is_read(self) -> bool {
+        matches!(self, Access::Read | Access::ReadWrite)
+    }
+
+    pub fn is_write(self) -> bool {
+        matches!(self, Access::Write | Access::ReadWrite)
+    }
+}
+
+/// One kernel parameter or result declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoDecl {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub access: Access,
+}
+
+impl IoDecl {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// One AOT artifact: an HLO-text file plus its metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub variant: String,
+    pub profile: String,
+    pub key: String,
+    pub file: String,
+    pub inputs: Vec<IoDecl>,
+    pub outputs: Vec<IoDecl>,
+    pub iteration_space: Vec<usize>,
+    pub workgroup: Vec<usize>,
+    /// HLO root is a tuple (multi-output kernels); single-output
+    /// kernels keep an array root so buffers chain on-device.
+    pub tuple_root: bool,
+    pub flops: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub vmem_bytes: u64,
+    pub hlo_bytes: u64,
+    pub lower_ms: f64,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let io = |node: &Value| -> anyhow::Result<Vec<IoDecl>> {
+            node.as_arr()
+                .ok_or_else(|| anyhow!("ios not an array"))?
+                .iter()
+                .map(|i| {
+                    Ok(IoDecl {
+                        name: i.get("name").as_str().unwrap_or("").to_string(),
+                        shape: i
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("shape not an array"))?
+                            .iter()
+                            .map(|d| d.as_u64().map(|x| x as usize))
+                            .collect::<Option<Vec<_>>>()
+                            .ok_or_else(|| anyhow!("bad shape"))?,
+                        dtype: DType::parse(i.get("dtype").as_str().unwrap_or(""))?,
+                        access: Access::parse(i.get("access").as_str().unwrap_or("read"))?,
+                    })
+                })
+                .collect()
+        };
+        let usizes = |node: &Value| -> anyhow::Result<Vec<usize>> {
+            node.as_arr()
+                .ok_or_else(|| anyhow!("not an array"))?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow!("bad int")))
+                .collect()
+        };
+        Ok(Self {
+            name: v.get("name").as_str().unwrap_or("").to_string(),
+            variant: v.get("variant").as_str().unwrap_or("").to_string(),
+            profile: v.get("profile").as_str().unwrap_or("").to_string(),
+            key: v.get("key").as_str().unwrap_or("").to_string(),
+            file: v.get("file").as_str().unwrap_or("").to_string(),
+            inputs: io(v.get("inputs"))?,
+            outputs: io(v.get("outputs"))?,
+            iteration_space: usizes(v.get("iteration_space"))?,
+            workgroup: usizes(v.get("workgroup"))?,
+            tuple_root: v.get("tuple_root").as_bool().unwrap_or(false),
+            flops: v.get("flops").as_u64().unwrap_or(0),
+            bytes_in: v.get("bytes_in").as_u64().unwrap_or(0),
+            bytes_out: v.get("bytes_out").as_u64().unwrap_or(0),
+            vmem_bytes: v.get("vmem_bytes").as_u64().unwrap_or(0),
+            hlo_bytes: v.get("hlo_bytes").as_u64().unwrap_or(0),
+            lower_ms: v.get("lower_ms").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// Thread groups launched = ceil(iteration_space / workgroup) per dim
+    /// (the paper's Fig. 2 decomposition).
+    pub fn thread_groups(&self) -> usize {
+        self.iteration_space
+            .iter()
+            .zip(&self.workgroup)
+            .map(|(&it, &wg)| it.div_ceil(wg.max(1)))
+            .product()
+    }
+}
+
+/// The parsed manifest: all artifacts, indexed by key.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+        let mut entries = BTreeMap::new();
+        for e in v.get("entries").as_arr().unwrap_or(&[]) {
+            let entry = ArtifactEntry::from_json(e)?;
+            entries.insert(entry.key.clone(), entry);
+        }
+        if entries.is_empty() {
+            bail!("manifest at {path:?} has no entries");
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Locate the artifacts directory: `$JACC_ARTIFACTS`, else
+    /// `<crate>/artifacts`, else `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("JACC_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if crate_dir.exists() {
+            return crate_dir;
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn load_default() -> anyhow::Result<Self> {
+        Self::load(Self::default_dir())
+    }
+
+    pub fn get(&self, key: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.entries
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact {key} not in manifest (have: {:?})",
+                self.entries.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn find(&self, name: &str, variant: &str, profile: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.get(&format!("{name}.{variant}.{profile}"))
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// All entries for a profile (benchmark drivers iterate this).
+    pub fn profile_entries(&self, profile: &str) -> Vec<&ArtifactEntry> {
+        self.entries.values().filter(|e| e.profile == profile).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "vector_add", "variant": "pallas", "profile": "tiny",
+         "key": "vector_add.pallas.tiny", "file": "vector_add.pallas.tiny.hlo.txt",
+         "inputs": [{"name": "x", "shape": [4096], "dtype": "f32", "access": "read"},
+                     {"name": "y", "shape": [4096], "dtype": "f32", "access": "read"}],
+         "outputs": [{"name": "out", "shape": [4096], "dtype": "f32", "access": "write"}],
+         "iteration_space": [4096], "workgroup": [1024], "tuple_root": false,
+         "flops": 4096, "bytes_in": 32768, "bytes_out": 16384,
+         "vmem_bytes": 12288, "hlo_bytes": 100, "lower_ms": 5.0}
+      ]
+    }"#;
+
+    fn sample_manifest(dir: &Path) -> Manifest {
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let dir = std::env::temp_dir().join("jacc-test-manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample_manifest(&dir);
+        let e = m.find("vector_add", "pallas", "tiny").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.inputs[0].access, Access::Read);
+        assert_eq!(e.outputs[0].access, Access::Write);
+        assert_eq!(e.thread_groups(), 4);
+        assert!(!e.tuple_root);
+        assert_eq!(e.inputs[0].nbytes(), 16384);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let dir = std::env::temp_dir().join("jacc-test-manifest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample_manifest(&dir);
+        assert!(m.get("nope.pallas.tiny").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            // Every entry's HLO file must exist.
+            for e in m.entries.values() {
+                assert!(m.hlo_path(e).exists(), "{}", e.key);
+            }
+            // The 8 paper benchmarks exist in the tiny profile.
+            for name in ["vector_add", "reduction", "histogram", "matmul",
+                         "spmv", "conv2d", "black_scholes", "correlation"] {
+                assert!(m.find(name, "pallas", "tiny").is_ok(), "{name}");
+            }
+            // black_scholes is multi-output => tuple root.
+            assert!(m.find("black_scholes", "pallas", "tiny").unwrap().tuple_root);
+            assert!(!m.find("reduction", "pallas", "tiny").unwrap().tuple_root);
+        }
+    }
+
+    #[test]
+    fn access_semantics() {
+        assert!(Access::Read.is_read() && !Access::Read.is_write());
+        assert!(Access::Write.is_write() && !Access::Write.is_read());
+        assert!(Access::ReadWrite.is_read() && Access::ReadWrite.is_write());
+    }
+}

@@ -1,0 +1,185 @@
+//! Host values and their bridge to XLA literals / PJRT device buffers.
+//!
+//! `HostValue` is the typed flat array the serializer produces from task
+//! parameters (paper §3.2.2 — after the data schema flattens composite
+//! types, what crosses the PCIe bus is exactly this). The executor turns
+//! it into an `xla::Literal` for upload and back on download.
+
+use anyhow::{anyhow, bail};
+use xla::{ElementType, Literal};
+
+use super::artifact::DType;
+
+/// A typed host-side array (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostValue {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 { shape, data }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::U32 { shape, data }
+    }
+
+    /// Scalar-as-(1,) convenience (alpha parameters etc.).
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32 { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. }
+            | HostValue::I32 { shape, .. }
+            | HostValue::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32 { .. } => DType::F32,
+            HostValue::I32 { .. } => DType::I32,
+            HostValue::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.element_count() * 4
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            other => bail!("expected i32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_u32(&self) -> anyhow::Result<&[u32]> {
+        match self {
+            HostValue::U32 { data, .. } => Ok(data),
+            other => bail!("expected u32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Upload form: `xla::Literal` with the right shape.
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32 { data, .. } => Literal::vec1(data),
+            HostValue::I32 { data, .. } => Literal::vec1(data),
+            HostValue::U32 { data, .. } => Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Download form: read a device literal back into a typed host array.
+    pub fn from_literal(lit: &Literal) -> anyhow::Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostValue::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            ElementType::S32 => Ok(HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            ElementType::U32 => Ok(HostValue::U32 { shape: dims, data: lit.to_vec::<u32>()? }),
+            other => Err(anyhow!("unsupported element type {other:?}")),
+        }
+    }
+
+    /// Shape/dtype check against a manifest declaration.
+    pub fn check_decl(&self, decl: &super::artifact::IoDecl) -> anyhow::Result<()> {
+        if self.dtype() != decl.dtype {
+            bail!("param '{}': dtype {:?} != manifest {:?}", decl.name, self.dtype(), decl.dtype);
+        }
+        if self.shape() != decl.shape.as_slice() {
+            bail!(
+                "param '{}': shape {:?} != manifest {:?}",
+                decl.name,
+                self.shape(),
+                decl.shape
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{Access, IoDecl};
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = HostValue::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_u32() {
+        let v = HostValue::i32(vec![4], vec![-1, 2, -3, 4]);
+        assert_eq!(HostValue::from_literal(&v.to_literal().unwrap()).unwrap(), v);
+        let v = HostValue::u32(vec![3], vec![0, u32::MAX, 7]);
+        assert_eq!(HostValue::from_literal(&v.to_literal().unwrap()).unwrap(), v);
+    }
+
+    #[test]
+    fn scalar_helper() {
+        let v = HostValue::scalar_f32(2.5);
+        assert_eq!(v.shape(), &[1]);
+        assert_eq!(v.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostValue::f32(vec![3], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn check_decl_catches_mismatches() {
+        let decl = IoDecl {
+            name: "x".into(),
+            shape: vec![4],
+            dtype: DType::F32,
+            access: Access::Read,
+        };
+        assert!(HostValue::f32(vec![4], vec![0.0; 4]).check_decl(&decl).is_ok());
+        assert!(HostValue::f32(vec![5], vec![0.0; 5]).check_decl(&decl).is_err());
+        assert!(HostValue::i32(vec![4], vec![0; 4]).check_decl(&decl).is_err());
+    }
+
+    #[test]
+    fn wrong_accessor_errors() {
+        let v = HostValue::f32(vec![1], vec![0.0]);
+        assert!(v.as_i32().is_err());
+        assert!(v.as_u32().is_err());
+        assert!(v.as_f32().is_ok());
+    }
+}

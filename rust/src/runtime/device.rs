@@ -1,0 +1,106 @@
+//! Device contexts — the `Cuda.getDevice(0).createDeviceContext()`
+//! surface of the paper's Listing 4.
+//!
+//! A `DeviceContext` bundles the PJRT runtime (compile cache +
+//! executor), the per-device memory manager, and the device model used
+//! for occupancy/cost reporting. Task graphs execute *on* a device
+//! context.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::bail;
+
+use crate::devicemodel::{CostModel, DeviceSpec};
+use crate::memory::DeviceMemoryManager;
+
+use super::artifact::Manifest;
+use super::pjrt::PjrtRuntime;
+
+/// Device discovery entry point, named after the paper's API.
+pub struct Cuda;
+
+/// A discovered (not yet opened) device.
+pub struct DeviceHandle {
+    pub index: usize,
+    pub spec: DeviceSpec,
+}
+
+impl Cuda {
+    /// `Cuda.getDevice(i)`. The PJRT CPU plugin exposes one device; the
+    /// modeled spec is attached for reporting.
+    pub fn get_device(index: usize) -> anyhow::Result<DeviceHandle> {
+        if index != 0 {
+            bail!("device {index} not present (CPU PJRT exposes device 0)");
+        }
+        Ok(DeviceHandle { index, spec: DeviceSpec::k20m() })
+    }
+
+    /// Number of visible devices.
+    pub fn device_count() -> usize {
+        1
+    }
+}
+
+impl DeviceHandle {
+    /// `createDeviceContext()` — opens the PJRT client, loads the
+    /// artifact manifest, sizes the memory manager from the spec.
+    pub fn create_device_context(self) -> anyhow::Result<Rc<DeviceContext>> {
+        let runtime = PjrtRuntime::with_default_manifest()?;
+        Ok(Rc::new(DeviceContext::new(self.index, self.spec, runtime)))
+    }
+
+    /// Same, with an explicit manifest (tests, custom artifact dirs).
+    pub fn create_device_context_with(
+        self,
+        manifest: Manifest,
+    ) -> anyhow::Result<Rc<DeviceContext>> {
+        let runtime = PjrtRuntime::new(manifest)?;
+        Ok(Rc::new(DeviceContext::new(self.index, self.spec, runtime)))
+    }
+}
+
+/// An opened device: runtime + memory manager + model.
+pub struct DeviceContext {
+    pub index: usize,
+    pub spec: DeviceSpec,
+    pub runtime: PjrtRuntime,
+    pub memory: RefCell<DeviceMemoryManager>,
+    pub cost: CostModel,
+}
+
+impl DeviceContext {
+    pub fn new(index: usize, spec: DeviceSpec, runtime: PjrtRuntime) -> Self {
+        let memory = RefCell::new(DeviceMemoryManager::new(spec.mem_capacity));
+        let cost = CostModel::new(spec.clone());
+        Self { index, spec, runtime, memory, cost }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}[{}] via {}", self.spec.name, self.index, self.runtime.platform_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_device_zero_ok_others_err() {
+        assert!(Cuda::get_device(0).is_ok());
+        assert!(Cuda::get_device(1).is_err());
+        assert_eq!(Cuda::device_count(), 1);
+    }
+
+    #[test]
+    fn context_carries_k20m_spec() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let ctx = Cuda::get_device(0).unwrap().create_device_context().unwrap();
+        assert_eq!(ctx.spec.name, "tesla-k20m");
+        assert_eq!(ctx.memory.borrow().capacity(), ctx.spec.mem_capacity);
+        assert!(ctx.name().contains("cpu"));
+    }
+}

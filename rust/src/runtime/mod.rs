@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper, lazy compile cache ("JIT"),
+//! device contexts, artifact manifest, and the host<->device value
+//! bridge. Adapted from /opt/xla-example/load_hlo — HLO *text* is the
+//! interchange format (see python/compile/aot.py for why).
+
+pub mod artifact;
+pub mod buffer;
+pub mod device;
+pub mod pjrt;
+
+pub use artifact::{Access, ArtifactEntry, DType, IoDecl, Manifest};
+pub use buffer::HostValue;
+pub use device::{Cuda, DeviceContext, DeviceHandle};
+pub use pjrt::{CompileStats, CompiledKernel, PjrtRuntime};

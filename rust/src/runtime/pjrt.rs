@@ -1,0 +1,364 @@
+//! PJRT runtime: artifact loading, lazy compilation (the JIT analog)
+//! and kernel execution.
+//!
+//! The paper's Jacc compiles Java bytecode to PTX on first use and
+//! caches the result; here the AOT HLO text is parsed and compiled by
+//! the PJRT client on first use and cached by artifact key. Compile
+//! times are recorded so benchmarks can report speedups inclusive and
+//! exclusive of compilation (paper Fig. 5a).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::buffer::HostValue;
+
+/// A compiled kernel: executable + its manifest entry + compile time.
+pub struct CompiledKernel {
+    pub entry: ArtifactEntry,
+    pub compile_time: Duration,
+    exe: PjRtLoadedExecutable,
+}
+
+impl CompiledKernel {
+    /// Execute with host literals; returns one `HostValue` per declared
+    /// output (tuple roots are decomposed).
+    pub fn run_host(&self, args: &[Literal]) -> anyhow::Result<Vec<HostValue>> {
+        let lits = self.run_literals(args)?;
+        lits.iter().map(|l| HostValue::from_literal(l)).collect()
+    }
+
+    /// Execute with host literals; returns output literals.
+    pub fn run_literals(&self, args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "kernel {}: got {} args, expects {}",
+                self.entry.key,
+                args.len(),
+                self.entry.inputs.len()
+            );
+        }
+        let outs = self.exe.execute::<Literal>(args)?;
+        self.collect_outputs(&outs[0])
+    }
+
+    /// Execute with device-resident buffers (no host round-trip for
+    /// inputs) — the persistent-state fast path (paper §3.2.1).
+    pub fn run_buffers(&self, args: &[&PjRtBuffer]) -> anyhow::Result<Vec<PjRtBuffer>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "kernel {}: got {} buffers, expects {}",
+                self.entry.key,
+                args.len(),
+                self.entry.inputs.len()
+            );
+        }
+        let mut outs = self.exe.execute_b(args)?;
+        Ok(std::mem::take(&mut outs[0]))
+    }
+
+    /// Read output buffers back to host values (tuple roots decomposed).
+    pub fn buffers_to_host(&self, bufs: &[PjRtBuffer]) -> anyhow::Result<Vec<HostValue>> {
+        let mut lits = Vec::new();
+        for b in bufs {
+            let lit = b.to_literal_sync()?;
+            if self.entry.tuple_root {
+                let mut lit = lit;
+                lits.extend(lit.decompose_tuple()?);
+            } else {
+                lits.push(lit);
+            }
+        }
+        lits.iter().map(|l| HostValue::from_literal(l)).collect()
+    }
+
+    fn collect_outputs(&self, bufs: &[PjRtBuffer]) -> anyhow::Result<Vec<Literal>> {
+        let mut lits = Vec::new();
+        for b in bufs {
+            let lit = b.to_literal_sync()?;
+            if self.entry.tuple_root {
+                let mut lit = lit;
+                lits.extend(lit.decompose_tuple()?);
+            } else {
+                lits.push(lit);
+            }
+        }
+        if lits.len() != self.entry.outputs.len() {
+            bail!(
+                "kernel {}: produced {} outputs, manifest declares {}",
+                self.entry.key,
+                lits.len(),
+                self.entry.outputs.len()
+            );
+        }
+        Ok(lits)
+    }
+}
+
+/// Raw-copy D2H fast path for array-shaped buffers. Returns Ok(None)
+/// for tuple shapes, unsupported dtypes, or when the backend does not
+/// implement CopyRawToHost (probed once — the bundled xla_extension
+/// 0.5.1 TFRT CPU client does not; see EXPERIMENTS.md §Perf).
+pub fn download_fast(buf: &PjRtBuffer) -> anyhow::Result<Option<HostValue>> {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unprobed, 1 = supported, 2 = unsupported.
+    static RAW_SUPPORTED: AtomicU8 = AtomicU8::new(0);
+    if RAW_SUPPORTED.load(Ordering::Relaxed) == 2 {
+        return Ok(None);
+    }
+    let shape = buf.on_device_shape()?;
+    let xla::Shape::Array(arr) = shape else {
+        return Ok(None);
+    };
+    let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+    let n: usize = dims.iter().product();
+    macro_rules! raw {
+        ($zero:expr, $variant:ident) => {{
+            let mut data = vec![$zero; n];
+            match buf.copy_raw_to_host_sync(&mut data, 0) {
+                Ok(()) => {
+                    RAW_SUPPORTED.store(1, Ordering::Relaxed);
+                    Ok(Some(HostValue::$variant { shape: dims, data }))
+                }
+                Err(e) if format!("{e}").contains("not implemented") => {
+                    RAW_SUPPORTED.store(2, Ordering::Relaxed);
+                    Ok(None)
+                }
+                Err(e) => Err(e.into()),
+            }
+        }};
+    }
+    match arr.ty() {
+        xla::ElementType::F32 => raw!(0f32, F32),
+        xla::ElementType::S32 => raw!(0i32, I32),
+        xla::ElementType::U32 => raw!(0u32, U32),
+        _ => Ok(None),
+    }
+}
+
+/// Statistics of the compile cache (reported by `jacc inspect`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompileStats {
+    pub compilations: usize,
+    pub cache_hits: usize,
+    pub total_compile_time: Duration,
+}
+
+/// The PJRT runtime: one CPU client + a compile cache keyed by artifact.
+///
+/// Single-threaded by design: PJRT handles are not `Send` in the `xla`
+/// crate, so the coordinator owns the runtime on the leader thread
+/// (mirrors Jacc, where a device context is driven by one host thread).
+pub struct PjrtRuntime {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<CompiledKernel>>>,
+    stats: RefCell<CompileStats>,
+}
+
+impl PjrtRuntime {
+    pub fn new(manifest: Manifest) -> anyhow::Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(CompileStats::default()),
+        })
+    }
+
+    pub fn with_default_manifest() -> anyhow::Result<Self> {
+        Self::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> CompileStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Fetch-or-compile a kernel (the lazy-JIT path). Returns the
+    /// kernel and whether this call compiled it (false = cache hit).
+    pub fn kernel(&self, key: &str) -> anyhow::Result<(Rc<CompiledKernel>, bool)> {
+        if let Some(k) = self.cache.borrow().get(key) {
+            self.stats.borrow_mut().cache_hits += 1;
+            return Ok((Rc::clone(k), false));
+        }
+        let entry = self.manifest.get(key)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let compile_time = t0.elapsed();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compilations += 1;
+            st.total_compile_time += compile_time;
+        }
+        let kernel = Rc::new(CompiledKernel { entry, compile_time, exe });
+        self.cache.borrow_mut().insert(key.to_string(), Rc::clone(&kernel));
+        Ok((kernel, true))
+    }
+
+    /// Convenience: fetch by (name, variant, profile).
+    pub fn kernel_for(
+        &self,
+        name: &str,
+        variant: &str,
+        profile: &str,
+    ) -> anyhow::Result<(Rc<CompiledKernel>, bool)> {
+        self.kernel(&format!("{name}.{variant}.{profile}"))
+    }
+
+    /// Upload a host value to the device (H2D transfer).
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall — the
+    /// copy completes before returning). `buffer_from_host_literal`
+    /// copies *asynchronously* from the literal on a worker thread, so
+    /// dropping the literal after it returns is a use-after-free.
+    pub fn upload(&self, value: &HostValue) -> anyhow::Result<PjRtBuffer> {
+        let dims = value.shape();
+        let buf = match value {
+            HostValue::F32 { data, .. } => {
+                self.client.buffer_from_host_buffer(data, dims, None)?
+            }
+            HostValue::I32 { data, .. } => {
+                self.client.buffer_from_host_buffer(data, dims, None)?
+            }
+            HostValue::U32 { data, .. } => {
+                self.client.buffer_from_host_buffer(data, dims, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Download a device buffer to the host (D2H transfer).
+    ///
+    /// Array buffers use the raw-copy fast path (one copy, no
+    /// intermediate literal — measured 9x faster in perf_micro);
+    /// tuple-shaped buffers fall back to the literal path.
+    pub fn download(&self, buf: &PjRtBuffer) -> anyhow::Result<HostValue> {
+        if let Some(v) = download_fast(buf)? {
+            return Ok(v);
+        }
+        let lit = buf.to_literal_sync()?;
+        HostValue::from_literal(&lit)
+    }
+
+    /// Drop all compiled kernels (tests / memory pressure).
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built: skip
+        }
+        Some(PjrtRuntime::with_default_manifest().unwrap())
+    }
+
+    #[test]
+    fn compile_caches_and_counts() {
+        let Some(rt) = runtime() else { return };
+        let (_k1, compiled1) = rt.kernel("vector_add.pallas.tiny").unwrap();
+        let (_k2, compiled2) = rt.kernel("vector_add.pallas.tiny").unwrap();
+        assert!(compiled1);
+        assert!(!compiled2);
+        let st = rt.stats();
+        assert_eq!(st.compilations, 1);
+        assert_eq!(st.cache_hits, 1);
+        assert!(st.total_compile_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn vector_add_tiny_runs_correctly() {
+        let Some(rt) = runtime() else { return };
+        let (k, _) = rt.kernel("vector_add.pallas.tiny").unwrap();
+        let n = k.entry.inputs[0].shape[0];
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        let out = k
+            .run_host(&[
+                HostValue::f32(vec![n], x.clone()).to_literal().unwrap(),
+                HostValue::f32(vec![n], y.clone()).to_literal().unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let got = out[0].as_f32().unwrap();
+        for i in 0..n {
+            assert_eq!(got[i], 3.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn black_scholes_tuple_root_decomposes() {
+        let Some(rt) = runtime() else { return };
+        let (k, _) = rt.kernel("black_scholes.pallas.tiny").unwrap();
+        assert!(k.entry.tuple_root);
+        let n = k.entry.inputs[0].shape[0];
+        let mk = |v: f32| HostValue::f32(vec![n], vec![v; n]).to_literal().unwrap();
+        let out = k.run_host(&[mk(20.0), mk(20.0), mk(1.0)]).unwrap();
+        assert_eq!(out.len(), 2); // call + put
+        let call = out[0].as_f32().unwrap();
+        let put = out[1].as_f32().unwrap();
+        // ATM call is worth more than the put when r > 0.
+        assert!(call[0] > put[0]);
+        assert!(call[0] > 0.0 && put[0] > 0.0);
+    }
+
+    #[test]
+    fn buffer_chaining_stays_on_device() {
+        let Some(rt) = runtime() else { return };
+        let (add, _) = rt.kernel("pipe_vecadd.pallas.tiny").unwrap();
+        let (red, _) = rt.kernel("pipe_reduce.pallas.tiny").unwrap();
+        let n = add.entry.inputs[0].shape[0];
+        let x = rt.upload(&HostValue::f32(vec![n], vec![1.0; n])).unwrap();
+        let y = rt.upload(&HostValue::f32(vec![n], vec![2.0; n])).unwrap();
+        let z = add.run_buffers(&[&x, &y]).unwrap();
+        let s = red.run_buffers(&[&z[0]]).unwrap();
+        let host = rt.download(&s[0]).unwrap();
+        assert_eq!(host.as_f32().unwrap()[0], 3.0 * n as f32);
+    }
+
+    #[test]
+    fn every_artifact_parses_as_hlo_text() {
+        // Guards against jax emitting HLO instructions the 0.5.1 text
+        // parser does not know (e.g. the dedicated `erf` op).
+        let Some(rt) = runtime() else { return };
+        for entry in rt.manifest().entries.values() {
+            let path = rt.manifest().hlo_path(entry);
+            let r = xla::HloModuleProto::from_text_file(&path);
+            assert!(r.is_ok(), "{} failed to parse: {:?}", entry.key, r.err());
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let Some(rt) = runtime() else { return };
+        let (k, _) = rt.kernel("vector_add.pallas.tiny").unwrap();
+        let lit = HostValue::f32(vec![1], vec![0.0]).to_literal().unwrap();
+        assert!(k.run_literals(&[lit]).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Atomic floats via compare-and-swap on the bit pattern.
+//!
+//! This is a faithful port of the paper's Listing 1 trick: Java has no
+//! `AtomicFloat`, so the benchmark stores the float's bits in an
+//! `AtomicInteger` and loops `compareAndSet(expected,
+//! floatToIntBits(sum + intBitsToFloat(expected)))`. The multi-threaded
+//! baselines (`baselines::mt`) use exactly this type so their cost
+//! profile matches the paper's Java implementation.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// f32 with atomic read-modify-write, CAS-on-bits (paper Listing 1).
+#[derive(Debug, Default)]
+pub struct AtomicF32 {
+    bits: AtomicU32,
+}
+
+impl AtomicF32 {
+    pub fn new(v: f32) -> Self {
+        Self { bits: AtomicU32::new(v.to_bits()) }
+    }
+
+    #[inline]
+    pub fn load(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f32) {
+        self.bits.store(v.to_bits(), Ordering::Release);
+    }
+
+    /// `self += v` via CAS loop; returns the previous value.
+    pub fn fetch_add(&self, v: f32) -> f32 {
+        let mut expected = self.bits.load(Ordering::Relaxed);
+        loop {
+            let old = f32::from_bits(expected);
+            let new = (old + v).to_bits();
+            match self.bits.compare_exchange_weak(
+                expected,
+                new,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return old,
+                Err(actual) => expected = actual,
+            }
+        }
+    }
+
+    /// Generic atomic update with a pure closure; returns previous value.
+    pub fn fetch_update(&self, mut f: impl FnMut(f32) -> f32) -> f32 {
+        let mut expected = self.bits.load(Ordering::Relaxed);
+        loop {
+            let old = f32::from_bits(expected);
+            let new = f(old).to_bits();
+            match self.bits.compare_exchange_weak(
+                expected,
+                new,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return old,
+                Err(actual) => expected = actual,
+            }
+        }
+    }
+}
+
+/// f64 variant (used by higher-precision accumulations in baselines).
+#[derive(Debug, Default)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        Self { bits: AtomicU64::new(v.to_bits()) }
+    }
+
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Release);
+    }
+
+    pub fn fetch_add(&self, v: f64) -> f64 {
+        let mut expected = self.bits.load(Ordering::Relaxed);
+        loop {
+            let old = f64::from_bits(expected);
+            let new = (old + v).to_bits();
+            match self.bits.compare_exchange_weak(
+                expected,
+                new,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return old,
+                Err(actual) => expected = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_thread_add() {
+        let a = AtomicF32::new(1.5);
+        assert_eq!(a.fetch_add(2.5), 1.5);
+        assert_eq!(a.load(), 4.0);
+    }
+
+    #[test]
+    fn concurrent_adds_sum_exactly_with_integers() {
+        // Use integer-valued floats so FP addition is associative and
+        // the result is exact regardless of interleaving.
+        let a = Arc::new(AtomicF32::new(0.0));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        a.fetch_add(1.0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(a.load(), 8000.0);
+    }
+
+    #[test]
+    fn fetch_update_max() {
+        let a = AtomicF32::new(1.0);
+        a.fetch_update(|old| old.max(7.5));
+        assert_eq!(a.load(), 7.5);
+        a.fetch_update(|old| old.max(2.0));
+        assert_eq!(a.load(), 7.5);
+    }
+
+    #[test]
+    fn f64_concurrent_adds() {
+        let a = Arc::new(AtomicF64::new(0.0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..5000 {
+                        a.fetch_add(2.0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(a.load(), 40_000.0);
+    }
+
+    #[test]
+    fn negative_zero_roundtrip() {
+        let a = AtomicF32::new(-0.0);
+        assert!(a.load().is_sign_negative());
+        a.store(0.0);
+        assert!(!a.load().is_sign_negative());
+    }
+}

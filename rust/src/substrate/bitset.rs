@@ -1,0 +1,209 @@
+//! OpenBitSet analog: the Lucene "intersection count" substrate behind
+//! the correlation-matrix benchmark (paper §4.2: 1024 terms x 16384
+//! documents). Word size is u32 to match the Pallas kernel's uint32
+//! planes; `intersection_count` is the popcount-based hot loop.
+
+/// Fixed-capacity bitset over u32 words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitSet {
+    nbits: usize,
+    words: Vec<u32>,
+}
+
+impl BitSet {
+    pub fn new(nbits: usize) -> Self {
+        Self { nbits, words: vec![0; nbits.div_ceil(32)] }
+    }
+
+    pub fn from_words(nbits: usize, words: Vec<u32>) -> Self {
+        assert_eq!(words.len(), nbits.div_ceil(32));
+        let mut bs = Self { nbits, words };
+        bs.mask_tail();
+        bs
+    }
+
+    fn mask_tail(&mut self) {
+        let tail_bits = self.nbits % 32;
+        if tail_bits != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u32 << tail_bits) - 1;
+            }
+        }
+    }
+
+    pub fn nbits(&self) -> usize {
+        self.nbits
+    }
+
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    pub fn set(&mut self, i: usize) {
+        assert!(i < self.nbits, "bit {i} out of range {}", self.nbits);
+        self.words[i / 32] |= 1 << (i % 32);
+    }
+
+    pub fn clear(&mut self, i: usize) {
+        assert!(i < self.nbits);
+        self.words[i / 32] &= !(1 << (i % 32));
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.nbits);
+        (self.words[i / 32] >> (i % 32)) & 1 == 1
+    }
+
+    /// Number of set bits (popcount over words).
+    pub fn cardinality(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Lucene `OpenBitSet.intersectionCount`: |a AND b|.
+    pub fn intersection_count(&self, other: &BitSet) -> usize {
+        assert_eq!(self.nbits, other.nbits);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    pub fn union_count(&self, other: &BitSet) -> usize {
+        assert_eq!(self.nbits, other.nbits);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a | b).count_ones() as usize)
+            .sum()
+    }
+}
+
+/// A bank of `terms` bitsets over `docs` documents, stored as the
+/// row-major `[terms, words]` u32 plane the kernels consume.
+#[derive(Debug, Clone)]
+pub struct TermBank {
+    pub terms: usize,
+    pub docs: usize,
+    pub words_per_term: usize,
+    pub words: Vec<u32>,
+}
+
+impl TermBank {
+    /// Deterministic random fill with the given per-bit density.
+    pub fn random(terms: usize, docs: usize, density: f64, seed: u64) -> Self {
+        let words_per_term = docs.div_ceil(32);
+        let mut rng = crate::substrate::prng::Rng::new(seed);
+        let mut words = vec![0u32; terms * words_per_term];
+        for t in 0..terms {
+            for d in 0..docs {
+                if rng.next_f64() < density {
+                    words[t * words_per_term + d / 32] |= 1 << (d % 32);
+                }
+            }
+        }
+        Self { terms, docs, words_per_term, words }
+    }
+
+    pub fn term(&self, t: usize) -> BitSet {
+        let w = &self.words[t * self.words_per_term..(t + 1) * self.words_per_term];
+        BitSet::from_words(self.words_per_term * 32, w.to_vec())
+    }
+
+    /// Serial correlation matrix: `C[i][j] = |term_i AND term_j|` —
+    /// the ground truth for the GPU/Pallas kernel.
+    pub fn correlation_matrix(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.terms * self.terms];
+        for i in 0..self.terms {
+            let wi = &self.words[i * self.words_per_term..(i + 1) * self.words_per_term];
+            for j in 0..self.terms {
+                let wj = &self.words[j * self.words_per_term..(j + 1) * self.words_per_term];
+                let mut acc = 0u32;
+                for (a, b) in wi.iter().zip(wj) {
+                    acc += (a & b).count_ones();
+                }
+                out[i * self.terms + j] = acc as i32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut bs = BitSet::new(100);
+        assert!(!bs.get(63));
+        bs.set(63);
+        bs.set(0);
+        bs.set(99);
+        assert!(bs.get(63) && bs.get(0) && bs.get(99));
+        assert_eq!(bs.cardinality(), 3);
+        bs.clear(63);
+        assert!(!bs.get(63));
+        assert_eq!(bs.cardinality(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        let mut bs = BitSet::new(10);
+        bs.set(10);
+    }
+
+    #[test]
+    fn intersection_and_union_counts() {
+        let mut a = BitSet::new(64);
+        let mut b = BitSet::new(64);
+        for i in 0..32 {
+            a.set(i);
+        }
+        for i in 16..48 {
+            b.set(i);
+        }
+        assert_eq!(a.intersection_count(&b), 16);
+        assert_eq!(a.union_count(&b), 48);
+        // Inclusion-exclusion.
+        assert_eq!(
+            a.cardinality() + b.cardinality(),
+            a.intersection_count(&b) + a.union_count(&b)
+        );
+    }
+
+    #[test]
+    fn from_words_masks_tail() {
+        let bs = BitSet::from_words(33, vec![0xFFFF_FFFF, 0xFFFF_FFFF]);
+        assert_eq!(bs.cardinality(), 33);
+    }
+
+    #[test]
+    fn term_bank_correlation_diagonal_is_cardinality() {
+        let bank = TermBank::random(8, 96, 0.3, 42);
+        let c = bank.correlation_matrix();
+        for t in 0..8 {
+            assert_eq!(c[t * 8 + t] as usize, bank.term(t).cardinality());
+        }
+    }
+
+    #[test]
+    fn term_bank_correlation_symmetric() {
+        let bank = TermBank::random(10, 64, 0.5, 7);
+        let c = bank.correlation_matrix();
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(c[i * 10 + j], c[j * 10 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn density_roughly_respected() {
+        let bank = TermBank::random(4, 3200, 0.25, 3);
+        let total: usize = (0..4).map(|t| bank.term(t).cardinality()).sum();
+        let frac = total as f64 / (4.0 * 3200.0);
+        assert!((frac - 0.25).abs() < 0.03, "frac={frac}");
+    }
+}

@@ -1,0 +1,253 @@
+//! Tiny declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help`. Used by the `jacc` binary and every bench/example.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative parser: register options, then `parse()`.
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: String,
+    about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parse result: lookup by option name.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Self { bin: bin.into(), about: about.into(), opts: Vec::new() }
+    }
+
+    /// Boolean flag (`--verbose`).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Valued option with default (`--profile scaled`).
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: Some(default.into()),
+        });
+        self
+    }
+
+    /// Valued option without a default.
+    pub fn opt_req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} [OPTIONS] [ARGS...]\n\nOPTIONS:\n",
+            self.bin, self.about, self.bin);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{val}\n      {}{def}\n", o.name, o.help));
+        }
+        out.push_str("  --help\n      Print this help\n");
+        out
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::Invalid(name, "flag takes no value".into()));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`, printing help and exiting on `--help`
+    /// or error.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(CliError::HelpRequested) => {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.help_text());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::Invalid(name.into(), v.into()))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::Invalid(name.into(), v.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("verbose", "chatty")
+            .opt("profile", "scaled", "which profile")
+            .opt_req("n", "count")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse_from(&argv(&[])).unwrap();
+        assert_eq!(a.get("profile"), Some("scaled"));
+        assert_eq!(a.get("n"), None);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let a = cli()
+            .parse_from(&argv(&["--verbose", "--profile=paper", "--n", "5", "pos1"]))
+            .unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("profile"), Some("paper"));
+        assert_eq!(a.get_usize("n").unwrap(), 5);
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cli().parse_from(&argv(&["--nope"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cli().parse_from(&argv(&["--n"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(
+            cli().parse_from(&argv(&["--help"])),
+            Err(CliError::HelpRequested)
+        ));
+        assert!(cli().help_text().contains("--profile"));
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = cli().parse_from(&argv(&["--n", "abc"])).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! From-scratch substrates the reproduction depends on (DESIGN.md §3,
+//! S15–S24). None of these were available as offline crates; each is a
+//! small, fully-tested implementation scoped to what the paper's system
+//! needs.
+
+pub mod atomic_float;
+pub mod bitset;
+pub mod cli;
+pub mod json;
+pub mod mm;
+pub mod prng;
+pub mod proptest;
+pub mod sparse;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,264 @@
+//! Sparse matrix formats: COO, CSR and ELL.
+//!
+//! The paper's SpMV benchmark uses CSR on the GPU and notes the
+//! irregular gather hurts it. The TPU adaptation converts to ELL
+//! (padded `[rows, width]` planes) host-side — "ahead-of-time
+//! balancing" — which is what the `spmv.pallas` artifact consumes
+//! (DESIGN.md §Hardware-Adaptation). Conversions here are exact and
+//! lossless (padding lanes are value 0.0 / index 0).
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SparseError {
+    #[error("coordinate out of bounds: ({0}, {1}) in {2}x{3}")]
+    OutOfBounds(usize, usize, usize, usize),
+    #[error("row {0} has {1} non-zeros > ELL width {2}")]
+    RowTooWide(usize, usize, usize),
+}
+
+/// Coordinate-list matrix (also what Matrix Market files contain).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    /// (row, col, value) triplets; duplicates are summed on conversion.
+    pub entries: Vec<(usize, usize, f32)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) -> Result<(), SparseError> {
+        if r >= self.rows || c >= self.cols {
+            return Err(SparseError::OutOfBounds(r, c, self.rows, self.cols));
+        }
+        self.entries.push((r, c, v));
+        Ok(())
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_by_key(|&(r, c, _)| (r, c));
+        // Sum duplicates.
+        let mut dedup: Vec<(usize, usize, f32)> = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            match dedup.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => dedup.push((r, c, v)),
+            }
+        }
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for &(r, _, _) in &dedup {
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx: dedup.iter().map(|e| e.1).collect(),
+            values: dedup.iter().map(|e| e.2).collect(),
+        }
+    }
+}
+
+/// Compressed sparse row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Maximum non-zeros in any row — the minimum viable ELL width.
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.rows).map(|r| self.row_nnz(r)).max().unwrap_or(0)
+    }
+
+    /// Serial SpMV (the baseline reference semantics).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.values[k] * x[self.col_idx[k]];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    pub fn to_ell(&self, width: usize) -> Result<Ell, SparseError> {
+        let max = self.max_row_nnz();
+        if max > width {
+            let bad = (0..self.rows).find(|&r| self.row_nnz(r) > width).unwrap();
+            return Err(SparseError::RowTooWide(bad, self.row_nnz(bad), width));
+        }
+        let mut values = vec![0.0f32; self.rows * width];
+        let mut indices = vec![0i32; self.rows * width];
+        for r in 0..self.rows {
+            for (lane, k) in (self.row_ptr[r]..self.row_ptr[r + 1]).enumerate() {
+                values[r * width + lane] = self.values[k];
+                indices[r * width + lane] = self.col_idx[k] as i32;
+            }
+        }
+        Ok(Ell { rows: self.rows, cols: self.cols, width, values, indices })
+    }
+}
+
+/// ELLPACK: row-major `[rows, width]` value/index planes, zero-padded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    pub rows: usize,
+    pub cols: usize,
+    pub width: usize,
+    /// Row-major `[rows * width]` values; padding lanes are 0.0.
+    pub values: Vec<f32>,
+    /// Row-major `[rows * width]` column indices; padding lanes are 0.
+    pub indices: Vec<i32>,
+}
+
+impl Ell {
+    /// Stored (non-padding) non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Padding overhead ratio: stored lanes / logical non-zeros.
+    pub fn padding_ratio(&self, logical_nnz: usize) -> f64 {
+        (self.rows * self.width) as f64 / logical_nnz.max(1) as f64
+    }
+
+    /// Serial ELL SpMV — must match `Csr::spmv` exactly on the same
+    /// matrix (property-tested).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let base = r * self.width;
+            let mut acc = 0.0f32;
+            for lane in 0..self.width {
+                acc += self.values[base + lane] * x[self.indices[base + lane] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            for lane in 0..self.width {
+                let v = self.values[r * self.width + lane];
+                if v != 0.0 {
+                    coo.push(r, self.indices[r * self.width + lane] as usize, v).unwrap();
+                }
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            let r = rng.below(rows as u64) as usize;
+            let c = rng.below(cols as u64) as usize;
+            // Avoid exact-zero values so nnz accounting is stable.
+            let v = rng.uniform(0.1, 2.0) as f32;
+            coo.push(r, c, v).unwrap();
+        }
+        coo
+    }
+
+    #[test]
+    fn coo_to_csr_sums_duplicates() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0).unwrap();
+        coo.push(0, 1, 2.0).unwrap();
+        coo.push(1, 0, 5.0).unwrap();
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.spmv(&[1.0, 1.0]), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut coo = Coo::new(2, 2);
+        assert!(coo.push(2, 0, 1.0).is_err());
+        assert!(coo.push(0, 5, 1.0).is_err());
+    }
+
+    #[test]
+    fn csr_ell_spmv_agree() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let rows = 1 + rng.below(40) as usize;
+            let cols = 1 + rng.below(40) as usize;
+            let nnz = rng.below(120) as usize;
+            let csr = random_coo(&mut rng, rows, cols, nnz).to_csr();
+            let width = csr.max_row_nnz().max(1);
+            let ell = csr.to_ell(width).unwrap();
+            let x = rng.f32_vec(cols, -1.0, 1.0);
+            let ys_csr = csr.spmv(&x);
+            let ys_ell = ell.spmv(&x);
+            for (a, b) in ys_csr.iter().zip(&ys_ell) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ell_round_trips_to_csr() {
+        let mut rng = Rng::new(9);
+        let csr = random_coo(&mut rng, 30, 30, 80).to_csr();
+        let ell = csr.to_ell(csr.max_row_nnz()).unwrap();
+        assert_eq!(ell.to_csr(), csr);
+    }
+
+    #[test]
+    fn ell_width_too_small_is_error() {
+        let mut coo = Coo::new(1, 4);
+        for c in 0..4 {
+            coo.push(0, c, 1.0).unwrap();
+        }
+        let csr = coo.to_csr();
+        assert!(matches!(csr.to_ell(3), Err(SparseError::RowTooWide(0, 4, 3))));
+    }
+
+    #[test]
+    fn padding_lanes_are_neutral() {
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 2, 4.0).unwrap();
+        let ell = coo.to_csr().to_ell(2).unwrap();
+        // Row 1 is all padding; must produce 0 regardless of x[0].
+        let y = ell.spmv(&[100.0, 100.0, 0.5]);
+        assert_eq!(y, vec![2.0, 0.0]);
+    }
+}

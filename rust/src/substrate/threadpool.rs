@@ -1,0 +1,366 @@
+//! Fixed-size thread pool + cyclic barrier — the `ExecutorService` /
+//! `CyclicBarrier` substrate the paper's Java baselines are built on
+//! (Listing 2). `baselines::mt` submits one `Runnable` per worker and
+//! waits on the barrier, exactly like the paper.
+//!
+//! Also provides `parallel_for`, a block-distribution helper used by the
+//! OpenMP-like baselines (static schedule, one contiguous chunk per
+//! thread — the paper's lines 16–18 of Listing 1).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// `Executors.newFixedThreadPool(n)` analog.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    n_threads: usize,
+    panicked: Arc<AtomicBool>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..n_threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panicked = Arc::clone(&panicked);
+                let inflight = Arc::clone(&inflight);
+                thread::Builder::new()
+                    .name(format!("jacc-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panicked.store(true, Ordering::Release);
+                                }
+                                let (lock, cvar) = &*inflight;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shutdown
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, n_threads, panicked, inflight }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// `executor.execute(runnable)` analog.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let (lock, _) = &*self.inflight;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool is shut down")
+            .send(Box::new(job))
+            .expect("pool workers alive");
+    }
+
+    /// Block until every submitted job has finished.
+    /// Panics if any job panicked (test-friendly failure propagation).
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+        drop(n);
+        if self.panicked.load(Ordering::Acquire) {
+            panic!("a pool job panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // `executor.shutdown(); while (!executor.isTerminated()) {}`
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// `java.util.concurrent.CyclicBarrier` analog (reusable).
+pub struct CyclicBarrier {
+    parties: usize,
+    state: Mutex<BarrierState>,
+    cvar: Condvar,
+}
+
+struct BarrierState {
+    waiting: usize,
+    generation: u64,
+}
+
+impl CyclicBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0);
+        Self {
+            parties,
+            state: Mutex::new(BarrierState { waiting: 0, generation: 0 }),
+            cvar: Condvar::new(),
+        }
+    }
+
+    /// `barrier.await()` — blocks until `parties` threads have arrived.
+    /// Returns true for exactly one "leader" thread per generation.
+    pub fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.generation;
+        st.waiting += 1;
+        if st.waiting == self.parties {
+            st.waiting = 0;
+            st.generation += 1;
+            self.cvar.notify_all();
+            return true;
+        }
+        while st.generation == gen {
+            st = self.cvar.wait(st).unwrap();
+        }
+        false
+    }
+
+    /// `barrier.reset()` analog — only valid when nobody is waiting.
+    pub fn reset(&self) {
+        let mut st = self.state.lock().unwrap();
+        assert_eq!(st.waiting, 0, "reset with waiters");
+        st.generation += 1;
+    }
+}
+
+/// Static block distribution: `(start, end)` of thread `id` of
+/// `n_threads` over `n` items — the paper's Listing 1 lines 16–19.
+#[inline]
+pub fn block_range(id: usize, n_threads: usize, n: usize) -> (usize, usize) {
+    let work = n.div_ceil(n_threads);
+    let start = id * work;
+    let end = (start + work).min(n);
+    (start.min(n), end)
+}
+
+/// OpenMP-style `parallel for` with static schedule: splits `0..n` into
+/// one contiguous block per thread and runs `body(range)` on scoped
+/// threads. `n_threads == 1` runs inline (serial fallback — the paper's
+/// "the code still produces a correct result executed serially").
+pub fn parallel_for<F>(n_threads: usize, n: usize, body: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n_threads <= 1 || n == 0 {
+        body(0..n);
+        return;
+    }
+    thread::scope(|scope| {
+        for id in 0..n_threads {
+            let body = &body;
+            let (start, end) = block_range(id, n_threads, n);
+            scope.spawn(move || body(start..end));
+        }
+    });
+}
+
+/// `parallel_for` over chunks with per-thread partial results collected
+/// in submission order (reduce-style baselines).
+pub fn parallel_map_reduce<T, F>(n_threads: usize, n: usize, body: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    if n_threads <= 1 || n == 0 {
+        return vec![body(0..n)];
+    }
+    let results: Vec<Mutex<Option<T>>> = (0..n_threads).map(|_| Mutex::new(None)).collect();
+    thread::scope(|scope| {
+        for id in 0..n_threads {
+            let body = &body;
+            let slot = &results[id];
+            let (start, end) = block_range(id, n_threads, n);
+            scope.spawn(move || {
+                *slot.lock().unwrap() = Some(body(start..end));
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("slot filled")).collect()
+}
+
+/// Simple atomic work counter for dynamic (guided) scheduling
+/// experiments — not used by the paper-faithful baselines but exercised
+/// by the scheduler ablation.
+pub struct WorkQueue {
+    next: AtomicUsize,
+    chunk: usize,
+    n: usize,
+}
+
+impl WorkQueue {
+    pub fn new(n: usize, chunk: usize) -> Self {
+        assert!(chunk > 0);
+        Self { next: AtomicUsize::new(0), chunk, n }
+    }
+
+    /// Claim the next chunk; None when exhausted.
+    pub fn claim(&self) -> Option<std::ops::Range<usize>> {
+        let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+        if start >= self.n {
+            return None;
+        }
+        Some(start..(start + self.chunk).min(self.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_reusable_after_wait() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 1..=3u64 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(counter.load(Ordering::Relaxed), round * 10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "a pool job panicked")]
+    fn pool_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn barrier_releases_all_and_is_cyclic() {
+        let barrier = Arc::new(CyclicBarrier::new(4));
+        let leaders = Arc::new(AtomicU64::new(0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let b = Arc::clone(&barrier);
+                let l = Arc::clone(&leaders);
+                thread::spawn(move || {
+                    for _ in 0..10 {
+                        if b.wait() {
+                            l.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // Exactly one leader per generation.
+        assert_eq!(leaders.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn block_range_partitions_exactly() {
+        for n in [0usize, 1, 7, 100, 101, 4096] {
+            for nt in [1usize, 2, 3, 7, 24] {
+                let mut total = 0;
+                let mut prev_end = 0;
+                for id in 0..nt {
+                    let (s, e) = block_range(id, nt, n);
+                    assert!(s <= e);
+                    assert!(s >= prev_end || s == e);
+                    if s < e {
+                        assert_eq!(s, prev_end);
+                        prev_end = e;
+                    }
+                    total += e - s;
+                }
+                assert_eq!(total, n, "n={n} nt={nt}");
+                assert_eq!(prev_end, n.min(prev_end.max(n.min(prev_end))));
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(8, n, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_reduce_sums() {
+        let partials = parallel_map_reduce(6, 1000, |r| r.sum::<usize>());
+        let total: usize = partials.iter().sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn work_queue_covers_everything_once() {
+        let q = Arc::new(WorkQueue::new(1000, 37));
+        let hits: Arc<Vec<AtomicU64>> =
+            Arc::new((0..1000).map(|_| AtomicU64::new(0)).collect());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let hits = Arc::clone(&hits);
+                thread::spawn(move || {
+                    while let Some(r) = q.claim() {
+                        for i in r {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

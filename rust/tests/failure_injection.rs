@@ -1,0 +1,242 @@
+//! Failure-injection tests: every user error and resource edge the
+//! runtime must catch cleanly (no panics, no wrong results) — missing
+//! artifacts, shape/dtype/arity mismatches, invalid graphs, memory
+//! pressure, and the serial-fallback contract.
+
+use std::rc::Rc;
+
+use jacc::api::*;
+use jacc::memory::DeviceMemoryManager;
+
+fn device() -> Option<Rc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+fn tiny_entry(dev: &DeviceContext, name: &str) -> (Vec<usize>, Vec<usize>) {
+    let e = dev.runtime.manifest().find(name, "pallas", "tiny").unwrap();
+    (e.iteration_space.clone(), e.workgroup.clone())
+}
+
+#[test]
+fn unknown_kernel_name_is_a_clean_error() {
+    let Some(dev) = device() else { return };
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let t = Task::create("definitely_not_a_kernel", Dims::d1(16), Dims::d1(16));
+    g.execute_task_on(t, &dev).unwrap();
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("definitely_not_a_kernel"), "{err}");
+}
+
+#[test]
+fn unknown_profile_is_a_clean_error() {
+    let Some(dev) = device() else { return };
+    let mut g = TaskGraph::new().with_profile("no_such_profile");
+    let (it, wg) = tiny_entry(&dev, "vector_add");
+    let t = Task::create("vector_add", Dims(it), Dims(wg));
+    g.execute_task_on(t, &dev).unwrap();
+    assert!(g.execute().is_err());
+}
+
+#[test]
+fn wrong_iteration_space_rejected_before_execution() {
+    let Some(dev) = device() else { return };
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let t = Task::create("vector_add", Dims::d1(12345), Dims::d1(12345));
+    g.execute_task_on(t, &dev).unwrap();
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("iteration space"), "{err}");
+}
+
+#[test]
+fn unavailable_workgroup_suggests_ablation_variant() {
+    let Some(dev) = device() else { return };
+    let (it, _) = tiny_entry(&dev, "vector_add");
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let t = Task::create("vector_add", Dims(it), Dims::d1(33));
+    g.execute_task_on(t, &dev).unwrap();
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("work-group"), "{err}");
+}
+
+#[test]
+fn missing_parameter_is_arity_error() {
+    let Some(dev) = device() else { return };
+    let (it, wg) = tiny_entry(&dev, "vector_add");
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let n = it[0];
+    let mut t = Task::create("vector_add", Dims(it), Dims(wg));
+    t.set_parameters(vec![Param::f32_slice("x", &vec![0.0; n])]); // y missing
+    g.execute_task_on(t, &dev).unwrap();
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+}
+
+#[test]
+fn wrong_param_shape_fails_at_launch_not_with_wrong_data() {
+    let Some(dev) = device() else { return };
+    let (it, wg) = tiny_entry(&dev, "vector_add");
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut t = Task::create("vector_add", Dims(it), Dims(wg));
+    t.set_parameters(vec![
+        Param::f32_slice("x", &[1.0; 8]), // wrong length
+        Param::f32_slice("y", &[1.0; 8]),
+    ]);
+    g.execute_task_on(t, &dev).unwrap();
+    assert!(g.execute().is_err());
+}
+
+#[test]
+fn output_index_out_of_range_rejected() {
+    let Some(dev) = device() else { return };
+    let m = dev.runtime.manifest();
+    let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut a = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+    a.set_parameters(vec![
+        Param::f32_slice("x", &vec![0.0; n]),
+        Param::f32_slice("y", &vec![0.0; n]),
+    ]);
+    let ia = g.execute_task_on(a, &dev).unwrap();
+    let mut b = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    b.set_parameters(vec![Param::output("z", ia, 5)]); // only output 0 exists
+    g.execute_task_on(b, &dev).unwrap();
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("output"), "{err}");
+}
+
+#[test]
+fn tuple_root_producer_cannot_chain_on_device() {
+    let Some(dev) = device() else { return };
+    let m = dev.runtime.manifest();
+    let e = m.find("black_scholes", "pallas", "tiny").unwrap();
+    let n = e.inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut bs = Task::create(
+        "black_scholes",
+        Dims(e.iteration_space.clone()),
+        Dims(e.workgroup.clone()),
+    );
+    bs.set_parameters(vec![
+        Param::f32_slice("price", &vec![20.0; n]),
+        Param::f32_slice("strike", &vec![20.0; n]),
+        Param::f32_slice("t", &vec![1.0; n]),
+    ]);
+    let ib = g.execute_task_on(bs, &dev).unwrap();
+    // Consuming output 0 (the call vector) forces the host round-trip;
+    // the optimizer must keep it (no on-device rewire for tuple roots)
+    // and execution must still be correct. n must match pipe_reduce's
+    // input size for this to be schedulable at all.
+    let red_n = m.find("pipe_reduce", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    if red_n != n {
+        return; // profile shapes diverge; the property is covered elsewhere
+    }
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    red.set_parameters(vec![Param::output("z", ib, 0)]);
+    let ir = g.execute_task_on(red, &dev).unwrap();
+    let out = g.execute().unwrap();
+    let sum = out.single(ir).unwrap().as_f32().unwrap()[0];
+    assert!(sum > 0.0, "ATM calls have positive value");
+}
+
+#[test]
+fn composite_missing_kernel_field_is_rejected() {
+    let Some(dev) = device() else { return };
+    let e = dev.runtime.manifest().find("black_scholes", "pallas", "tiny").unwrap();
+    let n = e.inputs[0].shape[0];
+    let record = Record::new("Incomplete")
+        .with("price", HostValue::f32(vec![n], vec![20.0; n]));
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut t = Task::create(
+        "black_scholes",
+        Dims(e.iteration_space.clone()),
+        Dims(e.workgroup.clone()),
+    );
+    t.set_parameters(vec![Param::composite(record)]);
+    g.execute_task_on(t, &dev).unwrap();
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("missing field"), "{err}");
+}
+
+#[test]
+fn memory_manager_eviction_never_breaks_results() {
+    let Some(dev) = device() else { return };
+    let m = dev.runtime.manifest();
+    let e = m.find("vector_add", "pallas", "tiny").unwrap();
+    let n = e.inputs[0].shape[0];
+    // Shrink the memory manager so only ONE parameter fits: every
+    // graph run thrashes, but results must stay correct.
+    *dev.memory.borrow_mut() = DeviceMemoryManager::new((n * 4 + 64) as u64);
+    for round in 0..4u64 {
+        let fill = round as f32;
+        let mut t = Task::create(
+            "vector_add",
+            Dims(e.iteration_space.clone()),
+            Dims(e.workgroup.clone()),
+        );
+        t.set_parameters(vec![
+            Param::persistent("x", 1, round, HostValue::f32(vec![n], vec![fill; n])),
+            Param::persistent("y", 2, round, HostValue::f32(vec![n], vec![1.0; n])),
+        ]);
+        let mut g = TaskGraph::new().with_profile("tiny");
+        let id = g.execute_task_on(t, &dev).unwrap();
+        let out = g.execute().unwrap();
+        assert_eq!(out.single(id).unwrap().as_f32().unwrap()[0], fill + 1.0);
+    }
+    let stats = dev.memory.borrow().stats.clone();
+    assert!(stats.evictions > 0, "the tiny capacity must have evicted");
+}
+
+#[test]
+fn serial_fallback_contract_holds() {
+    // Paper §2.1.2: the underlying code "still produces a correct
+    // result if executed in a serial manner" — our analog: for any
+    // workload the serial baseline and the device agree, so a fallback
+    // path (device unusable) can silently substitute the baseline.
+    let Some(dev) = device() else { return };
+    let w = jacc::bench::workloads::generate(dev.runtime.manifest(), "reduction", "tiny").unwrap();
+    let serial = jacc::baselines::serial::reduction_f64(w.params[0].as_f32().unwrap());
+    let e = dev.runtime.manifest().find("reduction", "pallas", "tiny").unwrap();
+    let mut t = Task::create(
+        "reduction",
+        Dims(e.iteration_space.clone()),
+        Dims(e.workgroup.clone()),
+    );
+    t.set_parameters(vec![Param::host("data", w.params[0].clone())]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(t, &dev).unwrap();
+    let device_sum = g.execute().unwrap().single(id).unwrap().as_f32().unwrap()[0] as f64;
+    assert!((device_sum - serial).abs() < 0.1);
+}
+
+#[test]
+fn empty_graph_executes_trivially() {
+    let Some(_dev) = device() else { return };
+    let g = TaskGraph::new().with_profile("tiny");
+    let out = g.execute().unwrap();
+    assert!(out.by_task.is_empty());
+}
+
+#[test]
+fn graph_reexecution_is_idempotent() {
+    let Some(dev) = device() else { return };
+    let e = dev.runtime.manifest().find("histogram", "pallas", "tiny").unwrap();
+    let n = e.inputs[0].shape[0];
+    let vals: Vec<i32> = (0..n).map(|i| (i % 256) as i32).collect();
+    let mut t = Task::create(
+        "histogram",
+        Dims(e.iteration_space.clone()),
+        Dims(e.workgroup.clone()),
+    );
+    t.set_parameters(vec![Param::i32_slice("values", &vals)]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(t, &dev).unwrap();
+    let a = g.execute().unwrap().single(id).unwrap().clone();
+    let b = g.execute().unwrap().single(id).unwrap().clone();
+    let c = g.execute().unwrap().single(id).unwrap().clone();
+    assert_eq!(a, b);
+    assert_eq!(b, c);
+}

@@ -1,0 +1,374 @@
+//! End-to-end integration tests: full task graphs through lowering,
+//! optimization and PJRT execution, validated against the serial CPU
+//! baselines. Requires `make artifacts` (tiny profile); every test
+//! no-ops gracefully when artifacts are absent.
+
+use std::rc::Rc;
+
+use jacc::api::*;
+use jacc::baselines::serial;
+use jacc::bench::workloads;
+use jacc::coordinator::lowering::action_histogram;
+
+fn device() -> Option<Rc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+fn manifest(dev: &DeviceContext) -> &Manifest {
+    dev.runtime.manifest()
+}
+
+fn close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+    }
+}
+
+/// Build a single-task graph from a generated workload.
+fn single_task_graph(
+    dev: &Rc<DeviceContext>,
+    name: &str,
+) -> (TaskGraph, TaskId, workloads::Workload) {
+    let w = workloads::generate(manifest(dev), name, "tiny").unwrap();
+    let entry = manifest(dev).find(name, "pallas", "tiny").unwrap();
+    let mut task = Task::create(
+        name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    );
+    let params = w
+        .params
+        .iter()
+        .zip(&entry.inputs)
+        .map(|(v, d)| Param::host(&d.name, v.clone()))
+        .collect();
+    task.set_parameters(params);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, dev).unwrap();
+    (g, id, w)
+}
+
+#[test]
+fn vector_add_matches_serial() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "vector_add");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_f32().unwrap().to_vec();
+    let want = serial::vector_add(w.params[0].as_f32().unwrap(), w.params[1].as_f32().unwrap());
+    close(&got, &want, 1e-6, 1e-6);
+}
+
+#[test]
+fn reduction_matches_serial() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "reduction");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_f32().unwrap()[0] as f64;
+    let want = serial::reduction_f64(w.params[0].as_f32().unwrap());
+    assert!((got - want).abs() < 0.1, "{got} vs {want}");
+}
+
+#[test]
+fn histogram_matches_serial_exactly() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "histogram");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_i32().unwrap().to_vec();
+    let want = serial::histogram(w.params[0].as_i32().unwrap(), 256);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn matmul_matches_serial() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "matmul");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_f32().unwrap().to_vec();
+    let m = w.params[0].shape()[0];
+    let k = w.params[0].shape()[1];
+    let n = w.params[1].shape()[1];
+    let want =
+        serial::matmul(w.params[0].as_f32().unwrap(), w.params[1].as_f32().unwrap(), m, k, n);
+    close(&got, &want, 1e-4, 1e-4);
+}
+
+#[test]
+fn spmv_matches_serial_csr() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "spmv");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_f32().unwrap().to_vec();
+    let want = serial::spmv(w.csr.as_ref().unwrap(), w.params[2].as_f32().unwrap());
+    close(&got, &want, 1e-3, 1e-3);
+}
+
+#[test]
+fn conv2d_matches_serial() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "conv2d");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_f32().unwrap().to_vec();
+    let s = w.params[0].shape();
+    let want = serial::conv2d(
+        w.params[0].as_f32().unwrap(),
+        s[0],
+        s[1],
+        w.params[1].as_f32().unwrap(),
+        5,
+        5,
+    );
+    close(&got, &want, 1e-3, 1e-3);
+}
+
+#[test]
+fn black_scholes_matches_serial() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "black_scholes");
+    let out = g.execute().unwrap();
+    let outs = out.outputs(id).unwrap();
+    assert_eq!(outs.len(), 2);
+    let (wc, wp) = serial::black_scholes(
+        w.params[0].as_f32().unwrap(),
+        w.params[1].as_f32().unwrap(),
+        w.params[2].as_f32().unwrap(),
+    );
+    close(outs[0].as_f32().unwrap(), &wc, 1e-3, 1e-3);
+    close(outs[1].as_f32().unwrap(), &wp, 1e-3, 1e-3);
+}
+
+#[test]
+fn correlation_matches_serial_exactly() {
+    let Some(dev) = device() else { return };
+    let (g, id, w) = single_task_graph(&dev, "correlation");
+    let out = g.execute().unwrap();
+    let got = out.single(id).unwrap().as_i32().unwrap().to_vec();
+    let want = serial::correlation(w.bank.as_ref().unwrap());
+    assert_eq!(got, want);
+}
+
+// ---------------------------------------------------------------- pipeline
+
+fn pipeline_graph(dev: &Rc<DeviceContext>, optimized: bool) -> (TaskGraph, TaskId, f64) {
+    let m = Manifest::load_default().unwrap();
+    let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+    let y: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+    let expected: f64 = x.iter().zip(&y).map(|(a, b)| (a + b) as f64).sum();
+
+    let mut g = TaskGraph::new().with_profile("tiny");
+    if !optimized {
+        g = g.without_optimizations();
+    }
+    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).discard_output();
+    add.set_parameters(vec![Param::f32_slice("x", &x), Param::f32_slice("y", &y)]);
+    let a = g.execute_task_on(add, dev).unwrap();
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    red.set_parameters(vec![Param::output("z", a, 0)]);
+    let r = g.execute_task_on(red, dev).unwrap();
+    (g, r, expected)
+}
+
+#[test]
+fn pipeline_optimized_and_naive_agree() {
+    let Some(dev) = device() else { return };
+    let (g_opt, r_opt, expected) = pipeline_graph(&dev, true);
+    let rep_opt = g_opt.execute_with_report().unwrap();
+    let got_opt = rep_opt.outputs.single(r_opt).unwrap().as_f32().unwrap()[0] as f64;
+    assert!((got_opt - expected).abs() < 0.5, "{got_opt} vs {expected}");
+
+    let (g_naive, r_naive, _) = pipeline_graph(&dev, false);
+    let rep_naive = g_naive.execute_unoptimized().unwrap();
+    let got_naive = rep_naive.outputs.single(r_naive).unwrap().as_f32().unwrap()[0] as f64;
+    assert_eq!(got_opt, got_naive, "optimizer changed semantics");
+}
+
+#[test]
+fn optimizer_eliminates_pipeline_transfers() {
+    let Some(dev) = device() else { return };
+    let (g, _, _) = pipeline_graph(&dev, true);
+    let naive = g.lower_actions().unwrap();
+    let optimized = g.optimized_actions().unwrap();
+    let hn = action_histogram(&naive);
+    let ho = action_histogram(&optimized);
+    // The staged round-trip (1 CopyIn) and the dead intermediate
+    // CopyOut are gone; barriers collapse to 1.
+    assert_eq!(hn["copy_in"], 3);
+    assert_eq!(ho["copy_in"], 2, "{optimized:?}");
+    assert_eq!(hn["copy_out"], 2);
+    assert_eq!(ho["copy_out"], 1);
+    assert_eq!(ho["barrier"], 1);
+    // And the measured transfer bytes drop accordingly.
+    let rep_opt = g.execute_with_report().unwrap();
+    let (g2, _, _) = pipeline_graph(&dev, false);
+    let rep_naive = g2.execute_unoptimized().unwrap();
+    assert!(rep_opt.h2d_bytes < rep_naive.h2d_bytes);
+    assert!(rep_opt.d2h_bytes < rep_naive.d2h_bytes);
+}
+
+#[test]
+fn pipeline_matches_fused_artifact() {
+    let Some(dev) = device() else { return };
+    let (g, r, _) = pipeline_graph(&dev, true);
+    let out = g.execute().unwrap();
+    let chained = out.single(r).unwrap().as_f32().unwrap()[0];
+
+    // The fused pipe_fused artifact computes alpha * sum(x + y).
+    let m = manifest(&dev);
+    let entry = m.find("pipe_fused", "ref", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+    let y: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+    let mut fused = Task::create("pipe_fused", Dims::d1(n), Dims::d1(n)).with_variant("ref");
+    fused.set_parameters(vec![
+        Param::f32_slice("x", &x),
+        Param::f32_slice("y", &y),
+        Param::f32_slice("alpha", &[1.0]),
+    ]);
+    let mut g2 = TaskGraph::new().with_profile("tiny");
+    let f = g2.execute_task_on(fused, &dev).unwrap();
+    let out2 = g2.execute().unwrap();
+    let fused_val = out2.single(f).unwrap().as_f32().unwrap()[0];
+    assert!((chained - fused_val).abs() < 0.5, "{chained} vs {fused_val}");
+}
+
+// ------------------------------------------------------------- persistence
+
+#[test]
+fn persistent_params_skip_reupload_across_graphs() {
+    let Some(dev) = device() else { return };
+    let m = manifest(&dev);
+    let entry = m.find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let x = HostValue::f32(vec![n], vec![1.0; n]);
+    let y = HostValue::f32(vec![n], vec![2.0; n]);
+
+    let run = |version: u64| {
+        let mut t = Task::create("vector_add", Dims::d1(n), Dims::d1(entry.workgroup[0]));
+        t.set_parameters(vec![
+            Param::persistent("x", 101, version, x.clone()),
+            Param::persistent("y", 102, version, y.clone()),
+        ]);
+        let mut g = TaskGraph::new().with_profile("tiny");
+        let id = g.execute_task_on(t, &dev).unwrap();
+        let rep = g.execute_with_report().unwrap();
+        (rep, id)
+    };
+
+    let (rep1, _) = run(0);
+    assert_eq!(rep1.residency_hits, 0);
+    assert!(rep1.h2d_bytes > 0);
+
+    // Second graph, same version: both uploads become residency hits.
+    let (rep2, _) = run(0);
+    assert_eq!(rep2.residency_hits, 2);
+    assert_eq!(rep2.h2d_bytes, 0, "no bytes should cross the bus");
+
+    // Version bump forces re-upload.
+    let (rep3, _) = run(1);
+    assert_eq!(rep3.residency_hits, 0);
+    assert!(rep3.h2d_bytes > 0);
+
+    let stats = dev.memory.borrow().stats.clone();
+    assert!(stats.residency_hits >= 2);
+}
+
+// --------------------------------------------------------------- composite
+
+#[test]
+fn composite_record_projects_used_fields_only() {
+    let Some(dev) = device() else { return };
+    let m = manifest(&dev);
+    let entry = m.find("black_scholes", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let record = Record::new("OptionBatch")
+        .with("price", HostValue::f32(vec![n], vec![20.0; n]))
+        .with("strike", HostValue::f32(vec![n], vec![20.0; n]))
+        .with("t", HostValue::f32(vec![n], vec![1.0; n]))
+        // A field the kernel never reads — must NOT be transferred.
+        .with("audit_log", HostValue::i32(vec![4 * n], vec![7; 4 * n]));
+
+    let mut task = Task::create(
+        "black_scholes",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    );
+    task.set_parameters(vec![Param::composite(record)]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, &dev).unwrap();
+    let rep = g.execute_with_report().unwrap();
+    // Exactly the three f32 fields crossed the bus, not the audit log.
+    assert_eq!(rep.h2d_bytes, 3 * 4 * n as u64);
+    let outs = rep.outputs.outputs(id).unwrap();
+    assert_eq!(outs.len(), 2);
+    let (wc, _) = serial::black_scholes(&vec![20.0; n], &vec![20.0; n], &vec![1.0; n]);
+    close(outs[0].as_f32().unwrap(), &wc, 1e-3, 1e-3);
+    // The schema in the device's memory manager recorded the skip.
+    let mem = dev.memory.borrow();
+    let schema = mem.schemas.get("OptionBatch").unwrap();
+    assert!(schema.is_accessed("price"));
+    assert!(!schema.is_accessed("audit_log"));
+    assert!(schema.savings_ratio() > 0.5);
+}
+
+// ------------------------------------------------------- compile-time split
+
+#[test]
+fn first_execution_pays_compile_second_does_not() {
+    let Some(dev) = device() else { return };
+    let (g, _, _) = single_task_graph(&dev, "vector_add");
+    let rep1 = g.execute_with_report().unwrap();
+    assert_eq!(rep1.fresh_compiles, 1);
+    assert!(rep1.compile > std::time::Duration::ZERO);
+    assert!(rep1.wall_excl_compile() <= rep1.wall);
+    let rep2 = g.execute_with_report().unwrap();
+    assert_eq!(rep2.fresh_compiles, 0);
+    assert_eq!(rep2.compile, std::time::Duration::ZERO);
+}
+
+// ----------------------------------------------------------------- variants
+
+#[test]
+fn pallas_and_ref_variants_agree() {
+    let Some(dev) = device() else { return };
+    for name in ["vector_add", "reduction", "matmul", "correlation"] {
+        let w = workloads::generate(manifest(&dev), name, "tiny").unwrap();
+        let run = |variant: &str| {
+            let entry = manifest(&dev).find(name, variant, "tiny").unwrap();
+            let mut t = Task::create(
+                name,
+                Dims(entry.iteration_space.clone()),
+                Dims(entry.workgroup.clone()),
+            )
+            .with_variant(variant);
+            t.set_parameters(
+                w.params
+                    .iter()
+                    .zip(&entry.inputs)
+                    .map(|(v, d)| Param::host(&d.name, v.clone()))
+                    .collect(),
+            );
+            let mut g = TaskGraph::new().with_profile("tiny");
+            let id = g.execute_task_on(t, &dev).unwrap();
+            let out = g.execute().unwrap();
+            out.by_task[&id].clone()
+        };
+        let a = run("pallas");
+        let b = run("ref");
+        assert_eq!(a.len(), b.len(), "{name}");
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (HostValue::F32 { data: dx, .. }, HostValue::F32 { data: dy, .. }) => {
+                    close(dx, dy, 1e-3, 1e-3)
+                }
+                _ => assert_eq!(x, y, "{name}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Property tests over the coordinator (DESIGN.md §6): the optimizer
+//! must never change the host-visible semantics of a task graph, the
+//! toposort must respect all inferred dependencies, schedules must
+//! partition iteration spaces exactly, and serialization must
+//! round-trip — all over randomly generated structures.
+
+use std::rc::Rc;
+
+use jacc::api::*;
+use jacc::coordinator::lowering::action_histogram;
+use jacc::memory::{serialize_struct, writeback_modified, DataSchema, Record};
+use jacc::runtime::artifact::{Access, DType, IoDecl};
+use jacc::substrate::prng::Rng;
+use jacc::substrate::proptest::{no_shrink, Runner};
+
+fn device() -> Option<Rc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+/// Shape of a random pipeline graph: per stage, does it consume the
+/// previous stage's output (chain) or fresh host data, and is the
+/// intermediate kept?
+#[derive(Debug, Clone)]
+struct GraphShape {
+    stages: Vec<StageSpec>,
+    reduce_at_end: bool,
+    optimizer: u8, // bitmask over the 5 passes
+}
+
+#[derive(Debug, Clone)]
+struct StageSpec {
+    consume_prev: bool,
+    keep_output: bool,
+    seed: u64,
+}
+
+fn random_shape(rng: &mut Rng) -> GraphShape {
+    let n = 1 + rng.below(3) as usize;
+    let stages = (0..n)
+        .map(|i| StageSpec {
+            consume_prev: i > 0 && rng.below(2) == 1,
+            keep_output: rng.below(2) == 1,
+            seed: rng.next_u64(),
+        })
+        .collect();
+    GraphShape {
+        stages,
+        reduce_at_end: rng.below(2) == 1,
+        optimizer: (rng.below(32)) as u8,
+    }
+}
+
+fn optimizer_from_mask(mask: u8) -> OptimizerConfig {
+    OptimizerConfig {
+        compile_hoist: mask & 1 != 0,
+        transfer_elimination: mask & 2 != 0,
+        dead_copy_elimination: mask & 4 != 0,
+        copyin_hoist: mask & 8 != 0,
+        barrier_prune: mask & 16 != 0,
+    }
+}
+
+/// Build the graph the shape describes over pipe_vecadd/pipe_reduce.
+fn build(dev: &Rc<DeviceContext>, shape: &GraphShape, optimized: bool) -> (TaskGraph, Vec<TaskId>) {
+    let m = dev.runtime.manifest();
+    let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    g.optimizer =
+        if optimized { optimizer_from_mask(shape.optimizer) } else { OptimizerConfig::disabled() };
+    let mut ids = Vec::new();
+    let mut prev: Option<TaskId> = None;
+    for (i, st) in shape.stages.iter().enumerate() {
+        let mut rng = Rng::new(st.seed);
+        let x: Vec<f32> = (0..n).map(|_| (rng.below(8)) as f32).collect();
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+        // The last stage must stay visible if nothing consumes it;
+        // keep_output=false only for stages that are consumed later or
+        // when a reduce follows.
+        let consumed_later = shape.reduce_at_end
+            || shape.stages.get(i + 1).map(|s| s.consume_prev).unwrap_or(false);
+        if !st.keep_output && consumed_later {
+            t = t.discard_output();
+        }
+        let first = match (st.consume_prev, prev) {
+            (true, Some(p)) => Param::output("x", p, 0),
+            _ => Param::f32_slice("x", &x),
+        };
+        let y: Vec<f32> = (0..n).map(|_| (rng.below(8)) as f32).collect();
+        t.set_parameters(vec![first, Param::f32_slice("y", &y)]);
+        let id = g.execute_task_on(t, dev).unwrap();
+        ids.push(id);
+        prev = Some(id);
+    }
+    if shape.reduce_at_end {
+        let mut t = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+        t.set_parameters(vec![Param::output("z", *ids.last().unwrap(), 0)]);
+        let id = g.execute_task_on(t, dev).unwrap();
+        ids.push(id);
+    }
+    (g, ids)
+}
+
+#[test]
+fn optimizer_preserves_semantics_on_random_graphs() {
+    let Some(dev) = device() else { return };
+    Runner::new("optimizer-semantics", 25).run_result(
+        random_shape,
+        no_shrink,
+        |shape| {
+            let (g_opt, ids) = build(&dev, shape, true);
+            let (g_naive, _) = build(&dev, shape, false);
+            let out_opt = g_opt.execute().map_err(|e| e.to_string())?;
+            let out_naive = g_naive.execute_unoptimized().map_err(|e| e.to_string())?.outputs;
+            for &id in &ids {
+                let keep = g_naive.node(id).task.keep_output;
+                if !keep {
+                    continue;
+                }
+                let a = out_opt.outputs(id);
+                let b = out_naive.outputs(id);
+                match (a, b) {
+                    (Some(a), Some(b)) => {
+                        if a != b {
+                            return Err(format!("task {id}: outputs differ ({shape:?})"));
+                        }
+                    }
+                    (None, _) => return Err(format!("task {id}: optimized output missing")),
+                    (_, None) => return Err(format!("task {id}: naive output missing")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn optimizer_never_increases_action_count() {
+    let Some(dev) = device() else { return };
+    Runner::new("optimizer-monotone", 25).run_result(
+        random_shape,
+        no_shrink,
+        |shape| {
+            let (g, _) = build(&dev, shape, true);
+            let naive = g.lower_actions().map_err(|e| e.to_string())?;
+            let opt = g.optimized_actions().map_err(|e| e.to_string())?;
+            if opt.len() > naive.len() {
+                return Err(format!("optimized {} > naive {}", opt.len(), naive.len()));
+            }
+            // Launch count must be identical: the optimizer moves data,
+            // never kernels.
+            let hn = action_histogram(&naive);
+            let ho = action_histogram(&opt);
+            if hn.get("launch") != ho.get("launch") {
+                return Err("launch count changed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn toposort_respects_dependencies_on_random_graphs() {
+    let Some(dev) = device() else { return };
+    Runner::new("toposort", 40).run_result(
+        random_shape,
+        no_shrink,
+        |shape| {
+            let (g, _) = build(&dev, shape, true);
+            let order = g.toposort().map_err(|e| e.to_string())?;
+            let pos: std::collections::HashMap<_, _> =
+                order.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+            for (p, c) in g.dependencies() {
+                if pos[&p] >= pos[&c] {
+                    return Err(format!("dep ({p},{c}) violated in {order:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serializer_roundtrips_random_records() {
+    Runner::new("serializer-roundtrip", 60).run_result(
+        |rng| {
+            let n_fields = 1 + rng.below(6) as usize;
+            let fields: Vec<(String, usize, u64)> = (0..n_fields)
+                .map(|i| (format!("f{i}"), 1 + rng.below(64) as usize, rng.next_u64()))
+                .collect();
+            fields
+        },
+        no_shrink,
+        |fields| {
+            let mut record = Record::new("T");
+            let mut schema = DataSchema::new("T");
+            let mut ios = Vec::new();
+            for (name, len, seed) in fields {
+                let mut rng = Rng::new(*seed);
+                let data = rng.f32_vec(*len, -100.0, 100.0);
+                record.fields.insert(name.clone(), HostValue::f32(vec![*len], data));
+                ios.push(IoDecl {
+                    name: name.clone(),
+                    shape: vec![*len],
+                    dtype: DType::F32,
+                    access: Access::ReadWrite,
+                });
+            }
+            record.build_schema(&mut schema, &ios);
+            let bytes = serialize_struct(&record, &schema).map_err(|e| e.to_string())?;
+            if bytes.len() != schema.total_bytes() {
+                return Err("size mismatch".into());
+            }
+            let mut back = record.clone();
+            // Writeback from the same bytes must reproduce the record
+            // exactly (all fields are readwrite here).
+            writeback_modified(&mut back, &bytes, &schema).map_err(|e| e.to_string())?;
+            if back != record {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn persistent_residency_is_consistent_under_random_access_patterns() {
+    let Some(dev) = device() else { return };
+    let m = dev.runtime.manifest();
+    let n = m.find("vector_add", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    let wg = m.find("vector_add", "pallas", "tiny").unwrap().workgroup[0];
+    // Random sequences of (data id, version) pairs; the result must
+    // always equal the serial sum regardless of hit/miss pattern.
+    Runner::new("residency-consistency", 15).run_result(
+        |rng| {
+            (0..4)
+                .map(|_| (100 + rng.below(3), rng.below(2)))
+                .collect::<Vec<(u64, u64)>>()
+        },
+        no_shrink,
+        |seq| {
+            for &(id, version) in seq {
+                let fill = (id * 10 + version) as f32;
+                let x = HostValue::f32(vec![n], vec![fill; n]);
+                let y = HostValue::f32(vec![n], vec![1.0; n]);
+                let mut t = Task::create("vector_add", Dims::d1(n), Dims::d1(wg));
+                t.set_parameters(vec![
+                    Param::persistent("x", id, version, x),
+                    Param::host("y", y),
+                ]);
+                let mut g = TaskGraph::new().with_profile("tiny");
+                let tid = g.execute_task_on(t, &dev).map_err(|e| e.to_string())?;
+                let out = g.execute().map_err(|e| e.to_string())?;
+                let got = out.single(tid).map_err(|e| e.to_string())?.as_f32().unwrap()[0];
+                if got != fill + 1.0 {
+                    return Err(format!(
+                        "stale resident data: got {got}, want {} (id {id} v{version})",
+                        fill + 1.0
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
