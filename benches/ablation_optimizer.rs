@@ -20,7 +20,7 @@ fn pipeline(dev: &Rc<DeviceContext>, config: OptimizerConfig, stages: usize) -> 
     g.optimizer = config;
     let mut prev: Option<TaskId> = None;
     for s in 0..stages {
-        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n))?;
         if s + 1 < stages {
             t = t.discard_output();
         }
@@ -32,7 +32,7 @@ fn pipeline(dev: &Rc<DeviceContext>, config: OptimizerConfig, stages: usize) -> 
         prev = Some(g.execute_task_on(t, dev)?);
     }
     // Final reduction.
-    let mut r = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    let mut r = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n))?;
     r.set_parameters(vec![Param::output("z", prev.unwrap(), 0)]);
     g.execute_task_on(r, dev)?;
     Ok(g)
@@ -63,8 +63,11 @@ fn main() -> anyhow::Result<()> {
             let actions = g.optimized_actions()?;
             let hist = action_histogram(&actions);
             let rep = g.execute_with_report()?; // warm compile
+            // Steady state = launches of the per-config compiled plan
+            // (the optimizer config is baked into the plan's stream).
+            let plan = g.compile()?;
             let steady = h.run(label, || {
-                g.execute().expect("exec");
+                plan.launch(&Bindings::new()).expect("exec");
             });
             if *label == "none (naive)" {
                 naive_time = Some(steady.per_iter());

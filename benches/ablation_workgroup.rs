@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
             "correlation",
             Dims(entry.iteration_space.clone()),
             Dims::d2(wg, wg),
-        );
+        )?;
         let seed = 7000 + wg as u64;
         task.set_parameters(
             w.params
@@ -45,9 +45,10 @@ fn main() -> anyhow::Result<()> {
         );
         let mut g = TaskGraph::new().with_profile(&profile);
         g.execute_task_on(task, &dev)?;
-        g.execute()?; // warm
+        let plan = g.compile()?; // compile + persistent warm, once
+        plan.launch(&Bindings::new())?; // warm launch
         let r = h.run(&format!("wg{wg}"), || {
-            g.execute().expect("exec");
+            plan.launch(&Bindings::new()).expect("exec");
         });
         results.push((wg, entry.thread_groups(), r.per_iter()));
         t.row(vec![

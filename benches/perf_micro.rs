@@ -19,7 +19,7 @@ fn chain_graph(dev: &Rc<DeviceContext>, tasks: usize) -> anyhow::Result<TaskGrap
     let mut g = TaskGraph::new().with_profile("tiny");
     let mut prev: Option<TaskId> = None;
     for s in 0..tasks {
-        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n))?;
         if s + 1 < tasks {
             t = t.discard_output();
         }
@@ -60,6 +60,19 @@ fn main() -> anyhow::Result<()> {
         "warm 1-task graph end-to-end".into(),
         fmt_secs(r.per_iter()),
         "incl upload+launch+download of 16 KiB".into(),
+    ]);
+
+    // 2b. Compiled-plan launch: the build-once/execute-many hot path —
+    //     no lowering or optimizer work per iteration, just bind+replay.
+    let plan1 = g1.compile()?;
+    plan1.launch(&Bindings::new())?; // warm
+    let r = h.run("plan launch", || {
+        plan1.launch(&Bindings::new()).expect("launch");
+    });
+    t.row(vec![
+        "warm 1-task compiled launch".into(),
+        fmt_secs(r.per_iter()),
+        "bind + replay of the precomputed plan".into(),
     ]);
 
     // 3. H2D / D2H throughput (8 MiB payload).

@@ -1,15 +1,24 @@
 //! End-to-end serving driver (DESIGN.md E7): a Black-Scholes option
 //! pricing service running batched requests through the full stack —
-//! request generation, task-graph execution with persistent
-//! device-resident market data, latency percentiles and throughput.
+//! request generation, latency percentiles and throughput.
+//!
+//! Two serving paths are measured and compared:
+//! * **rebuild**: the legacy pattern — a fresh `TaskGraph` is built,
+//!   lowered, optimized and scheduled for every request batch;
+//! * **compiled**: build-once / execute-many — the graph is compiled
+//!   into a `CompiledGraph` once (cold cost reported separately) and
+//!   every batch is just `Bindings` + `launch`, with zero lowering,
+//!   optimizer or JIT work on the hot path (`fresh_compiles == 0`).
 //!
 //! The strike/expiry books are uploaded once and stay device-resident
-//! (paper §3.2.1 persistent state); only the fresh price vector crosses
-//! the bus per batch. A `--no-persist` run shows the difference.
+//! (paper §3.2.1 persistent state; the compiled plan pins the buffers);
+//! only the fresh price vector crosses the bus per batch. A
+//! `--no-persist` run shows the difference.
 //!
 //! Run with:  cargo run --release --example option_pricing_service -- \
-//!                [--batches 64] [--no-persist]
+//!                [--batches 48] [--no-persist]
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use jacc::api::*;
@@ -22,7 +31,7 @@ const BATCH: usize = 65_536; // matches the `serve` artifact shape
 
 fn main() -> anyhow::Result<()> {
     let args = Cli::new("option_pricing_service", "batched Black-Scholes pricing service")
-        .opt("batches", "48", "number of request batches to serve")
+        .opt("batches", "48", "number of request batches to serve per path")
         .flag("no-persist", "re-upload the whole book every batch")
         .parse();
     let batches = args.get_usize("batches")?;
@@ -42,35 +51,91 @@ fn main() -> anyhow::Result<()> {
         dev.name()
     );
 
-    // Warm the JIT cache (first-compile latency is reported separately).
-    let (warm, _) = serve_batch(&dev, &strike, &expiry, &mut rng, persist, 0)?;
-    println!("cold start (incl compile): {:.1} ms", warm * 1e3);
+    // Warm the JIT once so both paths measure steady state fairly; the
+    // first-compile latency is reported as part of the cold split.
+    let (jit_fresh, jit_time) = dev.runtime.precompile(["black_scholes.pallas.serve"])?;
+    println!(
+        "cold JIT: {:.1} ms ({jit_fresh} fresh compile(s))",
+        jit_time.as_secs_f64() * 1e3
+    );
 
-    let mut latencies = Vec::with_capacity(batches);
-    let mut total_priced = 0usize;
-    let t0 = Instant::now();
+    // ---- Path A: legacy rebuild-per-batch ------------------------------
+    let mut rebuild_lat = Vec::with_capacity(batches);
     for b in 0..batches {
-        let (secs, check) = serve_batch(&dev, &strike, &expiry, &mut rng, persist, b as u64 + 1)?;
-        latencies.push(secs * 1e3); // ms
-        total_priced += BATCH;
+        let (secs, check) =
+            serve_batch_rebuild(&dev, &strike, &expiry, &mut rng, persist, b == 0)?;
+        rebuild_lat.push(secs * 1e3); // ms
         if b == 0 {
-            // Validate the first batch against the serial pricer.
-            println!("first-batch validation: max |err| = {check:.2e}");
+            println!("rebuild path first-batch validation: max |err| = {check:.2e}");
             anyhow::ensure!(check < 1e-2, "pricing mismatch vs serial baseline");
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
 
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    println!("== results");
-    println!("throughput: {:.0} options/s ({batches} batches in {wall:.2} s)",
-        total_priced as f64 / wall);
+    // ---- Path B: build-once / execute-many -----------------------------
+    let (graph, id) = build_pricing_graph(&dev, &strike, &expiry, persist)?;
+    let plan = graph.compile()?;
+    println!("cold plan construction: {}", plan.stats.summary());
+
+    let mut compiled_lat = Vec::with_capacity(batches);
+    let t0 = Instant::now();
+    for b in 0..batches {
+        let price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+        let bindings = Bindings::new().bind("price", price.clone());
+        let t_batch = Instant::now();
+        let rep = plan.launch(&bindings)?;
+        compiled_lat.push(t_batch.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(rep.fresh_compiles == 0, "compiled path must never JIT");
+        if b == 0 {
+            let outs = rep.outputs.outputs(id).unwrap();
+            let (want_call, _) = serial::black_scholes(
+                price.as_f32()?,
+                strike.as_f32()?,
+                expiry.as_f32()?,
+            );
+            let mut max_err = 0.0f32;
+            for (g, w) in outs[0].as_f32()?.iter().zip(&want_call) {
+                max_err = max_err.max((g - w).abs());
+            }
+            println!("compiled path first-batch validation: max |err| = {max_err:.2e}");
+            anyhow::ensure!(max_err < 1e-2, "pricing mismatch vs serial baseline");
+        }
+    }
+    let compiled_wall = t0.elapsed().as_secs_f64();
+
+    // ---- Results -------------------------------------------------------
+    rebuild_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    compiled_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], p: f64| stats::percentile_sorted(v, p);
+    println!("== results (cold/warm split)");
     println!(
-        "latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
-        stats::percentile_sorted(&latencies, 50.0),
-        stats::percentile_sorted(&latencies, 95.0),
-        stats::percentile_sorted(&latencies, 99.0),
-        latencies.last().unwrap()
+        "cold:  JIT {:.1} ms + plan {:.2} ms (paid once)",
+        jit_time.as_secs_f64() * 1e3,
+        plan.stats.build_wall.as_secs_f64() * 1e3,
+    );
+    println!(
+        "warm rebuild  path: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}  ms/batch",
+        pct(&rebuild_lat, 50.0),
+        pct(&rebuild_lat, 95.0),
+        pct(&rebuild_lat, 99.0),
+        rebuild_lat.last().unwrap()
+    );
+    println!(
+        "warm compiled path: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}  ms/batch",
+        pct(&compiled_lat, 50.0),
+        pct(&compiled_lat, 95.0),
+        pct(&compiled_lat, 99.0),
+        compiled_lat.last().unwrap()
+    );
+    let p50_rebuild = pct(&rebuild_lat, 50.0);
+    let p50_compiled = pct(&compiled_lat, 50.0);
+    println!(
+        "steady-state delta: compiled p50 is {:.2}x the rebuild p50 \
+         (plan construction dropped out of the loop)",
+        p50_compiled / p50_rebuild
+    );
+    println!(
+        "compiled throughput: {:.0} options/s ({batches} batches in {compiled_wall:.2} s)",
+        (batches * BATCH) as f64 / compiled_wall
     );
     let mem = dev.memory.borrow();
     println!(
@@ -78,24 +143,26 @@ fn main() -> anyhow::Result<()> {
         mem.stats.uploads, mem.stats.upload_bytes, mem.stats.residency_hits,
         mem.stats.residency_hit_bytes
     );
+    // Build-once must not be slower than rebuild-per-batch in steady
+    // state (generous slack for CI timer noise).
+    anyhow::ensure!(
+        p50_compiled <= p50_rebuild * 1.5,
+        "compiled path p50 {p50_compiled:.2} ms regressed vs rebuild {p50_rebuild:.2} ms"
+    );
     println!("option_pricing_service OK");
     Ok(())
 }
 
-/// Serve one batch; returns (latency seconds, max abs error vs serial
-/// on batch 1 / 0.0 otherwise).
-fn serve_batch(
-    dev: &std::rc::Rc<DeviceContext>,
+/// The pricing graph: fresh spot prices are a named input rebound per
+/// batch; the book is persistent (device-resident) or baked host data.
+fn build_pricing_graph(
+    dev: &Rc<DeviceContext>,
     strike: &HostValue,
     expiry: &HostValue,
-    rng: &mut Rng,
     persist: bool,
-    batch_no: u64,
-) -> anyhow::Result<(f64, f32)> {
-    // Fresh spot prices arrive with every request batch.
-    let price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
-
-    let mut task = Task::create("black_scholes", Dims::d1(BATCH), Dims::d1(BATCH.min(131_072)));
+) -> anyhow::Result<(TaskGraph, TaskId)> {
+    let mut task =
+        Task::create("black_scholes", Dims::d1(BATCH), Dims::d1(BATCH.min(131_072)))?;
     let strike_param = if persist {
         Param::persistent("strike", 1, 0, strike.clone())
     } else {
@@ -106,22 +173,38 @@ fn serve_batch(
     } else {
         Param::host("t", expiry.clone())
     };
-    task.set_parameters(vec![Param::host("price", price.clone()), strike_param, expiry_param]);
-
+    task.set_parameters(vec![Param::input("price"), strike_param, expiry_param]);
     let mut g = TaskGraph::new().with_profile("serve");
     let id = g.execute_task_on(task, dev)?;
+    Ok((g, id))
+}
+
+/// Legacy path: rebuild the whole graph (and its plan) for one batch.
+/// Returns (latency seconds, max abs error vs serial when `validate`,
+/// else 0.0).
+fn serve_batch_rebuild(
+    dev: &Rc<DeviceContext>,
+    strike: &HostValue,
+    expiry: &HostValue,
+    rng: &mut Rng,
+    persist: bool,
+    validate: bool,
+) -> anyhow::Result<(f64, f32)> {
+    // Fresh spot prices arrive with every request batch.
+    let price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+
     let t0 = Instant::now();
-    let out = g.execute()?;
+    let (graph, id) = build_pricing_graph(dev, strike, expiry, persist)?;
+    let bindings = Bindings::new().bind("price", price.clone());
+    let plan = graph.compile()?;
+    let rep = plan.launch(&bindings)?;
     let secs = t0.elapsed().as_secs_f64();
 
     let mut max_err = 0.0f32;
-    if batch_no == 1 {
-        let outs = out.outputs(id).unwrap();
-        let (want_call, _) = serial::black_scholes(
-            price.as_f32()?,
-            strike.as_f32()?,
-            expiry.as_f32()?,
-        );
+    if validate {
+        let outs = rep.outputs.outputs(id).unwrap();
+        let (want_call, _) =
+            serial::black_scholes(price.as_f32()?, strike.as_f32()?, expiry.as_f32()?);
         for (g, w) in outs[0].as_f32()?.iter().zip(&want_call) {
             max_err = max_err.max((g - w).abs());
         }

@@ -2,8 +2,10 @@
 //! data (`vector_add -> reduction`) where the intermediate never needs
 //! to return to the host. Shows the action stream before and after the
 //! optimizer — redundant-transfer elimination, dead-copy elimination,
-//! compile hoisting and barrier pruning — and the measured byte
-//! traffic difference.
+//! compile hoisting and barrier pruning — and, since the build-once /
+//! execute-many redesign, the compiled-graph lifecycle: the plan is
+//! compiled once and launched repeatedly with rebound `x`/`y` inputs
+//! (`fresh_compiles == 0` on every launch).
 //!
 //! Run with:  cargo run --release --example pipeline
 
@@ -13,22 +15,31 @@ use jacc::coordinator::lowering::action_histogram;
 fn build(dev: &std::rc::Rc<DeviceContext>, optimized: bool) -> anyhow::Result<(TaskGraph, TaskId)> {
     let m = dev.runtime.manifest();
     let n = m.find("pipe_vecadd", "pallas", "tiny")?.inputs[0].shape[0];
-    let x: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
-    let y: Vec<f32> = (0..n).map(|i| (i % 4) as f32).collect();
 
     let mut g = TaskGraph::new().with_profile("tiny");
     if !optimized {
         g = g.without_optimizations();
     }
-    // Task A: z = x + y. The intermediate is device-only.
-    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).discard_output();
-    add.set_parameters(vec![Param::f32_slice("x", &x), Param::f32_slice("y", &y)]);
+    // Task A: z = x + y. The intermediate is device-only, and x/y are
+    // named inputs rebound on every launch.
+    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n))?.discard_output();
+    add.set_parameters(vec![Param::input("x"), Param::input("y")]);
     let a = g.execute_task_on(add, dev)?;
     // Task B: sum(z) — consumes A's output *on the device*.
-    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n))?;
     red.set_parameters(vec![Param::output("z", a, 0)]);
     let r = g.execute_task_on(red, dev)?;
     Ok((g, r))
+}
+
+fn bindings_for(n: usize, round: usize) -> (Bindings, f64) {
+    let x: Vec<f32> = (0..n).map(|i| ((i + round) % 3) as f32).collect();
+    let y: Vec<f32> = (0..n).map(|i| ((i + 2 * round) % 4) as f32).collect();
+    let expected: f64 = x.iter().zip(&y).map(|(a, b)| (a + b) as f64).sum();
+    let b = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x))
+        .bind("y", HostValue::f32(vec![n], y));
+    (b, expected)
 }
 
 fn show(label: &str, actions: &[jacc::coordinator::Action]) {
@@ -42,6 +53,7 @@ fn show(label: &str, actions: &[jacc::coordinator::Action]) {
 
 fn main() -> anyhow::Result<()> {
     let dev = Cuda::get_device(0)?.create_device_context()?;
+    let n = dev.runtime.manifest().find("pipe_vecadd", "pallas", "tiny")?.inputs[0].shape[0];
 
     let (graph, result_task) = build(&dev, true)?;
     let naive = graph.lower_actions()?;
@@ -51,23 +63,49 @@ fn main() -> anyhow::Result<()> {
     show("optimized", &optimized);
     println!("optimizer metrics:\n{}", graph.metrics.report());
 
-    println!("== execution");
-    let rep_opt = graph.execute_with_report()?;
-    let sum_opt = rep_opt.outputs.single(result_task)?.as_f32()?[0];
-    println!(
-        "optimized: sum = {sum_opt}, h2d {} B, d2h {} B",
-        rep_opt.h2d_bytes, rep_opt.d2h_bytes
-    );
+    println!("== compile once");
+    let plan = graph.compile()?;
+    println!("{}", plan.stats.summary());
 
+    println!("== launch many (rebinding inputs per launch)");
+    let mut first_sum = 0.0f32;
+    for round in 0..3usize {
+        let (bindings, expected) = bindings_for(n, round);
+        let rep = plan.launch(&bindings)?;
+        let sum = rep.outputs.single(result_task)?.as_f32()?[0];
+        println!(
+            "launch {round}: sum = {sum} (expected {expected}), fresh_compiles {}, \
+             h2d {} B, d2h {} B, {:.3} ms",
+            rep.fresh_compiles,
+            rep.h2d_bytes,
+            rep.d2h_bytes,
+            rep.wall.as_secs_f64() * 1e3,
+        );
+        assert_eq!(rep.fresh_compiles, 0, "launches never JIT");
+        assert!((sum as f64 - expected).abs() < 0.5, "{sum} vs {expected}");
+        if round == 0 {
+            first_sum = sum;
+        }
+    }
+
+    // Naive (unoptimized) plan on the same inputs: same result, more
+    // bytes on the bus.
+    println!("== optimized vs naive transfer traffic");
     let (graph_naive, result_naive) = build(&dev, false)?;
-    let rep_naive = graph_naive.execute_unoptimized()?;
+    let plan_naive = graph_naive.compile_unoptimized()?;
+    let (bindings, _) = bindings_for(n, 0);
+    let rep_naive = plan_naive.launch(&bindings)?;
+    let rep_opt = plan.launch(&bindings)?;
     let sum_naive = rep_naive.outputs.single(result_naive)?.as_f32()?[0];
+    println!(
+        "optimized: sum = {}, h2d {} B, d2h {} B",
+        first_sum, rep_opt.h2d_bytes, rep_opt.d2h_bytes
+    );
     println!(
         "naive:     sum = {sum_naive}, h2d {} B, d2h {} B",
         rep_naive.h2d_bytes, rep_naive.d2h_bytes
     );
-
-    assert_eq!(sum_opt, sum_naive, "optimizer must not change results");
+    assert_eq!(first_sum, sum_naive, "optimizer must not change results");
     assert!(rep_opt.h2d_bytes < rep_naive.h2d_bytes);
     let saved = rep_naive.h2d_bytes + rep_naive.d2h_bytes
         - rep_opt.h2d_bytes

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
 
     // Task task = Task.create(Reduction.class, "reduce",
     //                         new Dims(array.length), new Dims(BLOCK_SIZE));
-    let mut task = Task::create("reduction", Dims::d1(n), Dims::d1(block))
+    let mut task = Task::create("reduction", Dims::d1(n), Dims::d1(block))?
         .with_atomic("result", AtomicOp::Add);
     // task.setParameters(result, data);
     task.set_parameters(vec![Param::f32_slice("data", &data)]);
@@ -51,6 +51,19 @@ fn main() -> anyhow::Result<()> {
         report2.wall.as_secs_f64() * 1e3,
         report2.compile.as_secs_f64() * 1e3,
     );
+
+    // Build-once / execute-many: compile the graph into a reusable
+    // plan and relaunch it — the true steady state skips lowering and
+    // the optimizer entirely (see examples/pipeline.rs for rebindable
+    // inputs via Param::input + Bindings).
+    let plan = tasks.compile()?;
+    let report3 = plan.launch(&Bindings::new())?;
+    println!(
+        "compiled launch: {:.2} ms (fresh_compiles = {})",
+        report3.wall.as_secs_f64() * 1e3,
+        report3.fresh_compiles,
+    );
+    assert_eq!(report3.fresh_compiles, 0);
     println!("quickstart OK");
     Ok(())
 }

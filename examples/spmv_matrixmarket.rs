@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         "spmv",
         Dims(entry.iteration_space.clone()),
         Dims(entry.workgroup.clone()),
-    );
+    )?;
     task.set_parameters(vec![
         Param::host("values", HostValue::f32(vec![ell.rows, width], ell.values.clone())),
         Param::host("indices", HostValue::i32(vec![ell.rows, width], ell.indices.clone())),

@@ -1,4 +1,6 @@
-//! Public facade, named to mirror the paper's Java API (Listings 3–4):
+//! Public facade, named to mirror the paper's Java API (Listings 3–4)
+//! and evolved — like Tornado, Jacc's successor — into a build-once /
+//! execute-many lifecycle:
 //!
 //! ```java
 //! DeviceContext gpgpu = Cuda.getDevice(0).createDeviceContext();
@@ -9,25 +11,47 @@
 //! tasks.execute();
 //! ```
 //!
-//! becomes
+//! becomes **build → compile → launch**:
 //!
 //! ```no_run
 //! use jacc::api::*;
 //! # fn main() -> anyhow::Result<()> {
 //! let gpgpu = Cuda::get_device(0)?.create_device_context()?;
-//! let mut task = Task::create("reduction", Dims::d1(8192), Dims::d1(8192))
+//!
+//! // 1. Build: tasks name their launch-time inputs instead of baking
+//! //    the data in. Constant data can still use Param::host /
+//! //    Param::persistent exactly as before.
+//! let mut task = Task::create("reduction", Dims::d1(8192), Dims::d1(8192))?
 //!     .with_atomic("result", AtomicOp::Add);
-//! task.set_parameters(vec![Param::f32_slice("data", &vec![1.0; 8192])]);
+//! task.set_parameters(vec![Param::input("data")]);
 //! let mut tasks = TaskGraph::new().with_profile("tiny");
 //! let id = tasks.execute_task_on(task, &gpgpu)?;
-//! let outputs = tasks.execute()?;
-//! println!("sum = {}", outputs.single(id)?.as_f32()?[0]);
+//!
+//! // 2. Compile ONCE: lowering, the action-stream optimizer,
+//! //    scheduling and PJRT compilation all happen here, yielding an
+//! //    immutable, reusable plan.
+//! let plan = tasks.compile()?;
+//!
+//! // 3. Launch MANY times: per request, bind fresh inputs and replay
+//! //    the precomputed plan — no re-lowering, no re-optimization,
+//! //    fresh_compiles == 0 on every launch.
+//! for batch in 0..3 {
+//!     let data = vec![batch as f32; 8192];
+//!     let bindings = Bindings::new().bind("data", HostValue::f32(vec![8192], data));
+//!     let report = plan.launch(&bindings)?;
+//!     println!("sum = {}", report.outputs.single(id)?.as_f32()?[0]);
+//! }
+//!
+//! // Single-shot callers keep the paper's original surface:
+//! // `tasks.execute()` is a thin compile-then-launch wrapper (every
+//! // param baked via Param::host / Param::persistent, no bindings).
 //! # Ok(()) }
 //! ```
 
 pub use crate::coordinator::{
-    AtomicDecl, AtomicOp, Dims, MemSpace, ExecutionOptions, ExecutionReport, GraphOutputs, OptimizerConfig,
-    Param, ParamSource, Task, TaskGraph, TaskId,
+    AtomicDecl, AtomicOp, Bindings, CompiledGraph, CompiledNode, Dims, ExecutionOptions,
+    ExecutionReport, GraphOutputs, InputSpec, MemSpace, OptimizerConfig, Param, ParamSource,
+    PlanStats, Task, TaskGraph, TaskId,
 };
 pub use crate::memory::{DataId, Record};
 pub use crate::runtime::{

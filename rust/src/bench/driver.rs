@@ -169,7 +169,7 @@ pub fn build_graph_persistent(
         name,
         Dims(entry.iteration_space.clone()),
         Dims(entry.workgroup.clone()),
-    )
+    )?
     .with_variant(variant);
     let seed = name
         .bytes()
@@ -186,6 +186,21 @@ pub fn build_graph_persistent(
     let mut g = TaskGraph::new().with_profile(profile);
     let id = g.execute_task_on(task, dev)?;
     Ok((g, id))
+}
+
+/// Two-phase variant of [`build_graph_persistent`]: compile the graph
+/// into a reusable plan so the steady-state loop is launch-only (no
+/// per-iteration lowering/optimizer work — the build-once/execute-many
+/// split `jacc run --plan-split` also reports).
+pub fn compile_graph_persistent(
+    dev: &Rc<DeviceContext>,
+    name: &str,
+    profile: &str,
+    variant: &str,
+    w: &Workload,
+) -> anyhow::Result<(CompiledGraph, TaskId)> {
+    let (g, id) = build_graph_persistent(dev, name, profile, variant, w)?;
+    Ok((g.compile()?, id))
 }
 
 /// Arithmetic intensity of a benchmark's artifact (FLOP/byte).

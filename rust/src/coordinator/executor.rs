@@ -1,12 +1,15 @@
-//! The executor: walks the (optimized) action stream and drives the
-//! device (paper §2.3 "During execution, the runtime system simply
-//! traverses the optimized task graph and executes each node it
+//! The executor: walks a compiled plan's (optimized) action stream and
+//! drives the device (paper §2.3 "During execution, the runtime system
+//! simply traverses the optimized task graph and executes each node it
 //! encounters").
 //!
-//! Responsibilities:
-//! * compile-on-first-use through the device's PJRT compile cache,
-//! * H2D uploads (host params, schema-projected composite fields,
-//!   persistent-data residency via the memory manager),
+//! Since the build-once/execute-many redesign the executor replays a
+//! [`CompiledGraph`]: kernels are pinned at build time (the launch path
+//! never JITs), persistent parameters use plan-resident device buffers,
+//! and named `Param::input` placeholders resolve through the launch's
+//! [`Bindings`]. Responsibilities per launch:
+//! * H2D uploads (bound inputs, baked host params, schema-projected
+//!   composite fields, persistent fallbacks via the memory manager),
 //! * kernel launches on device-resident buffers,
 //! * D2H downloads staged for consumers and surfaced in the results,
 //! * the atomic-graph guarantee: when `run` returns, every kept output
@@ -19,13 +22,12 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context};
 use xla::PjRtBuffer;
 
-
 use crate::runtime::buffer::HostValue;
 use crate::runtime::pjrt::CompiledKernel;
 
-use super::graph::{GraphOutputs, TaskGraph};
+use super::compiled::{Bindings, CompiledGraph};
+use super::graph::GraphOutputs;
 use super::lowering::{Action, BufId, CopySource};
-use super::scheduler;
 use super::task::{ParamSource, TaskId};
 
 /// Execution knobs.
@@ -35,13 +37,15 @@ pub struct ExecutionOptions {
     pub detailed_timing: bool,
 }
 
-/// What one graph execution did — the benches' raw material.
+/// What one graph launch did — the benches' raw material.
 #[derive(Debug, Default)]
 pub struct ExecutionReport {
     pub outputs: GraphOutputs,
     pub wall: Duration,
-    /// Time spent in fresh compilations (0 on warm caches) — the
-    /// incl/excl-compile split of Fig. 5a.
+    /// Time spent in fresh compilations — 0 on every launch of a
+    /// compiled plan (the plan pays it at build time); the legacy
+    /// `TaskGraph::execute*` wrappers fold the build-time compile back
+    /// in, preserving the incl/excl-compile split of Fig. 5a.
     pub compile: Duration,
     pub h2d: Duration,
     pub d2h: Duration,
@@ -51,8 +55,12 @@ pub struct ExecutionReport {
     pub actions_executed: usize,
     pub fresh_compiles: usize,
     /// Uploads skipped because the memory manager had the data
-    /// resident (persistent state, §3.2.1).
+    /// resident (persistent state, §3.2.1). On the legacy `execute*`
+    /// wrappers this also carries the plan's warm-time hits.
     pub residency_hits: u64,
+    /// Persistent params served from buffers the compiled plan pinned
+    /// at build time (the compiled-path residency counter).
+    pub plan_resident_hits: u64,
 }
 
 impl ExecutionReport {
@@ -63,56 +71,31 @@ impl ExecutionReport {
     }
 }
 
-/// Walks actions for one graph execution.
+/// Walks actions for one launch of a compiled plan.
 pub struct Executor<'g> {
-    graph: &'g TaskGraph,
+    plan: &'g CompiledGraph,
+    bindings: &'g Bindings,
     #[allow(dead_code)]
     opts: ExecutionOptions,
-    /// Compiled kernels by artifact key (compiles are deduplicated by
-    /// key, so many tasks may share one kernel).
-    kernels: HashMap<String, Rc<CompiledKernel>>,
-    /// Task -> artifact key (resolved once per run).
-    task_keys: Vec<String>,
     bufs: HashMap<BufId, Rc<PjRtBuffer>>,
     staged: HashMap<(TaskId, usize), HostValue>,
 }
 
 impl<'g> Executor<'g> {
-    pub fn new(graph: &'g TaskGraph, opts: ExecutionOptions) -> Self {
-        Self {
-            graph,
-            opts,
-            kernels: HashMap::new(),
-            task_keys: Vec::new(),
-            bufs: HashMap::new(),
-            staged: HashMap::new(),
-        }
+    pub fn new(plan: &'g CompiledGraph, bindings: &'g Bindings, opts: ExecutionOptions) -> Self {
+        Self { plan, bindings, opts, bufs: HashMap::new(), staged: HashMap::new() }
     }
 
-    /// The compiled kernel a task resolves to (after its Compile ran).
+    /// The compiled kernel a task is pinned to.
     fn kernel_of(&self, task: TaskId) -> anyhow::Result<&Rc<CompiledKernel>> {
-        let key = self
-            .task_keys
+        self.plan
+            .nodes
             .get(task)
-            .ok_or_else(|| anyhow!("task {task} out of range"))?;
-        self.kernels
-            .get(key)
-            .ok_or_else(|| anyhow!("kernel {key} for task {task} not compiled yet"))
+            .map(|n| &n.kernel)
+            .ok_or_else(|| anyhow!("task {task} out of range"))
     }
 
     pub fn run(&mut self, actions: &[Action]) -> anyhow::Result<ExecutionReport> {
-        // Resolve every task's artifact key up front (the lowering did
-        // the same; this keeps executor lookups O(1) even when compile
-        // actions were deduplicated across tasks).
-        self.task_keys = self
-            .graph
-            .nodes
-            .iter()
-            .map(|node| {
-                scheduler::resolve(node.device.runtime.manifest(), &node.task, &self.graph.profile)
-                    .map(|e| e.key.clone())
-            })
-            .collect::<anyhow::Result<_>>()?;
         let mut report = ExecutionReport::default();
         let t_wall = Instant::now();
         for action in actions {
@@ -130,7 +113,7 @@ impl<'g> Executor<'g> {
                     // PJRT CPU execution is synchronous through
                     // `to_literal_sync`; the barrier is a host-side
                     // sequence point (kept for semantics + metrics).
-                    self.graph.metrics.incr("exec.barriers");
+                    self.plan.metrics.incr("exec.barriers");
                 }
             }
         }
@@ -138,30 +121,32 @@ impl<'g> Executor<'g> {
         Ok(report)
     }
 
+    /// Plans retire compile actions at build time, so this arm only
+    /// runs for hand-built action streams; the device compile cache
+    /// makes it a no-op for any key the plan already compiled.
     fn do_compile(
         &mut self,
         task: TaskId,
         key: &str,
         report: &mut ExecutionReport,
     ) -> anyhow::Result<()> {
-        let node = self.graph.node(task);
+        let node = self.plan.node(task);
         let (kernel, fresh) = node.device.runtime.kernel(key)?;
         if fresh {
             report.compile += kernel.compile_time;
             report.fresh_compiles += 1;
-            self.graph.metrics.incr("exec.compiles");
+            self.plan.metrics.incr("exec.compiles");
         } else {
-            self.graph.metrics.incr("exec.compile_cache_hits");
+            self.plan.metrics.incr("exec.compile_cache_hits");
         }
-        self.kernels.insert(key.to_string(), kernel);
         Ok(())
     }
 
-    /// Resolve the host value a CopyIn uploads.
+    /// Resolve the host value / device buffer a CopyIn materializes.
     fn resolve_source(&self, source: &CopySource) -> anyhow::Result<ResolvedSource> {
         match source {
             CopySource::Param { task, param } => {
-                let node = self.graph.node(*task);
+                let node = self.plan.node(*task);
                 let p = node
                     .task
                     .params
@@ -169,19 +154,36 @@ impl<'g> Executor<'g> {
                     .ok_or_else(|| anyhow!("task {task} has no param {param}"))?;
                 match &p.source {
                     ParamSource::Host(v) => Ok(ResolvedSource::Fresh(v.clone())),
-                    ParamSource::Persistent { id, version, value } => Ok(
-                        ResolvedSource::Persistent {
+                    ParamSource::Input { name } => {
+                        let v = self.bindings.get(name).ok_or_else(|| {
+                            anyhow!("input '{name}' not bound for this launch")
+                        })?;
+                        Ok(ResolvedSource::Fresh(v.clone()))
+                    }
+                    ParamSource::Persistent { id, version, value } => {
+                        // Fast path: the plan pinned this buffer at
+                        // build time; no upload, no manager lookup.
+                        if let Some(buf) = self.plan.resident.get(&(*task, *param)) {
+                            return Ok(ResolvedSource::PlanResident {
+                                buf: Rc::clone(buf),
+                                id: *id,
+                                version: *version,
+                                bytes: value.nbytes() as u64,
+                                device_task: *task,
+                            });
+                        }
+                        Ok(ResolvedSource::Persistent {
                             id: *id,
                             version: *version,
                             value: value.clone(),
                             device_task: *task,
-                        },
-                    ),
+                        })
+                    }
                     other => bail!("param source {other:?} cannot be uploaded directly"),
                 }
             }
             CopySource::CompositeField { task, param, field } => {
-                let node = self.graph.node(*task);
+                let node = self.plan.node(*task);
                 let kernel = self.kernel_of(*task)?;
                 let ParamSource::Composite(record) = &node.task.params[*param].source else {
                     bail!("param {param} of task {task} is not composite");
@@ -229,30 +231,37 @@ impl<'g> Executor<'g> {
                 report.h2d += t0.elapsed();
                 report.h2d_bytes += value.nbytes() as u64;
                 node_device.memory.borrow_mut().note_upload(value.nbytes() as u64);
-                self.graph.metrics.incr("exec.h2d_transfers");
+                self.plan.metrics.incr("exec.h2d_transfers");
                 self.bufs.insert(dest, Rc::new(buf));
             }
+            ResolvedSource::PlanResident { buf, id, version, bytes, device_task } => {
+                // Keep the memory manager's ledger honest about the
+                // pinned buffer: refresh its LRU recency, or re-admit
+                // it if eviction dropped it while the plan held on.
+                let device = Rc::clone(&self.plan.node(device_task).device);
+                device.memory.borrow_mut().retain_resident(id, version, bytes, &buf);
+                report.plan_resident_hits += 1;
+                self.plan.metrics.incr("exec.plan_resident_hits");
+                self.bufs.insert(dest, buf);
+            }
             ResolvedSource::Persistent { id, version, value, device_task } => {
-                let device = Rc::clone(&self.graph.node(device_task).device);
-                let hit = device.memory.borrow_mut().lookup(id, version);
-                if let Some(buf) = hit {
+                let device = Rc::clone(&self.plan.node(device_task).device);
+                let t0 = Instant::now();
+                let (buf, hit) = device.memory.borrow_mut().ensure_resident(
+                    id,
+                    version,
+                    &value,
+                    &device.runtime,
+                )?;
+                if hit {
                     report.residency_hits += 1;
-                    self.graph.metrics.incr("exec.residency_hits");
-                    self.bufs.insert(dest, buf);
+                    self.plan.metrics.incr("exec.residency_hits");
                 } else {
-                    let t0 = Instant::now();
-                    let buf = Rc::new(device.runtime.upload(&value)?);
                     report.h2d += t0.elapsed();
                     report.h2d_bytes += value.nbytes() as u64;
-                    self.graph.metrics.incr("exec.h2d_transfers");
-                    device.memory.borrow_mut().insert(
-                        id,
-                        version,
-                        value.nbytes() as u64,
-                        Rc::clone(&buf),
-                    );
-                    self.bufs.insert(dest, buf);
+                    self.plan.metrics.incr("exec.h2d_transfers");
                 }
+                self.bufs.insert(dest, buf);
             }
         }
         Ok(())
@@ -264,7 +273,7 @@ impl<'g> Executor<'g> {
             | CopySource::CompositeField { task, .. }
             | CopySource::StagedOutput { task, .. } => *task,
         };
-        Rc::clone(&self.graph.node(task).device)
+        Rc::clone(&self.plan.node(task).device)
     }
 
     fn do_launch(
@@ -287,7 +296,7 @@ impl<'g> Executor<'g> {
         let t0 = Instant::now();
         let produced = kernel.run_buffers(&arg_bufs)?;
         report.launch += t0.elapsed();
-        self.graph.metrics.incr("exec.launches");
+        self.plan.metrics.incr("exec.launches");
         if produced.len() != outs.len() {
             bail!(
                 "task {task}: launch produced {} buffers, lowering reserved {}",
@@ -308,7 +317,7 @@ impl<'g> Executor<'g> {
         report: &mut ExecutionReport,
     ) -> anyhow::Result<()> {
         let kernel = Rc::clone(self.kernel_of(task)?);
-        let node = self.graph.node(task);
+        let node = self.plan.node(task);
         let mut host_outputs = Vec::new();
         let t0 = Instant::now();
         for b in bufs {
@@ -337,7 +346,7 @@ impl<'g> Executor<'g> {
         node.device.memory.borrow_mut().note_download(
             host_outputs.iter().map(|v| v.nbytes() as u64).sum(),
         );
-        self.graph.metrics.incr("exec.d2h_transfers");
+        self.plan.metrics.incr("exec.d2h_transfers");
         for (i, v) in host_outputs.iter().enumerate() {
             self.staged.insert((task, i), v.clone());
         }
@@ -348,6 +357,14 @@ impl<'g> Executor<'g> {
 
 enum ResolvedSource {
     Fresh(HostValue),
+    /// A device buffer the plan pinned at build time.
+    PlanResident {
+        buf: Rc<PjRtBuffer>,
+        id: u64,
+        version: u64,
+        bytes: u64,
+        device_task: TaskId,
+    },
     Persistent { id: u64, version: u64, value: HostValue, device_task: TaskId },
 }
 

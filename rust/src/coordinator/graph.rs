@@ -3,23 +3,30 @@
 //! A `TaskGraph` is a DAG whose nodes are tasks mapped onto devices
 //! (`executeTaskOn`, Listing 4). Dependencies are *inferred from data*:
 //! a `ParamSource::Output` edge makes the consumer depend on the
-//! producer. `execute()` runs the full pipeline — lower to low-level
-//! actions, optimize the action stream, execute on the device — and
-//! blocks until all host memory updates are visible (the graph executes
-//! atomically, §2.2.2).
+//! producer.
+//!
+//! The lifecycle is build-once / execute-many: `compile()` runs
+//! lowering, the action-stream optimizer, scheduling and PJRT
+//! compilation once, producing a reusable [`CompiledGraph`];
+//! `CompiledGraph::launch(&Bindings)` replays it with per-call input
+//! rebinding. `execute()` remains a thin compile-then-launch wrapper
+//! that blocks until all host memory updates are visible (the graph
+//! executes atomically, §2.2.2).
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
-use anyhow::{bail, Context};
+use anyhow::bail;
 
 use crate::metrics::Metrics;
 use crate::runtime::buffer::HostValue;
 use crate::runtime::device::DeviceContext;
 
-use super::executor::{ExecutionOptions, ExecutionReport, Executor};
+use super::compiled::{Bindings, CompiledGraph};
+use super::executor::ExecutionReport;
 use super::lowering::{lower, Action};
 use super::optimizer::{optimize, OptimizerConfig};
+use super::scheduler;
 use super::task::{ParamSource, Task, TaskId};
 
 /// A task bound to a device.
@@ -108,12 +115,27 @@ impl TaskGraph {
                         p.name
                     );
                 }
-                let producer = &self.nodes[dep].task;
-                // Multi-output (tuple-root) producers cannot chain
-                // on-device; validated again at lowering with the
-                // manifest, but catch the obvious arity error here.
-                let _ = index;
-                let _ = producer;
+                // Catch the obvious arity error at insertion: the
+                // requested output index must exist on the producer's
+                // manifest entry. Producers that don't resolve (unknown
+                // kernel / profile) are left for lowering, which
+                // reports the root cause with full context.
+                let producer = &self.nodes[dep];
+                if let Ok(entry) = scheduler::resolve(
+                    producer.device.runtime.manifest(),
+                    &producer.task,
+                    &self.profile,
+                ) {
+                    if index >= entry.outputs.len() {
+                        bail!(
+                            "task {id} param '{}' wants output {index} of task {dep} ('{}'), \
+                             which has only {} output(s)",
+                            p.name,
+                            producer.task.kernel,
+                            entry.outputs.len()
+                        );
+                    }
+                }
             }
         }
         self.nodes.push(TaskNode { id, task, device: Rc::clone(device) });
@@ -173,24 +195,56 @@ impl TaskGraph {
         Ok(optimize(actions, self, &self.optimizer, &self.metrics))
     }
 
-    /// `tasks.execute()` — the blocking execution entry point.
+    /// Compile the graph into a reusable [`CompiledGraph`]: lowering,
+    /// optimization, scheduling and PJRT compilation run once here;
+    /// every subsequent `launch` is bind + replay.
+    pub fn compile(&self) -> anyhow::Result<CompiledGraph> {
+        CompiledGraph::build(self, true)
+    }
+
+    /// Compile without the action-stream optimizer (ablation E6).
+    pub fn compile_unoptimized(&self) -> anyhow::Result<CompiledGraph> {
+        CompiledGraph::build(self, false)
+    }
+
+    /// `tasks.execute()` — the blocking single-shot entry point, now a
+    /// thin compile-then-launch wrapper. Graphs whose params are all
+    /// baked (no `Param::input`) need no bindings.
     pub fn execute(&self) -> anyhow::Result<GraphOutputs> {
         Ok(self.execute_with_report()?.outputs)
     }
 
     /// Execute and return the full report (timings, transfer bytes,
-    /// action counts) — what the benches consume.
+    /// action counts) — what the benches consume. The plan-construction
+    /// costs (PJRT compile, persistent warming) are folded into the
+    /// report so single-shot callers see the same first-run/steady-state
+    /// split as before the compile/launch redesign.
     pub fn execute_with_report(&self) -> anyhow::Result<ExecutionReport> {
-        let actions = self.optimized_actions()?;
-        let mut exec = Executor::new(self, ExecutionOptions::default());
-        exec.run(&actions).context("executing task graph")
+        let plan = self.compile()?;
+        let mut report = plan.launch(&Bindings::new())?;
+        self.fold_plan(&plan, &mut report);
+        Ok(report)
     }
 
     /// Execute the *unoptimized* stream (ablation E6).
     pub fn execute_unoptimized(&self) -> anyhow::Result<ExecutionReport> {
-        let actions = self.lower_actions()?;
-        let mut exec = Executor::new(self, ExecutionOptions::default());
-        exec.run(&actions)
+        let plan = self.compile_unoptimized()?;
+        let mut report = plan.launch(&Bindings::new())?;
+        self.fold_plan(&plan, &mut report);
+        Ok(report)
+    }
+
+    /// Fold a throwaway plan's build-time costs into a launch report
+    /// (legacy single-shot semantics) and absorb its launch counters
+    /// into this graph's metrics.
+    fn fold_plan(&self, plan: &CompiledGraph, report: &mut ExecutionReport) {
+        report.compile += plan.stats.compile;
+        report.fresh_compiles += plan.stats.fresh_compiles;
+        report.h2d += plan.stats.warm_h2d;
+        report.h2d_bytes += plan.stats.warm_h2d_bytes;
+        report.residency_hits += plan.stats.warm_residency_hits;
+        report.wall += plan.stats.compile + plan.stats.warm_h2d;
+        self.metrics.merge_from(&plan.metrics);
     }
 
     pub fn node(&self, id: TaskId) -> &TaskNode {
@@ -225,7 +279,7 @@ mod tests {
     fn forward_output_reference_rejected() {
         let Some(dev) = device() else { return };
         let mut g = TaskGraph::new().with_profile("tiny");
-        let mut t = Task::create("pipe_reduce", Dims::d1(4096), Dims::d1(4096));
+        let mut t = Task::create("pipe_reduce", Dims::d1(4096), Dims::d1(4096)).unwrap();
         t.set_parameters(vec![Param::output("z", 3, 0)]);
         assert!(g.execute_task_on(t, &dev).is_err());
     }
@@ -234,16 +288,42 @@ mod tests {
     fn dependencies_inferred_from_outputs() {
         let Some(dev) = device() else { return };
         let mut g = TaskGraph::new().with_profile("tiny");
-        let mut a = Task::create("pipe_vecadd", Dims::d1(4096), Dims::d1(4096));
+        let mut a = Task::create("pipe_vecadd", Dims::d1(4096), Dims::d1(4096)).unwrap();
         a.set_parameters(vec![
             Param::f32_slice("x", &[0.0; 4096]),
             Param::f32_slice("y", &[0.0; 4096]),
         ]);
         let ia = g.execute_task_on(a, &dev).unwrap();
-        let mut b = Task::create("pipe_reduce", Dims::d1(4096), Dims::d1(4096));
+        let mut b = Task::create("pipe_reduce", Dims::d1(4096), Dims::d1(4096)).unwrap();
         b.set_parameters(vec![Param::output("z", ia, 0)]);
         let ib = g.execute_task_on(b, &dev).unwrap();
         assert_eq!(g.dependencies(), vec![(ia, ib)]);
         assert_eq!(g.toposort().unwrap(), vec![ia, ib]);
+    }
+
+    #[test]
+    fn output_arity_checked_at_insertion() {
+        let Some(dev) = device() else { return };
+        let m = dev.runtime.manifest();
+        let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
+        let mut g = TaskGraph::new().with_profile("tiny");
+        let mut a = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).unwrap();
+        a.set_parameters(vec![
+            Param::f32_slice("x", &vec![0.0; n]),
+            Param::f32_slice("y", &vec![0.0; n]),
+        ]);
+        let ia = g.execute_task_on(a, &dev).unwrap();
+        // pipe_vecadd has exactly one output: asking for output 5 must
+        // fail at insertion, not at lowering.
+        let mut b = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
+        b.set_parameters(vec![Param::output("z", ia, 5)]);
+        let err = g.execute_task_on(b, &dev).unwrap_err().to_string();
+        assert!(err.contains("output 5"), "{err}");
+        assert!(err.contains("only 1 output"), "{err}");
+        assert_eq!(g.len(), 1, "rejected task must not be inserted");
+        // The valid index still inserts fine.
+        let mut b = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
+        b.set_parameters(vec![Param::output("z", ia, 0)]);
+        assert!(g.execute_task_on(b, &dev).is_ok());
     }
 }

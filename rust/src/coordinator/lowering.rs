@@ -16,7 +16,7 @@ use anyhow::bail;
 
 use super::graph::TaskGraph;
 use super::scheduler;
-use super::task::{ParamSource, TaskId};
+use super::task::{Param, ParamSource, TaskId};
 
 /// Logical device-buffer id within one execution.
 pub type BufId = usize;
@@ -147,6 +147,27 @@ enum ExpandedParam {
     FromTask { producer: TaskId, index: usize },
 }
 
+/// The kernel-input slot each param starts at. This is the single
+/// definition of the param -> slot mapping that [`expand_params`]
+/// realizes action-by-action: leaf params (host / persistent / input /
+/// task-output) cover one slot each in declaration order; a composite
+/// covers one slot per kernel input declaration (its fields expand to
+/// the full input list). `CompiledGraph::build` uses this to attach
+/// manifest declarations to named inputs — keep the two in sync by
+/// changing only this function.
+pub(crate) fn param_slots(params: &[Param], n_entry_inputs: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(params.len());
+    let mut slot = 0usize;
+    for p in params {
+        out.push(slot);
+        slot += match &p.source {
+            ParamSource::Composite(_) => n_entry_inputs,
+            _ => 1,
+        };
+    }
+    out
+}
+
 fn expand_params(
     graph: &TaskGraph,
     tid: TaskId,
@@ -156,7 +177,9 @@ fn expand_params(
     let mut out = Vec::new();
     for (pi, p) in node.task.params.iter().enumerate() {
         match &p.source {
-            ParamSource::Host(_) | ParamSource::Persistent { .. } => {
+            // Named inputs lower exactly like host params: the CopyIn
+            // resolves against the launch's Bindings at execution time.
+            ParamSource::Host(_) | ParamSource::Persistent { .. } | ParamSource::Input { .. } => {
                 out.push(ExpandedParam::Fresh(CopySource::Param { task: tid, param: pi }));
             }
             ParamSource::Output { task: dep, index } => {
@@ -211,6 +234,17 @@ fn expand_params(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn param_slots_mirror_expansion() {
+        use crate::coordinator::task::Param;
+        use crate::memory::Record;
+        let leafy = vec![Param::input("a"), Param::input("b"), Param::input("c")];
+        assert_eq!(param_slots(&leafy, 3), vec![0, 1, 2]);
+        let composite = vec![Param::composite(Record::new("T"))];
+        assert_eq!(param_slots(&composite, 4), vec![0]);
+        assert_eq!(param_slots(&[], 0), Vec::<usize>::new());
+    }
 
     #[test]
     fn histogram_counts() {

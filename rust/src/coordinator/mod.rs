@@ -2,9 +2,14 @@
 //! lowering to low-level actions, the action-stream optimizer, the
 //! thread-group scheduler and the executor.
 //!
-//! Pipeline (paper §2.3): `TaskGraph::execute()` =
-//! `lower()` -> `optimize()` -> `Executor::run()`.
+//! Pipeline (paper §2.3), split into a build-once / execute-many
+//! lifecycle: `TaskGraph::compile()` = `lower()` -> `optimize()` ->
+//! schedule + PJRT-compile, producing a reusable `CompiledGraph`;
+//! `CompiledGraph::launch(&Bindings)` = `Executor::run()` over the
+//! precomputed action stream. `TaskGraph::execute()` chains the two
+//! for single-shot callers.
 
+pub mod compiled;
 pub mod executor;
 pub mod graph;
 pub mod lowering;
@@ -12,6 +17,7 @@ pub mod optimizer;
 pub mod scheduler;
 pub mod task;
 
+pub use compiled::{Bindings, CompiledGraph, CompiledNode, InputSpec, PlanStats};
 pub use executor::{ExecutionOptions, ExecutionReport, Executor};
 pub use graph::{GraphOutputs, TaskGraph, TaskNode};
 pub use lowering::{action_histogram, Action, BufId, CopySource};

@@ -179,7 +179,8 @@ mod tests {
             "vector_add",
             Dims(e.iteration_space.clone()),
             Dims(e.workgroup.clone()),
-        );
+        )
+        .unwrap();
         let r = resolve(&m, &t, "tiny").unwrap();
         assert_eq!(r.key, "vector_add.pallas.tiny");
     }
@@ -187,7 +188,7 @@ mod tests {
     #[test]
     fn resolve_wrong_iteration_space_fails() {
         let Some(m) = manifest() else { return };
-        let t = Task::create("vector_add", Dims::d1(123), Dims::d1(123));
+        let t = Task::create("vector_add", Dims::d1(123), Dims::d1(123)).unwrap();
         assert!(resolve(&m, &t, "tiny").is_err());
     }
 
@@ -205,7 +206,8 @@ mod tests {
             "correlation",
             Dims::d2(terms, terms),
             Dims::d2(16, 16),
-        );
+        )
+        .unwrap();
         let r = resolve(&m, &t, "scaled").unwrap();
         assert_eq!(r.name, "correlation_wg16");
     }
@@ -218,14 +220,15 @@ mod tests {
             "vector_add",
             Dims(e.iteration_space.clone()),
             Dims::d1(17),
-        );
+        )
+        .unwrap();
         assert!(resolve(&m, &t, "tiny").is_err());
     }
 
     #[test]
     fn resolve_unknown_kernel_fails() {
         let Some(m) = manifest() else { return };
-        let t = Task::create("nonexistent", Dims::d1(1), Dims::d1(1));
+        let t = Task::create("nonexistent", Dims::d1(1), Dims::d1(1)).unwrap();
         assert!(resolve(&m, &t, "tiny").is_err());
     }
 }

@@ -8,6 +8,8 @@
 //! task-output sources), and the scheduling metadata is the `Dims` pair
 //! of Listing 4 plus optional `@Atomic` declarations.
 
+use anyhow::bail;
+
 use crate::memory::{DataId, Record};
 use crate::runtime::artifact::Access;
 use crate::runtime::buffer::HostValue;
@@ -36,6 +38,30 @@ impl Dims {
 
     pub fn rank(&self) -> usize {
         self.0.len()
+    }
+
+    /// A degenerate Dims describes a 0-point iteration space: empty
+    /// rank or any zero extent. Rejected at [`Task::create`] so it
+    /// never reaches lowering.
+    pub fn is_degenerate(&self) -> bool {
+        self.0.is_empty() || self.0.iter().any(|&d| d == 0)
+    }
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.is_empty() {
+            return write!(f, "<empty>");
+        }
+        let mut first = true;
+        for d in &self.0 {
+            if !first {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+            first = false;
+        }
+        Ok(())
     }
 }
 
@@ -92,6 +118,10 @@ pub enum ParamSource {
     /// The `index`-th output of a previous task in the same graph —
     /// the inter-task dataflow the DAG optimizer exploits (§2.3).
     Output { task: TaskId, index: usize },
+    /// A named placeholder filled in at launch time from a `Bindings`
+    /// map — the rebindable-input half of the build-once/execute-many
+    /// lifecycle (`TaskGraph::compile` -> `CompiledGraph::launch`).
+    Input { name: String },
     /// A composite object, serialized through its data schema
     /// (used-fields-only, §3.2.2). Expands to one kernel parameter per
     /// accessed field.
@@ -139,6 +169,19 @@ impl Param {
         }
     }
 
+    /// A named launch-time input: the value is supplied per launch via
+    /// `Bindings` instead of being baked into the task. The expected
+    /// shape/dtype come from the kernel manifest and are validated both
+    /// at `TaskGraph::compile` and on every `CompiledGraph::launch`.
+    pub fn input(name: &str) -> Self {
+        Self {
+            name: name.into(),
+            access: Access::Read,
+            source: ParamSource::Input { name: name.into() },
+            mem_space: MemSpace::Global,
+        }
+    }
+
     /// Consume output `index` of `task` (same graph).
     pub fn output(name: &str, task: TaskId, index: usize) -> Self {
         Self {
@@ -172,10 +215,12 @@ impl Param {
     }
 
     /// Bytes this parameter moves host->device if uploaded cold.
+    /// `Input` placeholders count 0 here: their size is only known
+    /// once a value is bound at launch.
     pub fn nbytes(&self) -> usize {
         match &self.source {
             ParamSource::Host(v) | ParamSource::Persistent { value: v, .. } => v.nbytes(),
-            ParamSource::Output { .. } => 0,
+            ParamSource::Output { .. } | ParamSource::Input { .. } => 0,
             ParamSource::Composite(r) => r.fields.values().map(|v| v.nbytes()).sum(),
         }
     }
@@ -201,8 +246,19 @@ pub struct Task {
 }
 
 impl Task {
-    pub fn create(kernel: &str, global: Dims, group: Dims) -> Self {
-        Self {
+    /// Create a task. Degenerate `Dims` (empty rank or a zero extent)
+    /// describe a 0-point iteration space and are rejected here, before
+    /// they can reach lowering.
+    pub fn create(kernel: &str, global: Dims, group: Dims) -> anyhow::Result<Self> {
+        for (what, d) in [("iteration space", &global), ("work-group", &group)] {
+            if d.is_degenerate() {
+                bail!(
+                    "task '{kernel}': degenerate {what} dims {d} \
+                     (every dimension must be a non-zero extent)"
+                );
+            }
+        }
+        Ok(Self {
             kernel: kernel.into(),
             variant: "pallas".into(),
             global,
@@ -210,7 +266,7 @@ impl Task {
             params: Vec::new(),
             atomics: Vec::new(),
             keep_output: true,
-        }
+        })
     }
 
     /// `task.setParameters(...)` (Listing 4 line 9).
@@ -254,8 +310,34 @@ mod tests {
     }
 
     #[test]
+    fn dims_display() {
+        assert_eq!(Dims::d1(4096).to_string(), "4096");
+        assert_eq!(Dims::d2(64, 32).to_string(), "64x32");
+        assert_eq!(Dims::d3(2, 3, 4).to_string(), "2x3x4");
+        assert_eq!(Dims(vec![]).to_string(), "<empty>");
+    }
+
+    #[test]
+    fn degenerate_dims_rejected_at_create() {
+        // Zero extent in either dims.
+        let err = Task::create("k", Dims::d1(0), Dims::d1(16)).unwrap_err().to_string();
+        assert!(err.contains("degenerate iteration space"), "{err}");
+        assert!(err.contains('0'), "{err}");
+        let err = Task::create("k", Dims::d2(16, 0), Dims::d1(16)).unwrap_err().to_string();
+        assert!(err.contains("16x0"), "{err}");
+        let err = Task::create("k", Dims::d1(16), Dims::d1(0)).unwrap_err().to_string();
+        assert!(err.contains("work-group"), "{err}");
+        // Empty rank.
+        let err = Task::create("k", Dims(vec![]), Dims::d1(16)).unwrap_err().to_string();
+        assert!(err.contains("<empty>"), "{err}");
+        // Non-degenerate passes.
+        assert!(Task::create("k", Dims::d1(1), Dims::d1(1)).is_ok());
+    }
+
+    #[test]
     fn task_builder() {
         let mut t = Task::create("reduction", Dims::d1(1024), Dims::d1(256))
+            .unwrap()
             .with_atomic("result", AtomicOp::Add);
         t.set_parameters(vec![Param::f32_slice("data", &[1.0, 2.0])]);
         assert_eq!(t.kernel, "reduction");
@@ -275,6 +357,9 @@ mod tests {
         assert_eq!(p.nbytes(), 0);
         let p = Param::persistent("w", 7, 0, HostValue::f32(vec![2], vec![0.0; 2]));
         assert_eq!(p.nbytes(), 8);
+        let p = Param::input("price");
+        assert_eq!(p.nbytes(), 0);
+        assert!(matches!(p.source, ParamSource::Input { ref name } if name == "price"));
     }
 
     #[test]

@@ -28,7 +28,11 @@ fn main() -> anyhow::Result<()> {
     .opt("variant", "pallas", "kernel variant: pallas | ref")
     .opt("iters", "0", "iterations (0 = paper-derived default)")
     .flag("verbose", "print runtime metrics after execution")
-    .flag("no-opt", "disable the task-graph optimizer");
+    .flag("no-opt", "disable the task-graph optimizer")
+    .flag(
+        "plan-split",
+        "compile once and report plan construction separately from steady-state launches",
+    );
     let args = cli.parse();
 
     match args.positional().first().map(|s| s.as_str()) {
@@ -41,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             args.get_usize("iters").unwrap_or(0),
             args.has_flag("verbose"),
             args.has_flag("no-opt"),
+            args.has_flag("plan-split"),
         ),
         Some("suite") => suite(args.get_or("profile", "scaled"), args.has_flag("verbose")),
         other => {
@@ -106,7 +111,7 @@ fn build_graph(
         name,
         Dims(entry.iteration_space.clone()),
         Dims(entry.workgroup.clone()),
-    )
+    )?
     .with_variant(variant);
     task.set_parameters(
         w.params
@@ -130,11 +135,43 @@ fn run(
     iters: usize,
     verbose: bool,
     no_opt: bool,
+    plan_split: bool,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!name.is_empty(), "--benchmark required");
     let dev = Cuda::get_device(0)?.create_device_context()?;
     let (g, id, _) = build_graph(&dev, name, profile, variant, no_opt)?;
     let iters = if iters == 0 { workloads::iterations(name, profile) } else { iters };
+
+    if plan_split {
+        // Build-once / execute-many: price plan construction (lowering,
+        // optimizer, scheduling, PJRT compile, persistent warming)
+        // separately from the bind-and-launch steady state.
+        let plan = g.compile()?;
+        println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
+        let first = plan.launch(&Bindings::new())?;
+        println!(
+            "first launch: {} (fresh_compiles {}, h2d {} B, d2h {} B)",
+            fmt_secs(first.wall.as_secs_f64()),
+            first.fresh_compiles,
+            first.h2d_bytes,
+            first.d2h_bytes,
+        );
+        let h = Harness::new(1, 3, iters);
+        let r = h.run(name, || {
+            plan.launch(&Bindings::new()).expect("steady-state launch");
+        });
+        println!(
+            "steady-state launch: {}/iter over {iters} iters (cv {:.1}%)",
+            fmt_secs(r.per_iter()),
+            r.summary.cv() * 100.0
+        );
+        let _ = id;
+        if verbose {
+            println!("build metrics:\n{}", g.metrics.report());
+            println!("launch metrics:\n{}", plan.metrics.report());
+        }
+        return Ok(());
+    }
 
     // First execution: includes the lazy compile (JIT analog).
     let first = g.execute_with_report()?;

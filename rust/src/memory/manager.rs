@@ -13,6 +13,9 @@ use std::rc::Rc;
 
 use xla::PjRtBuffer;
 
+use crate::runtime::buffer::HostValue;
+use crate::runtime::pjrt::PjrtRuntime;
+
 use super::schema::SchemaRegistry;
 
 /// Stable identity of a host datum across task graphs.
@@ -95,6 +98,15 @@ impl DeviceMemoryManager {
     /// Insert a freshly-uploaded buffer, evicting LRU entries until it
     /// fits. Counts the upload in stats.
     pub fn insert(&mut self, id: DataId, version: u64, bytes: u64, buffer: Rc<PjRtBuffer>) {
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += bytes;
+        self.admit(id, version, bytes, buffer);
+    }
+
+    /// Make (id, version) resident without counting an upload (the
+    /// buffer is already on the device), evicting LRU entries until it
+    /// fits.
+    fn admit(&mut self, id: DataId, version: u64, bytes: u64, buffer: Rc<PjRtBuffer>) {
         self.clock += 1;
         if self.resident.contains_key(&id) {
             self.evict(id);
@@ -109,10 +121,55 @@ impl DeviceMemoryManager {
             self.evict(lru);
             self.stats.evictions += 1;
         }
-        self.stats.uploads += 1;
-        self.stats.upload_bytes += bytes;
         self.used += bytes;
         self.resident.insert(id, Resident { buffer, bytes, version, last_use: self.clock });
+    }
+
+    /// Keep a plan-pinned buffer's ledger entry alive across launches:
+    /// refresh its LRU recency while it is resident, or re-admit it
+    /// (no upload — the plan still holds the buffer on the device) if
+    /// it was evicted in the meantime. This keeps `used` honest about
+    /// device memory that compiled plans hold live, so eviction
+    /// pressure is computed against reality instead of overcommitting.
+    /// If a *different* version of the id is resident, it is left
+    /// untouched: evicting it would force its user to re-upload on
+    /// every interleaved run, and the plan's own pin already keeps the
+    /// stale buffer alive regardless of the ledger.
+    pub fn retain_resident(
+        &mut self,
+        id: DataId,
+        version: u64,
+        bytes: u64,
+        buffer: &Rc<PjRtBuffer>,
+    ) {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.resident.get_mut(&id) {
+            Some(r) if r.version == version => r.last_use = clock,
+            Some(_) => {}
+            None => self.admit(id, version, bytes, Rc::clone(buffer)),
+        }
+    }
+
+    /// Look up (id, version); on miss, upload `value` through `runtime`
+    /// and insert the fresh buffer. Returns the device buffer and
+    /// whether it was a residency hit. One place owns the
+    /// lookup-or-upload dance that both the executor's persistent
+    /// fallback and the compiled-graph builder (which pins the returned
+    /// handle for the plan's lifetime) rely on.
+    pub fn ensure_resident(
+        &mut self,
+        id: DataId,
+        version: u64,
+        value: &HostValue,
+        runtime: &PjrtRuntime,
+    ) -> anyhow::Result<(Rc<PjRtBuffer>, bool)> {
+        if let Some(buf) = self.lookup(id, version) {
+            return Ok((buf, true));
+        }
+        let buf = Rc::new(runtime.upload(value)?);
+        self.insert(id, version, value.nbytes() as u64, Rc::clone(&buf));
+        Ok((buf, false))
     }
 
     /// Record a D2H transfer (for stats symmetry; the buffer itself is
@@ -208,6 +265,51 @@ mod tests {
         assert_eq!(mm.resident_count(), 1);
         assert_eq!(mm.used(), 4096);
         assert!(mm.lookup(1, 1).is_some());
+    }
+
+    #[test]
+    fn ensure_resident_uploads_once_then_hits() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        let v = HostValue::f32(vec![1024], vec![3.0; 1024]);
+        let (b1, hit1) = mm.ensure_resident(9, 0, &v, &rt).unwrap();
+        assert!(!hit1);
+        assert_eq!(mm.stats.uploads, 1);
+        let (b2, hit2) = mm.ensure_resident(9, 0, &v, &rt).unwrap();
+        assert!(hit2);
+        assert!(Rc::ptr_eq(&b1, &b2));
+        assert_eq!(mm.stats.uploads, 1, "hit must not re-upload");
+        // Version bump invalidates and re-uploads.
+        let (_, hit3) = mm.ensure_resident(9, 1, &v, &rt).unwrap();
+        assert!(!hit3);
+        assert_eq!(mm.stats.uploads, 2);
+    }
+
+    #[test]
+    fn retain_resident_readmits_without_upload_stat() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        let buf = upload(&rt, 1024, 1.0);
+        mm.insert(1, 0, 4096, Rc::clone(&buf));
+        assert_eq!(mm.stats.uploads, 1);
+        // Still resident: recency refresh only.
+        mm.retain_resident(1, 0, 4096, &buf);
+        assert_eq!(mm.resident_count(), 1);
+        assert_eq!(mm.used(), 4096);
+        assert_eq!(mm.stats.uploads, 1);
+        // Evicted while pinned: re-admitted with honest accounting but
+        // no phantom upload.
+        mm.evict(1);
+        assert_eq!(mm.used(), 0);
+        mm.retain_resident(1, 0, 4096, &buf);
+        assert_eq!(mm.resident_count(), 1);
+        assert_eq!(mm.used(), 4096);
+        assert_eq!(mm.stats.uploads, 1);
+        // A newer resident version of the same id must NOT be evicted
+        // by a stale plan's retain.
+        mm.insert(1, 1, 4096, upload(&rt, 1024, 2.0));
+        mm.retain_resident(1, 0, 4096, &buf);
+        assert!(mm.lookup(1, 1).is_some(), "newer version survives stale retain");
     }
 
     #[test]

@@ -48,6 +48,20 @@ impl Metrics {
         self.timers.borrow_mut().clear();
     }
 
+    /// Fold another registry's counters and timers into this one
+    /// (used when a graph absorbs a throwaway plan's launch metrics).
+    pub fn merge_from(&self, other: &Metrics) {
+        if std::ptr::eq(self, other) {
+            return;
+        }
+        for (&k, &v) in other.counters.borrow().iter() {
+            *self.counters.borrow_mut().entry(k).or_insert(0) += v;
+        }
+        for (&k, &d) in other.timers.borrow().iter() {
+            *self.timers.borrow_mut().entry(k).or_insert(Duration::ZERO) += d;
+        }
+    }
+
     /// Render a compact report (verbose mode).
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -97,5 +111,22 @@ mod tests {
         let m = Metrics::new();
         m.incr("transfers_eliminated");
         assert!(m.report().contains("transfers_eliminated"));
+    }
+
+    #[test]
+    fn merge_from_accumulates_and_self_merge_is_noop() {
+        let a = Metrics::new();
+        a.incr("x");
+        a.time("t", Duration::from_millis(1));
+        let b = Metrics::new();
+        b.add("x", 2);
+        b.incr("y");
+        b.time("t", Duration::from_millis(4));
+        a.merge_from(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.counter("y"), 1);
+        assert_eq!(a.timer("t"), Duration::from_millis(5));
+        a.merge_from(&a);
+        assert_eq!(a.counter("x"), 3);
     }
 }

@@ -216,6 +216,25 @@ impl PjrtRuntime {
         Ok((kernel, true))
     }
 
+    /// Compile a set of artifact keys up front — the build-once phase
+    /// of the compiled-graph lifecycle. Duplicate keys and cache hits
+    /// are free. Returns (fresh compilations, total fresh compile time).
+    pub fn precompile<'a, I>(&self, keys: I) -> anyhow::Result<(usize, Duration)>
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        let mut fresh = 0usize;
+        let mut total = Duration::ZERO;
+        for key in keys {
+            let (kernel, compiled) = self.kernel(key)?;
+            if compiled {
+                fresh += 1;
+                total += kernel.compile_time;
+            }
+        }
+        Ok((fresh, total))
+    }
+
     /// Convenience: fetch by (name, variant, profile).
     pub fn kernel_for(
         &self,
@@ -290,6 +309,20 @@ mod tests {
         assert_eq!(st.compilations, 1);
         assert_eq!(st.cache_hits, 1);
         assert!(st.total_compile_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn precompile_dedupes_and_reports_fresh() {
+        let Some(rt) = runtime() else { return };
+        let (fresh, dur) = rt
+            .precompile(["vector_add.pallas.tiny", "vector_add.pallas.tiny"])
+            .unwrap();
+        assert_eq!(fresh, 1, "duplicate key compiles once");
+        assert!(dur > Duration::ZERO);
+        let (fresh2, dur2) = rt.precompile(["vector_add.pallas.tiny"]).unwrap();
+        assert_eq!(fresh2, 0);
+        assert_eq!(dur2, Duration::ZERO);
+        assert!(rt.precompile(["nope.pallas.tiny"]).is_err());
     }
 
     #[test]

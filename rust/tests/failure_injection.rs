@@ -25,7 +25,7 @@ fn tiny_entry(dev: &DeviceContext, name: &str) -> (Vec<usize>, Vec<usize>) {
 fn unknown_kernel_name_is_a_clean_error() {
     let Some(dev) = device() else { return };
     let mut g = TaskGraph::new().with_profile("tiny");
-    let t = Task::create("definitely_not_a_kernel", Dims::d1(16), Dims::d1(16));
+    let t = Task::create("definitely_not_a_kernel", Dims::d1(16), Dims::d1(16)).unwrap();
     g.execute_task_on(t, &dev).unwrap();
     let err = g.execute().unwrap_err().to_string();
     assert!(err.contains("definitely_not_a_kernel"), "{err}");
@@ -36,7 +36,7 @@ fn unknown_profile_is_a_clean_error() {
     let Some(dev) = device() else { return };
     let mut g = TaskGraph::new().with_profile("no_such_profile");
     let (it, wg) = tiny_entry(&dev, "vector_add");
-    let t = Task::create("vector_add", Dims(it), Dims(wg));
+    let t = Task::create("vector_add", Dims(it), Dims(wg)).unwrap();
     g.execute_task_on(t, &dev).unwrap();
     assert!(g.execute().is_err());
 }
@@ -45,7 +45,7 @@ fn unknown_profile_is_a_clean_error() {
 fn wrong_iteration_space_rejected_before_execution() {
     let Some(dev) = device() else { return };
     let mut g = TaskGraph::new().with_profile("tiny");
-    let t = Task::create("vector_add", Dims::d1(12345), Dims::d1(12345));
+    let t = Task::create("vector_add", Dims::d1(12345), Dims::d1(12345)).unwrap();
     g.execute_task_on(t, &dev).unwrap();
     let err = g.execute().unwrap_err().to_string();
     assert!(err.contains("iteration space"), "{err}");
@@ -56,7 +56,7 @@ fn unavailable_workgroup_suggests_ablation_variant() {
     let Some(dev) = device() else { return };
     let (it, _) = tiny_entry(&dev, "vector_add");
     let mut g = TaskGraph::new().with_profile("tiny");
-    let t = Task::create("vector_add", Dims(it), Dims::d1(33));
+    let t = Task::create("vector_add", Dims(it), Dims::d1(33)).unwrap();
     g.execute_task_on(t, &dev).unwrap();
     let err = g.execute().unwrap_err().to_string();
     assert!(err.contains("work-group"), "{err}");
@@ -68,7 +68,7 @@ fn missing_parameter_is_arity_error() {
     let (it, wg) = tiny_entry(&dev, "vector_add");
     let mut g = TaskGraph::new().with_profile("tiny");
     let n = it[0];
-    let mut t = Task::create("vector_add", Dims(it), Dims(wg));
+    let mut t = Task::create("vector_add", Dims(it), Dims(wg)).unwrap();
     t.set_parameters(vec![Param::f32_slice("x", &vec![0.0; n])]); // y missing
     g.execute_task_on(t, &dev).unwrap();
     let err = g.execute().unwrap_err().to_string();
@@ -80,7 +80,7 @@ fn wrong_param_shape_fails_at_launch_not_with_wrong_data() {
     let Some(dev) = device() else { return };
     let (it, wg) = tiny_entry(&dev, "vector_add");
     let mut g = TaskGraph::new().with_profile("tiny");
-    let mut t = Task::create("vector_add", Dims(it), Dims(wg));
+    let mut t = Task::create("vector_add", Dims(it), Dims(wg)).unwrap();
     t.set_parameters(vec![
         Param::f32_slice("x", &[1.0; 8]), // wrong length
         Param::f32_slice("y", &[1.0; 8]),
@@ -95,17 +95,46 @@ fn output_index_out_of_range_rejected() {
     let m = dev.runtime.manifest();
     let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
     let mut g = TaskGraph::new().with_profile("tiny");
-    let mut a = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+    let mut a = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).unwrap();
     a.set_parameters(vec![
         Param::f32_slice("x", &vec![0.0; n]),
         Param::f32_slice("y", &vec![0.0; n]),
     ]);
     let ia = g.execute_task_on(a, &dev).unwrap();
-    let mut b = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    let mut b = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
     b.set_parameters(vec![Param::output("z", ia, 5)]); // only output 0 exists
-    g.execute_task_on(b, &dev).unwrap();
-    let err = g.execute().unwrap_err().to_string();
+    // Since the insertion-time arity check, this is rejected at
+    // executeTaskOn — before any lowering runs.
+    let err = g.execute_task_on(b, &dev).unwrap_err().to_string();
     assert!(err.contains("output"), "{err}");
+}
+
+#[test]
+fn degenerate_dims_rejected_at_task_create() {
+    let err = Task::create("vector_add", Dims::d1(0), Dims::d1(16)).unwrap_err().to_string();
+    assert!(err.contains("degenerate"), "{err}");
+    assert!(Task::create("vector_add", Dims(vec![]), Dims::d1(1)).is_err());
+    assert!(Task::create("vector_add", Dims::d2(8, 0), Dims::d1(1)).is_err());
+    assert!(Task::create("vector_add", Dims::d1(8), Dims(vec![])).is_err());
+}
+
+#[test]
+fn unbound_input_is_a_clean_error() {
+    let Some(dev) = device() else { return };
+    let (it, wg) = tiny_entry(&dev, "vector_add");
+    let n = it[0];
+    let mut t = Task::create("vector_add", Dims(it), Dims(wg)).unwrap();
+    t.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    g.execute_task_on(t, &dev).unwrap();
+    let plan = g.compile().unwrap();
+    // Partial bindings: the missing name is reported.
+    let partial = Bindings::new().bind("x", HostValue::f32(vec![n], vec![0.0; n]));
+    let err = plan.launch(&partial).unwrap_err().to_string();
+    assert!(err.contains("'y' not bound"), "{err}");
+    // The legacy single-shot wrapper (empty bindings) fails the same way.
+    let err = g.execute().unwrap_err().to_string();
+    assert!(err.contains("not bound"), "{err}");
 }
 
 #[test]
@@ -119,7 +148,8 @@ fn tuple_root_producer_cannot_chain_on_device() {
         "black_scholes",
         Dims(e.iteration_space.clone()),
         Dims(e.workgroup.clone()),
-    );
+    )
+    .unwrap();
     bs.set_parameters(vec![
         Param::f32_slice("price", &vec![20.0; n]),
         Param::f32_slice("strike", &vec![20.0; n]),
@@ -134,7 +164,7 @@ fn tuple_root_producer_cannot_chain_on_device() {
     if red_n != n {
         return; // profile shapes diverge; the property is covered elsewhere
     }
-    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
     red.set_parameters(vec![Param::output("z", ib, 0)]);
     let ir = g.execute_task_on(red, &dev).unwrap();
     let out = g.execute().unwrap();
@@ -154,7 +184,8 @@ fn composite_missing_kernel_field_is_rejected() {
         "black_scholes",
         Dims(e.iteration_space.clone()),
         Dims(e.workgroup.clone()),
-    );
+    )
+    .unwrap();
     t.set_parameters(vec![Param::composite(record)]);
     g.execute_task_on(t, &dev).unwrap();
     let err = g.execute().unwrap_err().to_string();
@@ -176,7 +207,8 @@ fn memory_manager_eviction_never_breaks_results() {
             "vector_add",
             Dims(e.iteration_space.clone()),
             Dims(e.workgroup.clone()),
-        );
+        )
+        .unwrap();
         t.set_parameters(vec![
             Param::persistent("x", 1, round, HostValue::f32(vec![n], vec![fill; n])),
             Param::persistent("y", 2, round, HostValue::f32(vec![n], vec![1.0; n])),
@@ -204,7 +236,8 @@ fn serial_fallback_contract_holds() {
         "reduction",
         Dims(e.iteration_space.clone()),
         Dims(e.workgroup.clone()),
-    );
+    )
+    .unwrap();
     t.set_parameters(vec![Param::host("data", w.params[0].clone())]);
     let mut g = TaskGraph::new().with_profile("tiny");
     let id = g.execute_task_on(t, &dev).unwrap();
@@ -230,7 +263,8 @@ fn graph_reexecution_is_idempotent() {
         "histogram",
         Dims(e.iteration_space.clone()),
         Dims(e.workgroup.clone()),
-    );
+    )
+    .unwrap();
     t.set_parameters(vec![Param::i32_slice("values", &vals)]);
     let mut g = TaskGraph::new().with_profile("tiny");
     let id = g.execute_task_on(t, &dev).unwrap();

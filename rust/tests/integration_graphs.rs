@@ -42,7 +42,8 @@ fn single_task_graph(
         name,
         Dims(entry.iteration_space.clone()),
         Dims(entry.workgroup.clone()),
-    );
+    )
+    .unwrap();
     let params = w
         .params
         .iter()
@@ -166,10 +167,10 @@ fn pipeline_graph(dev: &Rc<DeviceContext>, optimized: bool) -> (TaskGraph, TaskI
     if !optimized {
         g = g.without_optimizations();
     }
-    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).discard_output();
+    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).unwrap().discard_output();
     add.set_parameters(vec![Param::f32_slice("x", &x), Param::f32_slice("y", &y)]);
     let a = g.execute_task_on(add, dev).unwrap();
-    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
     red.set_parameters(vec![Param::output("z", a, 0)]);
     let r = g.execute_task_on(red, dev).unwrap();
     (g, r, expected)
@@ -225,7 +226,9 @@ fn pipeline_matches_fused_artifact() {
     let n = entry.inputs[0].shape[0];
     let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
     let y: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
-    let mut fused = Task::create("pipe_fused", Dims::d1(n), Dims::d1(n)).with_variant("ref");
+    let mut fused = Task::create("pipe_fused", Dims::d1(n), Dims::d1(n))
+        .unwrap()
+        .with_variant("ref");
     fused.set_parameters(vec![
         Param::f32_slice("x", &x),
         Param::f32_slice("y", &y),
@@ -250,7 +253,8 @@ fn persistent_params_skip_reupload_across_graphs() {
     let y = HostValue::f32(vec![n], vec![2.0; n]);
 
     let run = |version: u64| {
-        let mut t = Task::create("vector_add", Dims::d1(n), Dims::d1(entry.workgroup[0]));
+        let mut t =
+            Task::create("vector_add", Dims::d1(n), Dims::d1(entry.workgroup[0])).unwrap();
         t.set_parameters(vec![
             Param::persistent("x", 101, version, x.clone()),
             Param::persistent("y", 102, version, y.clone()),
@@ -298,7 +302,8 @@ fn composite_record_projects_used_fields_only() {
         "black_scholes",
         Dims(entry.iteration_space.clone()),
         Dims(entry.workgroup.clone()),
-    );
+    )
+    .unwrap();
     task.set_parameters(vec![Param::composite(record)]);
     let mut g = TaskGraph::new().with_profile("tiny");
     let id = g.execute_task_on(task, &dev).unwrap();
@@ -315,6 +320,113 @@ fn composite_record_projects_used_fields_only() {
     assert!(schema.is_accessed("price"));
     assert!(!schema.is_accessed("audit_log"));
     assert!(schema.savings_ratio() > 0.5);
+}
+
+// ------------------------------------------------ compiled-graph reuse
+
+/// Build once, compile once, launch 3x with different bindings: every
+/// launch must match the serial baseline, never JIT, and never redo
+/// lowering/optimizer work.
+#[test]
+fn compiled_graph_launches_many_with_rebound_inputs() {
+    let Some(dev) = device() else { return };
+    let entry = manifest(&dev).find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, &dev).unwrap();
+
+    // Compile once: all lowering/optimizer work lands on the graph's
+    // (build-side) metrics here.
+    let plan = g.compile().unwrap();
+    let build_side = g.metrics.counters();
+
+    for round in 0..3u32 {
+        let x: Vec<f32> = (0..n).map(|i| (i % 11) as f32 + round as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * (round + 1) as f32).collect();
+        let bindings = Bindings::new()
+            .bind("x", HostValue::f32(vec![n], x.clone()))
+            .bind("y", HostValue::f32(vec![n], y.clone()));
+        let rep = plan.launch(&bindings).unwrap();
+        // Launches never JIT: the plan compiled everything up front.
+        assert_eq!(rep.fresh_compiles, 0, "round {round}");
+        assert_eq!(rep.compile, std::time::Duration::ZERO, "round {round}");
+        let got = rep.outputs.single(id).unwrap().as_f32().unwrap().to_vec();
+        let want = serial::vector_add(&x, &y);
+        close(&got, &want, 1e-6, 1e-6);
+    }
+
+    // No re-lowering / re-optimization after the first launch: the
+    // build-side counters are untouched by launching.
+    assert_eq!(g.metrics.counters(), build_side);
+    assert_eq!(plan.launches(), 3);
+}
+
+/// The optimized multi-task stream (transfer elimination, dead-copy
+/// elimination) must stay correct when replayed with fresh bindings.
+#[test]
+fn compiled_pipeline_reuses_optimized_stream() {
+    let Some(dev) = device() else { return };
+    let n = manifest(&dev).find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).unwrap().discard_output();
+    add.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let a = g.execute_task_on(add, &dev).unwrap();
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
+    red.set_parameters(vec![Param::output("z", a, 0)]);
+    let r = g.execute_task_on(red, &dev).unwrap();
+
+    let plan = g.compile().unwrap();
+    for round in 1..=2u32 {
+        let x = vec![round as f32; n];
+        let y = vec![2.0 * round as f32; n];
+        let expected: f64 = x.iter().zip(&y).map(|(a, b)| (a + b) as f64).sum();
+        let bindings = Bindings::new()
+            .bind("x", HostValue::f32(vec![n], x))
+            .bind("y", HostValue::f32(vec![n], y));
+        let rep = plan.launch(&bindings).unwrap();
+        assert_eq!(rep.fresh_compiles, 0, "round {round}");
+        let got = rep.outputs.single(r).unwrap().as_f32().unwrap()[0] as f64;
+        assert!((got - expected).abs() < 0.5, "round {round}: {got} vs {expected}");
+        // The dead intermediate stays eliminated on every launch: only
+        // the final scalar comes back, not the n-element intermediate.
+        assert!(rep.d2h_bytes < (n * 4) as u64, "round {round}: {} B d2h", rep.d2h_bytes);
+    }
+}
+
+/// Persistent params are pinned device-resident by the plan: launches
+/// after the first must move zero persistent bytes.
+#[test]
+fn compiled_graph_pins_persistent_buffers() {
+    let Some(dev) = device() else { return };
+    let entry = manifest(&dev).find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let y = HostValue::f32(vec![n], vec![5.0; n]);
+    let mut t = Task::create("vector_add", Dims::d1(n), Dims::d1(entry.workgroup[0])).unwrap();
+    t.set_parameters(vec![Param::input("x"), Param::persistent("y", 777, 0, y)]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(t, &dev).unwrap();
+
+    let plan = g.compile().unwrap();
+    // The persistent upload happened at build time...
+    assert!(plan.stats.warm_h2d_bytes > 0 || plan.stats.warm_residency_hits > 0);
+    for round in 0..2u32 {
+        let x = vec![round as f32; n];
+        let b = Bindings::new().bind("x", HostValue::f32(vec![n], x));
+        let rep = plan.launch(&b).unwrap();
+        // ...so each launch uploads exactly the bound input and serves
+        // the book from the plan-pinned buffer.
+        assert_eq!(rep.h2d_bytes, (n * 4) as u64, "round {round}");
+        assert_eq!(rep.plan_resident_hits, 1, "round {round}");
+        let got = rep.outputs.single(id).unwrap().as_f32().unwrap()[0];
+        assert_eq!(got, round as f32 + 5.0);
+    }
 }
 
 // ------------------------------------------------------- compile-time split
@@ -346,6 +458,7 @@ fn pallas_and_ref_variants_agree() {
                 Dims(entry.iteration_space.clone()),
                 Dims(entry.workgroup.clone()),
             )
+            .unwrap()
             .with_variant(variant);
             t.set_parameters(
                 w.params

@@ -76,7 +76,7 @@ fn build(dev: &Rc<DeviceContext>, shape: &GraphShape, optimized: bool) -> (TaskG
     for (i, st) in shape.stages.iter().enumerate() {
         let mut rng = Rng::new(st.seed);
         let x: Vec<f32> = (0..n).map(|_| (rng.below(8)) as f32).collect();
-        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n));
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).unwrap();
         // The last stage must stay visible if nothing consumes it;
         // keep_output=false only for stages that are consumed later or
         // when a reduce follows.
@@ -96,7 +96,7 @@ fn build(dev: &Rc<DeviceContext>, shape: &GraphShape, optimized: bool) -> (TaskG
         prev = Some(id);
     }
     if shape.reduce_at_end {
-        let mut t = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n));
+        let mut t = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
         t.set_parameters(vec![Param::output("z", *ids.last().unwrap(), 0)]);
         let id = g.execute_task_on(t, dev).unwrap();
         ids.push(id);
@@ -246,7 +246,7 @@ fn persistent_residency_is_consistent_under_random_access_patterns() {
                 let fill = (id * 10 + version) as f32;
                 let x = HostValue::f32(vec![n], vec![fill; n]);
                 let y = HostValue::f32(vec![n], vec![1.0; n]);
-                let mut t = Task::create("vector_add", Dims::d1(n), Dims::d1(wg));
+                let mut t = Task::create("vector_add", Dims::d1(n), Dims::d1(wg)).unwrap();
                 t.set_parameters(vec![
                     Param::persistent("x", id, version, x),
                     Param::host("y", y),
