@@ -6,13 +6,13 @@
 //! Reported per optimizer config: action counts, transferred bytes and
 //! steady-state wall time.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::bench::{fmt_secs, Harness, Table};
 use jacc::coordinator::lowering::action_histogram;
 
-fn pipeline(dev: &Rc<DeviceContext>, config: OptimizerConfig, stages: usize) -> anyhow::Result<TaskGraph> {
+fn pipeline(dev: &Arc<DeviceContext>, config: OptimizerConfig, stages: usize) -> anyhow::Result<TaskGraph> {
     let m = dev.runtime.manifest();
     let n = m.find("pipe_vecadd", "pallas", "scaled")?.inputs[0].shape[0];
     let x: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();

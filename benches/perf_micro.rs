@@ -4,7 +4,7 @@
 //! throughput, JSON manifest parsing, thread-pool dispatch and the
 //! CAS-float hot loop.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::bench::{fmt_secs, Harness, Table};
@@ -12,7 +12,7 @@ use jacc::substrate::atomic_float::AtomicF32;
 use jacc::substrate::json::Value;
 use jacc::substrate::threadpool::ThreadPool;
 
-fn chain_graph(dev: &Rc<DeviceContext>, tasks: usize) -> anyhow::Result<TaskGraph> {
+fn chain_graph(dev: &Arc<DeviceContext>, tasks: usize) -> anyhow::Result<TaskGraph> {
     let m = dev.runtime.manifest();
     let n = m.find("pipe_vecadd", "pallas", "tiny")?.inputs[0].shape[0];
     let x: Vec<f32> = vec![1.0; n];

@@ -1,0 +1,130 @@
+//! Serving throughput bench: one shared `CompiledGraph`, launched
+//! concurrently by a `ServingEngine` worker pool at increasing worker
+//! counts. Reports aggregate requests/s and the p50/p95/p99 latency
+//! tail per configuration — the serving-runtime counterpart of the
+//! paper's steady-state kernel numbers (and the gate that the
+//! concurrent launch path never JITs and never overcommits the
+//! memory ledger).
+//!
+//! Run with:  cargo bench --bench serve_throughput -- \
+//!                [--requests 128] [--workers 1,2,4,8] [--smoke]
+//!
+//! `--smoke` (CI) shrinks to 1 worker x 8 requests on the tiny
+//! profile so the concurrent path is exercised on every push.
+
+use std::sync::Arc;
+
+use jacc::api::*;
+use jacc::serve::{serve_all, ServeConfig};
+use jacc::substrate::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("serve_throughput", "concurrent serving throughput over one plan")
+        .opt("benchmark", "vector_add", "benchmark kernel to serve")
+        .opt("requests", "128", "requests per worker configuration")
+        .opt("workers", "1,2,4,8", "comma-separated worker counts")
+        .opt("profile", "", "artifact profile (default: JACC_PROFILE or scaled)")
+        .flag("smoke", "CI mode: 1 worker, 8 requests, tiny profile")
+        .parse();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("serve_throughput: artifacts not built (make artifacts); skipping");
+        return Ok(());
+    }
+
+    let smoke = args.has_flag("smoke");
+    let name = args.get_or("benchmark", "vector_add").to_string();
+    let profile = if smoke {
+        "tiny".to_string()
+    } else {
+        let p = args.get_or("profile", "");
+        if p.is_empty() {
+            std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into())
+        } else {
+            p.to_string()
+        }
+    };
+    let requests = if smoke { 8 } else { args.get_usize("requests")? };
+    let worker_counts: Vec<usize> = if smoke {
+        vec![1]
+    } else {
+        args.get_or("workers", "1,2,4,8")
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --workers list: {e}"))?
+    };
+
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let entry = dev.runtime.manifest().find(&name, "pallas", &profile)?;
+    let n = entry.inputs[0].shape[0];
+
+    // Rebindable inputs so every request carries fresh data — the
+    // realistic serving shape (vector_add: x, y per request).
+    let mut task = Task::create(
+        &name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )?;
+    anyhow::ensure!(
+        entry.inputs.iter().all(|d| d.shape == vec![n] && d.dtype == DType::F32),
+        "serve_throughput drives rank-1 f32 kernels; {name}.{profile} has other inputs"
+    );
+    task.set_parameters(
+        entry.inputs.iter().map(|d| Param::input(&d.name)).collect(),
+    );
+    let input_names: Vec<String> = entry.inputs.iter().map(|d| d.name.clone()).collect();
+    let mut g = TaskGraph::new().with_profile(&profile);
+    g.execute_task_on(task, &dev)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.pallas.{profile}: {}", plan.stats.summary());
+
+    let mk_bindings = |req: usize| {
+        let mut b = Bindings::new();
+        for (slot, nm) in input_names.iter().enumerate() {
+            let fill = (req % 13) as f32 + slot as f32;
+            b.set(nm, HostValue::f32(vec![n], vec![fill; n]));
+        }
+        b
+    };
+
+    // Warm once off the clock.
+    plan.launch(&mk_bindings(0))?;
+
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "workers", "req/s", "p50 ms", "p95 ms", "p99 ms", "max ms"
+    );
+    for &workers in &worker_counts {
+        let reqs: Vec<Bindings> = (0..requests).map(&mk_bindings).collect();
+        let (reports, agg) =
+            serve_all(Arc::clone(&plan), ServeConfig::with_workers(workers), reqs)?;
+        anyhow::ensure!(
+            reports.iter().all(|r| r.fresh_compiles == 0),
+            "serving path must never JIT"
+        );
+        anyhow::ensure!(agg.errors == 0, "serving errors: {}", agg.errors);
+        println!(
+            "{workers:<8} {:>10.0} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            agg.throughput_rps, agg.p50_ms, agg.p95_ms, agg.p99_ms, agg.max_ms
+        );
+    }
+
+    let mem = dev.memory.lock().unwrap();
+    anyhow::ensure!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
+    println!(
+        "ledger OK: used {} / {} B, {} evictions, {} oversized rejections",
+        mem.used(),
+        mem.capacity(),
+        mem.stats.evictions,
+        mem.stats.rejected_oversized
+    );
+    println!("serve_throughput OK");
+    Ok(())
+}

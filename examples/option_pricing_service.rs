@@ -2,13 +2,16 @@
 //! pricing service running batched requests through the full stack —
 //! request generation, latency percentiles and throughput.
 //!
-//! Two serving paths are measured and compared:
+//! Three serving paths are measured and compared:
 //! * **rebuild**: the legacy pattern — a fresh `TaskGraph` is built,
 //!   lowered, optimized and scheduled for every request batch;
 //! * **compiled**: build-once / execute-many — the graph is compiled
 //!   into a `CompiledGraph` once (cold cost reported separately) and
 //!   every batch is just `Bindings` + `launch`, with zero lowering,
-//!   optimizer or JIT work on the hot path (`fresh_compiles == 0`).
+//!   optimizer or JIT work on the hot path (`fresh_compiles == 0`);
+//! * **concurrent**: the same single compiled plan served by a
+//!   `ServingEngine` worker pool (`--serve-workers`, bounded queue) —
+//!   the plan is `Send + Sync`, so N threads launch it at once.
 //!
 //! The strike/expiry books are uploaded once and stay device-resident
 //! (paper §3.2.1 persistent state; the compiled plan pins the buffers);
@@ -16,13 +19,14 @@
 //! `--no-persist` run shows the difference.
 //!
 //! Run with:  cargo run --release --example option_pricing_service -- \
-//!                [--batches 48] [--no-persist]
+//!                [--batches 48] [--serve-workers 4] [--no-persist]
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use jacc::api::*;
 use jacc::baselines::serial;
+use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
 use jacc::substrate::prng::Rng;
 use jacc::substrate::stats;
@@ -32,9 +36,11 @@ const BATCH: usize = 65_536; // matches the `serve` artifact shape
 fn main() -> anyhow::Result<()> {
     let args = Cli::new("option_pricing_service", "batched Black-Scholes pricing service")
         .opt("batches", "48", "number of request batches to serve per path")
+        .opt("serve-workers", "4", "worker threads for the concurrent path")
         .flag("no-persist", "re-upload the whole book every batch")
         .parse();
     let batches = args.get_usize("batches")?;
+    let serve_workers = args.get_usize("serve-workers")?;
     let persist = !args.has_flag("no-persist");
 
     let dev = Cuda::get_device(0)?.create_device_context()?;
@@ -102,6 +108,41 @@ fn main() -> anyhow::Result<()> {
     }
     let compiled_wall = t0.elapsed().as_secs_f64();
 
+    // ---- Path C: concurrent serving over the same shared plan ----------
+    // The plan is Send + Sync: a ServingEngine pool launches it from
+    // `serve_workers` threads at once, each request with its own fresh
+    // price vector, behind a bounded admission queue.
+    let plan = Arc::new(plan);
+    let mut serve_prices = Vec::with_capacity(batches);
+    let mut serve_requests = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+        serve_requests.push(Bindings::new().bind("price", price.clone()));
+        serve_prices.push(price);
+    }
+    let (serve_reports, serve_agg) = serve_all(
+        Arc::clone(&plan),
+        ServeConfig::with_workers(serve_workers),
+        serve_requests,
+    )?;
+    for (b, rep) in serve_reports.iter().enumerate() {
+        anyhow::ensure!(rep.fresh_compiles == 0, "concurrent path must never JIT");
+        if b == 0 {
+            let outs = rep.outputs.outputs(id).unwrap();
+            let (want_call, _) = serial::black_scholes(
+                serve_prices[b].as_f32()?,
+                strike.as_f32()?,
+                expiry.as_f32()?,
+            );
+            let mut max_err = 0.0f32;
+            for (g, w) in outs[0].as_f32()?.iter().zip(&want_call) {
+                max_err = max_err.max((g - w).abs());
+            }
+            println!("concurrent path first-batch validation: max |err| = {max_err:.2e}");
+            anyhow::ensure!(max_err < 1e-2, "pricing mismatch vs serial baseline");
+        }
+    }
+
     // ---- Results -------------------------------------------------------
     rebuild_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     compiled_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -137,7 +178,19 @@ fn main() -> anyhow::Result<()> {
         "compiled throughput: {:.0} options/s ({batches} batches in {compiled_wall:.2} s)",
         (batches * BATCH) as f64 / compiled_wall
     );
-    let mem = dev.memory.borrow();
+    println!("concurrent path ({})", serve_agg.summary());
+    println!(
+        "concurrent throughput: {:.0} options/s ({batches} batches in {:.2} s)",
+        (batches * BATCH) as f64 / serve_agg.wall.as_secs_f64(),
+        serve_agg.wall.as_secs_f64()
+    );
+    let mem = dev.memory.lock().unwrap();
+    anyhow::ensure!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted under concurrency: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
     println!(
         "memory manager: {} uploads ({} B), {} residency hits ({} B saved)",
         mem.stats.uploads, mem.stats.upload_bytes, mem.stats.residency_hits,
@@ -156,7 +209,7 @@ fn main() -> anyhow::Result<()> {
 /// The pricing graph: fresh spot prices are a named input rebound per
 /// batch; the book is persistent (device-resident) or baked host data.
 fn build_pricing_graph(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     strike: &HostValue,
     expiry: &HostValue,
     persist: bool,
@@ -183,7 +236,7 @@ fn build_pricing_graph(
 /// Returns (latency seconds, max abs error vs serial when `validate`,
 /// else 0.0).
 fn serve_batch_rebuild(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     strike: &HostValue,
     expiry: &HostValue,
     rng: &mut Rng,

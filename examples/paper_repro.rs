@@ -9,7 +9,7 @@
 //! Run with:  cargo run --release --example paper_repro -- [--profile scaled]
 //!            [--threads N] [--samples K]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::baselines::{mt, serial};
@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn build_graph(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     name: &str,
     profile: &str,
     w: &workloads::Workload,

@@ -12,7 +12,7 @@
 use jacc::api::*;
 use jacc::coordinator::lowering::action_histogram;
 
-fn build(dev: &std::rc::Rc<DeviceContext>, optimized: bool) -> anyhow::Result<(TaskGraph, TaskId)> {
+fn build(dev: &std::sync::Arc<DeviceContext>, optimized: bool) -> anyhow::Result<(TaskGraph, TaskId)> {
     let m = dev.runtime.manifest();
     let n = m.find("pipe_vecadd", "pallas", "tiny")?.inputs[0].shape[0];
 

@@ -2,7 +2,7 @@
 //! benchmark through every implementation (serial, MT, OpenMP-style,
 //! Jacc task graph) so the paper-table benches and examples stay thin.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::api::*;
 use crate::baselines::{mt, openmp, serial};
@@ -158,7 +158,7 @@ pub fn run_openmp(threads: usize, name: &str, w: &Workload) {
 /// parameters — the paper's §4.3 measurement: N kernel iterations with
 /// one transfer each way.
 pub fn build_graph_persistent(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     name: &str,
     profile: &str,
     variant: &str,
@@ -193,7 +193,7 @@ pub fn build_graph_persistent(
 /// per-iteration lowering/optimizer work — the build-once/execute-many
 /// split `jacc run --plan-split` also reports).
 pub fn compile_graph_persistent(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     name: &str,
     profile: &str,
     variant: &str,

@@ -7,7 +7,7 @@
 //!
 //! What the plan owns across launches:
 //! * the optimized action stream (compile actions already retired),
-//! * one pinned `Rc<CompiledKernel>` per task (no JIT on the launch
+//! * one pinned `Arc<CompiledKernel>` per task (no JIT on the launch
 //!   path — `fresh_compiles == 0` by construction),
 //! * device-resident buffers for every persistent parameter (uploaded
 //!   at build time through the memory manager and held for the plan's
@@ -17,17 +17,22 @@
 //!
 //! `TaskGraph::execute()` remains a thin compile-then-launch wrapper,
 //! so single-shot callers keep working unchanged.
+//!
+//! `CompiledGraph` is `Send + Sync` (statically asserted below): one
+//! plan can be launched from many threads at once. Buffers are
+//! `Arc<DeviceBuffer>`, kernels `Arc<CompiledKernel>`, launch metrics
+//! atomic, and the memory-manager ledger locked — `serve::ServingEngine`
+//! builds its worker pool directly on this guarantee.
 
 use std::collections::{BTreeMap, HashMap};
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
-use xla::PjRtBuffer;
 
 use crate::metrics::Metrics;
 use crate::runtime::artifact::IoDecl;
-use crate::runtime::buffer::HostValue;
+use crate::runtime::buffer::{HostValue, SharedBuffer};
 use crate::runtime::device::DeviceContext;
 use crate::runtime::pjrt::CompiledKernel;
 
@@ -89,9 +94,9 @@ pub struct InputSpec {
 pub struct CompiledNode {
     pub id: TaskId,
     pub task: Task,
-    pub device: Rc<DeviceContext>,
+    pub device: Arc<DeviceContext>,
     pub key: String,
-    pub kernel: Rc<CompiledKernel>,
+    pub kernel: Arc<CompiledKernel>,
 }
 
 /// Plan-construction cost split. `jacc run --plan-split` prints this;
@@ -144,12 +149,19 @@ pub struct CompiledGraph {
     /// Device buffers for persistent params, pinned for the plan's
     /// lifetime, keyed by (task, param index). Launches use these
     /// directly — no memory-manager round trip, no re-upload.
-    pub(crate) resident: HashMap<(TaskId, usize), Rc<PjRtBuffer>>,
+    pub(crate) resident: HashMap<(TaskId, usize), SharedBuffer>,
     pub profile: String,
     /// Launch-side counters (`exec.*`, `plan.launches`).
     pub metrics: Metrics,
     pub stats: PlanStats,
 }
+
+/// The serving contract, checked at compile time: a plan may be shared
+/// across threads (`Sync`) and moved into worker threads (`Send`). If a
+/// field regresses to `Rc`/`RefCell`, this fails to build.
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = assert_send_sync::<CompiledGraph>();
+const _: () = assert_send_sync::<Bindings>();
 
 impl CompiledGraph {
     /// Compile `graph` into a reusable plan. Build-time work:
@@ -167,7 +179,7 @@ impl CompiledGraph {
 
         let mut nodes = Vec::with_capacity(graph.len());
         let mut inputs: BTreeMap<String, InputSpec> = BTreeMap::new();
-        let mut resident: HashMap<(TaskId, usize), Rc<PjRtBuffer>> = HashMap::new();
+        let mut resident: HashMap<(TaskId, usize), SharedBuffer> = HashMap::new();
         let mut stats = PlanStats { tasks: graph.len(), ..Default::default() };
 
         for node in &graph.nodes {
@@ -222,7 +234,7 @@ impl CompiledGraph {
                     }
                     ParamSource::Persistent { id, version, value } => {
                         let t0 = Instant::now();
-                        let (buf, hit) = node.device.memory.borrow_mut().ensure_resident(
+                        let (buf, hit) = node.device.memory.lock().unwrap().ensure_resident(
                             *id,
                             *version,
                             value,
@@ -245,7 +257,7 @@ impl CompiledGraph {
             nodes.push(CompiledNode {
                 id: node.id,
                 task: node.task.clone(),
-                device: Rc::clone(&node.device),
+                device: Arc::clone(&node.device),
                 key,
                 kernel,
             });
@@ -357,7 +369,7 @@ mod tests {
         assert_eq!(b.len(), 2);
     }
 
-    fn device() -> Option<Rc<DeviceContext>> {
+    fn device() -> Option<Arc<DeviceContext>> {
         let dir = Manifest::default_dir();
         if !dir.join("manifest.json").exists() {
             return None;

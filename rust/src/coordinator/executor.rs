@@ -16,13 +16,13 @@
 //!   is host-visible.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 use xla::PjRtBuffer;
 
-use crate::runtime::buffer::HostValue;
+use crate::runtime::buffer::{DeviceBuffer, HostValue, SharedBuffer};
 use crate::runtime::pjrt::CompiledKernel;
 
 use super::compiled::{Bindings, CompiledGraph};
@@ -71,13 +71,16 @@ impl ExecutionReport {
     }
 }
 
-/// Walks actions for one launch of a compiled plan.
+/// Walks actions for one launch of a compiled plan. Each launch owns
+/// its own executor (buffer table, staged outputs), so concurrent
+/// launches of one shared plan never share mutable state — only the
+/// plan's immutable stream, its atomic metrics and the locked ledger.
 pub struct Executor<'g> {
     plan: &'g CompiledGraph,
     bindings: &'g Bindings,
     #[allow(dead_code)]
     opts: ExecutionOptions,
-    bufs: HashMap<BufId, Rc<PjRtBuffer>>,
+    bufs: HashMap<BufId, SharedBuffer>,
     staged: HashMap<(TaskId, usize), HostValue>,
 }
 
@@ -87,7 +90,7 @@ impl<'g> Executor<'g> {
     }
 
     /// The compiled kernel a task is pinned to.
-    fn kernel_of(&self, task: TaskId) -> anyhow::Result<&Rc<CompiledKernel>> {
+    fn kernel_of(&self, task: TaskId) -> anyhow::Result<&Arc<CompiledKernel>> {
         self.plan
             .nodes
             .get(task)
@@ -165,7 +168,7 @@ impl<'g> Executor<'g> {
                         // build time; no upload, no manager lookup.
                         if let Some(buf) = self.plan.resident.get(&(*task, *param)) {
                             return Ok(ResolvedSource::PlanResident {
-                                buf: Rc::clone(buf),
+                                buf: SharedBuffer::clone(buf),
                                 id: *id,
                                 version: *version,
                                 bytes: value.nbytes() as u64,
@@ -191,7 +194,7 @@ impl<'g> Executor<'g> {
                 let io = &kernel.entry.inputs[*field];
                 // Build/refresh the schema on demand in the device's
                 // memory manager, then project the single field.
-                let mut mem = node.device.memory.borrow_mut();
+                let mut mem = node.device.memory.lock().unwrap();
                 let schema = mem.schemas.get_or_create(&record.type_name);
                 record.build_schema(schema, &kernel.entry.inputs);
                 let v = record
@@ -230,24 +233,29 @@ impl<'g> Executor<'g> {
                 let buf = node_device.runtime.upload(&value)?;
                 report.h2d += t0.elapsed();
                 report.h2d_bytes += value.nbytes() as u64;
-                node_device.memory.borrow_mut().note_upload(value.nbytes() as u64);
+                node_device.memory.lock().unwrap().note_upload(value.nbytes() as u64);
                 self.plan.metrics.incr("exec.h2d_transfers");
-                self.bufs.insert(dest, Rc::new(buf));
+                self.bufs.insert(dest, DeviceBuffer::shared(buf));
             }
             ResolvedSource::PlanResident { buf, id, version, bytes, device_task } => {
                 // Keep the memory manager's ledger honest about the
                 // pinned buffer: refresh its LRU recency, or re-admit
                 // it if eviction dropped it while the plan held on.
-                let device = Rc::clone(&self.plan.node(device_task).device);
-                device.memory.borrow_mut().retain_resident(id, version, bytes, &buf);
+                let device = Arc::clone(&self.plan.node(device_task).device);
+                device
+                    .memory
+                    .lock()
+                    .unwrap()
+                    .retain_resident(id, version, bytes, &buf)
+                    .context("re-admitting a plan-pinned buffer")?;
                 report.plan_resident_hits += 1;
                 self.plan.metrics.incr("exec.plan_resident_hits");
                 self.bufs.insert(dest, buf);
             }
             ResolvedSource::Persistent { id, version, value, device_task } => {
-                let device = Rc::clone(&self.plan.node(device_task).device);
+                let device = Arc::clone(&self.plan.node(device_task).device);
                 let t0 = Instant::now();
-                let (buf, hit) = device.memory.borrow_mut().ensure_resident(
+                let (buf, hit) = device.memory.lock().unwrap().ensure_resident(
                     id,
                     version,
                     &value,
@@ -267,13 +275,13 @@ impl<'g> Executor<'g> {
         Ok(())
     }
 
-    fn device_for_source(&self, source: &CopySource) -> Rc<crate::runtime::DeviceContext> {
+    fn device_for_source(&self, source: &CopySource) -> Arc<crate::runtime::DeviceContext> {
         let task = match source {
             CopySource::Param { task, .. }
             | CopySource::CompositeField { task, .. }
             | CopySource::StagedOutput { task, .. } => *task,
         };
-        Rc::clone(&self.plan.node(task).device)
+        Arc::clone(&self.plan.node(task).device)
     }
 
     fn do_launch(
@@ -283,13 +291,13 @@ impl<'g> Executor<'g> {
         outs: &[BufId],
         report: &mut ExecutionReport,
     ) -> anyhow::Result<()> {
-        let kernel = Rc::clone(self.kernel_of(task)?);
+        let kernel = Arc::clone(self.kernel_of(task)?);
         let arg_bufs: Vec<&PjRtBuffer> = args
             .iter()
             .map(|b| {
                 self.bufs
                     .get(b)
-                    .map(|rc| rc.as_ref())
+                    .map(|shared| shared.pjrt())
                     .ok_or_else(|| anyhow!("buffer {b} not materialized before launch"))
             })
             .collect::<anyhow::Result<_>>()?;
@@ -305,7 +313,7 @@ impl<'g> Executor<'g> {
             );
         }
         for (buf, id) in produced.into_iter().zip(outs) {
-            self.bufs.insert(*id, Rc::new(buf));
+            self.bufs.insert(*id, DeviceBuffer::shared(buf));
         }
         Ok(())
     }
@@ -316,26 +324,26 @@ impl<'g> Executor<'g> {
         bufs: &[BufId],
         report: &mut ExecutionReport,
     ) -> anyhow::Result<()> {
-        let kernel = Rc::clone(self.kernel_of(task)?);
+        let kernel = Arc::clone(self.kernel_of(task)?);
         let node = self.plan.node(task);
         let mut host_outputs = Vec::new();
         let t0 = Instant::now();
         for b in bufs {
-            let rc = self
+            let shared = self
                 .bufs
                 .get(b)
                 .ok_or_else(|| anyhow!("buffer {b} not produced before CopyOut"))?;
             if kernel.entry.tuple_root {
-                let mut lit = rc.to_literal_sync()?;
+                let mut lit = shared.to_literal_sync()?;
                 for part in lit.decompose_tuple()? {
                     host_outputs.push(HostValue::from_literal(&part)?);
                 }
-            } else if let Some(v) = crate::runtime::pjrt::download_fast(rc)? {
+            } else if let Some(v) = crate::runtime::pjrt::download_fast(shared.pjrt())? {
                 // Raw-copy fast path: one copy, no intermediate
                 // literal (9x measured in perf_micro; §Perf).
                 host_outputs.push(v);
             } else {
-                let lit = rc.to_literal_sync()?;
+                let lit = shared.to_literal_sync()?;
                 host_outputs.push(HostValue::from_literal(&lit)?);
             }
         }
@@ -343,7 +351,7 @@ impl<'g> Executor<'g> {
         for v in &host_outputs {
             report.d2h_bytes += v.nbytes() as u64;
         }
-        node.device.memory.borrow_mut().note_download(
+        node.device.memory.lock().unwrap().note_download(
             host_outputs.iter().map(|v| v.nbytes() as u64).sum(),
         );
         self.plan.metrics.incr("exec.d2h_transfers");
@@ -359,7 +367,7 @@ enum ResolvedSource {
     Fresh(HostValue),
     /// A device buffer the plan pinned at build time.
     PlanResident {
-        buf: Rc<PjRtBuffer>,
+        buf: SharedBuffer,
         id: u64,
         version: u64,
         bytes: u64,

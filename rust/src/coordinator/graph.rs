@@ -14,7 +14,7 @@
 //! executes atomically, §2.2.2).
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::bail;
 
@@ -33,7 +33,7 @@ use super::task::{ParamSource, Task, TaskId};
 pub struct TaskNode {
     pub id: TaskId,
     pub task: Task,
-    pub device: Rc<DeviceContext>,
+    pub device: Arc<DeviceContext>,
 }
 
 /// The DAG.
@@ -100,7 +100,7 @@ impl TaskGraph {
     pub fn execute_task_on(
         &mut self,
         task: Task,
-        device: &Rc<DeviceContext>,
+        device: &Arc<DeviceContext>,
     ) -> anyhow::Result<TaskId> {
         let id = self.nodes.len();
         for p in &task.params {
@@ -138,7 +138,7 @@ impl TaskGraph {
                 }
             }
         }
-        self.nodes.push(TaskNode { id, task, device: Rc::clone(device) });
+        self.nodes.push(TaskNode { id, task, device: Arc::clone(device) });
         Ok(id)
     }
 
@@ -267,7 +267,7 @@ mod tests {
     use crate::runtime::artifact::Manifest;
     use crate::runtime::device::Cuda;
 
-    fn device() -> Option<Rc<DeviceContext>> {
+    fn device() -> Option<Arc<DeviceContext>> {
         let dir = Manifest::default_dir();
         if !dir.join("manifest.json").exists() {
             return None;

@@ -67,12 +67,25 @@ pub fn resolve<'m>(
 }
 
 /// Thread groups launched for a (global, group) pair — Fig. 2.
-pub fn thread_groups(global: &[usize], group: &[usize]) -> usize {
-    global
+///
+/// The ranks must match: zipping a rank-2 iteration space against a
+/// rank-1 work-group used to silently drop the trailing dimension and
+/// under-count the launched groups, so a mismatch is now an error.
+pub fn thread_groups(global: &[usize], group: &[usize]) -> anyhow::Result<usize> {
+    if global.len() != group.len() {
+        bail!(
+            "thread-group computation: iteration space rank {} != work-group rank {} \
+             (global {global:?} vs group {group:?}); trailing dimensions would be \
+             silently dropped",
+            global.len(),
+            group.len()
+        );
+    }
+    Ok(global
         .iter()
         .zip(group)
         .map(|(&g, &w)| g.div_ceil(w.max(1)))
-        .product()
+        .product())
 }
 
 /// Block mapping: thread `t` of `n_threads` over `n` items gets one
@@ -114,10 +127,22 @@ mod tests {
 
     #[test]
     fn thread_group_math() {
-        assert_eq!(thread_groups(&[4096], &[1024]), 4);
-        assert_eq!(thread_groups(&[4100], &[1024]), 5);
-        assert_eq!(thread_groups(&[64, 64], &[16, 32]), 4 * 2);
-        assert_eq!(thread_groups(&[1], &[1]), 1);
+        assert_eq!(thread_groups(&[4096], &[1024]).unwrap(), 4);
+        assert_eq!(thread_groups(&[4100], &[1024]).unwrap(), 5);
+        assert_eq!(thread_groups(&[64, 64], &[16, 32]).unwrap(), 4 * 2);
+        assert_eq!(thread_groups(&[1], &[1]).unwrap(), 1);
+    }
+
+    #[test]
+    fn thread_group_rank_mismatch_is_error() {
+        // A rank-2 space zipped with a rank-1 group used to drop the
+        // second dimension and report 4 groups instead of erroring.
+        let err = thread_groups(&[64, 64], &[16]).unwrap_err().to_string();
+        assert!(err.contains("rank 2 != work-group rank 1"), "{err}");
+        let err = thread_groups(&[64], &[16, 32]).unwrap_err().to_string();
+        assert!(err.contains("rank 1 != work-group rank 2"), "{err}");
+        // Degenerate-but-equal ranks still compute.
+        assert_eq!(thread_groups(&[], &[]).unwrap(), 1);
     }
 
     #[test]

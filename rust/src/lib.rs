@@ -27,6 +27,7 @@ pub mod devicemodel;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod substrate;
 
 /// Crate-wide result alias.

@@ -3,19 +3,23 @@
 //! metrics.
 //!
 //! Subcommands:
-//!   jacc devices                         list devices + models
-//!   jacc inspect  [--profile P]          artifact/cost/occupancy report
-//!   jacc run      --benchmark B [...]    run one benchmark end-to-end
-//!   jacc suite    [--profile P]          run all eight benchmarks
+//!   jacc devices                          list devices + models
+//!   jacc inspect     [--profile P]        artifact/cost/occupancy report
+//!   jacc run         --benchmark B [...]  run one benchmark end-to-end
+//!   jacc suite       [--profile P]        run all eight benchmarks
+//!   jacc serve-bench --benchmark B [...]  concurrent serving: N workers
+//!                                         launching one shared compiled
+//!                                         plan; throughput + p50/p99
 //!
 //! (The paper-table reproductions live in `cargo bench`; see
 //! benches/*.rs and EXPERIMENTS.md.)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
 use jacc::devicemodel::{CostModel, DeviceSpec};
+use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
@@ -32,7 +36,10 @@ fn main() -> anyhow::Result<()> {
     .flag(
         "plan-split",
         "compile once and report plan construction separately from steady-state launches",
-    );
+    )
+    .opt("workers", "4", "serving worker threads (serve-bench)")
+    .opt("requests", "64", "total requests to serve (serve-bench)")
+    .opt("queue-depth", "0", "admission queue bound, 0 = 2*workers (serve-bench)");
     let args = cli.parse();
 
     match args.positional().first().map(|s| s.as_str()) {
@@ -48,9 +55,19 @@ fn main() -> anyhow::Result<()> {
             args.has_flag("plan-split"),
         ),
         Some("suite") => suite(args.get_or("profile", "scaled"), args.has_flag("verbose")),
+        Some("serve-bench") => serve_bench(
+            args.get_or("benchmark", ""),
+            args.get_or("profile", "scaled"),
+            args.get_or("variant", "pallas"),
+            args.get_usize("workers").unwrap_or(4),
+            args.get_usize("requests").unwrap_or(64),
+            args.get_usize("queue-depth").unwrap_or(0),
+            args.has_flag("verbose"),
+        ),
         other => {
             eprintln!(
-                "unknown or missing subcommand {other:?}; try: devices | inspect | run | suite"
+                "unknown or missing subcommand {other:?}; try: devices | inspect | run | \
+                 suite | serve-bench"
             );
             std::process::exit(2);
         }
@@ -68,7 +85,7 @@ fn devices() -> anyhow::Result<()> {
         ctx.spec.scratch_bytes / (1024 * 1024),
         ctx.spec.compute_units
     );
-    println!("      memory manager: {} B capacity", ctx.memory.borrow().capacity());
+    println!("      memory manager: {} B capacity", ctx.memory.lock().unwrap().capacity());
     Ok(())
 }
 
@@ -99,7 +116,7 @@ fn inspect(profile: &str) -> anyhow::Result<()> {
 }
 
 fn build_graph(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     name: &str,
     profile: &str,
     variant: &str,
@@ -195,6 +212,61 @@ fn run(
     let _ = id;
     if verbose {
         println!("metrics:\n{}", g.metrics.report());
+    }
+    Ok(())
+}
+
+/// Concurrent serving: compile one plan, launch it from N workers
+/// through the bounded-queue engine, report throughput + latency tail.
+fn serve_bench(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    workers: usize,
+    requests: usize,
+    queue_depth: usize,
+    verbose: bool,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(!name.is_empty(), "--benchmark required");
+    anyhow::ensure!(workers > 0, "--workers must be positive");
+    anyhow::ensure!(requests > 0, "--requests must be positive");
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let (g, id, _) = build_graph(&dev, name, profile, variant, false)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
+
+    // One warm-up launch off the clock (persistent warming, literal
+    // caches), then the measured concurrent run.
+    plan.launch(&Bindings::new())?;
+    let mut config = ServeConfig::with_workers(workers);
+    if queue_depth > 0 {
+        config.queue_depth = queue_depth;
+    }
+    let (reports, agg) =
+        serve_all(Arc::clone(&plan), config, vec![Bindings::new(); requests])?;
+    for rep in &reports {
+        anyhow::ensure!(rep.fresh_compiles == 0, "serving path must never JIT");
+    }
+    println!("serve-bench {}", agg.summary());
+    {
+        let mem = dev.memory.lock().unwrap();
+        anyhow::ensure!(
+            mem.used() <= mem.capacity(),
+            "ledger overcommitted: used {} > capacity {}",
+            mem.used(),
+            mem.capacity()
+        );
+        println!(
+            "ledger: used {} / {} B, {} evictions, {} oversized rejections",
+            mem.used(),
+            mem.capacity(),
+            mem.stats.evictions,
+            mem.stats.rejected_oversized
+        );
+    }
+    let _ = id;
+    if verbose {
+        println!("launch metrics:\n{}", plan.metrics.report());
     }
     Ok(())
 }

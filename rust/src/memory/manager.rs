@@ -7,13 +7,20 @@
 //! a new allocation would not fit. Consistency follows the paper's
 //! atomic-task-graph rule: host objects must not change while a graph
 //! runs; `version` bumps invalidate stale residents.
+//!
+//! The manager itself holds no lock — `DeviceContext` wraps it in a
+//! `Mutex` so every ledger mutation (lookup recency, admit, evict,
+//! stats) is atomic under concurrent launches. Invariants the ledger
+//! maintains:
+//! * `used <= capacity` always — a buffer larger than the whole device
+//!   is rejected with [`MemoryError::Oversized`] instead of silently
+//!   overcommitting after evicting everything;
+//! * every eviction increments `stats.evictions`, including the
+//!   stale-version invalidation path in [`DeviceMemoryManager::lookup`].
 
 use std::collections::HashMap;
-use std::rc::Rc;
 
-use xla::PjRtBuffer;
-
-use crate::runtime::buffer::HostValue;
+use crate::runtime::buffer::{DeviceBuffer, HostValue, SharedBuffer};
 use crate::runtime::pjrt::PjrtRuntime;
 
 use super::schema::SchemaRegistry;
@@ -21,8 +28,21 @@ use super::schema::SchemaRegistry;
 /// Stable identity of a host datum across task graphs.
 pub type DataId = u64;
 
+/// Typed ledger errors, surfaced through `ensure_resident` and the
+/// serving launch path.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum MemoryError {
+    /// The buffer can never fit: it is larger than the device capacity,
+    /// so no amount of eviction admits it without overcommitting.
+    #[error(
+        "buffer for data id {id} is {bytes} B but the device holds only \
+         {capacity} B: refusing to overcommit the ledger"
+    )]
+    Oversized { id: DataId, bytes: u64, capacity: u64 },
+}
+
 struct Resident {
-    buffer: Rc<PjRtBuffer>,
+    buffer: SharedBuffer,
     bytes: u64,
     version: u64,
     last_use: u64,
@@ -38,6 +58,8 @@ pub struct MemoryStats {
     pub residency_hits: u64,
     pub residency_hit_bytes: u64,
     pub evictions: u64,
+    /// Admissions rejected because the buffer exceeds device capacity.
+    pub rejected_oversized: u64,
 }
 
 /// One device's memory manager.
@@ -76,8 +98,9 @@ impl DeviceMemoryManager {
 
     /// Look up a resident buffer for (id, version). A version mismatch
     /// means the host datum changed since upload: the stale buffer is
-    /// dropped and `None` returned (caller re-uploads).
-    pub fn lookup(&mut self, id: DataId, version: u64) -> Option<Rc<PjRtBuffer>> {
+    /// dropped (a counted eviction — the churn is real eviction work)
+    /// and `None` returned (caller re-uploads).
+    pub fn lookup(&mut self, id: DataId, version: u64) -> Option<SharedBuffer> {
         self.clock += 1;
         let clock = self.clock;
         match self.resident.get_mut(&id) {
@@ -85,10 +108,10 @@ impl DeviceMemoryManager {
                 r.last_use = clock;
                 self.stats.residency_hits += 1;
                 self.stats.residency_hit_bytes += r.bytes;
-                Some(Rc::clone(&r.buffer))
+                Some(SharedBuffer::clone(&r.buffer))
             }
             Some(_) => {
-                self.evict(id);
+                self.evict_counted(id);
                 None
             }
             None => None,
@@ -96,17 +119,37 @@ impl DeviceMemoryManager {
     }
 
     /// Insert a freshly-uploaded buffer, evicting LRU entries until it
-    /// fits. Counts the upload in stats.
-    pub fn insert(&mut self, id: DataId, version: u64, bytes: u64, buffer: Rc<PjRtBuffer>) {
+    /// fits. Counts the upload in stats (the transfer has happened by
+    /// the time the caller inserts, so it is counted even if admission
+    /// is then rejected as oversized).
+    pub fn insert(
+        &mut self,
+        id: DataId,
+        version: u64,
+        bytes: u64,
+        buffer: SharedBuffer,
+    ) -> Result<(), MemoryError> {
         self.stats.uploads += 1;
         self.stats.upload_bytes += bytes;
-        self.admit(id, version, bytes, buffer);
+        self.admit(id, version, bytes, buffer)
     }
 
     /// Make (id, version) resident without counting an upload (the
     /// buffer is already on the device), evicting LRU entries until it
-    /// fits.
-    fn admit(&mut self, id: DataId, version: u64, bytes: u64, buffer: Rc<PjRtBuffer>) {
+    /// fits. Rejects buffers larger than the whole capacity — admitting
+    /// one would leave `used > capacity` after evicting everything,
+    /// silently overcommitting the ledger.
+    fn admit(
+        &mut self,
+        id: DataId,
+        version: u64,
+        bytes: u64,
+        buffer: SharedBuffer,
+    ) -> Result<(), MemoryError> {
+        if bytes > self.capacity {
+            self.stats.rejected_oversized += 1;
+            return Err(MemoryError::Oversized { id, bytes, capacity: self.capacity });
+        }
         self.clock += 1;
         if self.resident.contains_key(&id) {
             self.evict(id);
@@ -118,11 +161,11 @@ impl DeviceMemoryManager {
                 .min_by_key(|(_, r)| r.last_use)
                 .map(|(id, _)| *id)
                 .expect("non-empty");
-            self.evict(lru);
-            self.stats.evictions += 1;
+            self.evict_counted(lru);
         }
         self.used += bytes;
         self.resident.insert(id, Resident { buffer, bytes, version, last_use: self.clock });
+        Ok(())
     }
 
     /// Keep a plan-pinned buffer's ledger entry alive across launches:
@@ -140,14 +183,17 @@ impl DeviceMemoryManager {
         id: DataId,
         version: u64,
         bytes: u64,
-        buffer: &Rc<PjRtBuffer>,
-    ) {
+        buffer: &SharedBuffer,
+    ) -> Result<(), MemoryError> {
         self.clock += 1;
         let clock = self.clock;
         match self.resident.get_mut(&id) {
-            Some(r) if r.version == version => r.last_use = clock,
-            Some(_) => {}
-            None => self.admit(id, version, bytes, Rc::clone(buffer)),
+            Some(r) if r.version == version => {
+                r.last_use = clock;
+                Ok(())
+            }
+            Some(_) => Ok(()),
+            None => self.admit(id, version, bytes, SharedBuffer::clone(buffer)),
         }
     }
 
@@ -156,19 +202,26 @@ impl DeviceMemoryManager {
     /// whether it was a residency hit. One place owns the
     /// lookup-or-upload dance that both the executor's persistent
     /// fallback and the compiled-graph builder (which pins the returned
-    /// handle for the plan's lifetime) rely on.
+    /// handle for the plan's lifetime) rely on. A value larger than the
+    /// device capacity fails with [`MemoryError::Oversized`] *before*
+    /// any byte crosses the bus.
     pub fn ensure_resident(
         &mut self,
         id: DataId,
         version: u64,
         value: &HostValue,
         runtime: &PjrtRuntime,
-    ) -> anyhow::Result<(Rc<PjRtBuffer>, bool)> {
+    ) -> anyhow::Result<(SharedBuffer, bool)> {
+        let bytes = value.nbytes() as u64;
+        if bytes > self.capacity {
+            self.stats.rejected_oversized += 1;
+            return Err(MemoryError::Oversized { id, bytes, capacity: self.capacity }.into());
+        }
         if let Some(buf) = self.lookup(id, version) {
             return Ok((buf, true));
         }
-        let buf = Rc::new(runtime.upload(value)?);
-        self.insert(id, version, value.nbytes() as u64, Rc::clone(&buf));
+        let buf = DeviceBuffer::shared(runtime.upload(value)?);
+        self.insert(id, version, bytes, SharedBuffer::clone(&buf))?;
         Ok((buf, false))
     }
 
@@ -185,10 +238,20 @@ impl DeviceMemoryManager {
         self.stats.upload_bytes += bytes;
     }
 
-    /// Drop one resident entry.
+    /// Drop one resident entry (ledger bookkeeping only — no stats).
     pub fn evict(&mut self, id: DataId) {
         if let Some(r) = self.resident.remove(&id) {
             self.used -= r.bytes;
+        }
+    }
+
+    /// The counted eviction path: every code path that drops a resident
+    /// entry as *eviction work* (LRU pressure, stale-version churn)
+    /// goes through here so `stats.evictions` never under-reports.
+    fn evict_counted(&mut self, id: DataId) {
+        if self.resident.contains_key(&id) {
+            self.evict(id);
+            self.stats.evictions += 1;
         }
     }
 
@@ -214,8 +277,8 @@ mod tests {
         Some(PjrtRuntime::with_default_manifest().unwrap())
     }
 
-    fn upload(rt: &PjrtRuntime, n: usize, fill: f32) -> Rc<PjRtBuffer> {
-        Rc::new(rt.upload(&HostValue::f32(vec![n], vec![fill; n])).unwrap())
+    fn upload(rt: &PjrtRuntime, n: usize, fill: f32) -> SharedBuffer {
+        DeviceBuffer::shared(rt.upload(&HostValue::f32(vec![n], vec![fill; n])).unwrap())
     }
 
     #[test]
@@ -223,7 +286,7 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let mut mm = DeviceMemoryManager::new(1 << 20);
         assert!(mm.lookup(1, 0).is_none());
-        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
         assert!(mm.lookup(1, 0).is_some());
         assert_eq!(mm.stats.residency_hits, 1);
         assert_eq!(mm.stats.uploads, 1);
@@ -231,13 +294,17 @@ mod tests {
     }
 
     #[test]
-    fn version_mismatch_invalidates() {
+    fn version_mismatch_invalidates_and_counts_eviction() {
         let Some(rt) = runtime() else { return };
         let mut mm = DeviceMemoryManager::new(1 << 20);
-        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
         assert!(mm.lookup(1, 1).is_none());
         assert_eq!(mm.resident_count(), 0);
         assert_eq!(mm.used(), 0);
+        // The stale-version drop is real eviction work: it must show up
+        // in the eviction counter (versioned-rebinding churn used to
+        // under-report exactly here).
+        assert_eq!(mm.stats.evictions, 1);
     }
 
     #[test]
@@ -245,11 +312,11 @@ mod tests {
         let Some(rt) = runtime() else { return };
         // Capacity for two 4 KiB buffers only.
         let mut mm = DeviceMemoryManager::new(8192);
-        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
-        mm.insert(2, 0, 4096, upload(&rt, 1024, 2.0));
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
+        mm.insert(2, 0, 4096, upload(&rt, 1024, 2.0)).unwrap();
         // Touch 1 so 2 becomes LRU.
         assert!(mm.lookup(1, 0).is_some());
-        mm.insert(3, 0, 4096, upload(&rt, 1024, 3.0));
+        mm.insert(3, 0, 4096, upload(&rt, 1024, 3.0)).unwrap();
         assert_eq!(mm.stats.evictions, 1);
         assert!(mm.lookup(2, 0).is_none(), "LRU entry 2 evicted");
         assert!(mm.lookup(1, 0).is_some());
@@ -257,11 +324,35 @@ mod tests {
     }
 
     #[test]
+    fn oversized_admission_rejected_not_overcommitted() {
+        let Some(rt) = runtime() else { return };
+        // Capacity smaller than one 4 KiB buffer.
+        let mut mm = DeviceMemoryManager::new(1024);
+        mm.insert(7, 0, 512, upload(&rt, 128, 1.0)).unwrap();
+        let err = mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap_err();
+        assert_eq!(err, MemoryError::Oversized { id: 1, bytes: 4096, capacity: 1024 });
+        // The ledger never overcommits and the pre-existing resident
+        // survives (rejection happens before any eviction).
+        assert!(mm.used() <= mm.capacity(), "used {} > capacity", mm.used());
+        assert_eq!(mm.resident_count(), 1);
+        assert!(mm.lookup(7, 0).is_some());
+        assert_eq!(mm.stats.rejected_oversized, 1);
+
+        // ensure_resident surfaces the same typed error without
+        // uploading anything.
+        let uploads_before = mm.stats.uploads;
+        let v = HostValue::f32(vec![1024], vec![0.0; 1024]);
+        let err = mm.ensure_resident(2, 0, &v, &rt).unwrap_err();
+        assert!(err.downcast_ref::<MemoryError>().is_some(), "{err}");
+        assert_eq!(mm.stats.uploads, uploads_before, "no upload for a doomed admit");
+    }
+
+    #[test]
     fn reinsert_same_id_replaces() {
         let Some(rt) = runtime() else { return };
         let mut mm = DeviceMemoryManager::new(1 << 20);
-        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
-        mm.insert(1, 1, 4096, upload(&rt, 1024, 9.0));
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
+        mm.insert(1, 1, 4096, upload(&rt, 1024, 9.0)).unwrap();
         assert_eq!(mm.resident_count(), 1);
         assert_eq!(mm.used(), 4096);
         assert!(mm.lookup(1, 1).is_some());
@@ -277,7 +368,7 @@ mod tests {
         assert_eq!(mm.stats.uploads, 1);
         let (b2, hit2) = mm.ensure_resident(9, 0, &v, &rt).unwrap();
         assert!(hit2);
-        assert!(Rc::ptr_eq(&b1, &b2));
+        assert!(SharedBuffer::ptr_eq(&b1, &b2));
         assert_eq!(mm.stats.uploads, 1, "hit must not re-upload");
         // Version bump invalidates and re-uploads.
         let (_, hit3) = mm.ensure_resident(9, 1, &v, &rt).unwrap();
@@ -290,10 +381,10 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let mut mm = DeviceMemoryManager::new(1 << 20);
         let buf = upload(&rt, 1024, 1.0);
-        mm.insert(1, 0, 4096, Rc::clone(&buf));
+        mm.insert(1, 0, 4096, SharedBuffer::clone(&buf)).unwrap();
         assert_eq!(mm.stats.uploads, 1);
         // Still resident: recency refresh only.
-        mm.retain_resident(1, 0, 4096, &buf);
+        mm.retain_resident(1, 0, 4096, &buf).unwrap();
         assert_eq!(mm.resident_count(), 1);
         assert_eq!(mm.used(), 4096);
         assert_eq!(mm.stats.uploads, 1);
@@ -301,14 +392,14 @@ mod tests {
         // no phantom upload.
         mm.evict(1);
         assert_eq!(mm.used(), 0);
-        mm.retain_resident(1, 0, 4096, &buf);
+        mm.retain_resident(1, 0, 4096, &buf).unwrap();
         assert_eq!(mm.resident_count(), 1);
         assert_eq!(mm.used(), 4096);
         assert_eq!(mm.stats.uploads, 1);
         // A newer resident version of the same id must NOT be evicted
         // by a stale plan's retain.
-        mm.insert(1, 1, 4096, upload(&rt, 1024, 2.0));
-        mm.retain_resident(1, 0, 4096, &buf);
+        mm.insert(1, 1, 4096, upload(&rt, 1024, 2.0)).unwrap();
+        mm.retain_resident(1, 0, 4096, &buf).unwrap();
         assert!(mm.lookup(1, 1).is_some(), "newer version survives stale retain");
     }
 
@@ -316,7 +407,7 @@ mod tests {
     fn clear_resets() {
         let Some(rt) = runtime() else { return };
         let mut mm = DeviceMemoryManager::new(1 << 20);
-        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0));
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
         mm.clear();
         assert_eq!(mm.used(), 0);
         assert_eq!(mm.resident_count(), 0);

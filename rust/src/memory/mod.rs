@@ -6,7 +6,7 @@ pub mod manager;
 pub mod schema;
 pub mod serializer;
 
-pub use manager::{DataId, DeviceMemoryManager, MemoryStats};
+pub use manager::{DataId, DeviceMemoryManager, MemoryError, MemoryStats};
 pub use schema::{DataSchema, FieldDecl, SchemaRegistry};
 pub use serializer::{
     deserialize_struct, project_params, serialize_struct, writeback_modified, Record,

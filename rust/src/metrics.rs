@@ -2,16 +2,23 @@
 //! lowering/optimizing/executing task graphs. `jacc run --verbose` and
 //! the ablation benches read these to show exactly which actions the
 //! optimizer removed (paper §2.3 "eliminate, merge and re-organize").
+//!
+//! Thread-safe: counters are `AtomicU64`s behind an `RwLock`ed registry
+//! (the lock is only taken in write mode the first time a name is
+//! seen), timers behind a `Mutex`. A `CompiledGraph` is launched from
+//! many serving workers at once, and `plan.launches` / `exec.*` must
+//! survive concurrent increments without losing updates.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 use std::time::Duration;
 
-/// Counter + timer registry (single-threaded, like the executor).
+/// Counter + timer registry (shared across launch threads).
 #[derive(Debug, Default)]
 pub struct Metrics {
-    counters: RefCell<BTreeMap<&'static str, u64>>,
-    timers: RefCell<BTreeMap<&'static str, Duration>>,
+    counters: RwLock<BTreeMap<&'static str, AtomicU64>>,
+    timers: Mutex<BTreeMap<&'static str, Duration>>,
 }
 
 impl Metrics {
@@ -24,28 +31,49 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &'static str, v: u64) {
-        *self.counters.borrow_mut().entry(name).or_insert(0) += v;
+        // Fast path: the counter already exists — a shared read lock
+        // plus an atomic add, so concurrent launches never serialize.
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            c.fetch_add(v, Ordering::Relaxed);
+            return;
+        }
+        self.counters
+            .write()
+            .unwrap()
+            .entry(name)
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(v, Ordering::Relaxed);
     }
 
     pub fn time(&self, name: &'static str, d: Duration) {
-        *self.timers.borrow_mut().entry(name).or_insert(Duration::ZERO) += d;
+        *self.timers.lock().unwrap().entry(name).or_insert(Duration::ZERO) += d;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.borrow().get(name).copied().unwrap_or(0)
+        self.counters
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn timer(&self, name: &str) -> Duration {
-        self.timers.borrow().get(name).copied().unwrap_or(Duration::ZERO)
+        self.timers.lock().unwrap().get(name).copied().unwrap_or(Duration::ZERO)
     }
 
     pub fn counters(&self) -> BTreeMap<&'static str, u64> {
-        self.counters.borrow().clone()
+        self.counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(&k, c)| (k, c.load(Ordering::Relaxed)))
+            .collect()
     }
 
     pub fn reset(&self) {
-        self.counters.borrow_mut().clear();
-        self.timers.borrow_mut().clear();
+        self.counters.write().unwrap().clear();
+        self.timers.lock().unwrap().clear();
     }
 
     /// Fold another registry's counters and timers into this one
@@ -54,21 +82,23 @@ impl Metrics {
         if std::ptr::eq(self, other) {
             return;
         }
-        for (&k, &v) in other.counters.borrow().iter() {
-            *self.counters.borrow_mut().entry(k).or_insert(0) += v;
+        for (k, v) in other.counters() {
+            self.add(k, v);
         }
-        for (&k, &d) in other.timers.borrow().iter() {
-            *self.timers.borrow_mut().entry(k).or_insert(Duration::ZERO) += d;
+        let other_timers = other.timers.lock().unwrap().clone();
+        let mut timers = self.timers.lock().unwrap();
+        for (k, d) in other_timers {
+            *timers.entry(k).or_insert(Duration::ZERO) += d;
         }
     }
 
     /// Render a compact report (verbose mode).
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.borrow().iter() {
+        for (k, v) in self.counters() {
             out.push_str(&format!("  {k:32} {v}\n"));
         }
-        for (k, d) in self.timers.borrow().iter() {
+        for (k, d) in self.timers.lock().unwrap().iter() {
             out.push_str(&format!("  {k:32} {:.3} ms\n", d.as_secs_f64() * 1e3));
         }
         out
@@ -128,5 +158,20 @@ mod tests {
         assert_eq!(a.timer("t"), Duration::from_millis(5));
         a.merge_from(&a);
         assert_eq!(a.counter("x"), 3);
+    }
+
+    #[test]
+    fn concurrent_increments_lose_nothing() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.incr("hits");
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("hits"), 8000);
     }
 }

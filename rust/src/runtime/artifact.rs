@@ -145,6 +145,21 @@ impl ArtifactEntry {
                 .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow!("bad int")))
                 .collect()
         };
+        let iteration_space = usizes(v.get("iteration_space"))?;
+        let workgroup = usizes(v.get("workgroup"))?;
+        // Same rank contract as scheduler::thread_groups: a mismatch
+        // would silently zip-drop trailing dims in every downstream
+        // thread-group count (cost model, inspect, ablations), so it
+        // is rejected at manifest load.
+        if iteration_space.len() != workgroup.len() {
+            bail!(
+                "artifact '{}': iteration space rank {} != work-group rank {} \
+                 ({iteration_space:?} vs {workgroup:?})",
+                v.get("key").as_str().unwrap_or("?"),
+                iteration_space.len(),
+                workgroup.len()
+            );
+        }
         Ok(Self {
             name: v.get("name").as_str().unwrap_or("").to_string(),
             variant: v.get("variant").as_str().unwrap_or("").to_string(),
@@ -153,8 +168,8 @@ impl ArtifactEntry {
             file: v.get("file").as_str().unwrap_or("").to_string(),
             inputs: io(v.get("inputs"))?,
             outputs: io(v.get("outputs"))?,
-            iteration_space: usizes(v.get("iteration_space"))?,
-            workgroup: usizes(v.get("workgroup"))?,
+            iteration_space,
+            workgroup,
             tuple_root: v.get("tuple_root").as_bool().unwrap_or(false),
             flops: v.get("flops").as_u64().unwrap_or(0),
             bytes_in: v.get("bytes_in").as_u64().unwrap_or(0),
@@ -166,8 +181,12 @@ impl ArtifactEntry {
     }
 
     /// Thread groups launched = ceil(iteration_space / workgroup) per dim
-    /// (the paper's Fig. 2 decomposition).
+    /// (the paper's Fig. 2 decomposition). Equal ranks are enforced at
+    /// manifest load (`from_json`), so the zip never drops dimensions
+    /// here; for user-supplied dims use `scheduler::thread_groups`,
+    /// which validates per call.
     pub fn thread_groups(&self) -> usize {
+        debug_assert_eq!(self.iteration_space.len(), self.workgroup.len());
         self.iteration_space
             .iter()
             .zip(&self.workgroup)
@@ -275,6 +294,22 @@ mod tests {
         assert_eq!(e.thread_groups(), 4);
         assert!(!e.tuple_root);
         assert_eq!(e.inputs[0].nbytes(), 16384);
+    }
+
+    #[test]
+    fn rank_mismatch_rejected_at_load() {
+        let dir = std::env::temp_dir().join("jacc-test-manifest-rank");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Rank-2 iteration space against a rank-1 work-group: used to
+        // zip-drop the trailing dim in thread_groups(); now a load error.
+        let bad = SAMPLE.replace(
+            r#""iteration_space": [4096], "workgroup": [1024]"#,
+            r#""iteration_space": [64, 64], "workgroup": [16]"#,
+        );
+        assert_ne!(bad, SAMPLE, "replacement must hit");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("rank 2 != work-group rank 1"), "{err}");
     }
 
     #[test]

@@ -6,9 +6,65 @@
 //! it into an `xla::Literal` for upload and back on download.
 
 use anyhow::{anyhow, bail};
-use xla::{ElementType, Literal};
+use xla::{ElementType, Literal, PjRtBuffer};
 
 use super::artifact::DType;
+
+/// A device-resident buffer that can be shared across threads.
+///
+/// The `xla` crate does not declare its PJRT handles `Send`/`Sync`,
+/// but the PJRT C API guarantees that `PjRtBuffer` methods are
+/// thread-safe (XLA documents client, executable and buffer objects as
+/// safe for concurrent use). This newtype is the single place that
+/// asserts the guarantee, so the memory manager, compiled plans and
+/// serving workers can hold `Arc<DeviceBuffer>`s (`SharedBuffer`)
+/// across threads.
+///
+/// AUDIT OBLIGATION (applies to all three `unsafe impl` sites: this
+/// type, `CompiledKernel` and `PjrtRuntime` in `runtime/pjrt.rs`): the
+/// C-API contract is necessary but not sufficient — the *Rust wrapper*
+/// must also be free of non-atomic shared state. A wrapper that keeps
+/// the client alive through a plain `Rc` refcount inside buffer or
+/// executable handles would make concurrent clones/drops corrupt that
+/// count regardless of what the C++ layer guarantees. The pinned `xla`
+/// wrapper in use must be checked for exactly that (handles holding
+/// raw pointers or `Arc`s are fine; `Rc`/`Cell` state is not) whenever
+/// the dependency is bumped. If the wrapper cannot be cleared, drop
+/// these impls and route buffer lifecycle through one owner thread.
+pub struct DeviceBuffer(PjRtBuffer);
+
+/// The shared handle everything above the runtime layer passes around.
+pub type SharedBuffer = std::sync::Arc<DeviceBuffer>;
+
+impl DeviceBuffer {
+    pub fn new(inner: PjRtBuffer) -> Self {
+        DeviceBuffer(inner)
+    }
+
+    /// Wrap straight into the shared handle.
+    pub fn shared(inner: PjRtBuffer) -> SharedBuffer {
+        std::sync::Arc::new(DeviceBuffer(inner))
+    }
+
+    /// The raw PJRT handle (kernel launch argument lists need it).
+    pub fn pjrt(&self) -> &PjRtBuffer {
+        &self.0
+    }
+}
+
+impl std::ops::Deref for DeviceBuffer {
+    type Target = PjRtBuffer;
+
+    fn deref(&self) -> &PjRtBuffer {
+        &self.0
+    }
+}
+
+// SAFETY: PJRT buffers are owned by the (thread-safe) PJRT client; all
+// operations exposed by the `xla` crate go through the C API, which is
+// safe to call from any thread. See the module doc on `DeviceBuffer`.
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
 
 /// A typed host-side array (row-major).
 #[derive(Debug, Clone, PartialEq)]

@@ -5,9 +5,13 @@
 //! executor), the per-device memory manager, and the device model used
 //! for occupancy/cost reporting. Task graphs execute *on* a device
 //! context.
+//!
+//! Contexts are shared (`Arc`) and thread-safe: the runtime's compile
+//! cache and the memory-manager ledger are internally locked, so many
+//! serving workers can launch compiled plans against one device at
+//! once.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::bail;
 
@@ -45,33 +49,35 @@ impl Cuda {
 impl DeviceHandle {
     /// `createDeviceContext()` — opens the PJRT client, loads the
     /// artifact manifest, sizes the memory manager from the spec.
-    pub fn create_device_context(self) -> anyhow::Result<Rc<DeviceContext>> {
+    pub fn create_device_context(self) -> anyhow::Result<Arc<DeviceContext>> {
         let runtime = PjrtRuntime::with_default_manifest()?;
-        Ok(Rc::new(DeviceContext::new(self.index, self.spec, runtime)))
+        Ok(Arc::new(DeviceContext::new(self.index, self.spec, runtime)))
     }
 
     /// Same, with an explicit manifest (tests, custom artifact dirs).
     pub fn create_device_context_with(
         self,
         manifest: Manifest,
-    ) -> anyhow::Result<Rc<DeviceContext>> {
+    ) -> anyhow::Result<Arc<DeviceContext>> {
         let runtime = PjrtRuntime::new(manifest)?;
-        Ok(Rc::new(DeviceContext::new(self.index, self.spec, runtime)))
+        Ok(Arc::new(DeviceContext::new(self.index, self.spec, runtime)))
     }
 }
 
-/// An opened device: runtime + memory manager + model.
+/// An opened device: runtime + memory manager + model. The ledger
+/// lives behind a `Mutex` so concurrent launches share one honest view
+/// of residency and capacity.
 pub struct DeviceContext {
     pub index: usize,
     pub spec: DeviceSpec,
     pub runtime: PjrtRuntime,
-    pub memory: RefCell<DeviceMemoryManager>,
+    pub memory: Mutex<DeviceMemoryManager>,
     pub cost: CostModel,
 }
 
 impl DeviceContext {
     pub fn new(index: usize, spec: DeviceSpec, runtime: PjrtRuntime) -> Self {
-        let memory = RefCell::new(DeviceMemoryManager::new(spec.mem_capacity));
+        let memory = Mutex::new(DeviceMemoryManager::new(spec.mem_capacity));
         let cost = CostModel::new(spec.clone());
         Self { index, spec, runtime, memory, cost }
     }
@@ -100,7 +106,7 @@ mod tests {
         }
         let ctx = Cuda::get_device(0).unwrap().create_device_context().unwrap();
         assert_eq!(ctx.spec.name, "tesla-k20m");
-        assert_eq!(ctx.memory.borrow().capacity(), ctx.spec.mem_capacity);
+        assert_eq!(ctx.memory.lock().unwrap().capacity(), ctx.spec.mem_capacity);
         assert!(ctx.name().contains("cpu"));
     }
 }

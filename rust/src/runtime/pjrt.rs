@@ -7,9 +7,8 @@
 //! times are recorded so benchmarks can report speedups inclusive and
 //! exclusive of compilation (paper Fig. 5a).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context};
@@ -24,6 +23,18 @@ pub struct CompiledKernel {
     pub compile_time: Duration,
     exe: PjRtLoadedExecutable,
 }
+
+// SAFETY: `PjRtLoadedExecutable::Execute` is documented thread-safe in
+// the PJRT C API (XLA's client, executable and buffer objects may be
+// used concurrently); the `xla` crate simply never declares it. The
+// remaining fields are plain owned data. Compiled plans pin kernels
+// and serving workers launch them from many threads at once. This
+// additionally requires the Rust wrapper itself to hold no non-atomic
+// shared state (e.g. an `Rc`-refcounted client handle) — see the audit
+// note on `runtime::buffer::DeviceBuffer`, which governs all three
+// unsafe impls in this crate.
+unsafe impl Send for CompiledKernel {}
+unsafe impl Sync for CompiledKernel {}
 
 impl CompiledKernel {
     /// Execute with host literals; returns one `HostValue` per declared
@@ -151,15 +162,28 @@ pub struct CompileStats {
 
 /// The PJRT runtime: one CPU client + a compile cache keyed by artifact.
 ///
-/// Single-threaded by design: PJRT handles are not `Send` in the `xla`
-/// crate, so the coordinator owns the runtime on the leader thread
-/// (mirrors Jacc, where a device context is driven by one host thread).
+/// Thread-safe: the compile cache and stats live behind a `Mutex`, and
+/// the client itself is safe for concurrent use (PJRT C API contract),
+/// so one runtime serves every launch worker of a [`DeviceContext`].
+/// Holding the cache lock across a fresh compilation is deliberate —
+/// it guarantees a key is compiled exactly once even when racing
+/// builders ask for it simultaneously (`fresh_compiles` stays honest).
+///
+/// [`DeviceContext`]: super::device::DeviceContext
 pub struct PjrtRuntime {
     client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<CompiledKernel>>>,
-    stats: RefCell<CompileStats>,
+    cache: Mutex<HashMap<String, Arc<CompiledKernel>>>,
+    stats: Mutex<CompileStats>,
 }
+
+// SAFETY: `PjRtClient` methods (compile, buffer_from_host_buffer, ...)
+// are thread-safe per the PJRT C API; the `xla` crate does not declare
+// it. All other fields are `Mutex`-guarded or plain owned data. Same
+// wrapper-layer caveat as `CompiledKernel` above — see the audit note
+// on `runtime::buffer::DeviceBuffer`.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     pub fn new(manifest: Manifest) -> anyhow::Result<Self> {
@@ -167,8 +191,8 @@ impl PjrtRuntime {
         Ok(Self {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(CompileStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(CompileStats::default()),
         })
     }
 
@@ -185,15 +209,18 @@ impl PjrtRuntime {
     }
 
     pub fn stats(&self) -> CompileStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     /// Fetch-or-compile a kernel (the lazy-JIT path). Returns the
     /// kernel and whether this call compiled it (false = cache hit).
-    pub fn kernel(&self, key: &str) -> anyhow::Result<(Rc<CompiledKernel>, bool)> {
-        if let Some(k) = self.cache.borrow().get(key) {
-            self.stats.borrow_mut().cache_hits += 1;
-            return Ok((Rc::clone(k), false));
+    /// The cache lock is held across the compile so racing callers
+    /// never duplicate work: the loser of the race sees a cache hit.
+    pub fn kernel(&self, key: &str) -> anyhow::Result<(Arc<CompiledKernel>, bool)> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(k) = cache.get(key) {
+            self.stats.lock().unwrap().cache_hits += 1;
+            return Ok((Arc::clone(k), false));
         }
         let entry = self.manifest.get(key)?.clone();
         let path = self.manifest.hlo_path(&entry);
@@ -207,12 +234,12 @@ impl PjrtRuntime {
             .with_context(|| format!("compiling {key}"))?;
         let compile_time = t0.elapsed();
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.compilations += 1;
             st.total_compile_time += compile_time;
         }
-        let kernel = Rc::new(CompiledKernel { entry, compile_time, exe });
-        self.cache.borrow_mut().insert(key.to_string(), Rc::clone(&kernel));
+        let kernel = Arc::new(CompiledKernel { entry, compile_time, exe });
+        cache.insert(key.to_string(), Arc::clone(&kernel));
         Ok((kernel, true))
     }
 
@@ -241,7 +268,7 @@ impl PjrtRuntime {
         name: &str,
         variant: &str,
         profile: &str,
-    ) -> anyhow::Result<(Rc<CompiledKernel>, bool)> {
+    ) -> anyhow::Result<(Arc<CompiledKernel>, bool)> {
         self.kernel(&format!("{name}.{variant}.{profile}"))
     }
 
@@ -282,7 +309,7 @@ impl PjrtRuntime {
 
     /// Drop all compiled kernels (tests / memory pressure).
     pub fn clear_cache(&self) {
-        self.cache.borrow_mut().clear();
+        self.cache.lock().unwrap().clear();
     }
 }
 

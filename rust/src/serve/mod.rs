@@ -1,0 +1,256 @@
+//! Concurrent serving engine (ROADMAP north star: heavy traffic from
+//! one compiled plan).
+//!
+//! A [`ServingEngine`] owns a pool of worker threads and a bounded
+//! admission queue. Requests are `(Bindings, reply)` pairs: callers
+//! [`submit`] per-request input bindings and receive a [`Ticket`] they
+//! can block on for the [`ExecutionReport`]. Every worker launches the
+//! *same shared* [`CompiledGraph`] — the thread-safety contract the
+//! plan statically asserts (`Send + Sync`): pinned kernels and
+//! plan-resident buffers are `Arc`s, launch metrics are atomic, and
+//! the per-device memory ledger is locked.
+//!
+//! Backpressure is built in: the queue is bounded, so producers block
+//! (rather than queueing unboundedly) once `queue_depth` requests are
+//! in flight. [`ServingEngine::shutdown`] drains the queue, joins the
+//! workers and returns a [`ServeReport`] with aggregate throughput and
+//! p50/p95/p99 latency — what `jacc serve-bench` and
+//! `benches/serve_throughput.rs` print.
+//!
+//! [`submit`]: ServingEngine::submit
+
+pub mod queue;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::coordinator::{Bindings, CompiledGraph, ExecutionReport};
+use crate::substrate::stats;
+
+pub use queue::BoundedQueue;
+
+/// Engine sizing knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads launching the shared plan.
+    pub workers: usize,
+    /// Admission-queue bound (requests in flight before submitters
+    /// block). Defaults to `2 * workers`.
+    pub queue_depth: usize,
+}
+
+impl ServeConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, queue_depth: 2 * workers.max(1) }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self::with_workers(4)
+    }
+}
+
+/// One queued request: launch bindings + where to send the result.
+struct Request {
+    bindings: Bindings,
+    reply: mpsc::Sender<anyhow::Result<ExecutionReport>>,
+}
+
+/// A pending reply for one submitted request.
+pub struct Ticket {
+    rx: mpsc::Receiver<anyhow::Result<ExecutionReport>>,
+}
+
+impl Ticket {
+    /// Block until the request has been served.
+    pub fn wait(self) -> anyhow::Result<ExecutionReport> {
+        self.rx
+            .recv()
+            .context("serving worker dropped the request (engine shut down?)")?
+    }
+}
+
+/// State shared between submitters and workers.
+struct Shared {
+    plan: Arc<CompiledGraph>,
+    queue: BoundedQueue<Request>,
+    latencies_ms: Mutex<Vec<f64>>,
+    completed: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Aggregate results of one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub workers: usize,
+    /// Successfully served requests.
+    pub requests: u64,
+    /// Requests whose launch returned an error.
+    pub errors: u64,
+    /// Engine lifetime (start to shutdown).
+    pub wall: Duration,
+    /// Served requests per second over the engine lifetime.
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl ServeReport {
+    /// One-line human summary (`jacc serve-bench` prints this).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} workers: {} requests in {:.2} s = {:.0} req/s \
+             (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, max {:.2} ms{})",
+            self.workers,
+            self.requests,
+            self.wall.as_secs_f64(),
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+            if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
+        )
+    }
+}
+
+/// Multi-worker serving loop over one shared compiled plan.
+pub struct ServingEngine {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    started: Instant,
+}
+
+impl ServingEngine {
+    /// Spawn `config.workers` threads serving launches of `plan`.
+    pub fn start(plan: Arc<CompiledGraph>, config: ServeConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(config.workers > 0, "serving engine needs at least one worker");
+        let shared = Arc::new(Shared {
+            plan,
+            queue: BoundedQueue::new(config.queue_depth.max(1)),
+            latencies_ms: Mutex::new(Vec::new()),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        });
+        let workers = (0..config.workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("jacc-serve-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .context("spawning serving worker")
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { shared, workers, started: Instant::now() })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The shared plan the workers launch.
+    pub fn plan(&self) -> &Arc<CompiledGraph> {
+        &self.shared.plan
+    }
+
+    /// Enqueue one request. Blocks while the queue is full
+    /// (backpressure); fails only if the engine is shutting down.
+    pub fn submit(&self, bindings: Bindings) -> anyhow::Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        self.shared
+            .queue
+            .push(Request { bindings, reply: tx })
+            .map_err(|_| anyhow::anyhow!("serving engine is shut down"))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Drain the queue, stop the workers and aggregate the run.
+    pub fn shutdown(mut self) -> ServeReport {
+        let n_workers = self.workers.len();
+        self.join_workers();
+        let wall = self.started.elapsed();
+        let shared = &self.shared;
+        let requests = shared.completed.load(Ordering::Relaxed);
+        let errors = shared.errors.load(Ordering::Relaxed);
+        let lat = shared.latencies_ms.lock().unwrap();
+        let pct = |p: f64| if lat.is_empty() { 0.0 } else { stats::percentile(&lat, p) };
+        let max_ms = lat.iter().copied().fold(0.0f64, f64::max);
+        ServeReport {
+            workers: n_workers,
+            requests,
+            errors,
+            wall,
+            throughput_rps: if wall.as_secs_f64() > 0.0 {
+                requests as f64 / wall.as_secs_f64()
+            } else {
+                0.0
+            },
+            p50_ms: pct(50.0),
+            p95_ms: pct(95.0),
+            p99_ms: pct(99.0),
+            max_ms,
+        }
+    }
+
+    fn join_workers(&mut self) {
+        self.shared.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        // Dropping without `shutdown()` still drains + joins cleanly.
+        self.join_workers();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(req) = shared.queue.pop() {
+        let t0 = Instant::now();
+        let result = shared.plan.launch(&req.bindings);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        match &result {
+            Ok(_) => {
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                shared.latencies_ms.lock().unwrap().push(ms);
+            }
+            Err(_) => {
+                shared.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // The submitter may have dropped its ticket; that is fine.
+        let _ = req.reply.send(result);
+    }
+}
+
+/// Convenience driver: serve every request in `requests` through a
+/// fresh engine and return the per-request reports (input order) plus
+/// the aggregate. Submission happens with backpressure from this
+/// thread; replies are buffered per ticket, so workers never block on
+/// a slow collector.
+pub fn serve_all(
+    plan: Arc<CompiledGraph>,
+    config: ServeConfig,
+    requests: Vec<Bindings>,
+) -> anyhow::Result<(Vec<ExecutionReport>, ServeReport)> {
+    let engine = ServingEngine::start(plan, config)?;
+    let tickets = requests
+        .into_iter()
+        .map(|b| engine.submit(b))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reports = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok((reports, engine.shutdown()))
+}

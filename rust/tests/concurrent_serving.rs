@@ -1,0 +1,246 @@
+//! Concurrent-serving stress tests: one shared `CompiledGraph`
+//! launched from many threads must behave exactly like serial
+//! launches — bit-for-bit identical results, `fresh_compiles == 0`
+//! everywhere, and a memory ledger that never overcommits
+//! (`used <= capacity`). Requires `make artifacts` (tiny profile);
+//! every test no-ops gracefully when artifacts are absent.
+
+use std::sync::Arc;
+
+use jacc::api::*;
+use jacc::serve::{serve_all, ServeConfig, ServingEngine};
+
+const THREADS: usize = 8;
+const LAUNCHES_PER_THREAD: usize = 6;
+
+fn device() -> Option<Arc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+/// The static guarantee the serving engine is built on. (A compile-time
+/// assertion also lives next to `CompiledGraph` itself; this one keeps
+/// the contract visible from the public API.)
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = assert_send_sync::<CompiledGraph>();
+const _: () = assert_send_sync::<Bindings>();
+const _: () = assert_send_sync::<ServingEngine>();
+
+/// Build a vector_add plan whose two inputs are rebound per launch.
+fn vector_add_plan(dev: &Arc<DeviceContext>) -> (CompiledGraph, TaskId, usize) {
+    let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, dev).unwrap();
+    (g.compile().unwrap(), id, n)
+}
+
+/// Distinct, deterministic bindings for request `r`.
+fn bindings_for(r: usize, n: usize) -> (Bindings, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..n).map(|i| ((i + r * 7) % 13) as f32 * 0.5).collect();
+    let y: Vec<f32> = (0..n).map(|i| ((i * 3 + r) % 11) as f32 * 0.25).collect();
+    let b = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x.clone()))
+        .bind("y", HostValue::f32(vec![n], y.clone()));
+    (b, x, y)
+}
+
+/// 8 threads x N launches of one shared plan with distinct bindings:
+/// results must match the serial baseline bit-for-bit, no launch may
+/// JIT, and the ledger must never overcommit.
+#[test]
+fn eight_thread_stress_matches_serial_bit_for_bit() {
+    let Some(dev) = device() else { return };
+    let (plan, id, n) = vector_add_plan(&dev);
+    let total = THREADS * LAUNCHES_PER_THREAD;
+
+    // Serial baseline: every request launched once from this thread.
+    let mut serial_outputs: Vec<Vec<f32>> = Vec::with_capacity(total);
+    for r in 0..total {
+        let (b, x, y) = bindings_for(r, n);
+        let rep = plan.launch(&b).unwrap();
+        assert_eq!(rep.fresh_compiles, 0, "request {r}");
+        let got = rep.outputs.single(id).unwrap().as_f32().unwrap().to_vec();
+        // Sanity: the device result is the f32 sum.
+        for i in 0..n {
+            assert_eq!(got[i], x[i] + y[i], "request {r} idx {i}");
+        }
+        serial_outputs.push(got);
+    }
+    let launches_before = plan.launches();
+    assert_eq!(launches_before, total as u64);
+
+    // Concurrent phase: the same requests, 8 threads at once, against
+    // the very same plan instance.
+    let results: Vec<Vec<Vec<f32>>> = std::thread::scope(|scope| {
+        let plan = &plan;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                scope.spawn(move || {
+                    (0..LAUNCHES_PER_THREAD)
+                        .map(|k| {
+                            let r = t * LAUNCHES_PER_THREAD + k;
+                            let (b, _, _) = bindings_for(r, n);
+                            let rep = plan.launch(&b).unwrap();
+                            assert_eq!(rep.fresh_compiles, 0, "thread {t} launch {k}");
+                            rep.outputs.single(id).unwrap().as_f32().unwrap().to_vec()
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Bit-for-bit agreement with the serial baseline.
+    for (t, per_thread) in results.iter().enumerate() {
+        for (k, got) in per_thread.iter().enumerate() {
+            let r = t * LAUNCHES_PER_THREAD + k;
+            let want = &serial_outputs[r];
+            assert_eq!(
+                got.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "thread {t} launch {k}: concurrent result diverged from serial"
+            );
+        }
+    }
+
+    // Atomic metrics: not a single concurrent launch was lost.
+    assert_eq!(plan.launches(), 2 * total as u64);
+    assert_eq!(plan.metrics.counter("exec.launches"), 2 * total as u64);
+
+    // The ledger never overcommitted and nothing ever re-JITted.
+    let mem = dev.memory.lock().unwrap();
+    assert!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
+    assert_eq!(mem.stats.rejected_oversized, 0);
+}
+
+/// The same stress through the ServingEngine: bounded queue, worker
+/// pool, per-request tickets, aggregate report.
+#[test]
+fn serving_engine_end_to_end() {
+    let Some(dev) = device() else { return };
+    let (plan, id, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    let total = 32;
+
+    let requests: Vec<Bindings> =
+        (0..total).map(|r| bindings_for(r, n).0).collect();
+    let (reports, agg) = serve_all(
+        Arc::clone(&plan),
+        ServeConfig { workers: 4, queue_depth: 4 },
+        requests,
+    )
+    .unwrap();
+
+    assert_eq!(reports.len(), total);
+    for (r, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.fresh_compiles, 0, "request {r}");
+        let (_, x, y) = bindings_for(r, n);
+        let got = rep.outputs.single(id).unwrap().as_f32().unwrap();
+        for i in 0..n {
+            assert_eq!(got[i], x[i] + y[i], "request {r} idx {i}");
+        }
+    }
+    assert_eq!(agg.requests, total as u64);
+    assert_eq!(agg.errors, 0);
+    assert_eq!(agg.workers, 4);
+    assert!(agg.throughput_rps > 0.0);
+    assert!(agg.p50_ms <= agg.p99_ms);
+    assert!(agg.p99_ms <= agg.max_ms + 1e-9);
+    assert!(agg.summary().contains("4 workers"));
+
+    let mem = dev.memory.lock().unwrap();
+    assert!(mem.used() <= mem.capacity());
+}
+
+/// Submitting a bad binding through the engine fails that request only;
+/// the engine keeps serving and reports the error in the aggregate.
+#[test]
+fn engine_isolates_bad_requests() {
+    let Some(dev) = device() else { return };
+    let (plan, id, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    let engine = ServingEngine::start(Arc::clone(&plan), ServeConfig::with_workers(2)).unwrap();
+
+    // Wrong shape: fails validation inside the worker.
+    let bad = Bindings::new()
+        .bind("x", HostValue::f32(vec![3], vec![0.0; 3]))
+        .bind("y", HostValue::f32(vec![3], vec![0.0; 3]));
+    let bad_ticket = engine.submit(bad).unwrap();
+    let err = bad_ticket.wait().unwrap_err().to_string();
+    assert!(err.contains("binding 'x'"), "{err}");
+
+    // A good request right after still serves fine.
+    let (b, x, y) = bindings_for(1, n);
+    let rep = engine.submit(b).unwrap().wait().unwrap();
+    let got = rep.outputs.single(id).unwrap().as_f32().unwrap();
+    assert_eq!(got[0], x[0] + y[0]);
+
+    let agg = engine.shutdown();
+    assert_eq!(agg.requests, 1);
+    assert_eq!(agg.errors, 1);
+}
+
+/// Concurrent launches of a plan with a persistent (plan-pinned)
+/// parameter: the pinned buffer is shared across threads, residency
+/// accounting stays sane, and the ledger honors capacity throughout.
+#[test]
+fn concurrent_launches_share_pinned_persistent_buffer() {
+    let Some(dev) = device() else { return };
+    let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let y_vals: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![
+        Param::input("x"),
+        Param::persistent("y", 4242, 0, HostValue::f32(vec![n], y_vals.clone())),
+    ]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, &dev).unwrap();
+    let plan = g.compile().unwrap();
+
+    std::thread::scope(|scope| {
+        let plan = &plan;
+        let y_vals = &y_vals;
+        for t in 0..THREADS {
+            scope.spawn(move || {
+                for k in 0..LAUNCHES_PER_THREAD {
+                    let fill = (t * LAUNCHES_PER_THREAD + k) as f32;
+                    let b = Bindings::new().bind("x", HostValue::f32(vec![n], vec![fill; n]));
+                    let rep = plan.launch(&b).unwrap();
+                    assert_eq!(rep.fresh_compiles, 0);
+                    assert_eq!(rep.plan_resident_hits, 1, "pinned y must be reused");
+                    let got = rep.outputs.single(id).unwrap().as_f32().unwrap().to_vec();
+                    for i in 0..n {
+                        assert_eq!(got[i], fill + y_vals[i], "thread {t} launch {k} idx {i}");
+                    }
+                }
+            });
+        }
+    });
+
+    let mem = dev.memory.lock().unwrap();
+    assert!(mem.used() <= mem.capacity());
+}

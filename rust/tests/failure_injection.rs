@@ -3,12 +3,12 @@
 //! artifacts, shape/dtype/arity mismatches, invalid graphs, memory
 //! pressure, and the serial-fallback contract.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::memory::DeviceMemoryManager;
 
-fn device() -> Option<Rc<DeviceContext>> {
+fn device() -> Option<Arc<DeviceContext>> {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         return None;
@@ -200,7 +200,7 @@ fn memory_manager_eviction_never_breaks_results() {
     let n = e.inputs[0].shape[0];
     // Shrink the memory manager so only ONE parameter fits: every
     // graph run thrashes, but results must stay correct.
-    *dev.memory.borrow_mut() = DeviceMemoryManager::new((n * 4 + 64) as u64);
+    *dev.memory.lock().unwrap() = DeviceMemoryManager::new((n * 4 + 64) as u64);
     for round in 0..4u64 {
         let fill = round as f32;
         let mut t = Task::create(
@@ -218,7 +218,7 @@ fn memory_manager_eviction_never_breaks_results() {
         let out = g.execute().unwrap();
         assert_eq!(out.single(id).unwrap().as_f32().unwrap()[0], fill + 1.0);
     }
-    let stats = dev.memory.borrow().stats.clone();
+    let stats = dev.memory.lock().unwrap().stats.clone();
     assert!(stats.evictions > 0, "the tiny capacity must have evicted");
 }
 

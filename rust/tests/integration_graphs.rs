@@ -3,14 +3,14 @@
 //! baselines. Requires `make artifacts` (tiny profile); every test
 //! no-ops gracefully when artifacts are absent.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::baselines::serial;
 use jacc::bench::workloads;
 use jacc::coordinator::lowering::action_histogram;
 
-fn device() -> Option<Rc<DeviceContext>> {
+fn device() -> Option<Arc<DeviceContext>> {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts not built; skipping");
@@ -33,7 +33,7 @@ fn close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
 
 /// Build a single-task graph from a generated workload.
 fn single_task_graph(
-    dev: &Rc<DeviceContext>,
+    dev: &Arc<DeviceContext>,
     name: &str,
 ) -> (TaskGraph, TaskId, workloads::Workload) {
     let w = workloads::generate(manifest(dev), name, "tiny").unwrap();
@@ -156,7 +156,7 @@ fn correlation_matches_serial_exactly() {
 
 // ---------------------------------------------------------------- pipeline
 
-fn pipeline_graph(dev: &Rc<DeviceContext>, optimized: bool) -> (TaskGraph, TaskId, f64) {
+fn pipeline_graph(dev: &Arc<DeviceContext>, optimized: bool) -> (TaskGraph, TaskId, f64) {
     let m = Manifest::load_default().unwrap();
     let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
     let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
@@ -279,7 +279,7 @@ fn persistent_params_skip_reupload_across_graphs() {
     assert_eq!(rep3.residency_hits, 0);
     assert!(rep3.h2d_bytes > 0);
 
-    let stats = dev.memory.borrow().stats.clone();
+    let stats = dev.memory.lock().unwrap().stats.clone();
     assert!(stats.residency_hits >= 2);
 }
 
@@ -315,7 +315,7 @@ fn composite_record_projects_used_fields_only() {
     let (wc, _) = serial::black_scholes(&vec![20.0; n], &vec![20.0; n], &vec![1.0; n]);
     close(outs[0].as_f32().unwrap(), &wc, 1e-3, 1e-3);
     // The schema in the device's memory manager recorded the skip.
-    let mem = dev.memory.borrow();
+    let mem = dev.memory.lock().unwrap();
     let schema = mem.schemas.get("OptionBatch").unwrap();
     assert!(schema.is_accessed("price"));
     assert!(!schema.is_accessed("audit_log"));

@@ -4,7 +4,7 @@
 //! partition iteration spaces exactly, and serialization must
 //! round-trip — all over randomly generated structures.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::coordinator::lowering::action_histogram;
@@ -13,7 +13,7 @@ use jacc::runtime::artifact::{Access, DType, IoDecl};
 use jacc::substrate::prng::Rng;
 use jacc::substrate::proptest::{no_shrink, Runner};
 
-fn device() -> Option<Rc<DeviceContext>> {
+fn device() -> Option<Arc<DeviceContext>> {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         return None;
@@ -65,7 +65,7 @@ fn optimizer_from_mask(mask: u8) -> OptimizerConfig {
 }
 
 /// Build the graph the shape describes over pipe_vecadd/pipe_reduce.
-fn build(dev: &Rc<DeviceContext>, shape: &GraphShape, optimized: bool) -> (TaskGraph, Vec<TaskId>) {
+fn build(dev: &Arc<DeviceContext>, shape: &GraphShape, optimized: bool) -> (TaskGraph, Vec<TaskId>) {
     let m = dev.runtime.manifest();
     let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
     let mut g = TaskGraph::new().with_profile("tiny");
