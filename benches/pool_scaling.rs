@@ -1,0 +1,165 @@
+//! Device-pool scaling bench: the serve-bench workload (vector_add
+//! with per-request rebindable inputs) routed through a `PoolEngine`
+//! at increasing virtual-device counts. Reports aggregate requests/s,
+//! the queue/launch latency split and the speedup over one device —
+//! the scale-out counterpart of `serve_throughput`'s worker sweep.
+//!
+//! Virtual devices are PJRT CPU plugin instances sharing physical
+//! cores, so the speedup numbers are machine-dependent (they measure
+//! the runtime's routing/replication overheads honestly, but compute
+//! only scales while cores remain idle) — the bench prints the ratios
+//! rather than hard-asserting them.
+//!
+//! Run with:  cargo bench --bench pool_scaling -- \
+//!                [--requests 128] [--devices 1,2,4] [--workers 2]
+//!
+//! `--smoke` (CI) shrinks to devices 1,2 x 8 requests on the tiny
+//! profile so the pool path is exercised on every push.
+
+use jacc::api::*;
+use jacc::pool::{serve_requests, DevicePool, PoolConfig};
+use jacc::substrate::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("pool_scaling", "request throughput vs virtual-device count")
+        .opt("benchmark", "vector_add", "benchmark kernel to serve")
+        .opt("requests", "128", "requests per device configuration")
+        .opt("devices", "1,2,4", "comma-separated device counts")
+        .opt("workers", "2", "worker threads per device lane")
+        .opt("profile", "", "artifact profile (default: JACC_PROFILE or scaled)")
+        .flag("smoke", "CI mode: devices 1,2, 8 requests, tiny profile")
+        .parse();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("pool_scaling: artifacts not built (make artifacts); skipping");
+        return Ok(());
+    }
+
+    let smoke = args.has_flag("smoke");
+    let name = args.get_or("benchmark", "vector_add").to_string();
+    let profile = if smoke {
+        "tiny".to_string()
+    } else {
+        let p = args.get_or("profile", "");
+        if p.is_empty() {
+            std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into())
+        } else {
+            p.to_string()
+        }
+    };
+    let requests = if smoke { 8 } else { args.get_usize("requests")? };
+    let workers = args.get_usize("workers")?;
+    let device_counts: Vec<usize> = if smoke {
+        vec![1, 2]
+    } else {
+        args.get_or("devices", "1,2,4")
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --devices list: {e}"))?
+    };
+    anyhow::ensure!(
+        device_counts.iter().all(|&d| d > 0),
+        "--devices entries must be positive"
+    );
+
+    // Shared manifest, loaded once for every pool width.
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.find(&name, "pallas", &profile)?;
+    let n = entry.inputs[0].shape[0];
+    anyhow::ensure!(
+        entry.inputs.iter().all(|d| d.shape == vec![n] && d.dtype == DType::F32),
+        "pool_scaling drives rank-1 f32 kernels; {name}.{profile} has other inputs"
+    );
+    let input_names: Vec<String> = entry.inputs.iter().map(|d| d.name.clone()).collect();
+    let iteration_space = entry.iteration_space.clone();
+    let workgroup = entry.workgroup.clone();
+
+    let mk_bindings = |req: usize| {
+        let mut b = Bindings::new();
+        for (slot, nm) in input_names.iter().enumerate() {
+            let fill = (req % 13) as f32 + slot as f32;
+            b.set(nm, HostValue::f32(vec![n], vec![fill; n]));
+        }
+        b
+    };
+
+    // Speedups are reported against the first configuration in the
+    // sweep (a list like `--devices 2,4` is relative to 2 devices).
+    let baseline_label = format!("vs {}dev", device_counts[0]);
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "devices", "req/s", "p50 ms", "p95 ms", "queue p95", "launch p95", baseline_label
+    );
+    let mut baseline_rps: Option<f64> = None;
+    for &devices in &device_counts {
+        let pool = DevicePool::open_with(devices, manifest.clone())?;
+        let mut task = Task::create(
+            &name,
+            Dims(iteration_space.clone()),
+            Dims(workgroup.clone()),
+        )?;
+        task.set_parameters(input_names.iter().map(|nm| Param::input(nm)).collect());
+        let mut g = TaskGraph::new().with_profile(&profile);
+        g.execute_task_on(task, pool.device(0))?;
+        let replicated = pool.compile(&g)?;
+
+        // Warm every replica off the clock.
+        let warm = replicated.launch_all(&mk_bindings(0))?;
+        anyhow::ensure!(
+            warm.iter().all(|r| r.fresh_compiles == 0),
+            "replicas must pin kernels at plan construction"
+        );
+
+        let reqs: Vec<Bindings> = (0..requests).map(&mk_bindings).collect();
+        let (reports, agg) =
+            serve_requests(&replicated, PoolConfig::with_workers_per_device(workers), reqs)?;
+        anyhow::ensure!(
+            reports.iter().all(|r| r.fresh_compiles == 0),
+            "routed serving must never JIT"
+        );
+        anyhow::ensure!(agg.errors == 0, "serving errors: {}", agg.errors);
+        anyhow::ensure!(
+            agg.per_device.len() == devices,
+            "expected {devices} per-device rows, got {}",
+            agg.per_device.len()
+        );
+        anyhow::ensure!(
+            agg.per_device.iter().map(|d| d.requests).sum::<u64>() == agg.requests,
+            "per-device rows must account for every request"
+        );
+        let speedup = match baseline_rps {
+            None => {
+                baseline_rps = Some(agg.throughput_rps);
+                1.0
+            }
+            Some(base) => agg.throughput_rps / base,
+        };
+        println!(
+            "{devices:<8} {:>10.0} {:>10.3} {:>10.3} {:>12.3} {:>12.3} {:>9.2}x",
+            agg.throughput_rps,
+            agg.p50_ms,
+            agg.p95_ms,
+            agg.queue_p95_ms,
+            agg.launch_p95_ms,
+            speedup
+        );
+        for d in &agg.per_device {
+            println!("{}", d.line());
+        }
+
+        for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+            anyhow::ensure!(
+                used <= capacity,
+                "device {d} ledger overcommitted: used {used} > capacity {capacity}"
+            );
+        }
+    }
+    println!(
+        "(virtual devices share physical cores; cross-machine speedups are \
+         machine-dependent — see the multi-device caveat in rust/src/api.rs)"
+    );
+    println!("pool_scaling OK");
+    Ok(())
+}

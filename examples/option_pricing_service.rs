@@ -11,7 +11,11 @@
 //!   optimizer or JIT work on the hot path (`fresh_compiles == 0`);
 //! * **concurrent**: the same single compiled plan served by a
 //!   `ServingEngine` worker pool (`--serve-workers`, bounded queue) —
-//!   the plan is `Send + Sync`, so N threads launch it at once.
+//!   the plan is `Send + Sync`, so N threads launch it at once;
+//! * **pool**: the plan replicated across `--devices` virtual devices
+//!   (each with its own PJRT client, ledger and pinned book copy) and
+//!   requests routed to the least-loaded replica by a `PoolEngine`,
+//!   with per-device breakdown rows in the report.
 //!
 //! The strike/expiry books are uploaded once and stay device-resident
 //! (paper §3.2.1 persistent state; the compiled plan pins the buffers);
@@ -26,6 +30,7 @@ use std::time::Instant;
 
 use jacc::api::*;
 use jacc::baselines::serial;
+use jacc::pool::{serve_requests, DevicePool, PoolConfig};
 use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
 use jacc::substrate::prng::Rng;
@@ -37,10 +42,12 @@ fn main() -> anyhow::Result<()> {
     let args = Cli::new("option_pricing_service", "batched Black-Scholes pricing service")
         .opt("batches", "48", "number of request batches to serve per path")
         .opt("serve-workers", "4", "worker threads for the concurrent path")
+        .opt("devices", "2", "virtual device pool width for the routed path (1 = skip)")
         .flag("no-persist", "re-upload the whole book every batch")
         .parse();
     let batches = args.get_usize("batches")?;
     let serve_workers = args.get_usize("serve-workers")?;
+    let devices = args.get_usize("devices")?.max(1);
     let persist = !args.has_flag("no-persist");
 
     let dev = Cuda::get_device(0)?.create_device_context()?;
@@ -143,6 +150,63 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- Path D: routed serving across a virtual-device pool -----------
+    // The pricing graph is replicated per device (each replica pins its
+    // own device-resident book through its own ledger); requests are
+    // routed to the least-loaded replica.
+    let pool_result = if devices > 1 {
+        let pool = DevicePool::open(devices)?;
+        let (pool_graph, pool_id) =
+            build_pricing_graph(pool.device(0), &strike, &expiry, persist)?;
+        let replicated = pool.compile(&pool_graph)?;
+        // Warm every replica off the clock.
+        let warm_price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+        let warm = replicated.launch_all(&Bindings::new().bind("price", warm_price))?;
+        anyhow::ensure!(
+            warm.iter().all(|r| r.fresh_compiles == 0),
+            "pool replicas must pin kernels at plan construction"
+        );
+
+        let mut pool_prices = Vec::with_capacity(batches);
+        let mut pool_requests = Vec::with_capacity(batches);
+        for _ in 0..batches {
+            let price = HostValue::f32(vec![BATCH], rng.f32_vec(BATCH, 5.0, 100.0));
+            pool_requests.push(Bindings::new().bind("price", price.clone()));
+            pool_prices.push(price);
+        }
+        let (pool_reports, pool_agg) = serve_requests(
+            &replicated,
+            PoolConfig::with_workers_per_device(serve_workers.div_ceil(devices).max(1)),
+            pool_requests,
+        )?;
+        for (b, rep) in pool_reports.iter().enumerate() {
+            anyhow::ensure!(rep.fresh_compiles == 0, "pool path must never JIT");
+            if b == 0 {
+                let outs = rep.outputs.outputs(pool_id).unwrap();
+                let (want_call, _) = serial::black_scholes(
+                    pool_prices[b].as_f32()?,
+                    strike.as_f32()?,
+                    expiry.as_f32()?,
+                );
+                let mut max_err = 0.0f32;
+                for (g, w) in outs[0].as_f32()?.iter().zip(&want_call) {
+                    max_err = max_err.max((g - w).abs());
+                }
+                println!("pool path first-batch validation: max |err| = {max_err:.2e}");
+                anyhow::ensure!(max_err < 1e-2, "pricing mismatch vs serial baseline");
+            }
+        }
+        for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+            anyhow::ensure!(
+                used <= capacity,
+                "pool device {d} ledger overcommitted: used {used} > capacity {capacity}"
+            );
+        }
+        Some(pool_agg)
+    } else {
+        None
+    };
+
     // ---- Results -------------------------------------------------------
     rebuild_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     compiled_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -184,6 +248,17 @@ fn main() -> anyhow::Result<()> {
         (batches * BATCH) as f64 / serve_agg.wall.as_secs_f64(),
         serve_agg.wall.as_secs_f64()
     );
+    if let Some(pool_agg) = &pool_result {
+        println!("pool path, {devices} devices ({})", pool_agg.summary());
+        println!(
+            "pool throughput: {:.0} options/s ({batches} batches in {:.2} s, \
+             {:.2}x the single-device concurrent path; virtual devices share \
+             physical cores, so the ratio is machine-dependent)",
+            (batches * BATCH) as f64 / pool_agg.wall.as_secs_f64(),
+            pool_agg.wall.as_secs_f64(),
+            serve_agg.wall.as_secs_f64() / pool_agg.wall.as_secs_f64()
+        );
+    }
     let mem = dev.memory.lock().unwrap();
     anyhow::ensure!(
         mem.used() <= mem.capacity(),

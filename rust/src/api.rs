@@ -84,6 +84,68 @@
 //! are rejected with a typed [`MemoryError`](crate::memory::MemoryError)).
 //! Try it end-to-end with `jacc serve-bench --benchmark vector_add
 //! --workers 8 --requests 256` or `cargo bench --bench serve_throughput`.
+//!
+//! ## Multi-device execution
+//!
+//! Device discovery generalizes to N **virtual devices** over the PJRT
+//! CPU plugin (`Cuda::device_count()` reads `JACC_VIRTUAL_DEVICES`;
+//! the CLI takes `--devices N`). Each device owns its *own* PJRT
+//! client, compile cache, memory ledger and metrics — real multi-GPU
+//! isolation at the runtime layer. **Caveat:** the replicas share the
+//! machine's physical CPU cores, so virtual-device speedups measure
+//! the runtime's scale-out overheads (routing, scatter/gather,
+//! per-device accounting) honestly, but compute-bound kernels only
+//! scale while cores remain idle.
+//!
+//! A [`DevicePool`](crate::pool::DevicePool) compiles one `TaskGraph`
+//! into a [`ReplicatedGraph`](crate::pool::ReplicatedGraph) — one
+//! `CompiledGraph` replica per device, shared manifest — which can be
+//! launched two ways:
+//!
+//! * **Sharded**: a [`ShardSpec`](crate::pool::ShardSpec) names each
+//!   input [`Shard::Split { axis }`](crate::pool::Shard) (batch-dim
+//!   inputs: the bound value carries `devices ×` the declared extent
+//!   along `axis` and is scattered into one per-device chunk) or
+//!   [`Shard::Replicate`](crate::pool::Shard) (broadcast inputs,
+//!   copied unchanged — also the default). All replicas launch in
+//!   parallel and outputs gather back by concatenation along the
+//!   split axis — bit-identical to launching each chunk through a
+//!   single-device plan (`rust/tests/pool_sharding.rs` pins this).
+//! * **Routed**: a [`PoolEngine`](crate::pool::PoolEngine) serves
+//!   whole requests across the replicas, routing each submit to the
+//!   device with the least outstanding work; its `ServeReport` carries
+//!   per-device breakdown rows (requests, errors, queue-wait p95).
+//!
+//! ```no_run
+//! use jacc::api::*;
+//! use jacc::pool::{DevicePool, PoolConfig, PoolEngine, ShardSpec};
+//! # fn main() -> anyhow::Result<()> {
+//! # let tasks = TaskGraph::new();
+//! # let big_batch = HostValue::f32(vec![4 * 8192], vec![0.0; 4 * 8192]);
+//! let pool = DevicePool::open(4)?;            // or 0 = JACC_VIRTUAL_DEVICES
+//! let replicated = pool.compile(&tasks)?;     // one plan replica per device
+//!
+//! // Sharded: one big batch scattered over 4 devices, gathered back.
+//! let shards = ShardSpec::new().split("data", 0);
+//! let report = replicated.launch_sharded(
+//!     &Bindings::new().bind("data", big_batch),
+//!     &shards,
+//! )?;
+//! assert_eq!(report.fresh_compiles(), 0);
+//!
+//! // Routed: whole requests balanced across the replicas.
+//! let engine = PoolEngine::start(&replicated, PoolConfig::default())?;
+//! # let bindings = Bindings::new();
+//! let ticket = engine.submit(bindings)?;
+//! let (rep, timing) = ticket.wait_timed()?;   // queue vs launch split
+//! println!("{}", engine.shutdown().summary()); // incl. per-device rows
+//! # let _ = (rep, timing);
+//! # Ok(()) }
+//! ```
+//!
+//! Try it: `jacc serve-bench --benchmark vector_add --devices 4`,
+//! `jacc run --benchmark vector_add --devices 2`, or the device sweep
+//! `cargo bench --bench pool_scaling`.
 
 pub use crate::coordinator::{
     AtomicDecl, AtomicOp, Bindings, CompiledGraph, CompiledNode, Dims, ExecutionOptions,
@@ -91,7 +153,12 @@ pub use crate::coordinator::{
     PlanStats, Task, TaskGraph, TaskId,
 };
 pub use crate::memory::{DataId, MemoryError, Record};
+pub use crate::pool::{
+    DevicePool, PoolConfig, PoolEngine, ReplicatedGraph, Shard, ShardSpec, ShardedReport,
+};
 pub use crate::runtime::{
     Access, Cuda, DType, DeviceContext, DeviceHandle, HostValue, Manifest, PjrtRuntime,
 };
-pub use crate::serve::{ServeConfig, ServeReport, ServingEngine, Ticket};
+pub use crate::serve::{
+    DeviceBreakdown, RequestTiming, ServeConfig, ServeReport, ServingEngine, Ticket,
+};

@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod devicemodel;
 pub mod memory;
 pub mod metrics;
+pub mod pool;
 pub mod runtime;
 pub mod serve;
 pub mod substrate;

@@ -6,10 +6,14 @@
 //!   jacc devices                          list devices + models
 //!   jacc inspect     [--profile P]        artifact/cost/occupancy report
 //!   jacc run         --benchmark B [...]  run one benchmark end-to-end
+//!                                         (--devices N = replicated
+//!                                         multi-device throughput)
 //!   jacc suite       [--profile P]        run all eight benchmarks
 //!   jacc serve-bench --benchmark B [...]  concurrent serving: N workers
 //!                                         launching one shared compiled
 //!                                         plan; throughput + p50/p99
+//!                                         (--devices N = pool routing
+//!                                         with per-device breakdowns)
 //!
 //! (The paper-table reproductions live in `cargo bench`; see
 //! benches/*.rs and EXPERIMENTS.md.)
@@ -19,6 +23,7 @@ use std::sync::Arc;
 use jacc::api::*;
 use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
 use jacc::devicemodel::{CostModel, DeviceSpec};
+use jacc::pool::serve_requests;
 use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
 
@@ -37,9 +42,19 @@ fn main() -> anyhow::Result<()> {
         "plan-split",
         "compile once and report plan construction separately from steady-state launches",
     )
-    .opt("workers", "4", "serving worker threads (serve-bench)")
+    .opt(
+        "workers",
+        "4",
+        "serving worker threads (serve-bench; per device when --devices > 1)",
+    )
     .opt("requests", "64", "total requests to serve (serve-bench)")
-    .opt("queue-depth", "0", "admission queue bound, 0 = 2*workers (serve-bench)");
+    .opt("queue-depth", "0", "admission queue bound, 0 = 2*workers (serve-bench)")
+    .opt(
+        "devices",
+        "0",
+        "virtual device pool width (run / serve-bench), 0 = JACC_VIRTUAL_DEVICES",
+    )
+    .flag("smoke", "CI mode (serve-bench): tiny profile, 8 requests, skip without artifacts");
     let args = cli.parse();
 
     match args.positional().first().map(|s| s.as_str()) {
@@ -53,6 +68,7 @@ fn main() -> anyhow::Result<()> {
             args.has_flag("verbose"),
             args.has_flag("no-opt"),
             args.has_flag("plan-split"),
+            args.get_usize("devices").unwrap_or(0),
         ),
         Some("suite") => suite(args.get_or("profile", "scaled"), args.has_flag("verbose")),
         Some("serve-bench") => serve_bench(
@@ -62,6 +78,8 @@ fn main() -> anyhow::Result<()> {
             args.get_usize("workers").unwrap_or(4),
             args.get_usize("requests").unwrap_or(64),
             args.get_usize("queue-depth").unwrap_or(0),
+            args.get_usize("devices").unwrap_or(0),
+            args.has_flag("smoke"),
             args.has_flag("verbose"),
         ),
         other => {
@@ -75,17 +93,20 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn devices() -> anyhow::Result<()> {
-    println!("visible devices: {}", Cuda::device_count());
-    let ctx = Cuda::get_device(0)?.create_device_context()?;
-    println!("  [0] {}", ctx.name());
-    println!(
-        "      modeled: {} GFLOP/s, {} GB/s, {} MiB scratch, {} CUs",
-        ctx.spec.peak_gflops,
-        ctx.spec.mem_bw_gbs,
-        ctx.spec.scratch_bytes / (1024 * 1024),
-        ctx.spec.compute_units
-    );
-    println!("      memory manager: {} B capacity", ctx.memory.lock().unwrap().capacity());
+    let count = Cuda::device_count();
+    println!("visible devices: {count} (JACC_VIRTUAL_DEVICES widens the virtual pool)");
+    for i in 0..count {
+        let ctx = Cuda::get_device(i)?.create_device_context()?;
+        println!("  [{i}] {}", ctx.name());
+        println!(
+            "      modeled: {} GFLOP/s, {} GB/s, {} MiB scratch, {} CUs",
+            ctx.spec.peak_gflops,
+            ctx.spec.mem_bw_gbs,
+            ctx.spec.scratch_bytes / (1024 * 1024),
+            ctx.spec.compute_units
+        );
+        println!("      memory manager: {} B capacity", ctx.memory.lock().unwrap().capacity());
+    }
     Ok(())
 }
 
@@ -145,6 +166,7 @@ fn build_graph(
     Ok((g, id, w))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     name: &str,
     profile: &str,
@@ -153,8 +175,19 @@ fn run(
     verbose: bool,
     no_opt: bool,
     plan_split: bool,
+    devices: usize,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!name.is_empty(), "--benchmark required");
+    let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
+    if pool_width > 1 {
+        if plan_split {
+            println!(
+                "(--plan-split: pool runs always report the replica plan construction \
+                 split below)"
+            );
+        }
+        return run_pool(name, profile, variant, iters, verbose, no_opt, pool_width);
+    }
     let dev = Cuda::get_device(0)?.create_device_context()?;
     let (g, id, _) = build_graph(&dev, name, profile, variant, no_opt)?;
     let iters = if iters == 0 { workloads::iterations(name, profile) } else { iters };
@@ -216,8 +249,91 @@ fn run(
     Ok(())
 }
 
+/// Open a pool, replicate the benchmark graph onto it and warm every
+/// replica off the clock (asserting the no-JIT contract). Shared by
+/// `run --devices` and `serve-bench --devices`.
+fn open_replicated(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    no_opt: bool,
+    devices: usize,
+) -> anyhow::Result<(DevicePool, ReplicatedGraph)> {
+    let pool = DevicePool::open(devices)?;
+    let (g, _, _) = build_graph(pool.device(0), name, profile, variant, no_opt)?;
+    let replicated = pool.compile(&g)?;
+    println!(
+        "{name}.{variant}.{profile} x{devices} devices: replica plan {}",
+        replicated.replica(0).stats.summary()
+    );
+    let warm = replicated.launch_all(&Bindings::new())?;
+    for (d, rep) in warm.iter().enumerate() {
+        anyhow::ensure!(
+            rep.fresh_compiles == 0,
+            "device {d} re-JITted after plan construction"
+        );
+    }
+    Ok((pool, replicated))
+}
+
+/// Assert and print every pool ledger (`used <= capacity` per device).
+fn check_pool_ledgers(pool: &DevicePool) -> anyhow::Result<()> {
+    for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+        anyhow::ensure!(
+            used <= capacity,
+            "device {d} ledger overcommitted: used {used} > capacity {capacity}"
+        );
+        println!("ledger[{d}]: used {used} / {capacity} B");
+    }
+    Ok(())
+}
+
+/// Per-device launch-metrics dump (`--verbose` on pool paths).
+fn dump_pool_metrics(replicated: &ReplicatedGraph) {
+    for d in 0..replicated.device_count() {
+        println!("device {d} launch metrics:\n{}", replicated.replica(d).metrics.report());
+    }
+}
+
+/// Multi-device run: replicate the benchmark graph across a device
+/// pool and launch every replica in parallel per iteration, reporting
+/// aggregate graph throughput and per-device ledgers.
+fn run_pool(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    iters: usize,
+    verbose: bool,
+    no_opt: bool,
+    devices: usize,
+) -> anyhow::Result<()> {
+    let (pool, replicated) = open_replicated(name, profile, variant, no_opt, devices)?;
+    let iters = if iters == 0 { workloads::iterations(name, profile) } else { iters };
+
+    // Steady state: one "iteration" = the full workload on every
+    // device at once.
+    let h = Harness::new(1, 3, iters);
+    let r = h.run(name, || {
+        replicated.launch_all(&Bindings::new()).expect("pool steady-state launch");
+    });
+    println!(
+        "steady state: {}/iter over {iters} iters ({} graphs/iter => {:.1} graphs/s, \
+         cv {:.1}%)",
+        fmt_secs(r.per_iter()),
+        devices,
+        devices as f64 / r.per_iter(),
+        r.summary.cv() * 100.0
+    );
+    check_pool_ledgers(&pool)?;
+    if verbose {
+        dump_pool_metrics(&replicated);
+    }
+    Ok(())
+}
+
 /// Concurrent serving: compile one plan, launch it from N workers
 /// through the bounded-queue engine, report throughput + latency tail.
+#[allow(clippy::too_many_arguments)]
 fn serve_bench(
     name: &str,
     profile: &str,
@@ -225,11 +341,30 @@ fn serve_bench(
     workers: usize,
     requests: usize,
     queue_depth: usize,
+    devices: usize,
+    smoke: bool,
     verbose: bool,
 ) -> anyhow::Result<()> {
+    // CI smoke mode: tiny shapes, few requests, and a graceful skip
+    // when the AOT artifacts are not built (mirrors the benches).
+    let (name, profile, workers, requests) = if smoke {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            println!("serve-bench --smoke: artifacts not built (make artifacts); skipping");
+            return Ok(());
+        }
+        (if name.is_empty() { "vector_add" } else { name }, "tiny", 1, 8)
+    } else {
+        (name, profile, workers, requests)
+    };
     anyhow::ensure!(!name.is_empty(), "--benchmark required");
     anyhow::ensure!(workers > 0, "--workers must be positive");
     anyhow::ensure!(requests > 0, "--requests must be positive");
+    let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
+    if pool_width > 1 {
+        return serve_bench_pool(
+            name, profile, variant, workers, requests, queue_depth, pool_width, verbose,
+        );
+    }
     let dev = Cuda::get_device(0)?.create_device_context()?;
     let (g, id, _) = build_graph(&dev, name, profile, variant, false)?;
     let plan = Arc::new(g.compile()?);
@@ -267,6 +402,37 @@ fn serve_bench(
     let _ = id;
     if verbose {
         println!("launch metrics:\n{}", plan.metrics.report());
+    }
+    Ok(())
+}
+
+/// Pool-routed serving: one plan replica per device, every request
+/// routed to the least-loaded device lane, per-device breakdown rows
+/// in the aggregate report.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_pool(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    workers_per_device: usize,
+    requests: usize,
+    queue_depth: usize,
+    devices: usize,
+    verbose: bool,
+) -> anyhow::Result<()> {
+    let (pool, replicated) = open_replicated(name, profile, variant, false, devices)?;
+    let mut config = PoolConfig::with_workers_per_device(workers_per_device);
+    if queue_depth > 0 {
+        config.queue_depth = queue_depth;
+    }
+    let (reports, agg) = serve_requests(&replicated, config, vec![Bindings::new(); requests])?;
+    for rep in &reports {
+        anyhow::ensure!(rep.fresh_compiles == 0, "serving path must never JIT");
+    }
+    println!("serve-bench {}", agg.summary());
+    check_pool_ledgers(&pool)?;
+    if verbose {
+        dump_pool_metrics(&replicated);
     }
     Ok(())
 }

@@ -1,0 +1,299 @@
+//! [`PoolEngine`] — the device-balanced serving engine: whole requests
+//! routed across the replicas of a [`ReplicatedGraph`].
+//!
+//! Each pool device gets its own *lane*: a bounded admission queue, a
+//! set of worker threads launching that device's replica, and an
+//! outstanding-work counter. [`submit`] routes a request to the lane
+//! with the least outstanding work (submitted-but-unfinished requests;
+//! ties break to the lowest device index), so a device stuck on a slow
+//! request stops attracting new ones — Tornado-style dynamic
+//! scheduling at request granularity rather than compile-time
+//! placement.
+//!
+//! [`shutdown`] aggregates every lane into one [`ServeReport`] whose
+//! `per_device` rows attribute requests, errors and queue-wait tails
+//! to individual devices — the evidence that routing (not luck)
+//! produced the pool's throughput.
+//!
+//! [`submit`]: PoolEngine::submit
+//! [`shutdown`]: PoolEngine::shutdown
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::coordinator::{Bindings, CompiledGraph, ExecutionReport};
+use crate::serve::{
+    BoundedQueue, DeviceBreakdown, LatencyLog, RequestTiming, ServeReport, Served, Ticket,
+};
+
+use super::replicated::ReplicatedGraph;
+
+/// Pool-engine sizing knobs.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads per device lane.
+    pub workers_per_device: usize,
+    /// Admission-queue bound per lane. Defaults to
+    /// `2 * workers_per_device`.
+    pub queue_depth: usize,
+}
+
+impl PoolConfig {
+    pub fn with_workers_per_device(workers_per_device: usize) -> Self {
+        Self { workers_per_device, queue_depth: 2 * workers_per_device.max(1) }
+    }
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self::with_workers_per_device(2)
+    }
+}
+
+/// One queued pool request.
+struct PoolRequest {
+    bindings: Bindings,
+    submitted: Instant,
+    reply: std::sync::mpsc::Sender<Served>,
+}
+
+/// One device's routing lane.
+struct Lane {
+    device: usize,
+    plan: Arc<CompiledGraph>,
+    queue: BoundedQueue<PoolRequest>,
+    /// Requests submitted to this lane and not yet finished (the
+    /// routing signal — includes queued *and* in-flight work).
+    outstanding: AtomicUsize,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    latencies: Mutex<LatencyLog>,
+}
+
+/// Index of the least-loaded lane; ties break to the lowest index so
+/// an idle pool fills devices in order.
+pub fn pick_least_loaded(outstanding: &[usize]) -> usize {
+    let mut best = 0usize;
+    for (i, &load) in outstanding.iter().enumerate() {
+        if load < outstanding[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Least-outstanding-work request router over a replicated plan.
+pub struct PoolEngine {
+    lanes: Vec<Arc<Lane>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    workers_per_device: usize,
+    started: Instant,
+}
+
+impl PoolEngine {
+    /// Spawn `workers_per_device` threads per replica of `replicated`.
+    pub fn start(replicated: &ReplicatedGraph, config: PoolConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            config.workers_per_device > 0,
+            "pool engine needs at least one worker per device"
+        );
+        let lanes: Vec<Arc<Lane>> = (0..replicated.device_count())
+            .map(|d| {
+                Arc::new(Lane {
+                    device: replicated.device(d).index,
+                    plan: Arc::clone(replicated.replica(d)),
+                    queue: BoundedQueue::new(config.queue_depth.max(1)),
+                    outstanding: AtomicUsize::new(0),
+                    completed: AtomicU64::new(0),
+                    errors: AtomicU64::new(0),
+                    latencies: Mutex::new(LatencyLog::default()),
+                })
+            })
+            .collect();
+        let mut workers = Vec::with_capacity(lanes.len() * config.workers_per_device);
+        for lane in &lanes {
+            for w in 0..config.workers_per_device {
+                let lane = Arc::clone(lane);
+                workers.push(
+                    thread::Builder::new()
+                        .name(format!("jacc-pool-d{}-{w}", lane.device))
+                        .spawn(move || lane_loop(&lane))
+                        .context("spawning pool worker")?,
+                );
+            }
+        }
+        Ok(Self {
+            lanes,
+            workers,
+            workers_per_device: config.workers_per_device,
+            started: Instant::now(),
+        })
+    }
+
+    /// Number of device lanes.
+    pub fn devices(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Current outstanding-work snapshot, in device order (what the
+    /// next `submit` routes against).
+    pub fn outstanding(&self) -> Vec<usize> {
+        self.lanes.iter().map(|l| l.outstanding.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Route one request to the least-loaded device lane. Blocks while
+    /// that lane's queue is full (backpressure); fails only if the
+    /// engine is shutting down.
+    pub fn submit(&self, bindings: Bindings) -> anyhow::Result<Ticket> {
+        let loads = self.outstanding();
+        let lane = &self.lanes[pick_least_loaded(&loads)];
+        // Count the request before enqueueing so racing submitters see
+        // it; undo if the queue is already closed.
+        lane.outstanding.fetch_add(1, Ordering::Relaxed);
+        let (tx, ticket) = Ticket::channel();
+        if lane
+            .queue
+            .push(PoolRequest { bindings, submitted: Instant::now(), reply: tx })
+            .is_err()
+        {
+            lane.outstanding.fetch_sub(1, Ordering::Relaxed);
+            anyhow::bail!("pool engine is shut down");
+        }
+        Ok(ticket)
+    }
+
+    /// Drain every lane, stop the workers and aggregate the run into
+    /// one [`ServeReport`] with per-device breakdown rows.
+    pub fn shutdown(mut self) -> ServeReport {
+        let workers_per_device = self.workers_per_device;
+        self.join_workers();
+        let wall = self.started.elapsed();
+        let mut merged = LatencyLog::default();
+        let mut per_device = Vec::with_capacity(self.lanes.len());
+        let mut requests = 0u64;
+        let mut errors = 0u64;
+        for lane in &self.lanes {
+            let completed = lane.completed.load(Ordering::Relaxed);
+            let lane_errors = lane.errors.load(Ordering::Relaxed);
+            requests += completed;
+            errors += lane_errors;
+            let mut log = lane.latencies.lock().unwrap();
+            merged.merge_from(&log);
+            // Reuse the aggregate fill for the lane's own percentiles.
+            let mut lane_report = ServeReport::default();
+            log.fill(&mut lane_report);
+            per_device.push(DeviceBreakdown {
+                device: lane.device,
+                requests: completed,
+                errors: lane_errors,
+                p50_ms: lane_report.p50_ms,
+                p95_ms: lane_report.p95_ms,
+                queue_p95_ms: lane_report.queue_p95_ms,
+            });
+        }
+        let mut report = ServeReport {
+            workers: self.lanes.len() * workers_per_device,
+            requests,
+            errors,
+            wall,
+            throughput_rps: if wall.as_secs_f64() > 0.0 {
+                requests as f64 / wall.as_secs_f64()
+            } else {
+                0.0
+            },
+            per_device,
+            ..ServeReport::default()
+        };
+        merged.fill(&mut report);
+        report
+    }
+
+    fn join_workers(&mut self) {
+        for lane in &self.lanes {
+            lane.queue.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for PoolEngine {
+    fn drop(&mut self) {
+        // Dropping without `shutdown()` still drains + joins cleanly.
+        self.join_workers();
+    }
+}
+
+fn lane_loop(lane: &Lane) {
+    while let Some(req) = lane.queue.pop() {
+        let queue = req.submitted.elapsed();
+        let t0 = Instant::now();
+        let result = lane.plan.launch(&req.bindings);
+        let timing = RequestTiming { queue, launch: t0.elapsed(), device: lane.device };
+        match &result {
+            Ok(_) => {
+                lane.completed.fetch_add(1, Ordering::Relaxed);
+                lane.latencies.lock().unwrap().record(&timing);
+            }
+            Err(_) => {
+                lane.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // The request is finished either way: stop attracting routing
+        // pressure for it before replying.
+        lane.outstanding.fetch_sub(1, Ordering::Relaxed);
+        let _ = req.reply.send((result, timing));
+    }
+}
+
+/// Convenience driver (the pool counterpart of `serve::serve_all`):
+/// route every request through a fresh engine, return the per-request
+/// reports (input order) plus the aggregate with per-device rows.
+pub fn serve_requests(
+    replicated: &ReplicatedGraph,
+    config: PoolConfig,
+    requests: Vec<Bindings>,
+) -> anyhow::Result<(Vec<ExecutionReport>, ServeReport)> {
+    let engine = PoolEngine::start(replicated, config)?;
+    let tickets = requests
+        .into_iter()
+        .map(|b| engine.submit(b))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reports = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok((reports, engine.shutdown()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_picks_minimum_and_breaks_ties_low() {
+        assert_eq!(pick_least_loaded(&[0]), 0);
+        assert_eq!(pick_least_loaded(&[3, 1, 2]), 1);
+        assert_eq!(pick_least_loaded(&[2, 2, 2]), 0, "ties break to lowest index");
+        assert_eq!(pick_least_loaded(&[5, 0, 0, 4]), 1, "first minimum wins");
+        assert_eq!(pick_least_loaded(&[1, 0]), 1);
+    }
+
+    #[test]
+    fn pool_config_defaults() {
+        let c = PoolConfig::default();
+        assert_eq!(c.workers_per_device, 2);
+        assert_eq!(c.queue_depth, 4);
+        let c = PoolConfig::with_workers_per_device(3);
+        assert_eq!(c.queue_depth, 6);
+    }
+
+    // End-to-end routing tests (requests spread across devices,
+    // per-device rows summing to the aggregate) live in
+    // rust/tests/pool_sharding.rs — they need built artifacts.
+}

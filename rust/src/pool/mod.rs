@@ -1,0 +1,110 @@
+//! Multi-device execution pool (ROADMAP scale-out axis).
+//!
+//! The paper's runtime targets one GPU, but its task/task-graph
+//! abstractions deliberately leave placement to the runtime — the
+//! follow-on JACC OpenACC work (arXiv:2110.14340) extends exactly these
+//! abstractions to multi-GPU data parallelism, and Tornado
+//! (arXiv:1802.09480) schedules across heterogeneous devices
+//! dynamically. This module is that scale-out axis over N *virtual
+//! devices* (PJRT CPU plugin instances — see `Cuda::device_count` and
+//! the physical-core caveat in `api.rs`):
+//!
+//! * [`DevicePool`] — opens N devices, each with its own PJRT client,
+//!   compile cache, memory ledger and metrics, against one shared
+//!   manifest;
+//! * [`ReplicatedGraph`] — one [`CompiledGraph`] replica per device,
+//!   compiled from a single `TaskGraph`
+//!   ([`DevicePool::compile`]);
+//! * [`Shard`] / [`ShardSpec`] — per-input scatter policies
+//!   (`Split { axis }` for batch inputs, `Replicate` for broadcast
+//!   inputs) driving [`ReplicatedGraph::launch_sharded`]'s
+//!   scatter -> parallel launch -> gather pipeline;
+//! * [`PoolEngine`] — a device-balanced serving engine routing whole
+//!   requests to the replica with the least outstanding work, with
+//!   per-device breakdowns in its [`ServeReport`].
+//!
+//! [`CompiledGraph`]: crate::coordinator::CompiledGraph
+//! [`ServeReport`]: crate::serve::ServeReport
+
+pub mod engine;
+pub mod replicated;
+pub mod shard;
+
+use std::sync::Arc;
+
+use crate::coordinator::TaskGraph;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::device::{Cuda, DeviceContext};
+
+pub use engine::{serve_requests, PoolConfig, PoolEngine};
+pub use replicated::{ReplicatedGraph, ShardedReport};
+pub use shard::{Shard, ShardSpec};
+
+/// N opened virtual devices sharing one artifact manifest.
+pub struct DevicePool {
+    devices: Vec<Arc<DeviceContext>>,
+}
+
+impl DevicePool {
+    /// Open `devices` virtual devices (`0` = use `Cuda::device_count()`,
+    /// i.e. `JACC_VIRTUAL_DEVICES`). The manifest is loaded once and
+    /// shared by every replica's runtime.
+    pub fn open(devices: usize) -> anyhow::Result<Self> {
+        Self::open_with(devices, Manifest::load_default()?)
+    }
+
+    /// Same, with an explicit manifest (tests, custom artifact dirs).
+    pub fn open_with(devices: usize, manifest: Manifest) -> anyhow::Result<Self> {
+        let n = if devices == 0 { Cuda::device_count() } else { devices };
+        let devices = (0..n)
+            .map(|i| {
+                Cuda::get_virtual_device(i, n)?.create_device_context_with(manifest.clone())
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { devices })
+    }
+
+    /// Wrap already-opened contexts into a pool (advanced callers that
+    /// size or configure devices themselves).
+    pub fn from_contexts(devices: Vec<Arc<DeviceContext>>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!devices.is_empty(), "device pool needs at least one device");
+        Ok(Self { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, i: usize) -> &Arc<DeviceContext> {
+        &self.devices[i]
+    }
+
+    pub fn devices(&self) -> &[Arc<DeviceContext>] {
+        &self.devices
+    }
+
+    /// Compile `graph` into one [`CompiledGraph`] replica per pool
+    /// device (the graph's own device bindings are ignored — every
+    /// task is retargeted per device).
+    ///
+    /// [`CompiledGraph`]: crate::coordinator::CompiledGraph
+    pub fn compile(&self, graph: &TaskGraph) -> anyhow::Result<ReplicatedGraph> {
+        ReplicatedGraph::build(graph, &self.devices)
+    }
+
+    /// Every ledger's `(used, capacity)` in device order — benches and
+    /// the CLI assert `used <= capacity` per device after pool runs.
+    pub fn ledger_usage(&self) -> Vec<(u64, u64)> {
+        self.devices
+            .iter()
+            .map(|d| {
+                let mem = d.memory.lock().unwrap();
+                (mem.used(), mem.capacity())
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,229 @@
+//! [`ReplicatedGraph`]: one [`CompiledGraph`] replica per pool device,
+//! compiled from a single source [`TaskGraph`] against a shared
+//! manifest.
+//!
+//! Replication retargets the graph: every task is re-inserted onto each
+//! device in insertion order, so task ids, inter-task dataflow and the
+//! optimizer configuration are preserved exactly — only the device
+//! binding changes. Persistent parameters are warmed per device (each
+//! replica pins its own device-resident copy through its own ledger).
+//!
+//! Launching:
+//! * [`launch_sharded`] scatters one logical request across the
+//!   replicas per its [`ShardSpec`] (split inputs chunked along the
+//!   batch axis, broadcast inputs copied), launches every replica in
+//!   parallel, and gathers the outputs by concatenating along the
+//!   split axis;
+//! * [`launch_all`] launches the *same* bindings on every replica in
+//!   parallel (redundant data-parallel execution — what `jacc run
+//!   --devices N` measures for aggregate throughput).
+//!
+//! [`launch_sharded`]: ReplicatedGraph::launch_sharded
+//! [`launch_all`]: ReplicatedGraph::launch_all
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::{Bindings, CompiledGraph, ExecutionReport, GraphOutputs, TaskGraph};
+use crate::runtime::buffer::HostValue;
+use crate::runtime::device::DeviceContext;
+
+use super::shard::{self, ShardSpec};
+
+/// One compiled plan per device, sharing a manifest and a source graph.
+pub struct ReplicatedGraph {
+    devices: Vec<Arc<DeviceContext>>,
+    replicas: Vec<Arc<CompiledGraph>>,
+}
+
+/// What one sharded launch did, with the per-device split preserved.
+#[derive(Debug)]
+pub struct ShardedReport {
+    /// Gathered host-visible results: split-axis outputs concatenated
+    /// across devices (device order), replicated-only launches take
+    /// device 0's outputs.
+    pub outputs: GraphOutputs,
+    /// Each device's own launch report, in device order.
+    pub per_device: Vec<ExecutionReport>,
+    /// Wall time of the scatter + parallel launch + gather.
+    pub wall: Duration,
+    /// The common batch axis of the launch's `Split` inputs (`None`
+    /// when every input replicated).
+    pub split_axis: Option<usize>,
+}
+
+impl ShardedReport {
+    /// Fresh JIT compilations across all devices (0 after warmup, by
+    /// the same pinned-kernel construction as single-device plans).
+    pub fn fresh_compiles(&self) -> usize {
+        self.per_device.iter().map(|r| r.fresh_compiles).sum()
+    }
+
+    /// Total bytes scattered host -> device across the pool.
+    pub fn h2d_bytes(&self) -> u64 {
+        self.per_device.iter().map(|r| r.h2d_bytes).sum()
+    }
+
+    /// Total bytes gathered device -> host across the pool.
+    pub fn d2h_bytes(&self) -> u64 {
+        self.per_device.iter().map(|r| r.d2h_bytes).sum()
+    }
+}
+
+impl ReplicatedGraph {
+    /// Compile `graph` once per device. The graph's own device bindings
+    /// are ignored: every task is retargeted onto each pool device.
+    pub(crate) fn build(
+        graph: &TaskGraph,
+        devices: &[Arc<DeviceContext>],
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!devices.is_empty(), "replication needs at least one device");
+        let mut replicas = Vec::with_capacity(devices.len());
+        for dev in devices {
+            let retargeted = retarget(graph, dev)
+                .with_context(|| format!("retargeting graph onto device {}", dev.index))?;
+            let plan = retargeted
+                .compile()
+                .with_context(|| format!("compiling replica for device {}", dev.index))?;
+            replicas.push(Arc::new(plan));
+        }
+        Ok(Self { devices: devices.to_vec(), replicas })
+    }
+
+    /// Number of device replicas.
+    pub fn device_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The compiled plan bound to pool device `d`.
+    pub fn replica(&self, d: usize) -> &Arc<CompiledGraph> {
+        &self.replicas[d]
+    }
+
+    /// The pool device `d` executes on.
+    pub fn device(&self, d: usize) -> &Arc<DeviceContext> {
+        &self.devices[d]
+    }
+
+    /// Scatter `bindings` per `shards`, launch every replica in
+    /// parallel, gather the outputs. See the module docs for the
+    /// validation rules; equivalence with per-chunk single-device
+    /// launches is bit-for-bit (pinned kernels, same action stream).
+    pub fn launch_sharded(
+        &self,
+        bindings: &Bindings,
+        shards: &ShardSpec,
+    ) -> anyhow::Result<ShardedReport> {
+        let t0 = Instant::now();
+        let (per_dev, split_axis) =
+            shard::scatter(bindings, shards, &self.replicas[0], self.replicas.len())?;
+        let per_device = self.launch_each(&per_dev)?;
+        let outputs = gather(&per_device, split_axis)?;
+        Ok(ShardedReport { outputs, per_device, wall: t0.elapsed(), split_axis })
+    }
+
+    /// Launch the same `bindings` on every replica in parallel
+    /// (redundant execution; per-device reports in device order).
+    pub fn launch_all(&self, bindings: &Bindings) -> anyhow::Result<Vec<ExecutionReport>> {
+        let per_dev: Vec<Bindings> =
+            (0..self.replicas.len()).map(|_| bindings.clone()).collect();
+        self.launch_each(&per_dev)
+    }
+
+    /// One launch per replica, each on its own thread (the per-device
+    /// bindings slice must be exactly one entry per replica).
+    fn launch_each(&self, per_dev: &[Bindings]) -> anyhow::Result<Vec<ExecutionReport>> {
+        debug_assert_eq!(per_dev.len(), self.replicas.len());
+        let results: Vec<anyhow::Result<ExecutionReport>> = thread::scope(|s| {
+            let handles: Vec<_> = self
+                .replicas
+                .iter()
+                .zip(per_dev)
+                .map(|(plan, b)| s.spawn(move || plan.launch(b)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("device launch thread panicked"))
+                .collect()
+        });
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(d, r)| r.with_context(|| format!("launch on pool device {d}")))
+            .collect()
+    }
+
+    /// Sum of `plan.launches` across replicas.
+    pub fn launches(&self) -> u64 {
+        self.replicas.iter().map(|p| p.launches()).sum()
+    }
+}
+
+/// Retarget `graph` onto `dev`: same profile, same optimizer config,
+/// same tasks in insertion order (ids and Output references carry over
+/// unchanged because insertion assigns ids sequentially).
+fn retarget(graph: &TaskGraph, dev: &Arc<DeviceContext>) -> anyhow::Result<TaskGraph> {
+    let mut g = TaskGraph::new().with_profile(&graph.profile);
+    g.optimizer = graph.optimizer.clone();
+    for node in &graph.nodes {
+        g.execute_task_on(node.task.clone(), dev)?;
+    }
+    Ok(g)
+}
+
+/// Merge per-device outputs: concatenate along the split axis in
+/// device order, or take device 0's outputs when nothing was split
+/// (replicas computed identical results).
+fn gather(
+    per_device: &[ExecutionReport],
+    split_axis: Option<usize>,
+) -> anyhow::Result<GraphOutputs> {
+    let mut merged = GraphOutputs::default();
+    let first = &per_device[0].outputs;
+    for (task, outs) in &first.by_task {
+        let mut merged_outs = Vec::with_capacity(outs.len());
+        for idx in 0..outs.len() {
+            match split_axis {
+                Some(axis) => {
+                    let parts: Vec<HostValue> = per_device
+                        .iter()
+                        .enumerate()
+                        .map(|(d, r)| {
+                            r.outputs
+                                .by_task
+                                .get(task)
+                                .and_then(|v| v.get(idx))
+                                .cloned()
+                                .ok_or_else(|| {
+                                    anyhow!(
+                                        "device {d} produced no output {idx} for task {task} \
+                                         (replicas out of sync?)"
+                                    )
+                                })
+                        })
+                        .collect::<anyhow::Result<_>>()?;
+                    merged_outs.push(
+                        HostValue::concat_axis(axis, &parts)
+                            .with_context(|| format!("gathering output {idx} of task {task}"))?,
+                    );
+                }
+                None => merged_outs.push(outs[idx].clone()),
+            }
+        }
+        merged.by_task.insert(*task, merged_outs);
+    }
+    Ok(merged)
+}
+
+// Replicated plans inherit the single-plan serving contract: each
+// replica is Send + Sync, so the whole pool may be shared across
+// routing workers.
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = assert_send_sync::<ReplicatedGraph>();
+
+// Integration tests (scatter/gather equivalence vs the single-device
+// baseline, ledger invariants) live in rust/tests/pool_sharding.rs —
+// they need built artifacts.

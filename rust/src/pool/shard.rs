@@ -1,0 +1,204 @@
+//! Sharding policies: how one logical request's inputs are distributed
+//! across the replicas of a [`ReplicatedGraph`].
+//!
+//! Two policies, mirroring JACC's multi-GPU data parallelism
+//! (arXiv:2110.14340): [`Shard::Split`] scatters a batch-dimension
+//! input into one equal chunk per device, [`Shard::Replicate`]
+//! broadcasts an input unchanged to every device. Inputs with no
+//! declared policy default to `Replicate` — the safe choice for
+//! shared/broadcast data.
+//!
+//! The scatter is validated against the *per-replica* plan's
+//! [`InputSpec`] shapes: a split input must carry `devices ×` the
+//! declared extent along its axis (so each chunk matches the compiled
+//! kernel exactly), a replicated input must match the declaration
+//! as-is, and every `Split` input must agree on one axis so outputs can
+//! be gathered (concatenated) back along it.
+//!
+//! [`ReplicatedGraph`]: super::ReplicatedGraph
+//! [`InputSpec`]: crate::coordinator::InputSpec
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::{Bindings, CompiledGraph};
+
+/// Per-input distribution policy for a sharded launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shard {
+    /// Split the bound value into one equal chunk per device along
+    /// `axis`. The bound value's extent along `axis` must be exactly
+    /// `devices ×` the plan's declared extent.
+    Split { axis: usize },
+    /// Broadcast the bound value to every device unchanged (must match
+    /// the plan's declared shape exactly).
+    Replicate,
+}
+
+/// Input name -> [`Shard`] policy map. Unlisted inputs replicate.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSpec {
+    policies: BTreeMap<String, Shard>,
+}
+
+impl ShardSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style: split `name` along `axis`.
+    pub fn split(mut self, name: &str, axis: usize) -> Self {
+        self.set(name, Shard::Split { axis });
+        self
+    }
+
+    /// Builder-style: broadcast `name` to every device (also the
+    /// default for inputs with no declared policy).
+    pub fn replicate(mut self, name: &str) -> Self {
+        self.set(name, Shard::Replicate);
+        self
+    }
+
+    pub fn set(&mut self, name: &str, policy: Shard) {
+        self.policies.insert(name.to_string(), policy);
+    }
+
+    /// The policy for `name` (default: `Replicate`).
+    pub fn get(&self, name: &str) -> Shard {
+        self.policies.get(name).copied().unwrap_or(Shard::Replicate)
+    }
+
+    /// Names with an explicitly declared policy.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.policies.keys().map(|s| s.as_str())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+/// Scatter one logical request into per-device bindings, validated
+/// against the per-replica plan's input declarations. Returns the
+/// per-device bindings plus the common split axis (`None` when every
+/// input replicates — the launch then degenerates to redundant
+/// execution and outputs are taken from device 0).
+pub(crate) fn scatter(
+    bindings: &Bindings,
+    spec: &ShardSpec,
+    plan: &CompiledGraph,
+    devices: usize,
+) -> anyhow::Result<(Vec<Bindings>, Option<usize>)> {
+    if devices == 0 {
+        bail!("scatter: pool has no devices");
+    }
+    // Typo guards first: policies and bindings must both name real
+    // plan inputs.
+    for name in spec.names() {
+        if plan.input_spec(name).is_none() {
+            bail!(
+                "shard policy names unknown input '{name}' (plan inputs: {:?})",
+                plan.input_names().collect::<Vec<_>>()
+            );
+        }
+    }
+    for name in bindings.names() {
+        if plan.input_spec(name).is_none() {
+            bail!(
+                "unknown binding '{name}' (plan inputs: {:?})",
+                plan.input_names().collect::<Vec<_>>()
+            );
+        }
+    }
+
+    let mut split_axis: Option<usize> = None;
+    let mut per_device: Vec<Bindings> = (0..devices).map(|_| Bindings::new()).collect();
+    for name in plan.input_names() {
+        let decl = &plan.input_spec(name).expect("iterating plan inputs").decl;
+        let value = bindings.get(name).ok_or_else(|| {
+            anyhow!(
+                "input '{name}' not bound (sharded launch expects {} {:?} per device)",
+                decl.dtype.name(),
+                decl.shape
+            )
+        })?;
+        match spec.get(name) {
+            Shard::Replicate => {
+                if let Err(e) = value.check_decl(decl) {
+                    bail!("replicated binding '{name}': {e}");
+                }
+                for b in &mut per_device {
+                    b.set(name, value.clone());
+                }
+            }
+            Shard::Split { axis } => {
+                if axis >= decl.shape.len() {
+                    bail!(
+                        "split binding '{name}': axis {axis} out of range for declared \
+                         shape {:?}",
+                        decl.shape
+                    );
+                }
+                match split_axis {
+                    None => split_axis = Some(axis),
+                    Some(a) if a == axis => {}
+                    Some(a) => bail!(
+                        "split bindings disagree on the batch axis ({a} vs {axis} on \
+                         '{name}'); all Split inputs must share one axis so outputs can \
+                         be gathered along it"
+                    ),
+                }
+                if value.dtype() != decl.dtype {
+                    bail!(
+                        "split binding '{name}': dtype {:?} != declared {:?}",
+                        value.dtype(),
+                        decl.dtype
+                    );
+                }
+                let mut want = decl.shape.clone();
+                want[axis] *= devices;
+                if value.shape() != want.as_slice() {
+                    bail!(
+                        "split binding '{name}': shape {:?} != {want:?} ({devices} device(s) \
+                         x declared {:?} along axis {axis})",
+                        value.shape(),
+                        decl.shape
+                    );
+                }
+                let chunks = value.split_axis(axis, devices)?;
+                for (b, chunk) in per_device.iter_mut().zip(chunks) {
+                    b.set(name, chunk);
+                }
+            }
+        }
+    }
+    Ok((per_device, split_axis))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_defaults_to_replicate() {
+        let spec = ShardSpec::new().split("x", 0).replicate("k");
+        assert_eq!(spec.get("x"), Shard::Split { axis: 0 });
+        assert_eq!(spec.get("k"), Shard::Replicate);
+        assert_eq!(spec.get("unlisted"), Shard::Replicate);
+        assert_eq!(spec.names().collect::<Vec<_>>(), vec!["k", "x"]);
+        assert!(!spec.is_empty());
+        assert!(ShardSpec::new().is_empty());
+    }
+
+    #[test]
+    fn spec_set_overwrites() {
+        let mut spec = ShardSpec::new().split("x", 1);
+        spec.set("x", Shard::Replicate);
+        assert_eq!(spec.get("x"), Shard::Replicate);
+    }
+
+    // Scatter itself needs a compiled plan (manifest-declared input
+    // shapes); its validation and equivalence tests live in
+    // rust/tests/pool_sharding.rs.
+}

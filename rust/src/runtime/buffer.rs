@@ -167,6 +167,153 @@ impl HostValue {
         }
     }
 
+    /// Split into `parts` equal chunks along `axis` (row-major) — the
+    /// scatter half of the device pool's `Shard::Split` policy. The
+    /// extent along `axis` must divide evenly by `parts`; every chunk
+    /// keeps the original shape except `shape[axis] / parts`.
+    pub fn split_axis(&self, axis: usize, parts: usize) -> anyhow::Result<Vec<HostValue>> {
+        let shape = self.shape().to_vec();
+        if parts == 0 {
+            bail!("split_axis: cannot split into 0 parts");
+        }
+        if axis >= shape.len() {
+            bail!("split_axis: axis {axis} out of range for shape {shape:?}");
+        }
+        if shape[axis] % parts != 0 {
+            bail!(
+                "split_axis: extent {} along axis {axis} does not divide into {parts} \
+                 equal chunks",
+                shape[axis]
+            );
+        }
+        let outer: usize = shape[..axis].iter().product();
+        let inner: usize = shape[axis + 1..].iter().product();
+        let chunk = shape[axis] / parts;
+        let mut chunk_shape = shape.clone();
+        chunk_shape[axis] = chunk;
+
+        fn scatter<T: Copy>(
+            data: &[T],
+            outer: usize,
+            axis_len: usize,
+            inner: usize,
+            parts: usize,
+        ) -> Vec<Vec<T>> {
+            let chunk = axis_len / parts;
+            let mut out: Vec<Vec<T>> =
+                (0..parts).map(|_| Vec::with_capacity(outer * chunk * inner)).collect();
+            for o in 0..outer {
+                let base = o * axis_len * inner;
+                for (k, dst) in out.iter_mut().enumerate() {
+                    let start = base + k * chunk * inner;
+                    dst.extend_from_slice(&data[start..start + chunk * inner]);
+                }
+            }
+            out
+        }
+
+        Ok(match self {
+            HostValue::F32 { data, .. } => scatter(data, outer, shape[axis], inner, parts)
+                .into_iter()
+                .map(|d| HostValue::F32 { shape: chunk_shape.clone(), data: d })
+                .collect(),
+            HostValue::I32 { data, .. } => scatter(data, outer, shape[axis], inner, parts)
+                .into_iter()
+                .map(|d| HostValue::I32 { shape: chunk_shape.clone(), data: d })
+                .collect(),
+            HostValue::U32 { data, .. } => scatter(data, outer, shape[axis], inner, parts)
+                .into_iter()
+                .map(|d| HostValue::U32 { shape: chunk_shape.clone(), data: d })
+                .collect(),
+        })
+    }
+
+    /// Concatenate values along `axis` (row-major) — the gather half of
+    /// the device pool's sharded launch. Every value must share dtype
+    /// and shape except (possibly) the extent along `axis`.
+    pub fn concat_axis(axis: usize, values: &[HostValue]) -> anyhow::Result<HostValue> {
+        let Some(first) = values.first() else {
+            bail!("concat_axis: nothing to concatenate");
+        };
+        let base_shape = first.shape().to_vec();
+        if axis >= base_shape.len() {
+            bail!("concat_axis: axis {axis} out of range for shape {base_shape:?}");
+        }
+        let mut axis_total = 0usize;
+        for (i, v) in values.iter().enumerate() {
+            if v.dtype() != first.dtype() {
+                bail!(
+                    "concat_axis: value {i} is {:?} but value 0 is {:?}",
+                    v.dtype(),
+                    first.dtype()
+                );
+            }
+            let s = v.shape();
+            if s.len() != base_shape.len()
+                || s.iter().zip(&base_shape).enumerate().any(|(d, (&a, &b))| d != axis && a != b)
+            {
+                bail!(
+                    "concat_axis: value {i} shape {s:?} incompatible with {base_shape:?} \
+                     along axis {axis}"
+                );
+            }
+            axis_total += s[axis];
+        }
+        let outer: usize = base_shape[..axis].iter().product();
+        let inner: usize = base_shape[axis + 1..].iter().product();
+        let mut out_shape = base_shape;
+        out_shape[axis] = axis_total;
+
+        fn gather<T: Copy>(
+            blocks: &[(&[T], usize)],
+            outer: usize,
+            inner: usize,
+            total: usize,
+        ) -> Vec<T> {
+            let mut out = Vec::with_capacity(outer * total * inner);
+            for o in 0..outer {
+                for &(data, len) in blocks {
+                    let start = o * len * inner;
+                    out.extend_from_slice(&data[start..start + len * inner]);
+                }
+            }
+            out
+        }
+
+        Ok(match first {
+            HostValue::F32 { .. } => {
+                let blocks: Vec<(&[f32], usize)> = values
+                    .iter()
+                    .map(|v| Ok((v.as_f32()?, v.shape()[axis])))
+                    .collect::<anyhow::Result<_>>()?;
+                HostValue::F32 {
+                    shape: out_shape,
+                    data: gather(&blocks, outer, inner, axis_total),
+                }
+            }
+            HostValue::I32 { .. } => {
+                let blocks: Vec<(&[i32], usize)> = values
+                    .iter()
+                    .map(|v| Ok((v.as_i32()?, v.shape()[axis])))
+                    .collect::<anyhow::Result<_>>()?;
+                HostValue::I32 {
+                    shape: out_shape,
+                    data: gather(&blocks, outer, inner, axis_total),
+                }
+            }
+            HostValue::U32 { .. } => {
+                let blocks: Vec<(&[u32], usize)> = values
+                    .iter()
+                    .map(|v| Ok((v.as_u32()?, v.shape()[axis])))
+                    .collect::<anyhow::Result<_>>()?;
+                HostValue::U32 {
+                    shape: out_shape,
+                    data: gather(&blocks, outer, inner, axis_total),
+                }
+            }
+        })
+    }
+
     /// Shape/dtype check against a manifest declaration.
     pub fn check_decl(&self, decl: &super::artifact::IoDecl) -> anyhow::Result<()> {
         if self.dtype() != decl.dtype {
@@ -229,6 +376,61 @@ mod tests {
         assert!(HostValue::f32(vec![4], vec![0.0; 4]).check_decl(&decl).is_ok());
         assert!(HostValue::f32(vec![5], vec![0.0; 5]).check_decl(&decl).is_err());
         assert!(HostValue::i32(vec![4], vec![0; 4]).check_decl(&decl).is_err());
+    }
+
+    #[test]
+    fn split_concat_roundtrip_rank1() {
+        let v = HostValue::f32(vec![8], (0..8).map(|i| i as f32).collect());
+        let parts = v.split_axis(0, 4).unwrap();
+        assert_eq!(parts.len(), 4);
+        for (k, p) in parts.iter().enumerate() {
+            assert_eq!(p.shape(), &[2]);
+            assert_eq!(p.as_f32().unwrap(), &[2.0 * k as f32, 2.0 * k as f32 + 1.0]);
+        }
+        let back = HostValue::concat_axis(0, &parts).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn split_concat_roundtrip_rank2_both_axes() {
+        // shape [2, 4]: rows [0..4), [4..8).
+        let v = HostValue::i32(vec![2, 4], (0..8).collect());
+        // Axis 0: two [1, 4] chunks.
+        let rows = v.split_axis(0, 2).unwrap();
+        assert_eq!(rows[0].shape(), &[1, 4]);
+        assert_eq!(rows[0].as_i32().unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(rows[1].as_i32().unwrap(), &[4, 5, 6, 7]);
+        assert_eq!(HostValue::concat_axis(0, &rows).unwrap(), v);
+        // Axis 1: two [2, 2] chunks, interleaved per row.
+        let cols = v.split_axis(1, 2).unwrap();
+        assert_eq!(cols[0].shape(), &[2, 2]);
+        assert_eq!(cols[0].as_i32().unwrap(), &[0, 1, 4, 5]);
+        assert_eq!(cols[1].as_i32().unwrap(), &[2, 3, 6, 7]);
+        assert_eq!(HostValue::concat_axis(1, &cols).unwrap(), v);
+    }
+
+    #[test]
+    fn split_axis_validates() {
+        let v = HostValue::f32(vec![6], vec![0.0; 6]);
+        assert!(v.split_axis(1, 2).is_err(), "axis out of range");
+        assert!(v.split_axis(0, 4).is_err(), "6 does not divide by 4");
+        assert!(v.split_axis(0, 0).is_err(), "zero parts");
+        assert_eq!(v.split_axis(0, 1).unwrap()[0], v, "1 part is identity");
+    }
+
+    #[test]
+    fn concat_axis_validates() {
+        assert!(HostValue::concat_axis(0, &[]).is_err(), "empty input");
+        let a = HostValue::f32(vec![2], vec![0.0; 2]);
+        let b = HostValue::i32(vec![2], vec![0; 2]);
+        assert!(HostValue::concat_axis(0, &[a.clone(), b]).is_err(), "dtype mismatch");
+        let c = HostValue::f32(vec![2, 2], vec![0.0; 4]);
+        assert!(HostValue::concat_axis(0, &[a.clone(), c]).is_err(), "rank mismatch");
+        // Uneven extents along the concat axis are fine.
+        let d = HostValue::f32(vec![3], vec![1.0; 3]);
+        let out = HostValue::concat_axis(0, &[a, d]).unwrap();
+        assert_eq!(out.shape(), &[5]);
+        assert_eq!(out.as_f32().unwrap(), &[0.0, 0.0, 1.0, 1.0, 1.0]);
     }
 
     #[test]

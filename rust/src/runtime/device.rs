@@ -6,6 +6,15 @@
 //! for occupancy/cost reporting. Task graphs execute *on* a device
 //! context.
 //!
+//! Discovery is generalized to N **virtual devices** over the PJRT CPU
+//! plugin: `Cuda::device_count()` reads `JACC_VIRTUAL_DEVICES`
+//! (default 1), and every `get_device(i)` opens its *own* PJRT client,
+//! compile cache, memory ledger and metrics — the isolation a real
+//! multi-GPU runtime would have, so `pool::DevicePool` can replicate
+//! plans and shard launches across them. The replicas share physical
+//! CPU cores (see the multi-device caveat in `api.rs`), but the
+//! runtime-level accounting is fully per-device.
+//!
 //! Contexts are shared (`Arc`) and thread-safe: the runtime's compile
 //! cache and the memory-manager ledger are internally locked, so many
 //! serving workers can launch compiled plans against one device at
@@ -31,18 +40,36 @@ pub struct DeviceHandle {
 }
 
 impl Cuda {
-    /// `Cuda.getDevice(i)`. The PJRT CPU plugin exposes one device; the
-    /// modeled spec is attached for reporting.
+    /// `Cuda.getDevice(i)`. Valid for `i < device_count()`; each index
+    /// is a virtual device over the PJRT CPU plugin with the modeled
+    /// spec attached for reporting.
     pub fn get_device(index: usize) -> anyhow::Result<DeviceHandle> {
-        if index != 0 {
-            bail!("device {index} not present (CPU PJRT exposes device 0)");
+        Self::get_virtual_device(index, Self::device_count())
+    }
+
+    /// Discover device `index` out of an explicit `total` (what
+    /// `--devices N` uses; `get_device` passes the env-derived count).
+    pub fn get_virtual_device(index: usize, total: usize) -> anyhow::Result<DeviceHandle> {
+        if total == 0 {
+            bail!("device pool needs at least one device");
+        }
+        if index >= total {
+            bail!(
+                "device {index} not present ({total} virtual device(s) visible; \
+                 set JACC_VIRTUAL_DEVICES or --devices to widen the pool)"
+            );
         }
         Ok(DeviceHandle { index, spec: DeviceSpec::k20m() })
     }
 
-    /// Number of visible devices.
+    /// Number of visible devices: `JACC_VIRTUAL_DEVICES` (default 1).
+    /// Unparseable or zero values fall back to 1.
     pub fn device_count() -> usize {
-        1
+        std::env::var("JACC_VIRTUAL_DEVICES")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(1)
     }
 }
 
@@ -92,10 +119,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn get_device_zero_ok_others_err() {
+    fn get_device_respects_visible_count() {
+        // Whatever JACC_VIRTUAL_DEVICES says, indices below the count
+        // resolve and the first out-of-range index errors.
+        let count = Cuda::device_count();
+        assert!(count >= 1);
         assert!(Cuda::get_device(0).is_ok());
-        assert!(Cuda::get_device(1).is_err());
-        assert_eq!(Cuda::device_count(), 1);
+        assert!(Cuda::get_device(count).is_err());
+    }
+
+    #[test]
+    fn virtual_devices_validate_explicit_totals() {
+        assert!(Cuda::get_virtual_device(0, 4).is_ok());
+        let h = Cuda::get_virtual_device(3, 4).unwrap();
+        assert_eq!(h.index, 3);
+        assert!(Cuda::get_virtual_device(4, 4).is_err());
+        assert!(Cuda::get_virtual_device(0, 0).is_err());
+        let err = Cuda::get_virtual_device(2, 2).unwrap_err().to_string();
+        assert!(err.contains("2 virtual device(s)"), "{err}");
     }
 
     #[test]

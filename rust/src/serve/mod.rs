@@ -14,8 +14,12 @@
 //! (rather than queueing unboundedly) once `queue_depth` requests are
 //! in flight. [`ServingEngine::shutdown`] drains the queue, joins the
 //! workers and returns a [`ServeReport`] with aggregate throughput and
-//! p50/p95/p99 latency — what `jacc serve-bench` and
-//! `benches/serve_throughput.rs` print.
+//! p50/p95/p99 latency, split into queue-wait vs. launch time — what
+//! `jacc serve-bench` and `benches/serve_throughput.rs` print.
+//!
+//! The multi-device counterpart — request routing across the replicas
+//! of a device pool, with per-device breakdowns in the same
+//! [`ServeReport`] — is [`crate::pool::PoolEngine`].
 //!
 //! [`submit`]: ServingEngine::submit
 
@@ -55,23 +59,112 @@ impl Default for ServeConfig {
     }
 }
 
+/// Where one served request's time went (attribution for routing wins:
+/// a loaded device shows up as queue-wait, a slow kernel as launch).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestTiming {
+    /// Admission-queue wait (submit -> a worker picked it up).
+    pub queue: Duration,
+    /// Plan launch time (bind + replay, including transfers).
+    pub launch: Duration,
+    /// Pool device that served the request (0 on a single-device
+    /// engine).
+    pub device: usize,
+}
+
+impl RequestTiming {
+    /// Total request latency (queue wait + launch).
+    pub fn total(&self) -> Duration {
+        self.queue + self.launch
+    }
+}
+
+/// What a worker sends back for one request: the launch result plus
+/// its timing attribution. Shared with the pool engine's lanes.
+pub(crate) type Served = (anyhow::Result<ExecutionReport>, RequestTiming);
+
 /// One queued request: launch bindings + where to send the result.
 struct Request {
     bindings: Bindings,
-    reply: mpsc::Sender<anyhow::Result<ExecutionReport>>,
+    submitted: Instant,
+    reply: mpsc::Sender<Served>,
 }
 
 /// A pending reply for one submitted request.
 pub struct Ticket {
-    rx: mpsc::Receiver<anyhow::Result<ExecutionReport>>,
+    rx: mpsc::Receiver<Served>,
 }
 
 impl Ticket {
+    pub(crate) fn channel() -> (mpsc::Sender<Served>, Ticket) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Ticket { rx })
+    }
+
     /// Block until the request has been served.
     pub fn wait(self) -> anyhow::Result<ExecutionReport> {
-        self.rx
+        Ok(self.wait_timed()?.0)
+    }
+
+    /// Block until served, returning the queue-wait/launch split and
+    /// the serving device alongside the report.
+    pub fn wait_timed(self) -> anyhow::Result<(ExecutionReport, RequestTiming)> {
+        let (result, timing) = self
+            .rx
             .recv()
-            .context("serving worker dropped the request (engine shut down?)")?
+            .context("serving worker dropped the request (engine shut down?)")?;
+        Ok((result?, timing))
+    }
+}
+
+/// Per-request latency samples (milliseconds), split by phase. One
+/// mutex guards all three vectors so a worker records a request with a
+/// single lock. `pub(crate)` — the pool engine keeps one per device.
+#[derive(Debug, Default)]
+pub(crate) struct LatencyLog {
+    total_ms: Vec<f64>,
+    queue_ms: Vec<f64>,
+    launch_ms: Vec<f64>,
+}
+
+impl LatencyLog {
+    pub(crate) fn record(&mut self, timing: &RequestTiming) {
+        self.total_ms.push(timing.total().as_secs_f64() * 1e3);
+        self.queue_ms.push(timing.queue.as_secs_f64() * 1e3);
+        self.launch_ms.push(timing.launch.as_secs_f64() * 1e3);
+    }
+
+    pub(crate) fn merge_from(&mut self, other: &LatencyLog) {
+        self.total_ms.extend_from_slice(&other.total_ms);
+        self.queue_ms.extend_from_slice(&other.queue_ms);
+        self.launch_ms.extend_from_slice(&other.launch_ms);
+    }
+
+    /// Fold this log into `report`'s percentile fields. Each vector is
+    /// sorted **once** and every percentile reads the sorted slice
+    /// (`stats::percentile_sorted`) — shutdown used to re-sort per
+    /// percentile via `stats::percentile`.
+    pub(crate) fn fill(&mut self, report: &mut ServeReport) {
+        let sort = |v: &mut Vec<f64>| {
+            v.sort_by(|a, b| a.partial_cmp(b).expect("no NaN latencies"));
+        };
+        sort(&mut self.total_ms);
+        sort(&mut self.queue_ms);
+        sort(&mut self.launch_ms);
+        let pct = |v: &[f64], p: f64| {
+            if v.is_empty() {
+                0.0
+            } else {
+                stats::percentile_sorted(v, p)
+            }
+        };
+        report.p50_ms = pct(&self.total_ms, 50.0);
+        report.p95_ms = pct(&self.total_ms, 95.0);
+        report.p99_ms = pct(&self.total_ms, 99.0);
+        report.max_ms = self.total_ms.last().copied().unwrap_or(0.0);
+        report.queue_p50_ms = pct(&self.queue_ms, 50.0);
+        report.queue_p95_ms = pct(&self.queue_ms, 95.0);
+        report.launch_p95_ms = pct(&self.launch_ms, 95.0);
     }
 }
 
@@ -79,9 +172,40 @@ impl Ticket {
 struct Shared {
     plan: Arc<CompiledGraph>,
     queue: BoundedQueue<Request>,
-    latencies_ms: Mutex<Vec<f64>>,
+    latencies: Mutex<LatencyLog>,
     completed: AtomicU64,
     errors: AtomicU64,
+}
+
+/// One device's slice of a pool run (the multi-device breakdown rows
+/// of a [`ServeReport`]).
+#[derive(Debug, Clone, Default)]
+pub struct DeviceBreakdown {
+    pub device: usize,
+    /// Successfully served requests routed to this device.
+    pub requests: u64,
+    pub errors: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Queue-wait p95 on this device's lane — the routing-quality
+    /// signal (a hot device shows up here first).
+    pub queue_p95_ms: f64,
+}
+
+impl DeviceBreakdown {
+    /// One row of the per-device table (`summary()` appends these for
+    /// pool runs).
+    pub fn line(&self) -> String {
+        format!(
+            "  device {}: {} requests, p50 {:.2} ms, p95 {:.2} ms (queue p95 {:.2} ms){}",
+            self.device,
+            self.requests,
+            self.p50_ms,
+            self.p95_ms,
+            self.queue_p95_ms,
+            if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
+        )
+    }
 }
 
 /// Aggregate results of one engine run.
@@ -100,14 +224,25 @@ pub struct ServeReport {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub max_ms: f64,
+    /// Queue-wait (admission -> worker pickup) percentiles; the rest of
+    /// a request's latency is launch time.
+    pub queue_p50_ms: f64,
+    pub queue_p95_ms: f64,
+    /// Launch-only p95 (total p95 is not simply queue p95 + launch p95;
+    /// all three are reported so wins are attributable).
+    pub launch_p95_ms: f64,
+    /// Per-device rows for pool runs (empty on a single-device engine).
+    pub per_device: Vec<DeviceBreakdown>,
 }
 
 impl ServeReport {
-    /// One-line human summary (`jacc serve-bench` prints this).
+    /// Human summary (`jacc serve-bench` prints this): one aggregate
+    /// line with the queue/launch split, plus one row per pool device.
     pub fn summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "{} workers: {} requests in {:.2} s = {:.0} req/s \
-             (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, max {:.2} ms{})",
+             (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, max {:.2} ms; \
+             queue p95 {:.2} ms, launch p95 {:.2} ms{})",
             self.workers,
             self.requests,
             self.wall.as_secs_f64(),
@@ -116,8 +251,15 @@ impl ServeReport {
             self.p95_ms,
             self.p99_ms,
             self.max_ms,
+            self.queue_p95_ms,
+            self.launch_p95_ms,
             if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
-        )
+        );
+        for d in &self.per_device {
+            out.push('\n');
+            out.push_str(&d.line());
+        }
+        out
     }
 }
 
@@ -135,7 +277,7 @@ impl ServingEngine {
         let shared = Arc::new(Shared {
             plan,
             queue: BoundedQueue::new(config.queue_depth.max(1)),
-            latencies_ms: Mutex::new(Vec::new()),
+            latencies: Mutex::new(LatencyLog::default()),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
         });
@@ -163,12 +305,12 @@ impl ServingEngine {
     /// Enqueue one request. Blocks while the queue is full
     /// (backpressure); fails only if the engine is shutting down.
     pub fn submit(&self, bindings: Bindings) -> anyhow::Result<Ticket> {
-        let (tx, rx) = mpsc::channel();
+        let (tx, ticket) = Ticket::channel();
         self.shared
             .queue
-            .push(Request { bindings, reply: tx })
+            .push(Request { bindings, submitted: Instant::now(), reply: tx })
             .map_err(|_| anyhow::anyhow!("serving engine is shut down"))?;
-        Ok(Ticket { rx })
+        Ok(ticket)
     }
 
     /// Drain the queue, stop the workers and aggregate the run.
@@ -179,10 +321,7 @@ impl ServingEngine {
         let shared = &self.shared;
         let requests = shared.completed.load(Ordering::Relaxed);
         let errors = shared.errors.load(Ordering::Relaxed);
-        let lat = shared.latencies_ms.lock().unwrap();
-        let pct = |p: f64| if lat.is_empty() { 0.0 } else { stats::percentile(&lat, p) };
-        let max_ms = lat.iter().copied().fold(0.0f64, f64::max);
-        ServeReport {
+        let mut report = ServeReport {
             workers: n_workers,
             requests,
             errors,
@@ -192,11 +331,10 @@ impl ServingEngine {
             } else {
                 0.0
             },
-            p50_ms: pct(50.0),
-            p95_ms: pct(95.0),
-            p99_ms: pct(99.0),
-            max_ms,
-        }
+            ..ServeReport::default()
+        };
+        shared.latencies.lock().unwrap().fill(&mut report);
+        report
     }
 
     fn join_workers(&mut self) {
@@ -216,20 +354,21 @@ impl Drop for ServingEngine {
 
 fn worker_loop(shared: &Shared) {
     while let Some(req) = shared.queue.pop() {
+        let queue = req.submitted.elapsed();
         let t0 = Instant::now();
         let result = shared.plan.launch(&req.bindings);
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let timing = RequestTiming { queue, launch: t0.elapsed(), device: 0 };
         match &result {
             Ok(_) => {
                 shared.completed.fetch_add(1, Ordering::Relaxed);
-                shared.latencies_ms.lock().unwrap().push(ms);
+                shared.latencies.lock().unwrap().record(&timing);
             }
             Err(_) => {
                 shared.errors.fetch_add(1, Ordering::Relaxed);
             }
         }
         // The submitter may have dropped its ticket; that is fine.
-        let _ = req.reply.send(result);
+        let _ = req.reply.send((result, timing));
     }
 }
 
@@ -253,4 +392,72 @@ pub fn serve_all(
         .map(|t| t.wait())
         .collect::<anyhow::Result<Vec<_>>>()?;
     Ok((reports, engine.shutdown()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_log_fill_sorts_once_and_matches_percentiles() {
+        let mut log = LatencyLog::default();
+        // Deliberately unsorted totals: 5,1,3,2,4 ms with queue 1 ms
+        // and launch (total-1) ms each.
+        for &ms in &[5.0, 1.0, 3.0, 2.0, 4.0] {
+            log.record(&RequestTiming {
+                queue: Duration::from_millis(1),
+                launch: Duration::from_secs_f64((ms - 1.0) / 1e3),
+                device: 0,
+            });
+        }
+        let mut r = ServeReport::default();
+        log.fill(&mut r);
+        assert!((r.p50_ms - 3.0).abs() < 1e-9, "p50 {}", r.p50_ms);
+        assert!((r.max_ms - 5.0).abs() < 1e-9, "max {}", r.max_ms);
+        assert!((r.queue_p50_ms - 1.0).abs() < 1e-9);
+        assert!(r.queue_p95_ms <= r.p95_ms);
+        assert!(r.launch_p95_ms <= r.p95_ms);
+    }
+
+    #[test]
+    fn empty_log_fills_zeros() {
+        let mut r = ServeReport::default();
+        LatencyLog::default().fill(&mut r);
+        assert_eq!(r.p50_ms, 0.0);
+        assert_eq!(r.max_ms, 0.0);
+        assert_eq!(r.queue_p95_ms, 0.0);
+    }
+
+    #[test]
+    fn summary_includes_queue_launch_split_and_device_rows() {
+        let r = ServeReport {
+            workers: 2,
+            requests: 10,
+            wall: Duration::from_secs(1),
+            throughput_rps: 10.0,
+            p95_ms: 4.0,
+            queue_p95_ms: 1.5,
+            launch_p95_ms: 2.5,
+            per_device: vec![
+                DeviceBreakdown { device: 0, requests: 6, p95_ms: 4.0, ..Default::default() },
+                DeviceBreakdown { device: 1, requests: 4, p95_ms: 3.0, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        let s = r.summary();
+        assert!(s.contains("queue p95 1.50 ms"), "{s}");
+        assert!(s.contains("launch p95 2.50 ms"), "{s}");
+        assert!(s.contains("device 0: 6 requests"), "{s}");
+        assert!(s.contains("device 1: 4 requests"), "{s}");
+    }
+
+    #[test]
+    fn request_timing_total() {
+        let t = RequestTiming {
+            queue: Duration::from_millis(2),
+            launch: Duration::from_millis(3),
+            device: 1,
+        };
+        assert_eq!(t.total(), Duration::from_millis(5));
+    }
 }

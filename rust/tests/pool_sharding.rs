@@ -1,0 +1,378 @@
+//! Multi-device pool tests: sharded launches across N virtual devices
+//! must match the single-device baseline **bit-for-bit**, no replica
+//! may JIT after plan construction (`fresh_compiles == 0`), and every
+//! per-device ledger must hold `used <= capacity`. Requires
+//! `make artifacts` (tiny profile); every test no-ops gracefully when
+//! artifacts are absent.
+
+use std::sync::Arc;
+
+use jacc::api::*;
+use jacc::pool::{serve_requests, DevicePool, PoolConfig, PoolEngine, Shard, ShardSpec};
+
+fn artifacts_present() -> bool {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return false;
+    }
+    true
+}
+
+/// The pool inherits the serving contract: replicated plans and the
+/// routing engine may be shared across threads.
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = assert_send_sync::<ReplicatedGraph>();
+const _: () = assert_send_sync::<PoolEngine>();
+
+/// A vector_add graph whose two inputs are rebound per launch, plus
+/// the per-device input length.
+fn vector_add_graph(dev: &Arc<DeviceContext>) -> (TaskGraph, TaskId, usize) {
+    let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, dev).unwrap();
+    (g, id, n)
+}
+
+/// Deterministic full-batch data for `devices * n` elements, distinct
+/// per seed.
+fn batch_for(seed: usize, len: usize) -> (Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..len).map(|i| ((i * 5 + seed * 11) % 17) as f32 * 0.25).collect();
+    let y: Vec<f32> = (0..len).map(|i| ((i * 3 + seed * 7) % 13) as f32 * 0.5).collect();
+    (x, y)
+}
+
+/// The acceptance gate: for N in {2, 4} and several request seeds, a
+/// sharded launch over N virtual devices is bit-identical to chunking
+/// the batch through the single-device plan, never JITs after warmup,
+/// and leaves every ledger within capacity.
+#[test]
+fn sharded_launch_matches_single_device_bit_for_bit() {
+    if !artifacts_present() {
+        return;
+    }
+    // Single-device baseline on its own context (independent client).
+    let base_dev = Cuda::get_device(0).unwrap().create_device_context().unwrap();
+    let (base_graph, id, n) = vector_add_graph(&base_dev);
+    let base_plan = base_graph.compile().unwrap();
+
+    for devices in [2usize, 4] {
+        let pool = DevicePool::open(devices).unwrap();
+        let (g, _, _) = vector_add_graph(pool.device(0));
+        let replicated = pool.compile(&g).unwrap();
+        assert_eq!(replicated.device_count(), devices);
+        let shards = ShardSpec::new().split("x", 0).split("y", 0);
+
+        // Warmup launch, off the assertions.
+        let (wx, wy) = batch_for(99, devices * n);
+        let warm = Bindings::new()
+            .bind("x", HostValue::f32(vec![devices * n], wx))
+            .bind("y", HostValue::f32(vec![devices * n], wy));
+        replicated.launch_sharded(&warm, &shards).unwrap();
+
+        for seed in 0..4 {
+            let (x, y) = batch_for(seed, devices * n);
+            let big_x = HostValue::f32(vec![devices * n], x.clone());
+            let big_y = HostValue::f32(vec![devices * n], y.clone());
+            let bindings =
+                Bindings::new().bind("x", big_x.clone()).bind("y", big_y.clone());
+            let report = replicated.launch_sharded(&bindings, &shards).unwrap();
+            assert_eq!(report.split_axis, Some(0));
+            assert_eq!(report.per_device.len(), devices);
+            assert_eq!(report.fresh_compiles(), 0, "sharded launch must never JIT");
+            for (d, rep) in report.per_device.iter().enumerate() {
+                assert_eq!(rep.fresh_compiles, 0, "device {d} re-JITted");
+            }
+
+            // Single-device baseline: each chunk through the one plan,
+            // outputs concatenated in device order.
+            let xs = big_x.split_axis(0, devices).unwrap();
+            let ys = big_y.split_axis(0, devices).unwrap();
+            let mut want_parts = Vec::with_capacity(devices);
+            for (cx, cy) in xs.into_iter().zip(ys) {
+                let b = Bindings::new().bind("x", cx).bind("y", cy);
+                let rep = base_plan.launch(&b).unwrap();
+                assert_eq!(rep.fresh_compiles, 0);
+                want_parts.push(rep.outputs.single(id).unwrap().clone());
+            }
+            let want = HostValue::concat_axis(0, &want_parts).unwrap();
+
+            let got = report.outputs.single(id).unwrap();
+            assert_eq!(got.shape(), &[devices * n]);
+            assert_eq!(
+                got.as_f32().unwrap().iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                want.as_f32().unwrap().iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "devices={devices} seed={seed}: sharded result diverged from single-device"
+            );
+            // Sanity vs the host-side ground truth.
+            let g32 = got.as_f32().unwrap();
+            for i in 0..devices * n {
+                assert_eq!(g32[i], x[i] + y[i], "devices={devices} seed={seed} idx {i}");
+            }
+        }
+
+        for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+            assert!(used <= capacity, "device {d} ledger overcommitted: {used} > {capacity}");
+        }
+    }
+}
+
+/// All-replicate sharding degenerates to redundant execution: outputs
+/// come from device 0 and equal the single-device launch exactly.
+#[test]
+fn replicate_only_matches_single_device() {
+    if !artifacts_present() {
+        return;
+    }
+    let pool = DevicePool::open(2).unwrap();
+    let (g, id, n) = vector_add_graph(pool.device(0));
+    let replicated = pool.compile(&g).unwrap();
+    let (x, y) = batch_for(1, n);
+    let bindings = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x.clone()))
+        .bind("y", HostValue::f32(vec![n], y.clone()));
+
+    // Empty spec: every input defaults to Replicate.
+    let report = replicated.launch_sharded(&bindings, &ShardSpec::new()).unwrap();
+    assert_eq!(report.split_axis, None);
+    assert_eq!(report.per_device.len(), 2);
+    let got = report.outputs.single(id).unwrap().as_f32().unwrap().to_vec();
+
+    let base_dev = Cuda::get_device(0).unwrap().create_device_context().unwrap();
+    let (bg, bid, _) = vector_add_graph(&base_dev);
+    let base = bg.compile().unwrap().launch(&bindings).unwrap();
+    let want = base.outputs.single(bid).unwrap().as_f32().unwrap().to_vec();
+    assert_eq!(
+        got.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        want.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+    );
+
+    // launch_all mirrors the same contract, one report per device.
+    let reports = replicated.launch_all(&bindings).unwrap();
+    assert_eq!(reports.len(), 2);
+    for rep in &reports {
+        assert_eq!(rep.fresh_compiles, 0);
+        let per_dev = rep.outputs.single(id).unwrap().as_f32().unwrap();
+        assert_eq!(per_dev, &got[..]);
+    }
+}
+
+/// Scatter validation: every malformed request is rejected before any
+/// byte moves, with an actionable message.
+#[test]
+fn scatter_validation_errors() {
+    if !artifacts_present() {
+        return;
+    }
+    let pool = DevicePool::open(2).unwrap();
+    let (g, _, n) = vector_add_graph(pool.device(0));
+    let replicated = pool.compile(&g).unwrap();
+    let shards = ShardSpec::new().split("x", 0).split("y", 0);
+    let full = |len: usize| HostValue::f32(vec![len], vec![0.0; len]);
+
+    // Missing binding.
+    let err = replicated
+        .launch_sharded(&Bindings::new().bind("x", full(2 * n)), &shards)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("'y' not bound"), "{err}");
+
+    // Wrong extent: split inputs must be devices x the declared shape.
+    let bad = Bindings::new().bind("x", full(n)).bind("y", full(2 * n));
+    let err = replicated.launch_sharded(&bad, &shards).unwrap_err().to_string();
+    assert!(err.contains("split binding 'x'"), "{err}");
+    assert!(err.contains("2 device(s)"), "{err}");
+
+    // Replicated inputs must match the declaration exactly.
+    let bad = Bindings::new().bind("x", full(2 * n)).bind("y", full(2 * n));
+    let err = replicated
+        .launch_sharded(&bad, &ShardSpec::new().split("x", 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("replicated binding 'y'"), "{err}");
+
+    // Dtype mismatch on a split input.
+    let bad = Bindings::new()
+        .bind("x", HostValue::i32(vec![2 * n], vec![0; 2 * n]))
+        .bind("y", full(2 * n));
+    let err = replicated.launch_sharded(&bad, &shards).unwrap_err().to_string();
+    assert!(err.contains("dtype"), "{err}");
+
+    // Axis out of range for a rank-1 declaration.
+    let good = Bindings::new().bind("x", full(2 * n)).bind("y", full(2 * n));
+    let err = replicated
+        .launch_sharded(&good, &ShardSpec::new().split("x", 1).split("y", 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("axis 1 out of range"), "{err}");
+
+    // Policies naming unknown inputs are typos, not silently ignored.
+    let err = replicated
+        .launch_sharded(&good, &ShardSpec::new().split("z", 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown input 'z'"), "{err}");
+
+    // Unknown bindings are rejected before scatter.
+    let bad = Bindings::new()
+        .bind("x", full(2 * n))
+        .bind("y", full(2 * n))
+        .bind("typo", full(n));
+    let err = replicated.launch_sharded(&bad, &shards).unwrap_err().to_string();
+    assert!(err.contains("unknown binding 'typo'"), "{err}");
+
+    // Split inputs disagreeing on the batch axis cannot gather: use a
+    // rank-2 kernel (matmul) to make both axes legal individually.
+    let m = pool.device(0).runtime.manifest();
+    if let Ok(entry) = m.find("matmul", "pallas", "tiny") {
+        if entry.inputs.len() < 2
+            || entry.inputs[0].shape.len() != 2
+            || entry.inputs[1].shape.len() != 2
+        {
+            return;
+        }
+        let mut task = Task::create(
+            "matmul",
+            Dims(entry.iteration_space.clone()),
+            Dims(entry.workgroup.clone()),
+        )
+        .unwrap();
+        task.set_parameters(vec![Param::input("a"), Param::input("b")]);
+        let mut mg = TaskGraph::new().with_profile("tiny");
+        mg.execute_task_on(task, pool.device(0)).unwrap();
+        let mm = pool.compile(&mg).unwrap();
+        let shape_of = |d: &[usize], mult0: bool| {
+            let mut s = d.to_vec();
+            if mult0 {
+                s[0] *= 2;
+            } else {
+                s[1] *= 2;
+            }
+            s
+        };
+        let sa = shape_of(&entry.inputs[0].shape, true);
+        let sb = shape_of(&entry.inputs[1].shape, false);
+        let bindings = Bindings::new()
+            .bind("a", HostValue::f32(sa.clone(), vec![0.0; sa.iter().product()]))
+            .bind("b", HostValue::f32(sb.clone(), vec![0.0; sb.iter().product()]));
+        let err = mm
+            .launch_sharded(&bindings, &ShardSpec::new().split("a", 0).split("b", 1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("disagree"), "{err}");
+    }
+}
+
+/// PoolEngine end-to-end: requests routed across device lanes come
+/// back correct and in order, the aggregate matches the per-device
+/// breakdown, and the queue/launch latency split is populated.
+#[test]
+fn pool_engine_routes_and_reports_per_device() {
+    if !artifacts_present() {
+        return;
+    }
+    let pool = DevicePool::open(2).unwrap();
+    let (g, id, n) = vector_add_graph(pool.device(0));
+    let replicated = pool.compile(&g).unwrap();
+    let total = 24usize;
+
+    let requests: Vec<Bindings> = (0..total)
+        .map(|r| {
+            let (x, y) = batch_for(r, n);
+            Bindings::new()
+                .bind("x", HostValue::f32(vec![n], x))
+                .bind("y", HostValue::f32(vec![n], y))
+        })
+        .collect();
+    let (reports, agg) =
+        serve_requests(&replicated, PoolConfig::with_workers_per_device(2), requests).unwrap();
+
+    assert_eq!(reports.len(), total);
+    for (r, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.fresh_compiles, 0, "request {r}");
+        let (x, y) = batch_for(r, n);
+        let got = rep.outputs.single(id).unwrap().as_f32().unwrap();
+        for i in 0..n {
+            assert_eq!(got[i], x[i] + y[i], "request {r} idx {i}");
+        }
+    }
+    assert_eq!(agg.requests, total as u64);
+    assert_eq!(agg.errors, 0);
+    assert_eq!(agg.workers, 4, "2 devices x 2 workers");
+    assert_eq!(agg.per_device.len(), 2);
+    assert_eq!(
+        agg.per_device.iter().map(|d| d.requests).sum::<u64>(),
+        agg.requests,
+        "per-device rows must account for every request"
+    );
+    assert_eq!(
+        agg.per_device.iter().map(|d| d.errors).sum::<u64>(),
+        agg.errors
+    );
+    assert!(agg.throughput_rps > 0.0);
+    assert!(agg.p50_ms <= agg.p99_ms);
+    assert!(agg.queue_p95_ms >= 0.0);
+    assert!(agg.launch_p95_ms > 0.0, "launch time must be attributed");
+    let s = agg.summary();
+    assert!(s.contains("queue p95"), "{s}");
+    assert!(s.contains("device 0:") || s.contains("device 1:"), "{s}");
+
+    for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+        assert!(used <= capacity, "device {d} ledger overcommitted");
+    }
+}
+
+/// A bad request through the pool engine fails its own ticket only;
+/// routing keeps serving and the error lands in the breakdown.
+#[test]
+fn pool_engine_isolates_bad_requests() {
+    if !artifacts_present() {
+        return;
+    }
+    let pool = DevicePool::open(2).unwrap();
+    let (g, id, n) = vector_add_graph(pool.device(0));
+    let replicated = pool.compile(&g).unwrap();
+    let engine = PoolEngine::start(&replicated, PoolConfig::default()).unwrap();
+    assert_eq!(engine.devices(), 2);
+
+    let bad = Bindings::new()
+        .bind("x", HostValue::f32(vec![3], vec![0.0; 3]))
+        .bind("y", HostValue::f32(vec![3], vec![0.0; 3]));
+    let err = engine.submit(bad).unwrap().wait().unwrap_err().to_string();
+    assert!(err.contains("binding 'x'"), "{err}");
+
+    let (x, y) = batch_for(5, n);
+    let good = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x.clone()))
+        .bind("y", HostValue::f32(vec![n], y.clone()));
+    let (rep, timing) = engine.submit(good).unwrap().wait_timed().unwrap();
+    assert!(timing.device < 2);
+    assert!(timing.launch > std::time::Duration::ZERO);
+    let got = rep.outputs.single(id).unwrap().as_f32().unwrap();
+    assert_eq!(got[0], x[0] + y[0]);
+
+    // Once drained, no lane holds phantom outstanding work.
+    assert_eq!(engine.outstanding(), vec![0, 0]);
+
+    let agg = engine.shutdown();
+    assert_eq!(agg.requests, 1);
+    assert_eq!(agg.errors, 1);
+    assert_eq!(agg.per_device.iter().map(|d| d.errors).sum::<u64>(), 1);
+}
+
+/// Shard policy plumbing stays artifact-free testable.
+#[test]
+fn shard_spec_api() {
+    let spec = ShardSpec::new().split("batch", 0).replicate("book");
+    assert_eq!(spec.get("batch"), Shard::Split { axis: 0 });
+    assert_eq!(spec.get("book"), Shard::Replicate);
+    assert_eq!(spec.get("anything_else"), Shard::Replicate);
+}
