@@ -1,0 +1,222 @@
+//! Overlapped-launch pipeline bench: a branched task graph (B
+//! independent `pipe_vecadd -> pipe_reduce` chains) launched through
+//! the dependency-staged pipeline vs the sequential replay ablation
+//! (`--no-overlap`'s engine-level twin), plus the bound-input upload
+//! cache on a repeated-bindings serving shape. Reports:
+//!
+//! * wall/iter for pipelined vs sequential replay and the overlap win
+//!   (independent branches launch kernels in parallel; uploads overlap
+//!   earlier stages' compute) — outputs are asserted bit-for-bit
+//!   identical across both modes;
+//! * the dedup hit-rate and H2D bytes of a repeated-bindings run vs
+//!   the no-cache baseline (`exec.h2d_dedup_hits > 0`, strictly fewer
+//!   bytes on the bus).
+//!
+//! Virtual CPU devices share physical cores, so the overlap ratio is
+//! machine-dependent (printed, not hard-asserted); the correctness and
+//! dedup assertions always hold.
+//!
+//! Run with:  cargo bench --bench pipeline_overlap -- \
+//!                [--branches 4] [--iters 20] [--profile tiny]
+//!
+//! `--smoke` (CI) shrinks to 2 branches x 3 iters on the tiny profile
+//! so the staged path is exercised on every push.
+
+use std::time::Instant;
+
+use jacc::api::*;
+use jacc::substrate::cli::Cli;
+
+fn build_plan(
+    dev: &std::sync::Arc<DeviceContext>,
+    profile: &str,
+    branches: usize,
+) -> anyhow::Result<(CompiledGraph, Vec<TaskId>, usize)> {
+    let m = dev.runtime.manifest();
+    let e_add = m.find("pipe_vecadd", "pallas", profile)?;
+    let e_red = m.find("pipe_reduce", "pallas", profile)?;
+    let n = e_add.inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile(profile);
+    let mut outs = Vec::with_capacity(branches);
+    for b in 0..branches {
+        // Branch b: z_b = x_b + y_b (device-only intermediate), then
+        // sum(z_b). Branches are data-independent: the pipeline stages
+        // them side by side.
+        let mut add = Task::create(
+            "pipe_vecadd",
+            Dims(e_add.iteration_space.clone()),
+            Dims(e_add.workgroup.clone()),
+        )?
+        .discard_output();
+        add.set_parameters(vec![
+            Param::input(&format!("x{b}")),
+            Param::input(&format!("y{b}")),
+        ]);
+        let a = g.execute_task_on(add, dev)?;
+        let mut red = Task::create(
+            "pipe_reduce",
+            Dims(e_red.iteration_space.clone()),
+            Dims(e_red.workgroup.clone()),
+        )?;
+        red.set_parameters(vec![Param::output("z", a, 0)]);
+        outs.push(g.execute_task_on(red, dev)?);
+    }
+    Ok((g.compile()?, outs, n))
+}
+
+fn bindings_for(branches: usize, n: usize, round: usize) -> Bindings {
+    let mut b = Bindings::new();
+    for br in 0..branches {
+        let x: Vec<f32> = (0..n).map(|i| ((i + round * 7 + br) % 13) as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| ((i * 3 + round + 2 * br) % 11) as f32).collect();
+        b.set(&format!("x{br}"), HostValue::f32(vec![n], x));
+        b.set(&format!("y{br}"), HostValue::f32(vec![n], y));
+    }
+    b
+}
+
+fn branch_sums(rep: &ExecutionReport, outs: &[TaskId]) -> anyhow::Result<Vec<u32>> {
+    outs.iter()
+        .map(|&t| Ok(rep.outputs.single(t)?.as_f32()?[0].to_bits()))
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "pipeline_overlap",
+        "staged-pipeline overlap win + upload-cache hit-rate on a branched graph",
+    )
+    .opt("branches", "4", "independent vecadd->reduce chains in the graph")
+    .opt("iters", "20", "timed launches per mode")
+    .opt("profile", "", "artifact profile (default: JACC_PROFILE or tiny)")
+    .flag("smoke", "CI mode: 2 branches, 3 iters, tiny profile")
+    .parse();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("pipeline_overlap: artifacts not built (make artifacts); skipping");
+        return Ok(());
+    }
+
+    let smoke = args.has_flag("smoke");
+    let branches = if smoke { 2 } else { args.get_usize("branches")? };
+    let iters = if smoke { 3 } else { args.get_usize("iters")? };
+    let profile = if smoke {
+        "tiny".to_string()
+    } else {
+        let p = args.get_or("profile", "");
+        if p.is_empty() {
+            std::env::var("JACC_PROFILE").unwrap_or_else(|_| "tiny".into())
+        } else {
+            p.to_string()
+        }
+    };
+    anyhow::ensure!(branches > 0 && iters > 0, "--branches and --iters must be positive");
+
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let (plan, outs, n) = build_plan(&dev, &profile, branches)?;
+    println!("pipe x{branches} branches.{profile}: {}", plan.stats.summary());
+    anyhow::ensure!(
+        plan.stats.max_stage_width >= branches,
+        "{} independent branches must stage side by side (max width {})",
+        branches,
+        plan.stats.max_stage_width
+    );
+
+    // Warm off the clock (pins literal caches; asserts the no-JIT
+    // contract).
+    let warm = plan.launch(&bindings_for(branches, n, 0))?;
+    anyhow::ensure!(warm.fresh_compiles == 0, "launches must never JIT");
+    anyhow::ensure!(warm.pipeline_stages == plan.stats.stages);
+
+    // The ablation pair: staged vs sequential replay, upload cache off
+    // in both so the comparison isolates the overlap win.
+    let staged = ExecutionOptions { h2d_dedup: false, ..ExecutionOptions::default() };
+    let sequential = ExecutionOptions { h2d_dedup: false, ..ExecutionOptions::sequential() };
+
+    // Correctness gate: both modes produce bit-identical outputs.
+    for round in 0..3 {
+        let b = bindings_for(branches, n, round);
+        let rp = plan.launch_with(&b, staged.clone())?;
+        let rs = plan.launch_with(&b, sequential.clone())?;
+        anyhow::ensure!(
+            branch_sums(&rp, &outs)? == branch_sums(&rs, &outs)?,
+            "pipelined and sequential replay diverged on round {round}"
+        );
+    }
+
+    // Overlap sweep: fresh bindings per iteration (no dedup, no cache)
+    // so the timing difference is pure pipeline.
+    let t0 = Instant::now();
+    for i in 0..iters {
+        plan.launch_with(&bindings_for(branches, n, i), staged.clone())?;
+    }
+    let t_staged = t0.elapsed();
+    let t0 = Instant::now();
+    for i in 0..iters {
+        plan.launch_with(&bindings_for(branches, n, i), sequential.clone())?;
+    }
+    let t_seq = t0.elapsed();
+    let per_staged = t_staged.as_secs_f64() * 1e3 / iters as f64;
+    let per_seq = t_seq.as_secs_f64() * 1e3 / iters as f64;
+    println!(
+        "overlap: pipelined {per_staged:.3} ms/iter vs sequential {per_seq:.3} ms/iter \
+         = {:.2}x ({} stages, max width {})",
+        per_seq / per_staged,
+        plan.stats.stages,
+        plan.stats.max_stage_width,
+    );
+
+    // Upload-cache phase: a repeated-bindings serving shape. The first
+    // launch populates the cache; every rebind after that skips the
+    // H2D entirely. The no-cache baseline re-uploads every time.
+    let repeat = bindings_for(branches, n, 4242);
+    plan.launch(&repeat)?; // populate
+    let cached = plan.launch(&repeat)?;
+    let uncached =
+        plan.launch_with(&repeat, ExecutionOptions { h2d_dedup: false, ..Default::default() })?;
+    anyhow::ensure!(
+        branch_sums(&cached, &outs)? == branch_sums(&uncached, &outs)?,
+        "upload cache changed results"
+    );
+    anyhow::ensure!(
+        cached.h2d_dedup_hits > 0,
+        "repeated bindings must hit the upload cache (got {} hits)",
+        cached.h2d_dedup_hits
+    );
+    anyhow::ensure!(
+        cached.h2d_bytes < uncached.h2d_bytes,
+        "dedup must move strictly fewer bytes ({} vs {})",
+        cached.h2d_bytes,
+        uncached.h2d_bytes
+    );
+    let total = cached.h2d_dedup_hits + cached.h2d_transfers;
+    println!(
+        "dedup: {} / {} uploads served from cache ({:.0}%), h2d {} B vs {} B uncached \
+         (exec.h2d_dedup_hits = {})",
+        cached.h2d_dedup_hits,
+        total,
+        cached.h2d_dedup_hits as f64 / total.max(1) as f64 * 100.0,
+        cached.h2d_bytes,
+        uncached.h2d_bytes,
+        plan.metrics.counter("exec.h2d_dedup_hits"),
+    );
+
+    // Ledger invariant after all the churn.
+    let mem = dev.memory.lock().unwrap();
+    anyhow::ensure!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
+    println!(
+        "ledger OK: used {} / {} B, {} dedup hits ({} B saved)",
+        mem.used(),
+        mem.capacity(),
+        mem.stats.dedup_hits,
+        mem.stats.dedup_hit_bytes
+    );
+    println!("pipeline_overlap OK");
+    Ok(())
+}

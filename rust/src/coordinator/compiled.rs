@@ -36,9 +36,9 @@ use crate::runtime::buffer::{HostValue, SharedBuffer};
 use crate::runtime::device::DeviceContext;
 use crate::runtime::pjrt::CompiledKernel;
 
-use super::executor::{ExecutionOptions, ExecutionReport, Executor};
+use super::executor::{ExecutionOptions, ExecutionReport, Executor, PipelineMode};
 use super::graph::TaskGraph;
-use super::lowering::{self, Action};
+use super::lowering::{self, Action, LaunchSchedule};
 use super::scheduler;
 use super::task::{ParamSource, Task, TaskId};
 
@@ -120,6 +120,18 @@ pub struct PlanStats {
     /// Actions in the executable stream (compiles already retired).
     pub actions: usize,
     pub tasks: usize,
+    /// Dependency stages in the baked [`LaunchSchedule`] (pipelined
+    /// launches replay stage by stage).
+    pub stages: usize,
+    /// Widest stage — the peak action-level concurrency a launch can
+    /// exploit.
+    pub max_stage_width: usize,
+    /// Distinct device-buffer slots a launch writes (pre-sizes the
+    /// executor's buffer table).
+    pub buf_slots: usize,
+    /// Staged host-output slots a launch produces (pre-sizes the
+    /// executor's staged table).
+    pub staged_slots: usize,
 }
 
 impl PlanStats {
@@ -127,7 +139,7 @@ impl PlanStats {
     pub fn summary(&self) -> String {
         format!(
             "plan: {:.2} ms total (lower+optimize {:.2} ms, pjrt compile {:.2} ms / {} fresh, \
-             warm h2d {} B), {} tasks, {} actions",
+             warm h2d {} B), {} tasks, {} actions in {} stages (max width {})",
             self.build_wall.as_secs_f64() * 1e3,
             self.lower_optimize.as_secs_f64() * 1e3,
             self.compile.as_secs_f64() * 1e3,
@@ -135,6 +147,8 @@ impl PlanStats {
             self.warm_h2d_bytes,
             self.tasks,
             self.actions,
+            self.stages,
+            self.max_stage_width,
         )
     }
 }
@@ -145,6 +159,9 @@ impl PlanStats {
 pub struct CompiledGraph {
     pub(crate) nodes: Vec<CompiledNode>,
     pub(crate) actions: Vec<Action>,
+    /// Dependency stages over `actions`, derived once at build time —
+    /// what the pipelined launch path replays.
+    pub(crate) schedule: LaunchSchedule,
     inputs: BTreeMap<String, InputSpec>,
     /// Device buffers for persistent params, pinned for the plan's
     /// lifetime, keyed by (task, param index). Launches use these
@@ -266,6 +283,13 @@ impl CompiledGraph {
         // Compiles are retired into the plan: drop them from the
         // replayed stream so the launch path never touches the JIT.
         actions.retain(|a| !matches!(a, Action::Compile { .. }));
+        // Bake the dependency-staged launch schedule: dataflow edges
+        // derived once here, replayed on every pipelined launch.
+        let schedule = lowering::launch_schedule(&actions);
+        stats.stages = schedule.len();
+        stats.max_stage_width = schedule.max_width();
+        stats.buf_slots = schedule.buf_slots;
+        stats.staged_slots = schedule.staged_slots;
         stats.actions = actions.len();
         stats.lower_optimize = lower_optimize;
         stats.build_wall = t_total.elapsed();
@@ -273,6 +297,7 @@ impl CompiledGraph {
         Ok(CompiledGraph {
             nodes,
             actions,
+            schedule,
             inputs,
             resident,
             profile: graph.profile.clone(),
@@ -283,12 +308,34 @@ impl CompiledGraph {
 
     /// Execute the precomputed plan with this launch's input bindings.
     /// Validates every binding against the manifest-declared
-    /// shape/dtype before any byte moves.
+    /// shape/dtype before any byte moves. Replays the dependency-staged
+    /// pipeline by default; see [`CompiledGraph::launch_with`] for the
+    /// sequential ablation and the other knobs.
     pub fn launch(&self, bindings: &Bindings) -> anyhow::Result<ExecutionReport> {
+        self.launch_with(bindings, ExecutionOptions::default())
+    }
+
+    /// [`CompiledGraph::launch`] with explicit execution options:
+    /// pipeline mode (staged vs `--no-overlap` sequential), the
+    /// bound-input upload cache, and per-action timing rows.
+    pub fn launch_with(
+        &self,
+        bindings: &Bindings,
+        opts: ExecutionOptions,
+    ) -> anyhow::Result<ExecutionReport> {
         self.validate_bindings(bindings)?;
         self.metrics.incr("plan.launches");
-        let mut exec = Executor::new(self, bindings, ExecutionOptions::default());
-        exec.run(&self.actions)
+        let pipeline = opts.pipeline;
+        let mut exec = Executor::new(self, bindings, opts);
+        match pipeline {
+            PipelineMode::Staged => exec.run_pipelined(&self.actions, &self.schedule),
+            PipelineMode::Sequential => exec.run(&self.actions),
+        }
+    }
+
+    /// The dependency-staged schedule pipelined launches replay.
+    pub fn schedule(&self) -> &LaunchSchedule {
+        &self.schedule
     }
 
     /// Check a `Bindings` map against the plan's expected inputs:
@@ -394,6 +441,15 @@ mod tests {
         let plan = g.compile().unwrap();
         assert_eq!(plan.input_names().collect::<Vec<_>>(), vec!["x", "y"]);
         assert_eq!(plan.input_spec("x").unwrap().decl.shape, vec![n]);
+
+        // The baked launch schedule covers the whole stream and its
+        // shape is mirrored into the plan stats.
+        assert_eq!(plan.schedule().action_count(), plan.stats.actions);
+        assert_eq!(plan.schedule().len(), plan.stats.stages);
+        assert_eq!(plan.schedule().max_width(), plan.stats.max_stage_width);
+        assert!(plan.stats.stages > 0);
+        assert!(plan.stats.buf_slots > 0);
+        assert!(plan.stats.summary().contains("stages"), "{}", plan.stats.summary());
 
         // Missing binding.
         let err = plan.launch(&Bindings::new()).unwrap_err().to_string();

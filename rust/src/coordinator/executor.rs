@@ -14,6 +14,30 @@
 //! * D2H downloads staged for consumers and surfaced in the results,
 //! * the atomic-graph guarantee: when `run` returns, every kept output
 //!   is host-visible.
+//!
+//! Two replay modes ([`PipelineMode`]):
+//! * **Staged** (default): the plan's baked [`LaunchSchedule`] is
+//!   replayed stage by stage; every action within a stage runs
+//!   concurrently on scoped substrate threads (independent kernels in
+//!   parallel, uploads overlapping earlier stages' compute). Each
+//!   action produces an `Effects` record that is merged back in
+//!   replay order, so results are bit-for-bit identical to sequential
+//!   replay.
+//! * **Sequential**: the pre-pipeline one-action-at-a-time walk, kept
+//!   as the `--no-overlap` ablation baseline.
+//!
+//! Stage fan-out pays a scoped thread spawn per concurrent action, so
+//! it is gated: single-action and pure-upload stages run inline, and
+//! only stages containing launches/downloads — where overlap buys real
+//! wall time — are threaded. Workloads whose kernels are so short that
+//! even that loses (sub-spawn-cost launches) can pin
+//! `PipelineMode::Sequential` per launch; `benches/pipeline_overlap.rs`
+//! prints both modes so the tradeoff is measurable per shape.
+//!
+//! Bound inputs additionally go through the per-device content-hashed
+//! upload cache (`exec.h2d_dedup_hits`): rebinding byte-identical data
+//! skips the H2D transfer entirely while the ledger accounts the cached
+//! buffer like any resident entry.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -24,17 +48,63 @@ use xla::PjRtBuffer;
 
 use crate::runtime::buffer::{DeviceBuffer, HostValue, SharedBuffer};
 use crate::runtime::pjrt::CompiledKernel;
+use crate::substrate::threadpool::scoped_map;
 
 use super::compiled::{Bindings, CompiledGraph};
 use super::graph::GraphOutputs;
-use super::lowering::{Action, BufId, CopySource};
+use super::lowering::{Action, BufId, CopySource, LaunchSchedule};
 use super::task::{ParamSource, TaskId};
 
+/// How a launch replays the plan's action stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// Dependency-staged replay: each stage's actions run concurrently,
+    /// uploads overlap earlier compute (the default).
+    #[default]
+    Staged,
+    /// Strict one-action-at-a-time replay (`jacc run --no-overlap`) —
+    /// the overlap ablation baseline.
+    Sequential,
+}
+
 /// Execution knobs.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ExecutionOptions {
-    /// Include per-action timing in the report (small overhead).
+    /// Include per-action timing rows in the report (small overhead).
     pub detailed_timing: bool,
+    /// Staged (overlapped) vs sequential replay.
+    pub pipeline: PipelineMode,
+    /// Serve bound inputs from the per-device content-hashed upload
+    /// cache, skipping the H2D for byte-identical rebinds.
+    pub h2d_dedup: bool,
+}
+
+impl Default for ExecutionOptions {
+    fn default() -> Self {
+        Self { detailed_timing: false, pipeline: PipelineMode::Staged, h2d_dedup: true }
+    }
+}
+
+impl ExecutionOptions {
+    /// The `--no-overlap` ablation: sequential replay, cache intact.
+    pub fn sequential() -> Self {
+        Self { pipeline: PipelineMode::Sequential, ..Self::default() }
+    }
+}
+
+/// One action's timing row (`ExecutionOptions::detailed_timing`).
+#[derive(Debug, Clone)]
+pub struct ActionTiming {
+    /// Position in the plan's action stream.
+    pub index: usize,
+    /// Pipeline stage the action ran in (== `index` under sequential
+    /// replay, where every action is its own stage).
+    pub stage: usize,
+    pub kind: &'static str,
+    pub task: Option<TaskId>,
+    pub wall: Duration,
+    /// Bytes this action moved across the bus (0 for launches).
+    pub bytes: u64,
 }
 
 /// What one graph launch did — the benches' raw material.
@@ -52,6 +122,11 @@ pub struct ExecutionReport {
     pub launch: Duration,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Uploads that actually crossed the bus this launch.
+    pub h2d_transfers: u64,
+    /// Bound-input uploads skipped because the device's content-hashed
+    /// upload cache already held byte-identical data.
+    pub h2d_dedup_hits: u64,
     pub actions_executed: usize,
     pub fresh_compiles: usize,
     /// Uploads skipped because the memory manager had the data
@@ -61,6 +136,12 @@ pub struct ExecutionReport {
     /// Persistent params served from buffers the compiled plan pinned
     /// at build time (the compiled-path residency counter).
     pub plan_resident_hits: u64,
+    /// Dependency stages replayed (0 under sequential replay).
+    pub pipeline_stages: usize,
+    /// Per-action rows, populated only with
+    /// `ExecutionOptions::detailed_timing`, in replay order (stream
+    /// order sequentially; stage-by-stage under the pipeline).
+    pub timings: Vec<ActionTiming>,
 }
 
 impl ExecutionReport {
@@ -71,6 +152,28 @@ impl ExecutionReport {
     }
 }
 
+/// What one action did, recorded off to the side so stage-mates can
+/// execute concurrently against an immutable executor and be merged
+/// back deterministically in stream order.
+#[derive(Default)]
+struct Effects {
+    bufs: Vec<(BufId, SharedBuffer)>,
+    staged: Vec<((TaskId, usize), HostValue)>,
+    outputs: Option<(TaskId, Vec<HostValue>)>,
+    compile: Duration,
+    h2d: Duration,
+    d2h: Duration,
+    launch: Duration,
+    h2d_bytes: u64,
+    d2h_bytes: u64,
+    h2d_transfers: u64,
+    h2d_dedup_hits: u64,
+    fresh_compiles: usize,
+    residency_hits: u64,
+    plan_resident_hits: u64,
+    timing: Option<ActionTiming>,
+}
+
 /// Walks actions for one launch of a compiled plan. Each launch owns
 /// its own executor (buffer table, staged outputs), so concurrent
 /// launches of one shared plan never share mutable state — only the
@@ -78,7 +181,6 @@ impl ExecutionReport {
 pub struct Executor<'g> {
     plan: &'g CompiledGraph,
     bindings: &'g Bindings,
-    #[allow(dead_code)]
     opts: ExecutionOptions,
     bufs: HashMap<BufId, SharedBuffer>,
     staged: HashMap<(TaskId, usize), HostValue>,
@@ -86,7 +188,15 @@ pub struct Executor<'g> {
 
 impl<'g> Executor<'g> {
     pub fn new(plan: &'g CompiledGraph, bindings: &'g Bindings, opts: ExecutionOptions) -> Self {
-        Self { plan, bindings, opts, bufs: HashMap::new(), staged: HashMap::new() }
+        // Hot-path tables pre-sized from the counts the plan recorded
+        // at build time — no growth rehashing mid-launch.
+        Self {
+            plan,
+            bindings,
+            opts,
+            bufs: HashMap::with_capacity(plan.stats.buf_slots),
+            staged: HashMap::with_capacity(plan.stats.staged_slots),
+        }
     }
 
     /// The compiled kernel a task is pinned to.
@@ -98,75 +208,183 @@ impl<'g> Executor<'g> {
             .ok_or_else(|| anyhow!("task {task} out of range"))
     }
 
+    /// Sequential replay: one action at a time, in stream order (the
+    /// `--no-overlap` ablation path, and the fallback for hand-built
+    /// streams without a schedule).
     pub fn run(&mut self, actions: &[Action]) -> anyhow::Result<ExecutionReport> {
         let mut report = ExecutionReport::default();
         let t_wall = Instant::now();
-        for action in actions {
-            report.actions_executed += 1;
-            match action {
-                Action::Compile { task, key } => self.do_compile(*task, key, &mut report)?,
-                Action::CopyIn { dest, source } => {
-                    self.do_copy_in(*dest, source, &mut report)?
+        for (i, action) in actions.iter().enumerate() {
+            let fx = self.exec_action(i, i, action)?;
+            self.apply(fx, &mut report);
+        }
+        report.wall = t_wall.elapsed();
+        Ok(report)
+    }
+
+    /// Staged replay: every action of a stage runs concurrently on
+    /// scoped substrate threads; effects merge back in stream order so
+    /// the result is bit-for-bit identical to [`Executor::run`].
+    pub fn run_pipelined(
+        &mut self,
+        actions: &[Action],
+        schedule: &LaunchSchedule,
+    ) -> anyhow::Result<ExecutionReport> {
+        if schedule.action_count() != actions.len() {
+            bail!(
+                "launch schedule covers {} actions but the stream has {} \
+                 (plan/schedule mismatch)",
+                schedule.action_count(),
+                actions.len()
+            );
+        }
+        let mut report =
+            ExecutionReport { pipeline_stages: schedule.len(), ..ExecutionReport::default() };
+        let t_wall = Instant::now();
+        for (stage_idx, stage) in schedule.stages.iter().enumerate() {
+            // Fan a stage out only when it has kernel launches or
+            // downloads to overlap: a pure-upload stage (e.g. the
+            // leading CopyIns of a single-task serving plan) is
+            // memcpy-bound on the CPU client and cheaper to run inline
+            // than to pay per-launch thread spawns for — the overlap
+            // win comes from the mixed stages, where ALAP-sunk uploads
+            // ride alongside launches.
+            let fan_out = stage.len() > 1
+                && stage.iter().any(|&i| {
+                    matches!(actions[i], Action::Launch { .. } | Action::CopyOut { .. })
+                });
+            if !fan_out {
+                for &i in stage {
+                    let fx = self.exec_action(i, stage_idx, &actions[i])?;
+                    self.apply(fx, &mut report);
                 }
-                Action::Launch { task, args, outs, .. } => {
-                    self.do_launch(*task, args, outs, &mut report)?
-                }
-                Action::CopyOut { task, bufs } => self.do_copy_out(*task, bufs, &mut report)?,
-                Action::Barrier => {
-                    // PJRT CPU execution is synchronous through
-                    // `to_literal_sync`; the barrier is a host-side
-                    // sequence point (kept for semantics + metrics).
-                    self.plan.metrics.incr("exec.barriers");
-                }
+                continue;
+            }
+            // Every action only reads state written by earlier stages,
+            // so `&self` is enough for the concurrent part.
+            let results: Vec<anyhow::Result<Effects>> = {
+                let this = &*self;
+                scoped_map(stage.len(), |k| {
+                    let i = stage[k];
+                    this.exec_action(i, stage_idx, &actions[i])
+                })
+            };
+            for fx in results {
+                let fx = fx?;
+                self.apply(fx, &mut report);
             }
         }
         report.wall = t_wall.elapsed();
         Ok(report)
     }
 
+    /// Execute one action against the current (immutable) state.
+    fn exec_action(&self, index: usize, stage: usize, action: &Action) -> anyhow::Result<Effects> {
+        let t0 = Instant::now();
+        let mut fx = match action {
+            Action::Compile { task, key } => self.do_compile(*task, key)?,
+            Action::CopyIn { dest, source } => self.do_copy_in(*dest, source)?,
+            Action::Launch { task, args, outs, .. } => self.do_launch(*task, args, outs)?,
+            Action::CopyOut { task, bufs } => self.do_copy_out(*task, bufs)?,
+            Action::Barrier => {
+                // PJRT CPU execution is synchronous through
+                // `to_literal_sync`; the barrier is a host-side
+                // sequence point (kept for semantics + metrics). Under
+                // staged replay the stage boundary *is* the sync.
+                self.plan.metrics.incr("exec.barriers");
+                Effects::default()
+            }
+        };
+        if self.opts.detailed_timing {
+            fx.timing = Some(ActionTiming {
+                index,
+                stage,
+                kind: action.kind(),
+                task: action.task(),
+                wall: t0.elapsed(),
+                bytes: fx.h2d_bytes + fx.d2h_bytes,
+            });
+        }
+        Ok(fx)
+    }
+
+    /// Merge one action's effects into the launch state and report, in
+    /// stream order.
+    fn apply(&mut self, fx: Effects, report: &mut ExecutionReport) {
+        report.actions_executed += 1;
+        for (id, buf) in fx.bufs {
+            self.bufs.insert(id, buf);
+        }
+        for (key, v) in fx.staged {
+            self.staged.insert(key, v);
+        }
+        if let Some((task, outs)) = fx.outputs {
+            report.outputs.by_task.insert(task, outs);
+        }
+        report.compile += fx.compile;
+        report.h2d += fx.h2d;
+        report.d2h += fx.d2h;
+        report.launch += fx.launch;
+        report.h2d_bytes += fx.h2d_bytes;
+        report.d2h_bytes += fx.d2h_bytes;
+        report.h2d_transfers += fx.h2d_transfers;
+        report.h2d_dedup_hits += fx.h2d_dedup_hits;
+        report.fresh_compiles += fx.fresh_compiles;
+        report.residency_hits += fx.residency_hits;
+        report.plan_resident_hits += fx.plan_resident_hits;
+        if let Some(row) = fx.timing {
+            report.timings.push(row);
+        }
+    }
+
     /// Plans retire compile actions at build time, so this arm only
     /// runs for hand-built action streams; the device compile cache
     /// makes it a no-op for any key the plan already compiled.
-    fn do_compile(
-        &mut self,
-        task: TaskId,
-        key: &str,
-        report: &mut ExecutionReport,
-    ) -> anyhow::Result<()> {
+    fn do_compile(&self, task: TaskId, key: &str) -> anyhow::Result<Effects> {
         let node = self.plan.node(task);
         let (kernel, fresh) = node.device.runtime.kernel(key)?;
+        let mut fx = Effects::default();
         if fresh {
-            report.compile += kernel.compile_time;
-            report.fresh_compiles += 1;
+            fx.compile += kernel.compile_time;
+            fx.fresh_compiles += 1;
             self.plan.metrics.incr("exec.compiles");
         } else {
             self.plan.metrics.incr("exec.compile_cache_hits");
         }
-        Ok(())
+        Ok(fx)
     }
 
     /// Resolve the host value / device buffer a CopyIn materializes.
-    fn resolve_source(&self, source: &CopySource) -> anyhow::Result<ResolvedSource> {
+    /// Values owned by the plan or the bindings are borrowed (no
+    /// per-launch clone of the host arrays).
+    fn resolve_source(&self, source: &CopySource) -> anyhow::Result<ResolvedSource<'g>> {
+        let plan: &'g CompiledGraph = self.plan;
+        let bindings: &'g Bindings = self.bindings;
         match source {
             CopySource::Param { task, param } => {
-                let node = self.plan.node(*task);
+                let node = plan
+                    .nodes
+                    .get(*task)
+                    .ok_or_else(|| anyhow!("task {task} out of range"))?;
                 let p = node
                     .task
                     .params
                     .get(*param)
                     .ok_or_else(|| anyhow!("task {task} has no param {param}"))?;
                 match &p.source {
-                    ParamSource::Host(v) => Ok(ResolvedSource::Fresh(v.clone())),
+                    ParamSource::Host(v) => Ok(ResolvedSource::Borrowed(v, false)),
                     ParamSource::Input { name } => {
-                        let v = self.bindings.get(name).ok_or_else(|| {
+                        let v = bindings.get(name).ok_or_else(|| {
                             anyhow!("input '{name}' not bound for this launch")
                         })?;
-                        Ok(ResolvedSource::Fresh(v.clone()))
+                        // Bound inputs are the rebind-per-request hot
+                        // path: eligible for the upload cache.
+                        Ok(ResolvedSource::Borrowed(v, true))
                     }
                     ParamSource::Persistent { id, version, value } => {
                         // Fast path: the plan pinned this buffer at
                         // build time; no upload, no manager lookup.
-                        if let Some(buf) = self.plan.resident.get(&(*task, *param)) {
+                        if let Some(buf) = plan.resident.get(&(*task, *param)) {
                             return Ok(ResolvedSource::PlanResident {
                                 buf: SharedBuffer::clone(buf),
                                 id: *id,
@@ -178,7 +396,7 @@ impl<'g> Executor<'g> {
                         Ok(ResolvedSource::Persistent {
                             id: *id,
                             version: *version,
-                            value: value.clone(),
+                            value,
                             device_task: *task,
                         })
                     }
@@ -202,7 +420,7 @@ impl<'g> Executor<'g> {
                     .ok_or_else(|| anyhow!("record missing field {}", io.name))?;
                 v.check_decl(io)
                     .with_context(|| format!("composite field {}", io.name))?;
-                Ok(ResolvedSource::Fresh(v.clone()))
+                Ok(ResolvedSource::Owned(v.clone()))
             }
             CopySource::StagedOutput { task, index } => {
                 let v = self
@@ -214,28 +432,77 @@ impl<'g> Executor<'g> {
                         )
                     })?
                     .clone();
-                Ok(ResolvedSource::Fresh(v))
+                Ok(ResolvedSource::Owned(v))
             }
         }
     }
 
-    fn do_copy_in(
-        &mut self,
+    /// The uncached fresh-upload path (one-shot host data): transfer,
+    /// count, ledger note.
+    fn plain_upload(
+        &self,
         dest: BufId,
+        value: &HostValue,
         source: &CopySource,
-        report: &mut ExecutionReport,
+        fx: &mut Effects,
     ) -> anyhow::Result<()> {
-        let resolved = self.resolve_source(source)?;
-        match resolved {
-            ResolvedSource::Fresh(value) => {
-                let node_device = self.device_for_source(source);
-                let t0 = Instant::now();
-                let buf = node_device.runtime.upload(&value)?;
-                report.h2d += t0.elapsed();
-                report.h2d_bytes += value.nbytes() as u64;
-                node_device.memory.lock().unwrap().note_upload(value.nbytes() as u64);
-                self.plan.metrics.incr("exec.h2d_transfers");
-                self.bufs.insert(dest, DeviceBuffer::shared(buf));
+        let device = self.device_for_source(source);
+        let t0 = Instant::now();
+        let buf = device.runtime.upload(value)?;
+        fx.h2d += t0.elapsed();
+        fx.h2d_bytes += value.nbytes() as u64;
+        fx.h2d_transfers += 1;
+        device.memory.lock().unwrap().note_upload(value.nbytes() as u64);
+        self.plan.metrics.incr("exec.h2d_transfers");
+        fx.bufs.push((dest, DeviceBuffer::shared(buf)));
+        Ok(())
+    }
+
+    fn do_copy_in(&self, dest: BufId, source: &CopySource) -> anyhow::Result<Effects> {
+        let mut fx = Effects::default();
+        match self.resolve_source(source)? {
+            ResolvedSource::Owned(value) => {
+                self.plain_upload(dest, &value, source, &mut fx)?;
+            }
+            ResolvedSource::Borrowed(value, dedup) => {
+                if dedup && self.opts.h2d_dedup {
+                    // Content-hashed upload cache: byte-identical
+                    // rebinds skip the bus entirely, and the hash keys
+                    // the cache so changed bytes can never reuse a
+                    // stale buffer. Misses transfer *outside* the
+                    // ledger lock (lookup under lock, upload, admit
+                    // under lock) so concurrent launches never
+                    // serialize on the bus; a lost race to identical
+                    // content resolves to the resident buffer.
+                    let device = self.device_for_source(source);
+                    let (key, check) = value.content_fingerprint();
+                    let bytes = value.nbytes() as u64;
+                    let cached =
+                        device.memory.lock().unwrap().lookup_uploaded(key, check, bytes);
+                    match cached {
+                        Some(buf) => {
+                            fx.h2d_dedup_hits += 1;
+                            self.plan.metrics.incr("exec.h2d_dedup_hits");
+                            fx.bufs.push((dest, buf));
+                        }
+                        None => {
+                            let t0 = Instant::now();
+                            let buf = DeviceBuffer::shared(device.runtime.upload(value)?);
+                            fx.h2d += t0.elapsed();
+                            fx.h2d_bytes += bytes;
+                            fx.h2d_transfers += 1;
+                            self.plan.metrics.incr("exec.h2d_transfers");
+                            let buf = device
+                                .memory
+                                .lock()
+                                .unwrap()
+                                .admit_uploaded(key, check, bytes, buf);
+                            fx.bufs.push((dest, buf));
+                        }
+                    }
+                } else {
+                    self.plain_upload(dest, value, source, &mut fx)?;
+                }
             }
             ResolvedSource::PlanResident { buf, id, version, bytes, device_task } => {
                 // Keep the memory manager's ledger honest about the
@@ -248,9 +515,9 @@ impl<'g> Executor<'g> {
                     .unwrap()
                     .retain_resident(id, version, bytes, &buf)
                     .context("re-admitting a plan-pinned buffer")?;
-                report.plan_resident_hits += 1;
+                fx.plan_resident_hits += 1;
                 self.plan.metrics.incr("exec.plan_resident_hits");
-                self.bufs.insert(dest, buf);
+                fx.bufs.push((dest, buf));
             }
             ResolvedSource::Persistent { id, version, value, device_task } => {
                 let device = Arc::clone(&self.plan.node(device_task).device);
@@ -258,21 +525,22 @@ impl<'g> Executor<'g> {
                 let (buf, hit) = device.memory.lock().unwrap().ensure_resident(
                     id,
                     version,
-                    &value,
+                    value,
                     &device.runtime,
                 )?;
                 if hit {
-                    report.residency_hits += 1;
+                    fx.residency_hits += 1;
                     self.plan.metrics.incr("exec.residency_hits");
                 } else {
-                    report.h2d += t0.elapsed();
-                    report.h2d_bytes += value.nbytes() as u64;
+                    fx.h2d += t0.elapsed();
+                    fx.h2d_bytes += value.nbytes() as u64;
+                    fx.h2d_transfers += 1;
                     self.plan.metrics.incr("exec.h2d_transfers");
                 }
-                self.bufs.insert(dest, buf);
+                fx.bufs.push((dest, buf));
             }
         }
-        Ok(())
+        Ok(fx)
     }
 
     fn device_for_source(&self, source: &CopySource) -> Arc<crate::runtime::DeviceContext> {
@@ -284,13 +552,7 @@ impl<'g> Executor<'g> {
         Arc::clone(&self.plan.node(task).device)
     }
 
-    fn do_launch(
-        &mut self,
-        task: TaskId,
-        args: &[BufId],
-        outs: &[BufId],
-        report: &mut ExecutionReport,
-    ) -> anyhow::Result<()> {
+    fn do_launch(&self, task: TaskId, args: &[BufId], outs: &[BufId]) -> anyhow::Result<Effects> {
         let kernel = Arc::clone(self.kernel_of(task)?);
         let arg_bufs: Vec<&PjRtBuffer> = args
             .iter()
@@ -301,9 +563,10 @@ impl<'g> Executor<'g> {
                     .ok_or_else(|| anyhow!("buffer {b} not materialized before launch"))
             })
             .collect::<anyhow::Result<_>>()?;
+        let mut fx = Effects::default();
         let t0 = Instant::now();
         let produced = kernel.run_buffers(&arg_bufs)?;
-        report.launch += t0.elapsed();
+        fx.launch += t0.elapsed();
         self.plan.metrics.incr("exec.launches");
         if produced.len() != outs.len() {
             bail!(
@@ -313,19 +576,15 @@ impl<'g> Executor<'g> {
             );
         }
         for (buf, id) in produced.into_iter().zip(outs) {
-            self.bufs.insert(*id, DeviceBuffer::shared(buf));
+            fx.bufs.push((*id, DeviceBuffer::shared(buf)));
         }
-        Ok(())
+        Ok(fx)
     }
 
-    fn do_copy_out(
-        &mut self,
-        task: TaskId,
-        bufs: &[BufId],
-        report: &mut ExecutionReport,
-    ) -> anyhow::Result<()> {
+    fn do_copy_out(&self, task: TaskId, bufs: &[BufId]) -> anyhow::Result<Effects> {
         let kernel = Arc::clone(self.kernel_of(task)?);
         let node = self.plan.node(task);
+        let mut fx = Effects::default();
         let mut host_outputs = Vec::new();
         let t0 = Instant::now();
         for b in bufs {
@@ -347,24 +606,30 @@ impl<'g> Executor<'g> {
                 host_outputs.push(HostValue::from_literal(&lit)?);
             }
         }
-        report.d2h += t0.elapsed();
+        fx.d2h += t0.elapsed();
         for v in &host_outputs {
-            report.d2h_bytes += v.nbytes() as u64;
+            fx.d2h_bytes += v.nbytes() as u64;
         }
         node.device.memory.lock().unwrap().note_download(
             host_outputs.iter().map(|v| v.nbytes() as u64).sum(),
         );
         self.plan.metrics.incr("exec.d2h_transfers");
         for (i, v) in host_outputs.iter().enumerate() {
-            self.staged.insert((task, i), v.clone());
+            fx.staged.push(((task, i), v.clone()));
         }
-        report.outputs.by_task.insert(task, host_outputs);
-        Ok(())
+        fx.outputs = Some((task, host_outputs));
+        Ok(fx)
     }
 }
 
-enum ResolvedSource {
-    Fresh(HostValue),
+enum ResolvedSource<'g> {
+    /// A value materialized for this action (composite projection,
+    /// staged host round-trip).
+    Owned(HostValue),
+    /// A value owned by the plan or the bindings — uploaded straight
+    /// from the borrow. The flag marks bound inputs (upload-cache
+    /// eligible); baked host params replay the plain upload path.
+    Borrowed(&'g HostValue, bool),
     /// A device buffer the plan pinned at build time.
     PlanResident {
         buf: SharedBuffer,
@@ -373,7 +638,7 @@ enum ResolvedSource {
         bytes: u64,
         device_task: TaskId,
     },
-    Persistent { id: u64, version: u64, value: HostValue, device_task: TaskId },
+    Persistent { id: u64, version: u64, value: &'g HostValue, device_task: TaskId },
 }
 
 // Integration tests for the executor live in rust/tests/ — they need

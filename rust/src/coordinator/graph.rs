@@ -23,7 +23,7 @@ use crate::runtime::buffer::HostValue;
 use crate::runtime::device::DeviceContext;
 
 use super::compiled::{Bindings, CompiledGraph};
-use super::executor::ExecutionReport;
+use super::executor::{ExecutionOptions, ExecutionReport};
 use super::lowering::{lower, Action};
 use super::optimizer::{optimize, OptimizerConfig};
 use super::scheduler;
@@ -220,8 +220,15 @@ impl TaskGraph {
     /// report so single-shot callers see the same first-run/steady-state
     /// split as before the compile/launch redesign.
     pub fn execute_with_report(&self) -> anyhow::Result<ExecutionReport> {
+        self.execute_with_options(ExecutionOptions::default())
+    }
+
+    /// [`execute_with_report`](Self::execute_with_report) with explicit
+    /// execution options — how `jacc run --no-overlap` drives the
+    /// sequential-replay ablation through the single-shot surface.
+    pub fn execute_with_options(&self, opts: ExecutionOptions) -> anyhow::Result<ExecutionReport> {
         let plan = self.compile()?;
-        let mut report = plan.launch(&Bindings::new())?;
+        let mut report = plan.launch_with(&Bindings::new(), opts)?;
         self.fold_plan(&plan, &mut report);
         Ok(report)
     }

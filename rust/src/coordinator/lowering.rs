@@ -63,6 +63,17 @@ impl Action {
             Action::Barrier => "barrier",
         }
     }
+
+    /// The task an action belongs to (`None` for barriers and for
+    /// copy-ins, whose destination buffer may feed several tasks).
+    pub fn task(&self) -> Option<TaskId> {
+        match self {
+            Action::Compile { task, .. }
+            | Action::Launch { task, .. }
+            | Action::CopyOut { task, .. } => Some(*task),
+            Action::CopyIn { .. } | Action::Barrier => None,
+        }
+    }
 }
 
 /// Count actions by kind (tests, ablation reporting).
@@ -72,6 +83,213 @@ pub fn action_histogram(actions: &[Action]) -> std::collections::BTreeMap<&'stat
         *h.entry(a.kind()).or_insert(0) += 1;
     }
     h
+}
+
+/// The dependency-staged launch schedule a compiled plan bakes in at
+/// build time (the execution-side counterpart of the optimizer's
+/// "re-organize" pass): stage `k` contains only actions whose data
+/// dependencies all live in stages `< k`, so every action within one
+/// stage may run concurrently. Independent kernels of one stage launch
+/// in parallel, and host uploads sink to the stage *just before* their
+/// consumer, overlapping the H2D transfer with earlier stages' compute
+/// (Tornado-style transfer/execution overlap, arXiv:1802.09480 §4).
+#[derive(Debug, Clone, Default)]
+pub struct LaunchSchedule {
+    /// Action indices per stage; within a stage, stream order.
+    pub stages: Vec<Vec<usize>>,
+    /// Distinct device-buffer slots the stream writes — pre-sizes the
+    /// executor's buffer table so launches never rehash mid-replay.
+    pub buf_slots: usize,
+    /// Host-staged output slots the stream produces — pre-sizes the
+    /// executor's staged table.
+    pub staged_slots: usize,
+}
+
+impl LaunchSchedule {
+    /// Number of dependency stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Widest stage — the peak concurrency the plan can exploit.
+    pub fn max_width(&self) -> usize {
+        self.stages.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+
+    /// Total actions covered (the executor asserts this matches the
+    /// stream it replays).
+    pub fn action_count(&self) -> usize {
+        self.stages.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// Derive the dependency stages of an action stream. Dataflow edges
+/// come from the stream itself: a `Launch`/`CopyOut` depends on the
+/// *nearest preceding* writer of every buffer it reads, a staged-output
+/// `CopyIn` depends on the `CopyOut` that staged it, a rewrite of a
+/// live buffer or staged slot depends on every prior reader of the old
+/// value (anti-dependency — streams from `compile()` are write-once,
+/// but this function is public and must stay sound for hand-built
+/// streams that reuse ids), and a `Barrier` orders everything before
+/// it against everything after (so unoptimized streams, with their
+/// per-task barriers, degenerate to near-sequential stages — exactly
+/// the ablation contrast). After ASAP leveling, host-sourced `CopyIn`s
+/// are sunk to one stage below their earliest consumer so uploads
+/// overlap compute instead of front-loading the bus.
+pub fn launch_schedule(actions: &[Action]) -> LaunchSchedule {
+    use std::collections::HashMap;
+    let n = actions.len();
+    // Table sizes: distinct buffer slots / staged entries (executor
+    // pre-sizing).
+    let mut all_bufs: std::collections::HashSet<BufId> = std::collections::HashSet::new();
+    let mut staged_slots = 0usize;
+    for a in actions {
+        match a {
+            Action::CopyIn { dest, .. } => {
+                all_bufs.insert(*dest);
+            }
+            Action::Launch { outs, .. } => {
+                all_bufs.extend(outs.iter().copied());
+            }
+            Action::CopyOut { bufs, .. } => {
+                staged_slots += bufs.len();
+            }
+            _ => {}
+        }
+    }
+    let buf_slots = all_bufs.len();
+
+    // Dependency edges, built in one forward walk so every read sees
+    // the nearest preceding writer and every rewrite sees its prior
+    // readers. Barrier ordering rides along.
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut cur_writer: HashMap<BufId, usize> = HashMap::new();
+    let mut buf_readers: HashMap<BufId, Vec<usize>> = HashMap::new();
+    let mut cur_copyout: HashMap<TaskId, usize> = HashMap::new();
+    let mut staged_readers: HashMap<TaskId, Vec<usize>> = HashMap::new();
+    let mut prev_barrier: Option<usize> = None;
+    let mut since_barrier: Vec<usize> = Vec::new();
+
+    fn read_buf(
+        b: BufId,
+        i: usize,
+        deps: &mut [Vec<usize>],
+        cur_writer: &HashMap<BufId, usize>,
+        buf_readers: &mut HashMap<BufId, Vec<usize>>,
+    ) {
+        if let Some(&w) = cur_writer.get(&b) {
+            deps[i].push(w);
+        }
+        buf_readers.entry(b).or_default().push(i);
+    }
+    // Anti- and output-dependencies: a rewrite never clobbers a value
+    // someone in an earlier or equal stage still has to read, and it
+    // orders after the prior writer (so the ALAP sink can never float
+    // a dead write past its replacement).
+    fn write_buf(
+        b: BufId,
+        i: usize,
+        deps: &mut [Vec<usize>],
+        cur_writer: &mut HashMap<BufId, usize>,
+        buf_readers: &mut HashMap<BufId, Vec<usize>>,
+    ) {
+        if let Some(readers) = buf_readers.remove(&b) {
+            deps[i].extend(readers.into_iter().filter(|&r| r != i));
+        }
+        if let Some(&w) = cur_writer.get(&b) {
+            if w != i {
+                deps[i].push(w);
+            }
+        }
+        cur_writer.insert(b, i);
+    }
+
+    for (i, a) in actions.iter().enumerate() {
+        if let Some(b) = prev_barrier {
+            deps[i].push(b);
+        }
+        match a {
+            Action::CopyIn { dest, source } => {
+                if let CopySource::StagedOutput { task, .. } = source {
+                    if let Some(&c) = cur_copyout.get(task) {
+                        deps[i].push(c);
+                    }
+                    staged_readers.entry(*task).or_default().push(i);
+                }
+                write_buf(*dest, i, &mut deps, &mut cur_writer, &mut buf_readers);
+            }
+            Action::Launch { args, outs, .. } => {
+                for b in args {
+                    read_buf(*b, i, &mut deps, &cur_writer, &mut buf_readers);
+                }
+                for b in outs {
+                    write_buf(*b, i, &mut deps, &mut cur_writer, &mut buf_readers);
+                }
+            }
+            Action::CopyOut { task, bufs } => {
+                for b in bufs {
+                    read_buf(*b, i, &mut deps, &cur_writer, &mut buf_readers);
+                }
+                // A re-stage of the same task's outputs must wait for
+                // readers of the previous staging and for the previous
+                // staging itself.
+                if let Some(readers) = staged_readers.remove(task) {
+                    deps[i].extend(readers);
+                }
+                if let Some(&prev) = cur_copyout.get(task) {
+                    deps[i].push(prev);
+                }
+                cur_copyout.insert(*task, i);
+            }
+            Action::Barrier => {
+                deps[i].append(&mut since_barrier);
+                prev_barrier = Some(i);
+            }
+            Action::Compile { .. } => {}
+        }
+        if !matches!(a, Action::Barrier) {
+            since_barrier.push(i);
+        }
+    }
+
+    // ASAP levels: an action runs one stage after its latest producer.
+    let mut stage = vec![0usize; n];
+    for (i, d) in deps.iter().enumerate() {
+        let s = d.iter().map(|&p| stage[p] + 1).max().unwrap_or(0);
+        stage[i] = s;
+    }
+
+    // ALAP sink for copy-ins: place each upload just below its earliest
+    // consumer (consumers — launches, copy-outs, barriers — never move,
+    // so this is order-independent and cannot cross a barrier).
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, d) in deps.iter().enumerate() {
+        for &p in d {
+            consumers[p].push(i);
+        }
+    }
+    for i in 0..n {
+        if !matches!(actions[i], Action::CopyIn { .. }) {
+            continue;
+        }
+        if let Some(mc) = consumers[i].iter().map(|&c| stage[c]).min() {
+            if mc > stage[i] + 1 {
+                stage[i] = mc - 1;
+            }
+        }
+    }
+
+    let mut stages: Vec<Vec<usize>> =
+        vec![Vec::new(); stage.iter().map(|&s| s + 1).max().unwrap_or(0)];
+    for (i, &s) in stage.iter().enumerate() {
+        stages[s].push(i);
+    }
+    stages.retain(|s| !s.is_empty());
+    LaunchSchedule { stages, buf_slots, staged_slots }
 }
 
 /// Naive lowering. Validates every task against the manifest via the
@@ -244,6 +462,140 @@ mod tests {
         let composite = vec![Param::composite(Record::new("T"))];
         assert_eq!(param_slots(&composite, 4), vec![0]);
         assert_eq!(param_slots(&[], 0), Vec::<usize>::new());
+    }
+
+    fn ci(dest: BufId, task: TaskId) -> Action {
+        Action::CopyIn { dest, source: CopySource::Param { task, param: 0 } }
+    }
+
+    fn launch(task: TaskId, args: Vec<BufId>, outs: Vec<BufId>) -> Action {
+        Action::Launch { task, key: "k".into(), args, outs }
+    }
+
+    #[test]
+    fn schedule_stages_a_linear_chain() {
+        let actions = vec![
+            ci(0, 0),
+            launch(0, vec![0], vec![1]),
+            Action::CopyOut { task: 0, bufs: vec![1] },
+            Action::Barrier,
+        ];
+        let s = launch_schedule(&actions);
+        assert_eq!(s.stages, vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(s.buf_slots, 2);
+        assert_eq!(s.staged_slots, 1);
+        assert_eq!(s.max_width(), 1);
+        assert_eq!(s.action_count(), actions.len());
+    }
+
+    #[test]
+    fn schedule_runs_independent_branches_in_one_stage() {
+        // Two independent tasks: their uploads share a stage, their
+        // launches share the next — the kernel-parallelism win.
+        let actions = vec![
+            ci(0, 0),
+            launch(0, vec![0], vec![1]),
+            ci(2, 1),
+            launch(1, vec![2], vec![3]),
+            Action::CopyOut { task: 0, bufs: vec![1] },
+            Action::CopyOut { task: 1, bufs: vec![3] },
+            Action::Barrier,
+        ];
+        let s = launch_schedule(&actions);
+        assert_eq!(s.stages, vec![vec![0, 2], vec![1, 3], vec![4, 5], vec![6]]);
+        assert_eq!(s.max_width(), 2);
+    }
+
+    #[test]
+    fn schedule_sinks_uploads_below_earlier_compute() {
+        // A -> B chain where B also takes a fresh input: B's upload
+        // must sink next to A's launch (H2D overlapping compute), not
+        // front-load into stage 0.
+        let actions = vec![
+            ci(0, 0),
+            launch(0, vec![0], vec![1]),
+            ci(2, 1),
+            launch(1, vec![1, 2], vec![3]),
+            Action::CopyOut { task: 1, bufs: vec![3] },
+            Action::Barrier,
+        ];
+        let s = launch_schedule(&actions);
+        assert_eq!(
+            s.stages,
+            vec![vec![0], vec![1, 2], vec![3], vec![4], vec![5]],
+            "upload for task 1 overlaps task 0's launch"
+        );
+    }
+
+    #[test]
+    fn schedule_never_crosses_barriers() {
+        // The naive (unoptimized) stream keeps a barrier per task:
+        // everything after a barrier stages strictly later.
+        let actions = vec![
+            ci(0, 0),
+            launch(0, vec![0], vec![1]),
+            Action::Barrier,
+            ci(2, 1),
+            launch(1, vec![2], vec![3]),
+            Action::Barrier,
+        ];
+        let s = launch_schedule(&actions);
+        assert_eq!(
+            s.stages,
+            vec![vec![0], vec![1], vec![2], vec![3], vec![4], vec![5]],
+            "barriers serialize the unoptimized stream"
+        );
+    }
+
+    #[test]
+    fn schedule_orders_staged_roundtrips_after_their_copyout() {
+        // Naive host round-trip: the consumer's CopyIn reads what the
+        // producer's CopyOut staged.
+        let actions = vec![
+            ci(0, 0),
+            launch(0, vec![0], vec![1]),
+            Action::CopyOut { task: 0, bufs: vec![1] },
+            Action::CopyIn { dest: 2, source: CopySource::StagedOutput { task: 0, index: 0 } },
+            launch(1, vec![2], vec![3]),
+            Action::CopyOut { task: 1, bufs: vec![3] },
+            Action::Barrier,
+        ];
+        let s = launch_schedule(&actions);
+        let stage_of = |idx: usize| s.stages.iter().position(|st| st.contains(&idx)).unwrap();
+        assert!(stage_of(3) > stage_of(2), "staged CopyIn after the CopyOut");
+        assert!(stage_of(4) > stage_of(3));
+        assert_eq!(s.action_count(), actions.len());
+    }
+
+    #[test]
+    fn schedule_handles_buffer_reuse_in_hand_built_streams() {
+        // Plan streams are write-once, but launch_schedule is public:
+        // a hand-built stream that reuses BufId 0 must order each
+        // consumer after its own producer (nearest preceding writer)
+        // and each rewrite after the prior readers (anti-dependency).
+        let actions = vec![
+            ci(0, 0),
+            launch(0, vec![0], vec![1]),
+            ci(0, 1), // rewrite of buf 0
+            launch(1, vec![0], vec![2]),
+        ];
+        let s = launch_schedule(&actions);
+        let stage_of = |idx: usize| s.stages.iter().position(|st| st.contains(&idx)).unwrap();
+        assert!(stage_of(1) > stage_of(0), "first launch after first write");
+        assert!(stage_of(2) > stage_of(1), "rewrite waits for the prior reader");
+        assert!(stage_of(3) > stage_of(2), "second launch reads the rewrite");
+        assert_eq!(s.buf_slots, 3, "buf 0 is one slot however often it is written");
+        assert_eq!(s.action_count(), actions.len());
+    }
+
+    #[test]
+    fn schedule_of_empty_stream_is_empty() {
+        let s = launch_schedule(&[]);
+        assert!(s.is_empty());
+        assert_eq!(s.action_count(), 0);
+        assert_eq!(s.buf_slots, 0);
+        assert_eq!(s.staged_slots, 0);
+        assert_eq!(s.max_width(), 0);
     }
 
     #[test]

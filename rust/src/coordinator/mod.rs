@@ -18,8 +18,8 @@ pub mod scheduler;
 pub mod task;
 
 pub use compiled::{Bindings, CompiledGraph, CompiledNode, InputSpec, PlanStats};
-pub use executor::{ExecutionOptions, ExecutionReport, Executor};
+pub use executor::{ActionTiming, ExecutionOptions, ExecutionReport, Executor, PipelineMode};
 pub use graph::{GraphOutputs, TaskGraph, TaskNode};
-pub use lowering::{action_histogram, Action, BufId, CopySource};
+pub use lowering::{action_histogram, launch_schedule, Action, BufId, CopySource, LaunchSchedule};
 pub use optimizer::{optimize, OptimizerConfig};
 pub use task::{AtomicDecl, AtomicOp, Dims, MemSpace, Param, ParamSource, Task, TaskId};

@@ -39,6 +39,10 @@ fn main() -> anyhow::Result<()> {
     .flag("verbose", "print runtime metrics after execution")
     .flag("no-opt", "disable the task-graph optimizer")
     .flag(
+        "no-overlap",
+        "replay launches sequentially instead of the dependency-staged pipeline (ablation)",
+    )
+    .flag(
         "plan-split",
         "compile once and report plan construction separately from steady-state launches",
     )
@@ -67,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             args.get_usize("iters").unwrap_or(0),
             args.has_flag("verbose"),
             args.has_flag("no-opt"),
+            args.has_flag("no-overlap"),
             args.has_flag("plan-split"),
             args.get_usize("devices").unwrap_or(0),
         ),
@@ -174,10 +179,16 @@ fn run(
     iters: usize,
     verbose: bool,
     no_opt: bool,
+    no_overlap: bool,
     plan_split: bool,
     devices: usize,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!name.is_empty(), "--benchmark required");
+    let opts = if no_overlap {
+        ExecutionOptions::sequential()
+    } else {
+        ExecutionOptions::default()
+    };
     let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
     if pool_width > 1 {
         if plan_split {
@@ -186,7 +197,7 @@ fn run(
                  split below)"
             );
         }
-        return run_pool(name, profile, variant, iters, verbose, no_opt, pool_width);
+        return run_pool(name, profile, variant, iters, verbose, no_opt, opts, pool_width);
     }
     let dev = Cuda::get_device(0)?.create_device_context()?;
     let (g, id, _) = build_graph(&dev, name, profile, variant, no_opt)?;
@@ -198,22 +209,25 @@ fn run(
         // separately from the bind-and-launch steady state.
         let plan = g.compile()?;
         println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
-        let first = plan.launch(&Bindings::new())?;
+        let first = plan.launch_with(&Bindings::new(), opts.clone())?;
         println!(
-            "first launch: {} (fresh_compiles {}, h2d {} B, d2h {} B)",
+            "first launch: {} (fresh_compiles {}, h2d {} B, d2h {} B, {} stages)",
             fmt_secs(first.wall.as_secs_f64()),
             first.fresh_compiles,
             first.h2d_bytes,
             first.d2h_bytes,
+            first.pipeline_stages,
         );
         let h = Harness::new(1, 3, iters);
         let r = h.run(name, || {
-            plan.launch(&Bindings::new()).expect("steady-state launch");
+            plan.launch_with(&Bindings::new(), opts.clone())
+                .expect("steady-state launch");
         });
         println!(
-            "steady-state launch: {}/iter over {iters} iters (cv {:.1}%)",
+            "steady-state launch: {}/iter over {iters} iters (cv {:.1}%{})",
             fmt_secs(r.per_iter()),
-            r.summary.cv() * 100.0
+            r.summary.cv() * 100.0,
+            if no_overlap { ", sequential replay" } else { ", pipelined" },
         );
         let _ = id;
         if verbose {
@@ -224,7 +238,7 @@ fn run(
     }
 
     // First execution: includes the lazy compile (JIT analog).
-    let first = g.execute_with_report()?;
+    let first = g.execute_with_options(opts.clone())?;
     println!(
         "{name}.{variant}.{profile}: first run {} (compile {}, h2d {} B, d2h {} B)",
         fmt_secs(first.wall.as_secs_f64()),
@@ -235,7 +249,8 @@ fn run(
     // Steady state over `iters`.
     let h = Harness::new(1, 3, iters);
     let r = h.run(name, || {
-        g.execute().expect("steady-state execution");
+        g.execute_with_options(opts.clone())
+            .expect("steady-state execution");
     });
     println!(
         "steady state: {}/iter over {iters} iters (cv {:.1}%)",
@@ -298,6 +313,7 @@ fn dump_pool_metrics(replicated: &ReplicatedGraph) {
 /// Multi-device run: replicate the benchmark graph across a device
 /// pool and launch every replica in parallel per iteration, reporting
 /// aggregate graph throughput and per-device ledgers.
+#[allow(clippy::too_many_arguments)]
 fn run_pool(
     name: &str,
     profile: &str,
@@ -305,6 +321,7 @@ fn run_pool(
     iters: usize,
     verbose: bool,
     no_opt: bool,
+    opts: ExecutionOptions,
     devices: usize,
 ) -> anyhow::Result<()> {
     let (pool, replicated) = open_replicated(name, profile, variant, no_opt, devices)?;
@@ -314,7 +331,9 @@ fn run_pool(
     // device at once.
     let h = Harness::new(1, 3, iters);
     let r = h.run(name, || {
-        replicated.launch_all(&Bindings::new()).expect("pool steady-state launch");
+        replicated
+            .launch_all_with(&Bindings::new(), opts.clone())
+            .expect("pool steady-state launch");
     });
     println!(
         "steady state: {}/iter over {iters} iters ({} graphs/iter => {:.1} graphs/s, \
@@ -392,11 +411,14 @@ fn serve_bench(
             mem.capacity()
         );
         println!(
-            "ledger: used {} / {} B, {} evictions, {} oversized rejections",
+            "ledger: used {} / {} B, {} evictions, {} oversized rejections, \
+             {} h2d dedup hits ({} B saved)",
             mem.used(),
             mem.capacity(),
             mem.stats.evictions,
-            mem.stats.rejected_oversized
+            mem.stats.rejected_oversized,
+            mem.stats.dedup_hits,
+            mem.stats.dedup_hit_bytes,
         );
     }
     let _ = id;

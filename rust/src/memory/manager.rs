@@ -17,6 +17,21 @@
 //!   overcommitting after evicting everything;
 //! * every eviction increments `stats.evictions`, including the
 //!   stale-version invalidation path in [`DeviceMemoryManager::lookup`].
+//!
+//! Besides caller-keyed persistent data, the ledger also carries the
+//! **content-addressed upload cache** ([`lookup_uploaded`] /
+//! [`admit_uploaded`]): bound inputs are keyed by a content hash, so
+//! rebinding byte-identical data skips the H2D transfer
+//! (`stats.dedup_hits`) while changed bytes hash to a new key and
+//! re-upload — stale reuse is impossible by construction. The transfer
+//! itself happens *outside* the lock (lookup under lock, upload,
+//! admit under lock), so cache misses never serialize concurrent
+//! launches. Both keyspaces share one ledger and one capacity, but
+//! cache admissions only evict other cache entries — persistent state
+//! is never sacrificed for an upload that may never repeat.
+//!
+//! [`lookup_uploaded`]: DeviceMemoryManager::lookup_uploaded
+//! [`admit_uploaded`]: DeviceMemoryManager::admit_uploaded
 
 use std::collections::HashMap;
 
@@ -27,6 +42,29 @@ use super::schema::SchemaRegistry;
 
 /// Stable identity of a host datum across task graphs.
 pub type DataId = u64;
+
+/// Ledger key: user-declared persistent data ids and content-addressed
+/// upload-cache entries live in one resident map (one LRU order, one
+/// `used <= capacity` invariant), but in separate keyspaces so a
+/// content hash can never alias a caller's `DataId`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum ResidentKey {
+    /// A caller-declared persistent datum (`Param::persistent`).
+    Data(DataId),
+    /// A bound-input upload, keyed by the first half of its content
+    /// fingerprint (`HostValue::content_fingerprint`); the second half
+    /// rides in the entry's version slot and is verified on every hit.
+    Content(u64),
+}
+
+impl ResidentKey {
+    /// The raw id reported in ledger errors.
+    fn raw(self) -> u64 {
+        match self {
+            ResidentKey::Data(id) | ResidentKey::Content(id) => id,
+        }
+    }
+}
 
 /// Typed ledger errors, surfaced through `ensure_resident` and the
 /// serving launch path.
@@ -57,6 +95,10 @@ pub struct MemoryStats {
     pub download_bytes: u64,
     pub residency_hits: u64,
     pub residency_hit_bytes: u64,
+    /// Bound-input uploads skipped because the content-addressed
+    /// upload cache already held byte-identical data on the device.
+    pub dedup_hits: u64,
+    pub dedup_hit_bytes: u64,
     pub evictions: u64,
     /// Admissions rejected because the buffer exceeds device capacity.
     pub rejected_oversized: u64,
@@ -67,7 +109,7 @@ pub struct DeviceMemoryManager {
     capacity: u64,
     used: u64,
     clock: u64,
-    resident: HashMap<DataId, Resident>,
+    resident: HashMap<ResidentKey, Resident>,
     pub schemas: SchemaRegistry,
     pub stats: MemoryStats,
 }
@@ -103,7 +145,7 @@ impl DeviceMemoryManager {
     pub fn lookup(&mut self, id: DataId, version: u64) -> Option<SharedBuffer> {
         self.clock += 1;
         let clock = self.clock;
-        match self.resident.get_mut(&id) {
+        match self.resident.get_mut(&ResidentKey::Data(id)) {
             Some(r) if r.version == version => {
                 r.last_use = clock;
                 self.stats.residency_hits += 1;
@@ -111,7 +153,37 @@ impl DeviceMemoryManager {
                 Some(SharedBuffer::clone(&r.buffer))
             }
             Some(_) => {
-                self.evict_counted(id);
+                self.evict_counted(ResidentKey::Data(id));
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Look up the content-addressed upload cache. A hit means a
+    /// byte-identical bound input is already on the device — the H2D
+    /// transfer is skipped entirely (counted in `stats.dedup_hits`).
+    /// Content entries carry the fingerprint's independent `check`
+    /// half in their version slot plus their byte length, and both are
+    /// verified on every hit: a key collision between distinct
+    /// contents is detected, the stale entry evicted, and the caller
+    /// re-uploads — changed bytes can never be substituted. On a miss,
+    /// upload *outside* the ledger lock and hand the buffer to
+    /// [`admit_uploaded`](Self::admit_uploaded).
+    pub fn lookup_uploaded(&mut self, key: u64, check: u64, bytes: u64) -> Option<SharedBuffer> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.resident.get_mut(&ResidentKey::Content(key)) {
+            Some(r) if r.version == check && r.bytes == bytes => {
+                r.last_use = clock;
+                self.stats.dedup_hits += 1;
+                self.stats.dedup_hit_bytes += r.bytes;
+                Some(SharedBuffer::clone(&r.buffer))
+            }
+            Some(_) => {
+                // 64-bit key collision between distinct contents: drop
+                // the old entry (counted eviction) and re-upload.
+                self.evict_counted(ResidentKey::Content(key));
                 None
             }
             None => None,
@@ -131,7 +203,7 @@ impl DeviceMemoryManager {
     ) -> Result<(), MemoryError> {
         self.stats.uploads += 1;
         self.stats.upload_bytes += bytes;
-        self.admit(id, version, bytes, buffer)
+        self.admit(ResidentKey::Data(id), version, bytes, buffer)
     }
 
     /// Make (id, version) resident without counting an upload (the
@@ -141,30 +213,30 @@ impl DeviceMemoryManager {
     /// silently overcommitting the ledger.
     fn admit(
         &mut self,
-        id: DataId,
+        key: ResidentKey,
         version: u64,
         bytes: u64,
         buffer: SharedBuffer,
     ) -> Result<(), MemoryError> {
         if bytes > self.capacity {
             self.stats.rejected_oversized += 1;
-            return Err(MemoryError::Oversized { id, bytes, capacity: self.capacity });
+            return Err(MemoryError::Oversized { id: key.raw(), bytes, capacity: self.capacity });
         }
         self.clock += 1;
-        if self.resident.contains_key(&id) {
-            self.evict(id);
+        if self.resident.contains_key(&key) {
+            self.evict_key(key);
         }
         while self.used + bytes > self.capacity && !self.resident.is_empty() {
             let lru = self
                 .resident
                 .iter()
                 .min_by_key(|(_, r)| r.last_use)
-                .map(|(id, _)| *id)
+                .map(|(key, _)| *key)
                 .expect("non-empty");
             self.evict_counted(lru);
         }
         self.used += bytes;
-        self.resident.insert(id, Resident { buffer, bytes, version, last_use: self.clock });
+        self.resident.insert(key, Resident { buffer, bytes, version, last_use: self.clock });
         Ok(())
     }
 
@@ -187,13 +259,13 @@ impl DeviceMemoryManager {
     ) -> Result<(), MemoryError> {
         self.clock += 1;
         let clock = self.clock;
-        match self.resident.get_mut(&id) {
+        match self.resident.get_mut(&ResidentKey::Data(id)) {
             Some(r) if r.version == version => {
                 r.last_use = clock;
                 Ok(())
             }
             Some(_) => Ok(()),
-            None => self.admit(id, version, bytes, SharedBuffer::clone(buffer)),
+            None => self.admit(ResidentKey::Data(id), version, bytes, SharedBuffer::clone(buffer)),
         }
     }
 
@@ -225,6 +297,79 @@ impl DeviceMemoryManager {
         Ok((buf, false))
     }
 
+    /// Second half of the content-addressed upload: account a bound
+    /// input whose bytes were transferred *outside* the ledger lock
+    /// (the transfer itself must never serialize concurrent launches)
+    /// and admit it under its fingerprint `(key, check)`. Returns the
+    /// canonical buffer: if a racing launch admitted byte-identical
+    /// content between the caller's miss and this call, the
+    /// already-resident buffer wins and the caller's duplicate is
+    /// dropped (verified against `check`/`bytes`, so a key collision
+    /// instead replaces the slot with the fresh bytes). Cache entries
+    /// are
+    /// ledger-accounted like any resident buffer (LRU recency,
+    /// `used <= capacity`), but cache admissions only ever evict
+    /// *other cache entries* — the upload cache never steals device
+    /// memory from caller-declared persistent state, so a stream of
+    /// unique-content requests cannot thrash the persistent working
+    /// set. When persistent data holds the remaining capacity (or the
+    /// value exceeds the whole device), the upload simply stays
+    /// uncached — matching the uncached fresh-upload path.
+    pub fn admit_uploaded(
+        &mut self,
+        key: u64,
+        check: u64,
+        bytes: u64,
+        buffer: SharedBuffer,
+    ) -> SharedBuffer {
+        self.stats.uploads += 1;
+        self.stats.upload_bytes += bytes;
+        self.clock += 1;
+        let clock = self.clock;
+        match self.resident.get_mut(&ResidentKey::Content(key)) {
+            Some(r) if r.version == check && r.bytes == bytes => {
+                // Lost the race to an identical concurrent upload:
+                // reuse the resident buffer (content-equal, results
+                // unchanged).
+                r.last_use = clock;
+                return SharedBuffer::clone(&r.buffer);
+            }
+            Some(_) => {
+                // Key collision with different content: the caller's
+                // freshly uploaded bytes win the slot.
+                self.evict_counted(ResidentKey::Content(key));
+            }
+            None => {}
+        }
+        if bytes > self.capacity {
+            return buffer; // can never fit; don't churn the cache
+        }
+        // Make room by evicting cache-owned entries only.
+        while self.used + bytes > self.capacity {
+            let lru_content = self
+                .resident
+                .iter()
+                .filter(|(k, _)| matches!(k, ResidentKey::Content(_)))
+                .min_by_key(|(_, r)| r.last_use)
+                .map(|(k, _)| *k);
+            match lru_content {
+                Some(k) => self.evict_counted(k),
+                None => return buffer, // persistent data owns the rest
+            }
+        }
+        self.used += bytes;
+        self.resident.insert(
+            ResidentKey::Content(key),
+            Resident {
+                buffer: SharedBuffer::clone(&buffer),
+                bytes,
+                version: check,
+                last_use: clock,
+            },
+        );
+        buffer
+    }
+
     /// Record a D2H transfer (for stats symmetry; the buffer itself is
     /// read by the runtime).
     pub fn note_download(&mut self, bytes: u64) {
@@ -240,7 +385,11 @@ impl DeviceMemoryManager {
 
     /// Drop one resident entry (ledger bookkeeping only — no stats).
     pub fn evict(&mut self, id: DataId) {
-        if let Some(r) = self.resident.remove(&id) {
+        self.evict_key(ResidentKey::Data(id));
+    }
+
+    fn evict_key(&mut self, key: ResidentKey) {
+        if let Some(r) = self.resident.remove(&key) {
             self.used -= r.bytes;
         }
     }
@@ -248,9 +397,9 @@ impl DeviceMemoryManager {
     /// The counted eviction path: every code path that drops a resident
     /// entry as *eviction work* (LRU pressure, stale-version churn)
     /// goes through here so `stats.evictions` never under-reports.
-    fn evict_counted(&mut self, id: DataId) {
-        if self.resident.contains_key(&id) {
-            self.evict(id);
+    fn evict_counted(&mut self, key: ResidentKey) {
+        if self.resident.contains_key(&key) {
+            self.evict_key(key);
             self.stats.evictions += 1;
         }
     }
@@ -401,6 +550,143 @@ mod tests {
         mm.insert(1, 1, 4096, upload(&rt, 1024, 2.0)).unwrap();
         mm.retain_resident(1, 0, 4096, &buf).unwrap();
         assert!(mm.lookup(1, 1).is_some(), "newer version survives stale retain");
+    }
+
+    /// The executor's two-phase cached-upload dance: lookup (would be
+    /// under the lock), transfer (outside), admit (under the lock).
+    fn cached_upload(
+        mm: &mut DeviceMemoryManager,
+        rt: &PjrtRuntime,
+        v: &HostValue,
+    ) -> (SharedBuffer, bool) {
+        let (key, check) = v.content_fingerprint();
+        let bytes = v.nbytes() as u64;
+        if let Some(b) = mm.lookup_uploaded(key, check, bytes) {
+            return (b, true);
+        }
+        let b = DeviceBuffer::shared(rt.upload(v).unwrap());
+        (mm.admit_uploaded(key, check, bytes, b), false)
+    }
+
+    #[test]
+    fn upload_cache_dedups_identical_content_only() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        let v = HostValue::f32(vec![256], vec![1.5; 256]);
+        let (b1, hit1) = cached_upload(&mut mm, &rt, &v);
+        assert!(!hit1);
+        assert_eq!(mm.stats.uploads, 1);
+        assert_eq!(mm.used(), v.nbytes() as u64);
+
+        // Byte-identical rebind: cache hit, no new upload.
+        let same = HostValue::f32(vec![256], vec![1.5; 256]);
+        let (b2, hit2) = cached_upload(&mut mm, &rt, &same);
+        assert!(hit2);
+        assert!(SharedBuffer::ptr_eq(&b1, &b2));
+        assert_eq!(mm.stats.uploads, 1);
+        assert_eq!(mm.stats.dedup_hits, 1);
+        assert_eq!(mm.stats.dedup_hit_bytes, v.nbytes() as u64);
+
+        // Changed bytes hash differently: a fresh upload, never stale
+        // reuse.
+        let mut data = vec![1.5; 256];
+        data[17] = -2.0;
+        let changed = HostValue::f32(vec![256], data);
+        assert_ne!(v.content_fingerprint(), changed.content_fingerprint());
+        let (b3, hit3) = cached_upload(&mut mm, &rt, &changed);
+        assert!(!hit3);
+        assert!(!SharedBuffer::ptr_eq(&b1, &b3));
+        assert_eq!(mm.stats.uploads, 2);
+        assert_eq!(mm.resident_count(), 2, "both contents stay cached");
+    }
+
+    #[test]
+    fn admit_uploaded_resolves_races_to_the_resident_buffer() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1 << 20);
+        let v = HostValue::f32(vec![128], vec![4.0; 128]);
+        let (key, check) = v.content_fingerprint();
+        let bytes = v.nbytes() as u64;
+        let first = mm.admit_uploaded(key, check, bytes, upload(&rt, 128, 4.0));
+        // A racing launch that missed before `first` was admitted ends
+        // up here with its own duplicate buffer: the resident one wins,
+        // the ledger admits nothing new, but the transfer is counted
+        // (its bytes really crossed the bus).
+        let loser = mm.admit_uploaded(key, check, bytes, upload(&rt, 128, 4.0));
+        assert!(SharedBuffer::ptr_eq(&first, &loser));
+        assert_eq!(mm.resident_count(), 1);
+        assert_eq!(mm.used(), bytes);
+        assert_eq!(mm.stats.uploads, 2);
+
+        // A *key* collision with different content must never reuse
+        // the resident bytes: the verifier half catches it, the fresh
+        // upload takes the slot, and a later lookup with the old
+        // fingerprint misses.
+        let w = HostValue::f32(vec![128], vec![9.0; 128]);
+        let (_, w_check) = w.content_fingerprint();
+        assert_ne!(check, w_check);
+        let fresh = upload(&rt, 128, 9.0);
+        let kept = mm.admit_uploaded(key, w_check, bytes, SharedBuffer::clone(&fresh));
+        assert!(SharedBuffer::ptr_eq(&kept, &fresh), "collision must not reuse stale bytes");
+        assert!(mm.lookup_uploaded(key, w_check, bytes).is_some());
+        // Probing with the old fingerprint misses (and, by policy,
+        // drops the colliding slot so the prober's re-upload wins it).
+        assert!(mm.lookup_uploaded(key, check, bytes).is_none(), "old entry was replaced");
+        assert_eq!(mm.resident_count(), 0, "mismatched lookup vacates the slot");
+    }
+
+    #[test]
+    fn content_cache_never_evicts_persistent_entries() {
+        let Some(rt) = runtime() else { return };
+        // Capacity for two 4 KiB buffers.
+        let mut mm = DeviceMemoryManager::new(8192);
+        mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
+        let v = HostValue::f32(vec![1024], vec![2.0; 1024]);
+        cached_upload(&mut mm, &rt, &v);
+        assert_eq!(mm.used(), 8192);
+        // A second cache admission under pressure evicts the LRU
+        // *cache* entry — never the caller's persistent data.
+        let w = HostValue::f32(vec![1024], vec![3.0; 1024]);
+        cached_upload(&mut mm, &rt, &w);
+        assert_eq!(mm.stats.evictions, 1);
+        assert!(mm.used() <= mm.capacity());
+        assert!(mm.lookup(1, 0).is_some(), "persistent entry survives cache churn");
+        {
+            let (vk, vc) = v.content_fingerprint();
+            assert!(
+                mm.lookup_uploaded(vk, vc, v.nbytes() as u64).is_none(),
+                "older cache entry was the victim"
+            );
+        }
+        // When persistent data owns the whole device (the new insert
+        // evicts the cached `w` through the generic LRU path — data
+        // admissions may evict anything), uploads simply stay uncached
+        // and the ledger never overcommits.
+        mm.insert(2, 0, 4096, upload(&rt, 1024, 5.0)).unwrap();
+        let z = HostValue::f32(vec![1024], vec![7.0; 1024]);
+        let (_, hit) = cached_upload(&mut mm, &rt, &z);
+        assert!(!hit);
+        let (_, hit) = cached_upload(&mut mm, &rt, &z);
+        assert!(!hit, "nothing was admitted while persistents fill the device");
+        assert!(mm.used() <= mm.capacity());
+        assert!(mm.lookup(1, 0).is_some());
+        assert!(mm.lookup(2, 0).is_some());
+    }
+
+    #[test]
+    fn oversized_content_uploads_are_not_cached() {
+        let Some(rt) = runtime() else { return };
+        let mut mm = DeviceMemoryManager::new(1024);
+        let v = HostValue::f32(vec![1024], vec![1.0; 1024]); // 4 KiB > 1 KiB capacity
+        let (_, hit) = cached_upload(&mut mm, &rt, &v);
+        assert!(!hit);
+        assert_eq!(mm.stats.uploads, 1, "the transfer itself still happens");
+        assert_eq!(mm.resident_count(), 0, "oversized data never admitted");
+        assert_eq!(mm.used(), 0);
+        // Re-binding it uploads again (no cache entry to hit).
+        let (_, hit) = cached_upload(&mut mm, &rt, &v);
+        assert!(!hit);
+        assert_eq!(mm.stats.uploads, 2);
     }
 
     #[test]

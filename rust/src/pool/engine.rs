@@ -71,6 +71,10 @@ struct Lane {
     outstanding: AtomicUsize,
     completed: AtomicU64,
     errors: AtomicU64,
+    /// Upload-cache hits / bus transfers on this lane (per-device dedup
+    /// rows in the report).
+    dedup_hits: AtomicU64,
+    h2d_transfers: AtomicU64,
     latencies: Mutex<LatencyLog>,
 }
 
@@ -110,6 +114,8 @@ impl PoolEngine {
                     outstanding: AtomicUsize::new(0),
                     completed: AtomicU64::new(0),
                     errors: AtomicU64::new(0),
+                    dedup_hits: AtomicU64::new(0),
+                    h2d_transfers: AtomicU64::new(0),
                     latencies: Mutex::new(LatencyLog::default()),
                 })
             })
@@ -176,11 +182,17 @@ impl PoolEngine {
         let mut per_device = Vec::with_capacity(self.lanes.len());
         let mut requests = 0u64;
         let mut errors = 0u64;
+        let mut dedup_hits = 0u64;
+        let mut h2d_transfers = 0u64;
         for lane in &self.lanes {
             let completed = lane.completed.load(Ordering::Relaxed);
             let lane_errors = lane.errors.load(Ordering::Relaxed);
+            let lane_dedup = lane.dedup_hits.load(Ordering::Relaxed);
+            let lane_h2d = lane.h2d_transfers.load(Ordering::Relaxed);
             requests += completed;
             errors += lane_errors;
+            dedup_hits += lane_dedup;
+            h2d_transfers += lane_h2d;
             let mut log = lane.latencies.lock().unwrap();
             merged.merge_from(&log);
             // Reuse the aggregate fill for the lane's own percentiles.
@@ -193,6 +205,8 @@ impl PoolEngine {
                 p50_ms: lane_report.p50_ms,
                 p95_ms: lane_report.p95_ms,
                 queue_p95_ms: lane_report.queue_p95_ms,
+                h2d_dedup_hits: lane_dedup,
+                h2d_transfers: lane_h2d,
             });
         }
         let mut report = ServeReport {
@@ -205,6 +219,8 @@ impl PoolEngine {
             } else {
                 0.0
             },
+            h2d_dedup_hits: dedup_hits,
+            h2d_transfers,
             per_device,
             ..ServeReport::default()
         };
@@ -234,16 +250,21 @@ fn lane_loop(lane: &Lane) {
         let queue = req.submitted.elapsed();
         let t0 = Instant::now();
         let result = lane.plan.launch(&req.bindings);
-        let timing = RequestTiming { queue, launch: t0.elapsed(), device: lane.device };
-        match &result {
-            Ok(_) => {
+        let launch = t0.elapsed();
+        let timing = match &result {
+            Ok(rep) => {
+                let timing = RequestTiming::from_launch(queue, launch, rep, lane.device);
                 lane.completed.fetch_add(1, Ordering::Relaxed);
+                lane.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
+                lane.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
                 lane.latencies.lock().unwrap().record(&timing);
+                timing
             }
             Err(_) => {
                 lane.errors.fetch_add(1, Ordering::Relaxed);
+                RequestTiming { queue, launch, device: lane.device, ..RequestTiming::default() }
             }
-        }
+        };
         // The request is finished either way: stop attracting routing
         // pressure for it before replying.
         lane.outstanding.fetch_sub(1, Ordering::Relaxed);

@@ -27,7 +27,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context};
 
-use crate::coordinator::{Bindings, CompiledGraph, ExecutionReport, GraphOutputs, TaskGraph};
+use crate::coordinator::{
+    Bindings, CompiledGraph, ExecutionOptions, ExecutionReport, GraphOutputs, TaskGraph,
+};
 use crate::runtime::buffer::HostValue;
 use crate::runtime::device::DeviceContext;
 
@@ -117,10 +119,22 @@ impl ReplicatedGraph {
         bindings: &Bindings,
         shards: &ShardSpec,
     ) -> anyhow::Result<ShardedReport> {
+        self.launch_sharded_with(bindings, shards, ExecutionOptions::default())
+    }
+
+    /// [`launch_sharded`](Self::launch_sharded) with explicit execution
+    /// options (pipeline mode, upload cache, per-action timing) applied
+    /// to every per-device launch.
+    pub fn launch_sharded_with(
+        &self,
+        bindings: &Bindings,
+        shards: &ShardSpec,
+        opts: ExecutionOptions,
+    ) -> anyhow::Result<ShardedReport> {
         let t0 = Instant::now();
         let (per_dev, split_axis) =
             shard::scatter(bindings, shards, &self.replicas[0], self.replicas.len())?;
-        let per_device = self.launch_each(&per_dev)?;
+        let per_device = self.launch_each(&per_dev, &opts)?;
         let outputs = gather(&per_device, split_axis)?;
         Ok(ShardedReport { outputs, per_device, wall: t0.elapsed(), split_axis })
     }
@@ -128,21 +142,38 @@ impl ReplicatedGraph {
     /// Launch the same `bindings` on every replica in parallel
     /// (redundant execution; per-device reports in device order).
     pub fn launch_all(&self, bindings: &Bindings) -> anyhow::Result<Vec<ExecutionReport>> {
+        self.launch_all_with(bindings, ExecutionOptions::default())
+    }
+
+    /// [`launch_all`](Self::launch_all) with explicit execution
+    /// options.
+    pub fn launch_all_with(
+        &self,
+        bindings: &Bindings,
+        opts: ExecutionOptions,
+    ) -> anyhow::Result<Vec<ExecutionReport>> {
         let per_dev: Vec<Bindings> =
             (0..self.replicas.len()).map(|_| bindings.clone()).collect();
-        self.launch_each(&per_dev)
+        self.launch_each(&per_dev, &opts)
     }
 
     /// One launch per replica, each on its own thread (the per-device
     /// bindings slice must be exactly one entry per replica).
-    fn launch_each(&self, per_dev: &[Bindings]) -> anyhow::Result<Vec<ExecutionReport>> {
+    fn launch_each(
+        &self,
+        per_dev: &[Bindings],
+        opts: &ExecutionOptions,
+    ) -> anyhow::Result<Vec<ExecutionReport>> {
         debug_assert_eq!(per_dev.len(), self.replicas.len());
         let results: Vec<anyhow::Result<ExecutionReport>> = thread::scope(|s| {
             let handles: Vec<_> = self
                 .replicas
                 .iter()
                 .zip(per_dev)
-                .map(|(plan, b)| s.spawn(move || plan.launch(b)))
+                .map(|(plan, b)| {
+                    let opts = opts.clone();
+                    s.spawn(move || plan.launch_with(b, opts))
+                })
                 .collect();
             handles
                 .into_iter()

@@ -314,6 +314,59 @@ impl HostValue {
         })
     }
 
+    /// 128-bit content fingerprint over dtype tag, shape and raw
+    /// element bits — `(key, check)` for the per-device H2D upload
+    /// cache: `key` indexes the cache, `check` is an independently
+    /// mixed verifier the ledger compares on every hit, so a collision
+    /// in either 64-bit half alone can never substitute wrong bytes.
+    /// Two FNV-style xor-multiply accumulators run in one pass (one
+    /// multiply each per 4-byte element), so the scan stays near
+    /// memory bandwidth — it covers the full tensor on every cached
+    /// launch. Equal values fingerprint equal by construction.
+    pub fn content_fingerprint(&self) -> (u64, u64) {
+        const OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset
+        const PRIME_A: u64 = 0x100_0000_01b3; // FNV prime
+        const OFFSET_B: u64 = 0x9e37_79b9_7f4a_7c15; // golden ratio
+        const PRIME_B: u64 = 0xc2b2_ae3d_27d4_eb4f; // xxh64 prime 2
+        #[inline]
+        fn mix(h: &mut u64, prime: u64, word: u64) {
+            *h = (*h ^ word).wrapping_mul(prime);
+        }
+        let mut a = OFFSET_A;
+        let mut b = OFFSET_B;
+        let mut both = |word: u64| {
+            mix(&mut a, PRIME_A, word);
+            mix(&mut b, PRIME_B, word.rotate_left(17));
+        };
+        both(match self {
+            HostValue::F32 { .. } => 1,
+            HostValue::I32 { .. } => 2,
+            HostValue::U32 { .. } => 3,
+        });
+        both(self.shape().len() as u64);
+        for &d in self.shape() {
+            both(d as u64);
+        }
+        match self {
+            HostValue::F32 { data, .. } => {
+                for v in data {
+                    both(u64::from(v.to_bits()));
+                }
+            }
+            HostValue::I32 { data, .. } => {
+                for v in data {
+                    both(u64::from(*v as u32));
+                }
+            }
+            HostValue::U32 { data, .. } => {
+                for v in data {
+                    both(u64::from(*v));
+                }
+            }
+        }
+        (a, b)
+    }
+
     /// Shape/dtype check against a manifest declaration.
     pub fn check_decl(&self, decl: &super::artifact::IoDecl) -> anyhow::Result<()> {
         if self.dtype() != decl.dtype {
@@ -431,6 +484,31 @@ mod tests {
         let out = HostValue::concat_axis(0, &[a, d]).unwrap();
         assert_eq!(out.shape(), &[5]);
         assert_eq!(out.as_f32().unwrap(), &[0.0, 0.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn content_fingerprint_distinguishes_bytes_shape_and_dtype() {
+        let a = HostValue::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostValue::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.content_fingerprint(), b.content_fingerprint(), "equal values agree");
+        // Both halves are real: key and check each carry entropy.
+        let (key, check) = a.content_fingerprint();
+        assert_ne!(key, check);
+        // One changed element changes the fingerprint.
+        let c = HostValue::f32(vec![4], vec![1.0, 2.0, 3.5, 4.0]);
+        assert_ne!(a.content_fingerprint(), c.content_fingerprint());
+        // Same flat bytes, different shape.
+        let d = HostValue::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(a.content_fingerprint(), d.content_fingerprint());
+        // Same bit pattern, different dtype.
+        let i = HostValue::i32(vec![1], vec![1]);
+        let u = HostValue::u32(vec![1], vec![1]);
+        assert_ne!(i.content_fingerprint(), u.content_fingerprint());
+        // -0.0 and 0.0 differ bitwise: distinct cache entries (bitwise
+        // fidelity beats float-semantic aliasing for reproducibility).
+        let z = HostValue::f32(vec![1], vec![0.0]);
+        let nz = HostValue::f32(vec![1], vec![-0.0]);
+        assert_ne!(z.content_fingerprint(), nz.content_fingerprint());
     }
 
     #[test]

@@ -67,6 +67,11 @@ pub struct RequestTiming {
     pub queue: Duration,
     /// Plan launch time (bind + replay, including transfers).
     pub launch: Duration,
+    /// H2D-upload share of `launch` (from the launch's
+    /// `ExecutionReport`; shrinks as the upload cache hits).
+    pub h2d: Duration,
+    /// Kernel-execution share of `launch`.
+    pub kernel: Duration,
     /// Pool device that served the request (0 on a single-device
     /// engine).
     pub device: usize,
@@ -76,6 +81,17 @@ impl RequestTiming {
     /// Total request latency (queue wait + launch).
     pub fn total(&self) -> Duration {
         self.queue + self.launch
+    }
+
+    /// Attribution for one successful launch: the wall split the
+    /// workers record alongside queue wait.
+    pub(crate) fn from_launch(
+        queue: Duration,
+        launch: Duration,
+        report: &ExecutionReport,
+        device: usize,
+    ) -> Self {
+        Self { queue, launch, h2d: report.h2d, kernel: report.launch, device }
     }
 }
 
@@ -125,6 +141,8 @@ pub(crate) struct LatencyLog {
     total_ms: Vec<f64>,
     queue_ms: Vec<f64>,
     launch_ms: Vec<f64>,
+    h2d_ms: Vec<f64>,
+    kernel_ms: Vec<f64>,
 }
 
 impl LatencyLog {
@@ -132,12 +150,16 @@ impl LatencyLog {
         self.total_ms.push(timing.total().as_secs_f64() * 1e3);
         self.queue_ms.push(timing.queue.as_secs_f64() * 1e3);
         self.launch_ms.push(timing.launch.as_secs_f64() * 1e3);
+        self.h2d_ms.push(timing.h2d.as_secs_f64() * 1e3);
+        self.kernel_ms.push(timing.kernel.as_secs_f64() * 1e3);
     }
 
     pub(crate) fn merge_from(&mut self, other: &LatencyLog) {
         self.total_ms.extend_from_slice(&other.total_ms);
         self.queue_ms.extend_from_slice(&other.queue_ms);
         self.launch_ms.extend_from_slice(&other.launch_ms);
+        self.h2d_ms.extend_from_slice(&other.h2d_ms);
+        self.kernel_ms.extend_from_slice(&other.kernel_ms);
     }
 
     /// Fold this log into `report`'s percentile fields. Each vector is
@@ -151,6 +173,8 @@ impl LatencyLog {
         sort(&mut self.total_ms);
         sort(&mut self.queue_ms);
         sort(&mut self.launch_ms);
+        sort(&mut self.h2d_ms);
+        sort(&mut self.kernel_ms);
         let pct = |v: &[f64], p: f64| {
             if v.is_empty() {
                 0.0
@@ -165,6 +189,8 @@ impl LatencyLog {
         report.queue_p50_ms = pct(&self.queue_ms, 50.0);
         report.queue_p95_ms = pct(&self.queue_ms, 95.0);
         report.launch_p95_ms = pct(&self.launch_ms, 95.0);
+        report.h2d_p95_ms = pct(&self.h2d_ms, 95.0);
+        report.kernel_p95_ms = pct(&self.kernel_ms, 95.0);
     }
 }
 
@@ -175,6 +201,10 @@ struct Shared {
     latencies: Mutex<LatencyLog>,
     completed: AtomicU64,
     errors: AtomicU64,
+    /// Upload-cache hits / actual bus transfers across all served
+    /// requests (the dedup hit-rate in the report).
+    dedup_hits: AtomicU64,
+    h2d_transfers: AtomicU64,
 }
 
 /// One device's slice of a pool run (the multi-device breakdown rows
@@ -190,6 +220,10 @@ pub struct DeviceBreakdown {
     /// Queue-wait p95 on this device's lane — the routing-quality
     /// signal (a hot device shows up here first).
     pub queue_p95_ms: f64,
+    /// Upload-cache hits on this device's lane.
+    pub h2d_dedup_hits: u64,
+    /// Uploads that actually crossed this device's bus.
+    pub h2d_transfers: u64,
 }
 
 impl DeviceBreakdown {
@@ -197,12 +231,15 @@ impl DeviceBreakdown {
     /// pool runs).
     pub fn line(&self) -> String {
         format!(
-            "  device {}: {} requests, p50 {:.2} ms, p95 {:.2} ms (queue p95 {:.2} ms){}",
+            "  device {}: {} requests, p50 {:.2} ms, p95 {:.2} ms (queue p95 {:.2} ms, \
+             h2d dedup {}/{}){}",
             self.device,
             self.requests,
             self.p50_ms,
             self.p95_ms,
             self.queue_p95_ms,
+            self.h2d_dedup_hits,
+            self.h2d_dedup_hits + self.h2d_transfers,
             if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
         )
     }
@@ -231,18 +268,47 @@ pub struct ServeReport {
     /// Launch-only p95 (total p95 is not simply queue p95 + launch p95;
     /// all three are reported so wins are attributable).
     pub launch_p95_ms: f64,
+    /// H2D-upload p95 within the launch (the share the upload cache
+    /// shrinks). Per-action sums: under overlapped replay concurrent
+    /// actions' times add up, so these may exceed the launch wall.
+    pub h2d_p95_ms: f64,
+    /// Kernel-execution p95 within the launch (same per-action-sum
+    /// caveat).
+    pub kernel_p95_ms: f64,
+    /// Upload-cache hits across all served requests.
+    pub h2d_dedup_hits: u64,
+    /// Uploads that actually crossed the bus.
+    pub h2d_transfers: u64,
     /// Per-device rows for pool runs (empty on a single-device engine).
     pub per_device: Vec<DeviceBreakdown>,
 }
 
 impl ServeReport {
+    /// Share of all H2D upload work (cache hits + actual bus
+    /// transfers) served from the content cache; 0.0 when nothing was
+    /// uploaded at all. The denominator counts *every* transfer —
+    /// baked host params and persistent misses included — so a plan
+    /// with uncacheable uploads reports the honest whole-launch share,
+    /// not just the bound-input share.
+    pub fn dedup_hit_rate(&self) -> f64 {
+        let total = self.h2d_dedup_hits + self.h2d_transfers;
+        if total == 0 {
+            0.0
+        } else {
+            self.h2d_dedup_hits as f64 / total as f64
+        }
+    }
+
     /// Human summary (`jacc serve-bench` prints this): one aggregate
-    /// line with the queue/launch split, plus one row per pool device.
+    /// line with the queue/launch split (launch further split into
+    /// h2d vs kernel) and the upload-cache hit-rate, plus one row per
+    /// pool device.
     pub fn summary(&self) -> String {
         let mut out = format!(
             "{} workers: {} requests in {:.2} s = {:.0} req/s \
              (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, max {:.2} ms; \
-             queue p95 {:.2} ms, launch p95 {:.2} ms{})",
+             queue p95 {:.2} ms, launch p95 {:.2} ms (h2d p95 {:.2} ms, kernel p95 {:.2} ms); \
+             h2d dedup {}/{} = {:.0}%{})",
             self.workers,
             self.requests,
             self.wall.as_secs_f64(),
@@ -253,6 +319,11 @@ impl ServeReport {
             self.max_ms,
             self.queue_p95_ms,
             self.launch_p95_ms,
+            self.h2d_p95_ms,
+            self.kernel_p95_ms,
+            self.h2d_dedup_hits,
+            self.h2d_dedup_hits + self.h2d_transfers,
+            self.dedup_hit_rate() * 100.0,
             if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
         );
         for d in &self.per_device {
@@ -280,6 +351,8 @@ impl ServingEngine {
             latencies: Mutex::new(LatencyLog::default()),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            h2d_transfers: AtomicU64::new(0),
         });
         let workers = (0..config.workers)
             .map(|i| {
@@ -331,6 +404,8 @@ impl ServingEngine {
             } else {
                 0.0
             },
+            h2d_dedup_hits: shared.dedup_hits.load(Ordering::Relaxed),
+            h2d_transfers: shared.h2d_transfers.load(Ordering::Relaxed),
             ..ServeReport::default()
         };
         shared.latencies.lock().unwrap().fill(&mut report);
@@ -357,16 +432,21 @@ fn worker_loop(shared: &Shared) {
         let queue = req.submitted.elapsed();
         let t0 = Instant::now();
         let result = shared.plan.launch(&req.bindings);
-        let timing = RequestTiming { queue, launch: t0.elapsed(), device: 0 };
-        match &result {
-            Ok(_) => {
+        let launch = t0.elapsed();
+        let timing = match &result {
+            Ok(rep) => {
+                let timing = RequestTiming::from_launch(queue, launch, rep, 0);
                 shared.completed.fetch_add(1, Ordering::Relaxed);
+                shared.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
+                shared.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
                 shared.latencies.lock().unwrap().record(&timing);
+                timing
             }
             Err(_) => {
                 shared.errors.fetch_add(1, Ordering::Relaxed);
+                RequestTiming { queue, launch, ..RequestTiming::default() }
             }
-        }
+        };
         // The submitter may have dropped its ticket; that is fine.
         let _ = req.reply.send((result, timing));
     }
@@ -407,6 +487,8 @@ mod tests {
             log.record(&RequestTiming {
                 queue: Duration::from_millis(1),
                 launch: Duration::from_secs_f64((ms - 1.0) / 1e3),
+                h2d: Duration::from_secs_f64((ms - 1.0) / 2e3),
+                kernel: Duration::from_secs_f64((ms - 1.0) / 2e3),
                 device: 0,
             });
         }
@@ -417,6 +499,10 @@ mod tests {
         assert!((r.queue_p50_ms - 1.0).abs() < 1e-9);
         assert!(r.queue_p95_ms <= r.p95_ms);
         assert!(r.launch_p95_ms <= r.p95_ms);
+        // The h2d/kernel split is attributed within the launch share.
+        assert!(r.h2d_p95_ms <= r.launch_p95_ms + 1e-9);
+        assert!(r.kernel_p95_ms <= r.launch_p95_ms + 1e-9);
+        assert!((r.h2d_p95_ms + r.kernel_p95_ms - r.launch_p95_ms).abs() < 1e-6);
     }
 
     #[test]
@@ -438,6 +524,10 @@ mod tests {
             p95_ms: 4.0,
             queue_p95_ms: 1.5,
             launch_p95_ms: 2.5,
+            h2d_p95_ms: 0.5,
+            kernel_p95_ms: 2.0,
+            h2d_dedup_hits: 30,
+            h2d_transfers: 10,
             per_device: vec![
                 DeviceBreakdown { device: 0, requests: 6, p95_ms: 4.0, ..Default::default() },
                 DeviceBreakdown { device: 1, requests: 4, p95_ms: 3.0, ..Default::default() },
@@ -447,8 +537,22 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("queue p95 1.50 ms"), "{s}");
         assert!(s.contains("launch p95 2.50 ms"), "{s}");
+        assert!(s.contains("h2d p95 0.50 ms"), "{s}");
+        assert!(s.contains("kernel p95 2.00 ms"), "{s}");
+        assert!(s.contains("h2d dedup 30/40 = 75%"), "{s}");
         assert!(s.contains("device 0: 6 requests"), "{s}");
         assert!(s.contains("device 1: 4 requests"), "{s}");
+    }
+
+    #[test]
+    fn dedup_hit_rate_handles_empty_and_full() {
+        let mut r = ServeReport::default();
+        assert_eq!(r.dedup_hit_rate(), 0.0, "no uploads at all");
+        r.h2d_dedup_hits = 8;
+        r.h2d_transfers = 0;
+        assert_eq!(r.dedup_hit_rate(), 1.0);
+        r.h2d_transfers = 8;
+        assert_eq!(r.dedup_hit_rate(), 0.5);
     }
 
     #[test]
@@ -457,6 +561,7 @@ mod tests {
             queue: Duration::from_millis(2),
             launch: Duration::from_millis(3),
             device: 1,
+            ..Default::default()
         };
         assert_eq!(t.total(), Duration::from_millis(5));
     }

@@ -207,6 +207,24 @@ where
     results.into_iter().map(|m| m.into_inner().unwrap().expect("slot filled")).collect()
 }
 
+/// Run `n` independent jobs on scoped threads and collect their results
+/// in submission order — the stage-execution primitive of the pipelined
+/// executor (each dependency stage of a compiled plan fans its actions
+/// out here). `n <= 1` runs inline (no thread overhead for the common
+/// single-action stage). One job per thread is exactly
+/// [`parallel_map_reduce`] with single-index blocks, so the scoped
+/// slot-collection machinery lives in one place.
+pub fn scoped_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    parallel_map_reduce(n, n, |r| f(r.start))
+}
+
 /// Simple atomic work counter for dynamic (guided) scheduling
 /// experiments — not used by the paper-faithful baselines but exercised
 /// by the scheduler ablation.
@@ -338,6 +356,19 @@ mod tests {
         let partials = parallel_map_reduce(6, 1000, |r| r.sum::<usize>());
         let total: usize = partials.iter().sum();
         assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn scoped_map_preserves_submission_order() {
+        let out = scoped_map(16, |i| i * i);
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+        assert_eq!(scoped_map(1, |i| i + 7), vec![7]);
+        assert_eq!(scoped_map(0, |i: usize| i), Vec::<usize>::new());
+        // Results may be fallible — order still holds.
+        let out: Vec<Result<usize, String>> =
+            scoped_map(4, |i| if i == 2 { Err("boom".into()) } else { Ok(i) });
+        assert_eq!(out[1], Ok(1));
+        assert_eq!(out[2], Err("boom".into()));
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Pipelined-launch equivalence and upload-cache correctness: the
+//! dependency-staged replay must be bit-for-bit identical to the
+//! sequential ablation across every launch surface (single device,
+//! `ServingEngine`, `DevicePool::launch_sharded`), never JIT, and keep
+//! every ledger at `used <= capacity`; the content-hashed upload cache
+//! must hit on byte-identical rebinds and re-upload on changed bytes
+//! (no stale-hash reuse). Requires `make artifacts` (tiny profile);
+//! every test no-ops gracefully when artifacts are absent.
+
+use std::sync::Arc;
+
+use jacc::api::*;
+use jacc::serve::{serve_all, ServeConfig};
+
+fn device() -> Option<Arc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+fn sequential() -> ExecutionOptions {
+    ExecutionOptions::sequential()
+}
+
+/// B independent `pipe_vecadd -> pipe_reduce` chains with per-branch
+/// named inputs — the branched shape the pipeline stages side by side.
+fn branched_plan(
+    dev: &Arc<DeviceContext>,
+    branches: usize,
+) -> (CompiledGraph, Vec<TaskId>, usize) {
+    let m = dev.runtime.manifest();
+    let e_add = m.find("pipe_vecadd", "pallas", "tiny").unwrap();
+    let e_red = m.find("pipe_reduce", "pallas", "tiny").unwrap();
+    let n = e_add.inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut outs = Vec::new();
+    for b in 0..branches {
+        let mut add = Task::create(
+            "pipe_vecadd",
+            Dims(e_add.iteration_space.clone()),
+            Dims(e_add.workgroup.clone()),
+        )
+        .unwrap()
+        .discard_output();
+        add.set_parameters(vec![
+            Param::input(&format!("x{b}")),
+            Param::input(&format!("y{b}")),
+        ]);
+        let a = g.execute_task_on(add, dev).unwrap();
+        let mut red = Task::create(
+            "pipe_reduce",
+            Dims(e_red.iteration_space.clone()),
+            Dims(e_red.workgroup.clone()),
+        )
+        .unwrap();
+        red.set_parameters(vec![Param::output("z", a, 0)]);
+        outs.push(g.execute_task_on(red, dev).unwrap());
+    }
+    (g.compile().unwrap(), outs, n)
+}
+
+fn branched_bindings(branches: usize, n: usize, round: usize) -> Bindings {
+    let mut b = Bindings::new();
+    for br in 0..branches {
+        let x: Vec<f32> = (0..n).map(|i| ((i + round * 7 + br) % 13) as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| ((i * 3 + round + br) % 11) as f32).collect();
+        b.set(&format!("x{br}"), HostValue::f32(vec![n], x));
+        b.set(&format!("y{br}"), HostValue::f32(vec![n], y));
+    }
+    b
+}
+
+fn bits(rep: &ExecutionReport, outs: &[TaskId]) -> Vec<u32> {
+    outs.iter()
+        .map(|&t| rep.outputs.single(t).unwrap().as_f32().unwrap()[0].to_bits())
+        .collect()
+}
+
+/// Single device: staged replay == sequential replay, bit for bit,
+/// with the schedule actually exploiting the branch parallelism.
+#[test]
+fn pipelined_matches_sequential_bit_for_bit() {
+    let Some(dev) = device() else { return };
+    let branches = 3;
+    let (plan, outs, n) = branched_plan(&dev, branches);
+
+    assert!(plan.stats.stages > 1, "a multi-task plan must have stages");
+    assert!(
+        plan.stats.max_stage_width >= branches,
+        "independent branches must share a stage (max width {})",
+        plan.stats.max_stage_width
+    );
+    assert_eq!(plan.schedule().action_count(), plan.stats.actions);
+
+    for round in 0..4 {
+        let b = branched_bindings(branches, n, round);
+        let rp = plan.launch(&b).unwrap();
+        let rs = plan.launch_with(&b, sequential()).unwrap();
+        assert_eq!(rp.fresh_compiles, 0, "round {round}");
+        assert_eq!(rs.fresh_compiles, 0, "round {round}");
+        assert_eq!(rp.pipeline_stages, plan.stats.stages, "round {round}");
+        assert_eq!(rs.pipeline_stages, 0, "sequential replay reports no stages");
+        assert_eq!(
+            bits(&rp, &outs),
+            bits(&rs, &outs),
+            "round {round}: staged replay diverged from sequential"
+        );
+        // Same actions executed either way.
+        assert_eq!(rp.actions_executed, rs.actions_executed, "round {round}");
+    }
+
+    let mem = dev.memory.lock().unwrap();
+    assert!(mem.used() <= mem.capacity(), "ledger overcommitted");
+}
+
+/// Detailed timing rows: one per action, stream-ordered, stage-tagged.
+#[test]
+fn detailed_timing_rows_cover_every_action() {
+    let Some(dev) = device() else { return };
+    let (plan, _, n) = branched_plan(&dev, 2);
+    let b = branched_bindings(2, n, 1);
+
+    let opts = ExecutionOptions { detailed_timing: true, ..Default::default() };
+    let rep = plan.launch_with(&b, opts).unwrap();
+    assert_eq!(rep.timings.len(), rep.actions_executed, "one row per action");
+    let mut seen: Vec<usize> = rep.timings.iter().map(|t| t.index).collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..rep.actions_executed).collect::<Vec<_>>());
+    for row in &rep.timings {
+        assert!(row.stage < rep.pipeline_stages, "stage {} out of range", row.stage);
+        assert!(!row.kind.is_empty());
+    }
+    // Default launches pay no timing bookkeeping.
+    let rep = plan.launch(&b).unwrap();
+    assert!(rep.timings.is_empty());
+}
+
+/// The ServingEngine (default pipelined launches) matches sequential
+/// single-thread replay bit for bit, with fresh_compiles == 0 and an
+/// honest ledger.
+#[test]
+fn serving_engine_matches_sequential_replay() {
+    let Some(dev) = device() else { return };
+    let branches = 2;
+    let (plan, outs, n) = branched_plan(&dev, branches);
+    let plan = Arc::new(plan);
+    let total = 16;
+
+    // Sequential baseline for each request.
+    let baseline: Vec<Vec<u32>> = (0..total)
+        .map(|r| {
+            let rep = plan
+                .launch_with(&branched_bindings(branches, n, r), sequential())
+                .unwrap();
+            assert_eq!(rep.fresh_compiles, 0);
+            bits(&rep, &outs)
+        })
+        .collect();
+
+    let requests: Vec<Bindings> = (0..total).map(|r| branched_bindings(branches, n, r)).collect();
+    let served = serve_all(Arc::clone(&plan), ServeConfig::with_workers(4), requests);
+    let (reports, agg) = served.unwrap();
+    assert_eq!(agg.errors, 0);
+    assert_eq!(agg.requests, total as u64);
+    for (r, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.fresh_compiles, 0, "request {r}");
+        assert_eq!(bits(rep, &outs), baseline[r], "request {r} diverged");
+    }
+    // The h2d/kernel split and the dedup rate are surfaced. (Under
+    // overlapped replay the per-action kernel sum may exceed the
+    // launch wall, so only presence is asserted, not ordering.)
+    assert!(agg.kernel_p95_ms >= 0.0);
+    assert!(agg.h2d_p95_ms >= 0.0);
+    assert!(agg.summary().contains("h2d dedup"), "{}", agg.summary());
+    assert!(agg.summary().contains("kernel p95"), "{}", agg.summary());
+
+    let mem = dev.memory.lock().unwrap();
+    assert!(mem.used() <= mem.capacity(), "ledger overcommitted");
+}
+
+/// Sharded pool launches: pipelined (default) and sequential replay
+/// gather identical bytes on every device, never JIT after warmup, and
+/// keep every per-device ledger honest.
+#[test]
+fn sharded_launch_matches_sequential_replay() {
+    if device().is_none() {
+        return;
+    }
+    let devices = 2;
+    let pool = DevicePool::open(devices).unwrap();
+    let m = pool.device(0).runtime.manifest();
+    let entry = m.find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, pool.device(0)).unwrap();
+    let replicated = pool.compile(&g).unwrap();
+
+    let shards = ShardSpec::new().split("x", 0).split("y", 0);
+    let mk = |round: usize| {
+        let x: Vec<f32> = (0..devices * n).map(|i| ((i + round) % 17) as f32).collect();
+        let y: Vec<f32> = (0..devices * n).map(|i| ((i * 5 + round) % 7) as f32).collect();
+        Bindings::new()
+            .bind("x", HostValue::f32(vec![devices * n], x))
+            .bind("y", HostValue::f32(vec![devices * n], y))
+    };
+
+    // Warm every replica off the clock.
+    replicated.launch_sharded(&mk(0), &shards).unwrap();
+
+    for round in 1..4 {
+        let b = mk(round);
+        let staged = replicated.launch_sharded(&b, &shards).unwrap();
+        let seq = replicated.launch_sharded_with(&b, &shards, sequential()).unwrap();
+        assert_eq!(staged.fresh_compiles(), 0, "round {round}");
+        assert_eq!(seq.fresh_compiles(), 0, "round {round}");
+        let sb = staged.outputs.single(id).unwrap().as_f32().unwrap();
+        let qb = seq.outputs.single(id).unwrap().as_f32().unwrap();
+        assert_eq!(
+            sb.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            qb.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            "round {round}: sharded staged replay diverged"
+        );
+        assert_eq!(sb.len(), devices * n, "gather covers the full batch");
+    }
+
+    for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+        assert!(used <= capacity, "device {d} ledger overcommitted");
+    }
+}
+
+/// Upload-cache correctness: byte-identical rebinds hit (no bytes on
+/// the bus), changed bytes re-upload with correct results (the content
+/// hash is the key — stale reuse is impossible), and disabling the
+/// cache restores the full-upload baseline.
+#[test]
+fn upload_cache_hits_same_bytes_and_reuploads_changed_bytes() {
+    let Some(dev) = device() else { return };
+    let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, &dev).unwrap();
+    let plan = g.compile().unwrap();
+
+    let full_bytes = 2 * (n * 4) as u64;
+    let x1: Vec<f32> = (0..n).map(|i| (i % 13) as f32).collect();
+    let y1: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+    let b1 = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x1.clone()))
+        .bind("y", HostValue::f32(vec![n], y1.clone()));
+
+    // First launch: everything crosses the bus.
+    let r1 = plan.launch(&b1).unwrap();
+    assert_eq!(r1.h2d_dedup_hits, 0);
+    assert_eq!(r1.h2d_bytes, full_bytes);
+    assert_eq!(r1.h2d_transfers, 2);
+    let got1 = r1.outputs.single(id).unwrap().as_f32().unwrap().to_vec();
+
+    // Same-bytes rebind (fresh HostValues, equal content): both
+    // uploads hit, zero bytes move, result identical.
+    let b1_again = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x1.clone()))
+        .bind("y", HostValue::f32(vec![n], y1.clone()));
+    let r2 = plan.launch(&b1_again).unwrap();
+    assert_eq!(r2.h2d_dedup_hits, 2, "both bound inputs must hit the cache");
+    assert_eq!(r2.h2d_bytes, 0, "no bytes should cross the bus");
+    assert_eq!(r2.h2d_transfers, 0);
+    let got2 = r2.outputs.single(id).unwrap().as_f32().unwrap().to_vec();
+    assert_eq!(
+        got1.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        got2.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+    );
+    assert!(plan.metrics.counter("exec.h2d_dedup_hits") >= 2);
+
+    // Changed bytes in x: x re-uploads (no stale-hash reuse), y still
+    // hits, and the result reflects the NEW data.
+    let mut x2 = x1.clone();
+    x2[0] += 100.0;
+    x2[n - 1] += 3.0;
+    let b2 = Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x2.clone()))
+        .bind("y", HostValue::f32(vec![n], y1.clone()));
+    let r3 = plan.launch(&b2).unwrap();
+    assert_eq!(r3.h2d_dedup_hits, 1, "only unchanged y may hit");
+    assert_eq!(r3.h2d_bytes, (n * 4) as u64, "changed x must re-upload");
+    let got3 = r3.outputs.single(id).unwrap().as_f32().unwrap();
+    assert_eq!(got3[0], x2[0] + y1[0], "stale data would fail here");
+    assert_eq!(got3[n - 1], x2[n - 1] + y1[n - 1]);
+
+    // Cache disabled: the same rebind pays the full upload again.
+    let r4 = plan
+        .launch_with(&b2, ExecutionOptions { h2d_dedup: false, ..Default::default() })
+        .unwrap();
+    assert_eq!(r4.h2d_dedup_hits, 0);
+    assert_eq!(r4.h2d_bytes, full_bytes);
+
+    // Ledger accounting stayed honest through hits, misses and the
+    // uncached baseline.
+    let mem = dev.memory.lock().unwrap();
+    assert!(mem.used() <= mem.capacity());
+    assert!(mem.stats.dedup_hits >= 3);
+    assert_eq!(mem.stats.dedup_hit_bytes % (n * 4) as u64, 0);
+}
