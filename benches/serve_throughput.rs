@@ -7,16 +7,21 @@
 //! memory ledger).
 //!
 //! Run with:  cargo bench --bench serve_throughput -- \
-//!                [--requests 128] [--workers 1,2,4,8] [--smoke]
+//!                [--requests 128] [--workers 1,2,4,8] [--smoke] [--json F]
 //!
 //! `--smoke` (CI) shrinks to 1 worker x 8 requests on the tiny
-//! profile so the concurrent path is exercised on every push.
+//! profile so the concurrent path is exercised on every push, and
+//! writes the sweep as a `jacc.metrics.v1` snapshot to
+//! `BENCH_serve.json` at the repository root (override with `--json`)
+//! so the serving perf trajectory accumulates across commits.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use jacc::api::*;
 use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
+use jacc::substrate::json::{arr, num, s, Value};
 
 fn main() -> anyhow::Result<()> {
     let args = Cli::new("serve_throughput", "concurrent serving throughput over one plan")
@@ -25,6 +30,11 @@ fn main() -> anyhow::Result<()> {
         .opt("workers", "1,2,4,8", "comma-separated worker counts")
         .opt("profile", "", "artifact profile (default: JACC_PROFILE or scaled)")
         .flag("smoke", "CI mode: 1 worker, 8 requests, tiny profile")
+        .opt(
+            "json",
+            "",
+            "metrics snapshot output path (--smoke defaults to BENCH_serve.json)",
+        )
         .parse();
 
     let dir = Manifest::default_dir();
@@ -46,6 +56,14 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let requests = if smoke { 8 } else { args.get_usize("requests")? };
+    let json = {
+        let j = args.get_or("json", "");
+        if j.is_empty() && smoke {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json").to_string()
+        } else {
+            j.to_string()
+        }
+    };
     let worker_counts: Vec<usize> = if smoke {
         vec![1]
     } else {
@@ -96,6 +114,7 @@ fn main() -> anyhow::Result<()> {
         "{:<8} {:>10} {:>10} {:>10} {:>10} {:>10}",
         "workers", "req/s", "p50 ms", "p95 ms", "p99 ms", "max ms"
     );
+    let mut sweeps: Vec<Value> = Vec::with_capacity(worker_counts.len());
     for &workers in &worker_counts {
         let reqs: Vec<Bindings> = (0..requests).map(&mk_bindings).collect();
         let (reports, agg) =
@@ -109,6 +128,7 @@ fn main() -> anyhow::Result<()> {
             "{workers:<8} {:>10.0} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
             agg.throughput_rps, agg.p50_ms, agg.p95_ms, agg.p99_ms, agg.max_ms
         );
+        sweeps.push(agg.to_json());
     }
 
     let mem = dev.memory.lock().unwrap();
@@ -125,6 +145,19 @@ fn main() -> anyhow::Result<()> {
         mem.stats.evictions,
         mem.stats.rejected_oversized
     );
+    drop(mem);
+
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("serve_throughput");
+        snap.set("benchmark", s(&name))
+            .set("profile", s(&profile))
+            .set("requests", num(requests as f64))
+            .set("smoke", Value::Bool(smoke))
+            .set("sweeps", arr(sweeps))
+            .add_metrics("plan", &plan.metrics);
+        snap.write(Path::new(&json))?;
+        println!("snapshot -> {json}");
+    }
     println!("serve_throughput OK");
     Ok(())
 }

@@ -212,6 +212,46 @@
 //! Try it: `jacc serve-bench --benchmark vector_add --devices 4`,
 //! `jacc run --benchmark vector_add --devices 2`, or the device sweep
 //! `cargo bench --bench pool_scaling`.
+//!
+//! ## Observability
+//!
+//! Three layers, all zero-cost when unused:
+//!
+//! * **Counters and timers** ([`Metrics`](crate::metrics::Metrics)) —
+//!   lock-free on the hot path (atomic add under a read lock; the
+//!   write lock is only taken the first time a name is seen). The
+//!   namespaces: `plan.*` counts plan-level events (`plan.launches`),
+//!   `exec.*` attributes launch work (`exec.wall`, `exec.h2d`,
+//!   `exec.kernel`, `exec.d2h`, `exec.h2d_dedup_hits`), and `serve.*`
+//!   counts serving-engine traffic. `jacc run --verbose` prints them;
+//!   [`MetricsSnapshot`](crate::trace::MetricsSnapshot) serializes
+//!   them (plus anything else) to JSON via `substrate::json` — that is
+//!   what `jacc serve-bench --json out.json` and `BENCH_serve.json`
+//!   contain, re-validated by `jacc trace-check --json out.json`.
+//!
+//! * **Launch spans** ([`Tracer`](crate::trace::Tracer)) — pass a
+//!   tracer through [`ExecutionOptions`] (or
+//!   [`ServeConfig::with_tracer`](crate::serve::ServeConfig::with_tracer) /
+//!   [`PoolConfig::with_tracer`]) and every launch records spans for
+//!   queue wait (`serve.queue`), each pipeline stage (`stage K`), each
+//!   action (`h2d bN`, `kernel <name>`, `d2h tN`), pool scatter/gather
+//!   and the whole launch (`plan.launch`), tagged with a per-request
+//!   trace id. Recording is lock-light: each thread appends to its own
+//!   bounded ring buffer (oldest spans drop under overflow, counted in
+//!   `droppedEvents`). `jacc run --trace out.json` exports Chrome
+//!   trace-event JSON — one process group per device, one track per
+//!   worker thread — viewable at <https://ui.perfetto.dev> or
+//!   `chrome://tracing`; H2D spans overlapping earlier-stage kernel
+//!   spans are the visual proof of pipelined replay (they disappear
+//!   under `--no-overlap`).
+//!
+//! * **Streaming latency histograms**
+//!   ([`LogHistogram`](crate::trace::LogHistogram)) — the serving
+//!   engines fold every request latency into mergeable log-bucketed
+//!   histograms (memory `O(buckets)`, not `O(requests)`), so
+//!   `ServeReport` quantiles are estimates within the documented
+//!   [`RELATIVE_ERROR`](crate::trace::RELATIVE_ERROR) (1%) of the
+//!   exact order statistics; `min`/`max` stay exact.
 
 pub use crate::coordinator::{
     ActionTiming, AtomicDecl, AtomicOp, Bindings, CompiledGraph, CompiledNode, Dims,
@@ -228,3 +268,4 @@ pub use crate::runtime::{
 pub use crate::serve::{
     DeviceBreakdown, RequestTiming, ServeConfig, ServeReport, ServingEngine, Ticket,
 };
+pub use crate::trace::{LogHistogram, MetricsSnapshot, TraceEvent, Tracer, RELATIVE_ERROR};

@@ -326,11 +326,25 @@ impl CompiledGraph {
         self.validate_bindings(bindings)?;
         self.metrics.incr("plan.launches");
         let pipeline = opts.pipeline;
+        let tracer = opts.tracer.clone();
+        let trace_id = opts.trace_id;
+        let t0 = std::time::Instant::now();
         let mut exec = Executor::new(self, bindings, opts);
-        match pipeline {
+        let report = match pipeline {
             PipelineMode::Staged => exec.run_pipelined(&self.actions, &self.schedule),
             PipelineMode::Sequential => exec.run(&self.actions),
+        }?;
+        // Per-phase wall timers: atomic adds (see `Metrics::time`), so
+        // concurrent launches never serialize here.
+        self.metrics.time("exec.wall", report.wall);
+        self.metrics.time("exec.h2d", report.h2d);
+        self.metrics.time("exec.d2h", report.d2h);
+        self.metrics.time("exec.kernel", report.launch);
+        if let Some(tracer) = &tracer {
+            let pid = self.nodes.first().map(|n| n.device.index as u64).unwrap_or(0);
+            tracer.record_at("plan.launch", "launch_total", pid, trace_id, -1, t0, t0.elapsed());
         }
+        Ok(report)
     }
 
     /// The dependency-staged schedule pipelined launches replay.

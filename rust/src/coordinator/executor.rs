@@ -49,6 +49,7 @@ use xla::PjRtBuffer;
 use crate::runtime::buffer::{DeviceBuffer, HostValue, SharedBuffer};
 use crate::runtime::pjrt::CompiledKernel;
 use crate::substrate::threadpool::scoped_map;
+use crate::trace::Tracer;
 
 use super::compiled::{Bindings, CompiledGraph};
 use super::graph::GraphOutputs;
@@ -77,11 +78,24 @@ pub struct ExecutionOptions {
     /// Serve bound inputs from the per-device content-hashed upload
     /// cache, skipping the H2D for byte-identical rebinds.
     pub h2d_dedup: bool,
+    /// When set, every action (H2D, kernel launch, D2H) and pipeline
+    /// stage records a span into the tracer's per-thread rings
+    /// (`jacc run --trace`). `None` costs nothing on the launch path.
+    pub tracer: Option<Arc<Tracer>>,
+    /// Request trace id stamped on every span this launch records
+    /// (0 = untraced / ad-hoc launch).
+    pub trace_id: u64,
 }
 
 impl Default for ExecutionOptions {
     fn default() -> Self {
-        Self { detailed_timing: false, pipeline: PipelineMode::Staged, h2d_dedup: true }
+        Self {
+            detailed_timing: false,
+            pipeline: PipelineMode::Staged,
+            h2d_dedup: true,
+            tracer: None,
+            trace_id: 0,
+        }
     }
 }
 
@@ -242,6 +256,7 @@ impl<'g> Executor<'g> {
             ExecutionReport { pipeline_stages: schedule.len(), ..ExecutionReport::default() };
         let t_wall = Instant::now();
         for (stage_idx, stage) in schedule.stages.iter().enumerate() {
+            let t_stage = Instant::now();
             // Fan a stage out only when it has kernel launches or
             // downloads to overlap: a pure-upload stage (e.g. the
             // leading CopyIns of a single-task serving plan) is
@@ -258,20 +273,31 @@ impl<'g> Executor<'g> {
                     let fx = self.exec_action(i, stage_idx, &actions[i])?;
                     self.apply(fx, &mut report);
                 }
-                continue;
+            } else {
+                // Every action only reads state written by earlier
+                // stages, so `&self` is enough for the concurrent part.
+                let results: Vec<anyhow::Result<Effects>> = {
+                    let this = &*self;
+                    scoped_map(stage.len(), |k| {
+                        let i = stage[k];
+                        this.exec_action(i, stage_idx, &actions[i])
+                    })
+                };
+                for fx in results {
+                    let fx = fx?;
+                    self.apply(fx, &mut report);
+                }
             }
-            // Every action only reads state written by earlier stages,
-            // so `&self` is enough for the concurrent part.
-            let results: Vec<anyhow::Result<Effects>> = {
-                let this = &*self;
-                scoped_map(stage.len(), |k| {
-                    let i = stage[k];
-                    this.exec_action(i, stage_idx, &actions[i])
-                })
-            };
-            for fx in results {
-                let fx = fx?;
-                self.apply(fx, &mut report);
+            if let Some(tracer) = &self.opts.tracer {
+                tracer.record_at(
+                    format!("stage {stage_idx}"),
+                    "stage",
+                    0,
+                    self.opts.trace_id,
+                    stage_idx as i64,
+                    t_stage,
+                    t_stage.elapsed(),
+                );
             }
         }
         report.wall = t_wall.elapsed();
@@ -305,7 +331,44 @@ impl<'g> Executor<'g> {
                 bytes: fx.h2d_bytes + fx.d2h_bytes,
             });
         }
+        if let Some(tracer) = &self.opts.tracer {
+            tracer.record_at(
+                self.span_name(action),
+                action.kind(),
+                self.action_pid(action),
+                self.opts.trace_id,
+                stage as i64,
+                t0,
+                t0.elapsed(),
+            );
+        }
         Ok(fx)
+    }
+
+    /// Span name for one action: the kernel name for launches, the
+    /// destination/task for transfers.
+    fn span_name(&self, action: &Action) -> String {
+        match action {
+            Action::CopyIn { dest, .. } => format!("h2d b{dest}"),
+            Action::Launch { task, .. } => {
+                format!("kernel {}", self.plan.node(*task).task.kernel)
+            }
+            Action::CopyOut { task, .. } => format!("d2h t{task}"),
+            Action::Compile { task, .. } => format!("compile t{task}"),
+            Action::Barrier => "barrier".to_string(),
+        }
+    }
+
+    /// Trace process group for one action — the device it executes
+    /// against (one Perfetto process group per device).
+    fn action_pid(&self, action: &Action) -> u64 {
+        match action {
+            Action::CopyIn { source, .. } => self.device_for_source(source).index as u64,
+            other => other
+                .task()
+                .map(|t| self.plan.node(t).device.index as u64)
+                .unwrap_or(0),
+        }
     }
 
     /// Merge one action's effects into the launch state and report, in

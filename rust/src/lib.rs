@@ -30,6 +30,7 @@ pub mod pool;
 pub mod runtime;
 pub mod serve;
 pub mod substrate;
+pub mod trace;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -14,11 +14,22 @@
 //!                                         plan; throughput + p50/p99
 //!                                         (--devices N = pool routing
 //!                                         with per-device breakdowns)
+//!   jacc trace-check [--trace F] [--json F]  re-parse and validate trace /
+//!                                         snapshot files (CI smoke step)
+//!
+//! Observability: `run --trace out.json` records per-action spans
+//! (queue wait, H2D, kernel, D2H, stages) into a Chrome trace-event
+//! file viewable at <https://ui.perfetto.dev>; `serve-bench --json
+//! out.json` writes a machine-readable metrics snapshot. See the
+//! "Observability" section of `api.rs`.
 //!
 //! (The paper-table reproductions live in `cargo bench`; see
 //! benches/*.rs and EXPERIMENTS.md.)
 
+use std::path::Path;
 use std::sync::Arc;
+
+use anyhow::Context;
 
 use jacc::api::*;
 use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
@@ -26,6 +37,8 @@ use jacc::devicemodel::{CostModel, DeviceSpec};
 use jacc::pool::serve_requests;
 use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
+use jacc::substrate::json::{num, s, Value};
+use jacc::trace::{chrome, MetricsSnapshot, Tracer};
 
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new(
@@ -58,7 +71,18 @@ fn main() -> anyhow::Result<()> {
         "0",
         "virtual device pool width (run / serve-bench), 0 = JACC_VIRTUAL_DEVICES",
     )
-    .flag("smoke", "CI mode (serve-bench): tiny profile, 8 requests, skip without artifacts");
+    .flag("smoke", "CI mode (serve-bench): tiny profile, 8 requests, skip without artifacts")
+    .opt(
+        "trace",
+        "",
+        "write Chrome trace-event JSON to this path (run / serve-bench); \
+         input file for trace-check",
+    )
+    .opt(
+        "json",
+        "",
+        "write a metrics snapshot to this path (serve-bench); input file for trace-check",
+    );
     let args = cli.parse();
 
     match args.positional().first().map(|s| s.as_str()) {
@@ -74,6 +98,7 @@ fn main() -> anyhow::Result<()> {
             args.has_flag("no-overlap"),
             args.has_flag("plan-split"),
             args.get_usize("devices").unwrap_or(0),
+            args.get_or("trace", ""),
         ),
         Some("suite") => suite(args.get_or("profile", "scaled"), args.has_flag("verbose")),
         Some("serve-bench") => serve_bench(
@@ -86,11 +111,14 @@ fn main() -> anyhow::Result<()> {
             args.get_usize("devices").unwrap_or(0),
             args.has_flag("smoke"),
             args.has_flag("verbose"),
+            args.get_or("json", ""),
+            args.get_or("trace", ""),
         ),
+        Some("trace-check") => trace_check(args.get_or("trace", ""), args.get_or("json", "")),
         other => {
             eprintln!(
                 "unknown or missing subcommand {other:?}; try: devices | inspect | run | \
-                 suite | serve-bench"
+                 suite | serve-bench | trace-check"
             );
             std::process::exit(2);
         }
@@ -171,6 +199,26 @@ fn build_graph(
     Ok((g, id, w))
 }
 
+/// Clone `base` with a fresh trace id, so every launch groups its spans
+/// under its own id in the exported trace.
+fn traced(base: &ExecutionOptions) -> ExecutionOptions {
+    let trace_id = base.tracer.as_ref().map_or(0, |t| t.trace_id());
+    ExecutionOptions { trace_id, ..base.clone() }
+}
+
+/// Flush a `--trace` tracer to disk as Chrome trace-event JSON.
+fn write_trace_file(tracer: &Option<Arc<Tracer>>, path: &str) -> anyhow::Result<()> {
+    if let Some(t) = tracer {
+        chrome::write_trace(Path::new(path), t)?;
+        println!(
+            "trace: {} spans ({} dropped) -> {path} (open at https://ui.perfetto.dev)",
+            t.len(),
+            t.dropped()
+        );
+    }
+    Ok(())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run(
     name: &str,
@@ -182,13 +230,16 @@ fn run(
     no_overlap: bool,
     plan_split: bool,
     devices: usize,
+    trace: &str,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(!name.is_empty(), "--benchmark required");
-    let opts = if no_overlap {
+    let tracer = if trace.is_empty() { None } else { Some(Arc::new(Tracer::new())) };
+    let mut opts = if no_overlap {
         ExecutionOptions::sequential()
     } else {
         ExecutionOptions::default()
     };
+    opts.tracer = tracer.clone();
     let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
     if pool_width > 1 {
         if plan_split {
@@ -197,7 +248,8 @@ fn run(
                  split below)"
             );
         }
-        return run_pool(name, profile, variant, iters, verbose, no_opt, opts, pool_width);
+        run_pool(name, profile, variant, iters, verbose, no_opt, opts, pool_width)?;
+        return write_trace_file(&tracer, trace);
     }
     let dev = Cuda::get_device(0)?.create_device_context()?;
     let (g, id, _) = build_graph(&dev, name, profile, variant, no_opt)?;
@@ -209,7 +261,7 @@ fn run(
         // separately from the bind-and-launch steady state.
         let plan = g.compile()?;
         println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
-        let first = plan.launch_with(&Bindings::new(), opts.clone())?;
+        let first = plan.launch_with(&Bindings::new(), traced(&opts))?;
         println!(
             "first launch: {} (fresh_compiles {}, h2d {} B, d2h {} B, {} stages)",
             fmt_secs(first.wall.as_secs_f64()),
@@ -220,7 +272,7 @@ fn run(
         );
         let h = Harness::new(1, 3, iters);
         let r = h.run(name, || {
-            plan.launch_with(&Bindings::new(), opts.clone())
+            plan.launch_with(&Bindings::new(), traced(&opts))
                 .expect("steady-state launch");
         });
         println!(
@@ -234,11 +286,11 @@ fn run(
             println!("build metrics:\n{}", g.metrics.report());
             println!("launch metrics:\n{}", plan.metrics.report());
         }
-        return Ok(());
+        return write_trace_file(&tracer, trace);
     }
 
     // First execution: includes the lazy compile (JIT analog).
-    let first = g.execute_with_options(opts.clone())?;
+    let first = g.execute_with_options(traced(&opts))?;
     println!(
         "{name}.{variant}.{profile}: first run {} (compile {}, h2d {} B, d2h {} B)",
         fmt_secs(first.wall.as_secs_f64()),
@@ -249,7 +301,7 @@ fn run(
     // Steady state over `iters`.
     let h = Harness::new(1, 3, iters);
     let r = h.run(name, || {
-        g.execute_with_options(opts.clone())
+        g.execute_with_options(traced(&opts))
             .expect("steady-state execution");
     });
     println!(
@@ -261,7 +313,7 @@ fn run(
     if verbose {
         println!("metrics:\n{}", g.metrics.report());
     }
-    Ok(())
+    write_trace_file(&tracer, trace)
 }
 
 /// Open a pool, replicate the benchmark graph onto it and warm every
@@ -332,7 +384,7 @@ fn run_pool(
     let h = Harness::new(1, 3, iters);
     let r = h.run(name, || {
         replicated
-            .launch_all_with(&Bindings::new(), opts.clone())
+            .launch_all_with(&Bindings::new(), traced(&opts))
             .expect("pool steady-state launch");
     });
     println!(
@@ -363,6 +415,8 @@ fn serve_bench(
     devices: usize,
     smoke: bool,
     verbose: bool,
+    json: &str,
+    trace: &str,
 ) -> anyhow::Result<()> {
     // CI smoke mode: tiny shapes, few requests, and a graceful skip
     // when the AOT artifacts are not built (mirrors the benches).
@@ -378,10 +432,12 @@ fn serve_bench(
     anyhow::ensure!(!name.is_empty(), "--benchmark required");
     anyhow::ensure!(workers > 0, "--workers must be positive");
     anyhow::ensure!(requests > 0, "--requests must be positive");
+    let tracer = if trace.is_empty() { None } else { Some(Arc::new(Tracer::new())) };
     let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
     if pool_width > 1 {
         return serve_bench_pool(
             name, profile, variant, workers, requests, queue_depth, pool_width, verbose,
+            json, &tracer, trace,
         );
     }
     let dev = Cuda::get_device(0)?.create_device_context()?;
@@ -395,6 +451,9 @@ fn serve_bench(
     let mut config = ServeConfig::with_workers(workers);
     if queue_depth > 0 {
         config.queue_depth = queue_depth;
+    }
+    if let Some(t) = &tracer {
+        config = config.with_tracer(Arc::clone(t));
     }
     let (reports, agg) =
         serve_all(Arc::clone(&plan), config, vec![Bindings::new(); requests])?;
@@ -425,7 +484,19 @@ fn serve_bench(
     if verbose {
         println!("launch metrics:\n{}", plan.metrics.report());
     }
-    Ok(())
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("serve-bench");
+        snap.set("benchmark", s(name))
+            .set("variant", s(variant))
+            .set("profile", s(profile))
+            .set("workers", num(workers as f64))
+            .set("requests", num(requests as f64))
+            .set("serve", agg.to_json())
+            .add_metrics("plan", &plan.metrics);
+        snap.write(Path::new(json))?;
+        println!("snapshot -> {json}");
+    }
+    write_trace_file(&tracer, trace)
 }
 
 /// Pool-routed serving: one plan replica per device, every request
@@ -441,11 +512,17 @@ fn serve_bench_pool(
     queue_depth: usize,
     devices: usize,
     verbose: bool,
+    json: &str,
+    tracer: &Option<Arc<Tracer>>,
+    trace: &str,
 ) -> anyhow::Result<()> {
     let (pool, replicated) = open_replicated(name, profile, variant, false, devices)?;
     let mut config = PoolConfig::with_workers_per_device(workers_per_device);
     if queue_depth > 0 {
         config.queue_depth = queue_depth;
+    }
+    if let Some(t) = tracer {
+        config = config.with_tracer(Arc::clone(t));
     }
     let (reports, agg) = serve_requests(&replicated, config, vec![Bindings::new(); requests])?;
     for rep in &reports {
@@ -455,6 +532,51 @@ fn serve_bench_pool(
     check_pool_ledgers(&pool)?;
     if verbose {
         dump_pool_metrics(&replicated);
+    }
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("serve-bench-pool");
+        snap.set("benchmark", s(name))
+            .set("variant", s(variant))
+            .set("profile", s(profile))
+            .set("workers_per_device", num(workers_per_device as f64))
+            .set("requests", num(requests as f64))
+            .set("devices", num(devices as f64))
+            .set("serve", agg.to_json());
+        for d in 0..replicated.device_count() {
+            snap.set(&format!("device{d}"), replicated.replica(d).metrics.to_json());
+        }
+        snap.write(Path::new(json))?;
+        println!("snapshot -> {json}");
+    }
+    write_trace_file(tracer, trace)
+}
+
+/// Validate observability artifacts: re-parse a `--trace` file through
+/// `substrate::json` and check the trace-event keys, and/or validate a
+/// `--json` metrics snapshot against its schema tag. Used by the CI
+/// smoke step.
+fn trace_check(trace: &str, json: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !trace.is_empty() || !json.is_empty(),
+        "trace-check needs --trace <file> and/or --json <file>"
+    );
+    if !trace.is_empty() {
+        let text =
+            std::fs::read_to_string(trace).with_context(|| format!("reading {trace}"))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {trace}"))?;
+        let spans = chrome::validate_trace(&v)?;
+        println!("trace-check: {trace} OK ({spans} complete spans)");
+    }
+    if !json.is_empty() {
+        let text =
+            std::fs::read_to_string(json).with_context(|| format!("reading {json}"))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {json}"))?;
+        MetricsSnapshot::validate(&v)?;
+        println!(
+            "trace-check: {json} OK (schema {}, kind {})",
+            jacc::trace::snapshot::SCHEMA,
+            v.get("kind").as_str().unwrap_or("?"),
+        );
     }
     Ok(())
 }

@@ -1,24 +1,45 @@
 //! Runtime metrics: counters + timers the coordinator increments while
 //! lowering/optimizing/executing task graphs. `jacc run --verbose` and
 //! the ablation benches read these to show exactly which actions the
-//! optimizer removed (paper §2.3 "eliminate, merge and re-organize").
+//! optimizer removed (paper §2.3 "eliminate, merge and re-organize"),
+//! and `trace::MetricsSnapshot` exports the whole registry as JSON
+//! (`jacc serve-bench --json`, `BENCH_serve.json`) so the perf
+//! trajectory is machine-readable.
 //!
-//! Thread-safe: counters are `AtomicU64`s behind an `RwLock`ed registry
-//! (the lock is only taken in write mode the first time a name is
-//! seen), timers behind a `Mutex`. A `CompiledGraph` is launched from
-//! many serving workers at once, and `plan.launches` / `exec.*` must
-//! survive concurrent increments without losing updates.
+//! Thread-safe and hot-path friendly: both counters and timers are
+//! `AtomicU64`s behind an `RwLock`ed registry — the write lock is only
+//! taken the first time a name is seen, after which every update is a
+//! shared read lock plus a relaxed atomic add. A `CompiledGraph` is
+//! launched from many serving workers at once, and `plan.launches` /
+//! `exec.*` counters and per-phase timers must survive concurrent
+//! updates without losing increments or serializing launches.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::RwLock;
 use std::time::Duration;
 
-/// Counter + timer registry (shared across launch threads).
+/// Counter + timer registry (shared across launch threads). Timers
+/// accumulate whole nanoseconds in atomics, so concurrent launches pay
+/// one atomic add per timed phase — no mutex on the hot path.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: RwLock<BTreeMap<&'static str, AtomicU64>>,
-    timers: Mutex<BTreeMap<&'static str, Duration>>,
+    timers: RwLock<BTreeMap<&'static str, AtomicU64>>,
+}
+
+fn bump(map: &RwLock<BTreeMap<&'static str, AtomicU64>>, name: &'static str, v: u64) {
+    // Fast path: the entry already exists — a shared read lock plus an
+    // atomic add, so concurrent launches never serialize.
+    if let Some(c) = map.read().unwrap().get(name) {
+        c.fetch_add(v, Ordering::Relaxed);
+        return;
+    }
+    map.write()
+        .unwrap()
+        .entry(name)
+        .or_insert_with(|| AtomicU64::new(0))
+        .fetch_add(v, Ordering::Relaxed);
 }
 
 impl Metrics {
@@ -31,22 +52,13 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &'static str, v: u64) {
-        // Fast path: the counter already exists — a shared read lock
-        // plus an atomic add, so concurrent launches never serialize.
-        if let Some(c) = self.counters.read().unwrap().get(name) {
-            c.fetch_add(v, Ordering::Relaxed);
-            return;
-        }
-        self.counters
-            .write()
-            .unwrap()
-            .entry(name)
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(v, Ordering::Relaxed);
+        bump(&self.counters, name, v);
     }
 
+    /// Accumulate a duration (stored as nanoseconds in an atomic —
+    /// safe and cheap to call from concurrent launch workers).
     pub fn time(&self, name: &'static str, d: Duration) {
-        *self.timers.lock().unwrap().entry(name).or_insert(Duration::ZERO) += d;
+        bump(&self.timers, name, d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -59,7 +71,12 @@ impl Metrics {
     }
 
     pub fn timer(&self, name: &str) -> Duration {
-        self.timers.lock().unwrap().get(name).copied().unwrap_or(Duration::ZERO)
+        self.timers
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|t| Duration::from_nanos(t.load(Ordering::Relaxed)))
+            .unwrap_or(Duration::ZERO)
     }
 
     pub fn counters(&self) -> BTreeMap<&'static str, u64> {
@@ -71,9 +88,18 @@ impl Metrics {
             .collect()
     }
 
+    pub fn timers(&self) -> BTreeMap<&'static str, Duration> {
+        self.timers
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(&k, t)| (k, Duration::from_nanos(t.load(Ordering::Relaxed))))
+            .collect()
+    }
+
     pub fn reset(&self) {
         self.counters.write().unwrap().clear();
-        self.timers.lock().unwrap().clear();
+        self.timers.write().unwrap().clear();
     }
 
     /// Fold another registry's counters and timers into this one
@@ -85,10 +111,8 @@ impl Metrics {
         for (k, v) in other.counters() {
             self.add(k, v);
         }
-        let other_timers = other.timers.lock().unwrap().clone();
-        let mut timers = self.timers.lock().unwrap();
-        for (k, d) in other_timers {
-            *timers.entry(k).or_insert(Duration::ZERO) += d;
+        for (k, d) in other.timers() {
+            self.time(k, d);
         }
     }
 
@@ -98,10 +122,24 @@ impl Metrics {
         for (k, v) in self.counters() {
             out.push_str(&format!("  {k:32} {v}\n"));
         }
-        for (k, d) in self.timers.lock().unwrap().iter() {
+        for (k, d) in self.timers() {
             out.push_str(&format!("  {k:32} {:.3} ms\n", d.as_secs_f64() * 1e3));
         }
         out
+    }
+
+    /// Snapshot the registry as JSON: `{"counters": {...},
+    /// "timers_ms": {...}}` (used by `trace::MetricsSnapshot`).
+    pub fn to_json(&self) -> crate::substrate::json::Value {
+        use crate::substrate::json::{num, obj};
+        let counters = obj(self.counters().into_iter().map(|(k, v)| (k, num(v as f64))).collect());
+        let timers = obj(
+            self.timers()
+                .into_iter()
+                .map(|(k, d)| (k, num(d.as_secs_f64() * 1e3)))
+                .collect(),
+        );
+        obj(vec![("counters", counters), ("timers_ms", timers)])
     }
 }
 
@@ -132,8 +170,10 @@ mod tests {
     fn reset_clears() {
         let m = Metrics::new();
         m.incr("a");
+        m.time("t", Duration::from_millis(1));
         m.reset();
         assert_eq!(m.counter("a"), 0);
+        assert_eq!(m.timer("t"), Duration::ZERO);
     }
 
     #[test]
@@ -173,5 +213,30 @@ mod tests {
             }
         });
         assert_eq!(m.counter("hits"), 8000);
+    }
+
+    #[test]
+    fn concurrent_timers_lose_nothing() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.time("wall", Duration::from_nanos(10));
+                    }
+                });
+            }
+        });
+        assert_eq!(m.timer("wall"), Duration::from_nanos(80_000));
+    }
+
+    #[test]
+    fn to_json_carries_counters_and_timers() {
+        let m = Metrics::new();
+        m.add("plan.launches", 3);
+        m.time("exec.wall", Duration::from_millis(2));
+        let v = m.to_json();
+        assert_eq!(v.get("counters").get("plan.launches").as_u64(), Some(3));
+        assert!(v.get("timers_ms").get("exec.wall").as_f64().unwrap() > 1.9);
     }
 }

@@ -25,10 +25,11 @@ use std::time::Instant;
 
 use anyhow::Context;
 
-use crate::coordinator::{Bindings, CompiledGraph, ExecutionReport};
+use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionReport};
 use crate::serve::{
     BoundedQueue, DeviceBreakdown, LatencyLog, RequestTiming, ServeReport, Served, Ticket,
 };
+use crate::trace::Tracer;
 
 use super::replicated::ReplicatedGraph;
 
@@ -40,11 +41,24 @@ pub struct PoolConfig {
     /// Admission-queue bound per lane. Defaults to
     /// `2 * workers_per_device`.
     pub queue_depth: usize,
+    /// Optional span tracer: requests record queue-wait and launch
+    /// spans under the serving lane's device group.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl PoolConfig {
     pub fn with_workers_per_device(workers_per_device: usize) -> Self {
-        Self { workers_per_device, queue_depth: 2 * workers_per_device.max(1) }
+        Self {
+            workers_per_device,
+            queue_depth: 2 * workers_per_device.max(1),
+            tracer: None,
+        }
+    }
+
+    /// Attach a tracer; routed requests record spans into it.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
     }
 }
 
@@ -58,6 +72,8 @@ impl Default for PoolConfig {
 struct PoolRequest {
     bindings: Bindings,
     submitted: Instant,
+    /// Trace id for span recording (0 when the engine has no tracer).
+    trace: u64,
     reply: std::sync::mpsc::Sender<Served>,
 }
 
@@ -76,6 +92,7 @@ struct Lane {
     dedup_hits: AtomicU64,
     h2d_transfers: AtomicU64,
     latencies: Mutex<LatencyLog>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Index of the least-loaded lane; ties break to the lowest index so
@@ -117,6 +134,7 @@ impl PoolEngine {
                     dedup_hits: AtomicU64::new(0),
                     h2d_transfers: AtomicU64::new(0),
                     latencies: Mutex::new(LatencyLog::default()),
+                    tracer: config.tracer.clone(),
                 })
             })
             .collect();
@@ -161,9 +179,10 @@ impl PoolEngine {
         // it; undo if the queue is already closed.
         lane.outstanding.fetch_add(1, Ordering::Relaxed);
         let (tx, ticket) = Ticket::channel();
+        let trace = lane.tracer.as_ref().map_or(0, |t| t.trace_id());
         if lane
             .queue
-            .push(PoolRequest { bindings, submitted: Instant::now(), reply: tx })
+            .push(PoolRequest { bindings, submitted: Instant::now(), trace, reply: tx })
             .is_err()
         {
             lane.outstanding.fetch_sub(1, Ordering::Relaxed);
@@ -193,7 +212,7 @@ impl PoolEngine {
             errors += lane_errors;
             dedup_hits += lane_dedup;
             h2d_transfers += lane_h2d;
-            let mut log = lane.latencies.lock().unwrap();
+            let log = lane.latencies.lock().unwrap();
             merged.merge_from(&log);
             // Reuse the aggregate fill for the lane's own percentiles.
             let mut lane_report = ServeReport::default();
@@ -248,8 +267,24 @@ impl Drop for PoolEngine {
 fn lane_loop(lane: &Lane) {
     while let Some(req) = lane.queue.pop() {
         let queue = req.submitted.elapsed();
+        if let Some(tracer) = &lane.tracer {
+            tracer.record_at(
+                "serve.queue",
+                "serve",
+                lane.device as u64,
+                req.trace,
+                -1,
+                req.submitted,
+                queue,
+            );
+        }
+        let opts = ExecutionOptions {
+            tracer: lane.tracer.clone(),
+            trace_id: req.trace,
+            ..ExecutionOptions::default()
+        };
         let t0 = Instant::now();
-        let result = lane.plan.launch(&req.bindings);
+        let result = lane.plan.launch_with(&req.bindings, opts);
         let launch = t0.elapsed();
         let timing = match &result {
             Ok(rep) => {

@@ -132,10 +132,19 @@ impl ReplicatedGraph {
         opts: ExecutionOptions,
     ) -> anyhow::Result<ShardedReport> {
         let t0 = Instant::now();
+        let tracer = opts.tracer.clone();
+        let trace_id = opts.trace_id;
         let (per_dev, split_axis) =
             shard::scatter(bindings, shards, &self.replicas[0], self.replicas.len())?;
+        if let Some(tracer) = &tracer {
+            tracer.record_at("pool.scatter", "pool", 0, trace_id, -1, t0, t0.elapsed());
+        }
         let per_device = self.launch_each(&per_dev, &opts)?;
+        let t_gather = Instant::now();
         let outputs = gather(&per_device, split_axis)?;
+        if let Some(tracer) = &tracer {
+            tracer.record_at("pool.gather", "pool", 0, trace_id, -1, t_gather, t_gather.elapsed());
+        }
         Ok(ShardedReport { outputs, per_device, wall: t0.elapsed(), split_axis })
     }
 

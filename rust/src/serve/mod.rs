@@ -17,6 +17,17 @@
 //! p50/p95/p99 latency, split into queue-wait vs. launch time — what
 //! `jacc serve-bench` and `benches/serve_throughput.rs` print.
 //!
+//! Latency accounting is streaming: per-phase
+//! [`LogHistogram`](crate::trace::LogHistogram)s hold O(buckets)
+//! state no matter how many requests are served (the old exact log
+//! grew O(requests) and sorted everything at shutdown), with every
+//! reported percentile within the documented
+//! [`trace::RELATIVE_ERROR`](crate::trace::RELATIVE_ERROR) of the
+//! exact order statistic. Attach a [`Tracer`] via
+//! [`ServeConfig::with_tracer`] and every request additionally records
+//! queue-wait and launch spans under a per-request trace id
+//! (`jacc serve-bench --trace`).
+//!
 //! The multi-device counterpart — request routing across the replicas
 //! of a device pool, with per-device breakdowns in the same
 //! [`ServeReport`] — is [`crate::pool::PoolEngine`].
@@ -32,8 +43,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use crate::coordinator::{Bindings, CompiledGraph, ExecutionReport};
-use crate::substrate::stats;
+use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionReport};
+use crate::substrate::json::{arr, num, obj, Value};
+use crate::trace::{LogHistogram, Tracer};
 
 pub use queue::BoundedQueue;
 
@@ -45,11 +57,20 @@ pub struct ServeConfig {
     /// Admission-queue bound (requests in flight before submitters
     /// block). Defaults to `2 * workers`.
     pub queue_depth: usize,
+    /// Optional span tracer: each request gets a trace id and records
+    /// queue-wait plus per-action launch spans into it.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl ServeConfig {
     pub fn with_workers(workers: usize) -> Self {
-        Self { workers, queue_depth: 2 * workers.max(1) }
+        Self { workers, queue_depth: 2 * workers.max(1), tracer: None }
+    }
+
+    /// Attach a tracer; served requests record spans into it.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
     }
 }
 
@@ -103,6 +124,8 @@ pub(crate) type Served = (anyhow::Result<ExecutionReport>, RequestTiming);
 struct Request {
     bindings: Bindings,
     submitted: Instant,
+    /// Trace id for span recording (0 when the engine has no tracer).
+    trace: u64,
     reply: mpsc::Sender<Served>,
 }
 
@@ -133,64 +156,53 @@ impl Ticket {
     }
 }
 
-/// Per-request latency samples (milliseconds), split by phase. One
-/// mutex guards all three vectors so a worker records a request with a
-/// single lock. `pub(crate)` — the pool engine keeps one per device.
+/// Per-phase streaming latency histograms (milliseconds). One mutex
+/// guards all five sketches so a worker records a request with a
+/// single lock; memory stays O(buckets) no matter how many requests
+/// are served, and every percentile read is within the documented
+/// [`crate::trace::RELATIVE_ERROR`] of the exact order statistic.
+/// `pub(crate)` — the pool engine keeps one per device and merges the
+/// lanes bucket-wise at shutdown.
 #[derive(Debug, Default)]
 pub(crate) struct LatencyLog {
-    total_ms: Vec<f64>,
-    queue_ms: Vec<f64>,
-    launch_ms: Vec<f64>,
-    h2d_ms: Vec<f64>,
-    kernel_ms: Vec<f64>,
+    total_ms: LogHistogram,
+    queue_ms: LogHistogram,
+    launch_ms: LogHistogram,
+    h2d_ms: LogHistogram,
+    kernel_ms: LogHistogram,
 }
 
 impl LatencyLog {
     pub(crate) fn record(&mut self, timing: &RequestTiming) {
-        self.total_ms.push(timing.total().as_secs_f64() * 1e3);
-        self.queue_ms.push(timing.queue.as_secs_f64() * 1e3);
-        self.launch_ms.push(timing.launch.as_secs_f64() * 1e3);
-        self.h2d_ms.push(timing.h2d.as_secs_f64() * 1e3);
-        self.kernel_ms.push(timing.kernel.as_secs_f64() * 1e3);
+        self.total_ms.record(timing.total().as_secs_f64() * 1e3);
+        self.queue_ms.record(timing.queue.as_secs_f64() * 1e3);
+        self.launch_ms.record(timing.launch.as_secs_f64() * 1e3);
+        self.h2d_ms.record(timing.h2d.as_secs_f64() * 1e3);
+        self.kernel_ms.record(timing.kernel.as_secs_f64() * 1e3);
     }
 
     pub(crate) fn merge_from(&mut self, other: &LatencyLog) {
-        self.total_ms.extend_from_slice(&other.total_ms);
-        self.queue_ms.extend_from_slice(&other.queue_ms);
-        self.launch_ms.extend_from_slice(&other.launch_ms);
-        self.h2d_ms.extend_from_slice(&other.h2d_ms);
-        self.kernel_ms.extend_from_slice(&other.kernel_ms);
+        self.total_ms.merge(&other.total_ms);
+        self.queue_ms.merge(&other.queue_ms);
+        self.launch_ms.merge(&other.launch_ms);
+        self.h2d_ms.merge(&other.h2d_ms);
+        self.kernel_ms.merge(&other.kernel_ms);
     }
 
-    /// Fold this log into `report`'s percentile fields. Each vector is
-    /// sorted **once** and every percentile reads the sorted slice
-    /// (`stats::percentile_sorted`) — shutdown used to re-sort per
-    /// percentile via `stats::percentile`.
-    pub(crate) fn fill(&mut self, report: &mut ServeReport) {
-        let sort = |v: &mut Vec<f64>| {
-            v.sort_by(|a, b| a.partial_cmp(b).expect("no NaN latencies"));
-        };
-        sort(&mut self.total_ms);
-        sort(&mut self.queue_ms);
-        sort(&mut self.launch_ms);
-        sort(&mut self.h2d_ms);
-        sort(&mut self.kernel_ms);
-        let pct = |v: &[f64], p: f64| {
-            if v.is_empty() {
-                0.0
-            } else {
-                stats::percentile_sorted(v, p)
-            }
-        };
-        report.p50_ms = pct(&self.total_ms, 50.0);
-        report.p95_ms = pct(&self.total_ms, 95.0);
-        report.p99_ms = pct(&self.total_ms, 99.0);
-        report.max_ms = self.total_ms.last().copied().unwrap_or(0.0);
-        report.queue_p50_ms = pct(&self.queue_ms, 50.0);
-        report.queue_p95_ms = pct(&self.queue_ms, 95.0);
-        report.launch_p95_ms = pct(&self.launch_ms, 95.0);
-        report.h2d_p95_ms = pct(&self.h2d_ms, 95.0);
-        report.kernel_p95_ms = pct(&self.kernel_ms, 95.0);
+    /// Fold this log into `report`'s percentile fields. Histogram
+    /// reads are O(buckets); an empty log fills zeros (the
+    /// zero-request shutdown path must not panic). `max` is exact —
+    /// the sketch tracks extrema outside the buckets.
+    pub(crate) fn fill(&self, report: &mut ServeReport) {
+        report.p50_ms = self.total_ms.percentile(50.0);
+        report.p95_ms = self.total_ms.percentile(95.0);
+        report.p99_ms = self.total_ms.percentile(99.0);
+        report.max_ms = self.total_ms.max_value();
+        report.queue_p50_ms = self.queue_ms.percentile(50.0);
+        report.queue_p95_ms = self.queue_ms.percentile(95.0);
+        report.launch_p95_ms = self.launch_ms.percentile(95.0);
+        report.h2d_p95_ms = self.h2d_ms.percentile(95.0);
+        report.kernel_p95_ms = self.kernel_ms.percentile(95.0);
     }
 }
 
@@ -198,6 +210,7 @@ impl LatencyLog {
 struct Shared {
     plan: Arc<CompiledGraph>,
     queue: BoundedQueue<Request>,
+    tracer: Option<Arc<Tracer>>,
     latencies: Mutex<LatencyLog>,
     completed: AtomicU64,
     errors: AtomicU64,
@@ -242,6 +255,20 @@ impl DeviceBreakdown {
             self.h2d_dedup_hits + self.h2d_transfers,
             if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
         )
+    }
+
+    /// Snapshot row (`jacc serve-bench --json`).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("device", num(self.device as f64)),
+            ("requests", num(self.requests as f64)),
+            ("errors", num(self.errors as f64)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("queue_p95_ms", num(self.queue_p95_ms)),
+            ("h2d_dedup_hits", num(self.h2d_dedup_hits as f64)),
+            ("h2d_transfers", num(self.h2d_transfers as f64)),
+        ])
     }
 }
 
@@ -332,6 +359,33 @@ impl ServeReport {
         }
         out
     }
+
+    /// Machine-readable form for `trace::MetricsSnapshot` documents
+    /// (`jacc serve-bench --json`, `BENCH_serve.json`). Serialized via
+    /// `substrate::json`, so the output always round-trips through
+    /// `substrate::json::Value::parse`.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("workers", num(self.workers as f64)),
+            ("requests", num(self.requests as f64)),
+            ("errors", num(self.errors as f64)),
+            ("wall_s", num(self.wall.as_secs_f64())),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("max_ms", num(self.max_ms)),
+            ("queue_p50_ms", num(self.queue_p50_ms)),
+            ("queue_p95_ms", num(self.queue_p95_ms)),
+            ("launch_p95_ms", num(self.launch_p95_ms)),
+            ("h2d_p95_ms", num(self.h2d_p95_ms)),
+            ("kernel_p95_ms", num(self.kernel_p95_ms)),
+            ("h2d_dedup_hits", num(self.h2d_dedup_hits as f64)),
+            ("h2d_transfers", num(self.h2d_transfers as f64)),
+            ("dedup_hit_rate", num(self.dedup_hit_rate())),
+            ("per_device", arr(self.per_device.iter().map(|d| d.to_json()).collect())),
+        ])
+    }
 }
 
 /// Multi-worker serving loop over one shared compiled plan.
@@ -348,6 +402,7 @@ impl ServingEngine {
         let shared = Arc::new(Shared {
             plan,
             queue: BoundedQueue::new(config.queue_depth.max(1)),
+            tracer: config.tracer.clone(),
             latencies: Mutex::new(LatencyLog::default()),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -379,9 +434,10 @@ impl ServingEngine {
     /// (backpressure); fails only if the engine is shutting down.
     pub fn submit(&self, bindings: Bindings) -> anyhow::Result<Ticket> {
         let (tx, ticket) = Ticket::channel();
+        let trace = self.shared.tracer.as_ref().map_or(0, |t| t.trace_id());
         self.shared
             .queue
-            .push(Request { bindings, submitted: Instant::now(), reply: tx })
+            .push(Request { bindings, submitted: Instant::now(), trace, reply: tx })
             .map_err(|_| anyhow::anyhow!("serving engine is shut down"))?;
         Ok(ticket)
     }
@@ -430,8 +486,16 @@ impl Drop for ServingEngine {
 fn worker_loop(shared: &Shared) {
     while let Some(req) = shared.queue.pop() {
         let queue = req.submitted.elapsed();
+        if let Some(tracer) = &shared.tracer {
+            tracer.record_at("serve.queue", "serve", 0, req.trace, -1, req.submitted, queue);
+        }
+        let opts = ExecutionOptions {
+            tracer: shared.tracer.clone(),
+            trace_id: req.trace,
+            ..ExecutionOptions::default()
+        };
         let t0 = Instant::now();
-        let result = shared.plan.launch(&req.bindings);
+        let result = shared.plan.launch_with(&req.bindings, opts);
         let launch = t0.elapsed();
         let timing = match &result {
             Ok(rep) => {
@@ -478,8 +542,16 @@ pub fn serve_all(
 mod tests {
     use super::*;
 
+    use crate::trace::RELATIVE_ERROR;
+
+    /// Relative-error agreement between a histogram percentile and the
+    /// exact order statistic.
+    fn close(est: f64, exact: f64) -> bool {
+        (est - exact).abs() <= exact.abs().max(1e-9) * (RELATIVE_ERROR + 1e-9)
+    }
+
     #[test]
-    fn latency_log_fill_sorts_once_and_matches_percentiles() {
+    fn latency_log_fill_matches_exact_within_bucket_error() {
         let mut log = LatencyLog::default();
         // Deliberately unsorted totals: 5,1,3,2,4 ms with queue 1 ms
         // and launch (total-1) ms each.
@@ -494,15 +566,68 @@ mod tests {
         }
         let mut r = ServeReport::default();
         log.fill(&mut r);
-        assert!((r.p50_ms - 3.0).abs() < 1e-9, "p50 {}", r.p50_ms);
+        assert!(close(r.p50_ms, 3.0), "p50 {}", r.p50_ms);
+        assert!(close(r.p95_ms, 5.0), "p95 {}", r.p95_ms);
+        // The sketch tracks the maximum exactly, outside the buckets.
         assert!((r.max_ms - 5.0).abs() < 1e-9, "max {}", r.max_ms);
-        assert!((r.queue_p50_ms - 1.0).abs() < 1e-9);
-        assert!(r.queue_p95_ms <= r.p95_ms);
-        assert!(r.launch_p95_ms <= r.p95_ms);
-        // The h2d/kernel split is attributed within the launch share.
-        assert!(r.h2d_p95_ms <= r.launch_p95_ms + 1e-9);
-        assert!(r.kernel_p95_ms <= r.launch_p95_ms + 1e-9);
-        assert!((r.h2d_p95_ms + r.kernel_p95_ms - r.launch_p95_ms).abs() < 1e-6);
+        assert!(close(r.queue_p50_ms, 1.0), "queue p50 {}", r.queue_p50_ms);
+        assert!(r.queue_p95_ms <= r.p95_ms * (1.0 + RELATIVE_ERROR));
+        assert!(r.launch_p95_ms <= r.p95_ms * (1.0 + RELATIVE_ERROR));
+        // The h2d/kernel split is attributed within the launch share
+        // (each estimate carries its own bucket error).
+        let tol = 3.0 * RELATIVE_ERROR * r.launch_p95_ms;
+        assert!(r.h2d_p95_ms <= r.launch_p95_ms + tol);
+        assert!(r.kernel_p95_ms <= r.launch_p95_ms + tol);
+        assert!((r.h2d_p95_ms + r.kernel_p95_ms - r.launch_p95_ms).abs() <= tol);
+    }
+
+    /// Streaming percentiles agree with the old exact-sort path within
+    /// the documented bucket error on a larger, skewed sample.
+    #[test]
+    fn latency_log_matches_exact_sort_within_documented_error() {
+        use crate::substrate::stats;
+        let mut log = LatencyLog::default();
+        let mut exact = Vec::new();
+        let mut x: u64 = 0x2545f4914f6cdd1d;
+        for _ in 0..5000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let u = ((x >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
+            let total_ms = 0.2 + 50.0 / (u + 0.05); // skewed tail
+            exact.push(total_ms);
+            log.record(&RequestTiming {
+                queue: Duration::ZERO,
+                launch: Duration::from_secs_f64(total_ms / 1e3),
+                ..RequestTiming::default()
+            });
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut r = ServeReport::default();
+        log.fill(&mut r);
+        for (est, p) in [(r.p50_ms, 50.0), (r.p95_ms, 95.0), (r.p99_ms, 99.0)] {
+            // The histogram's nearest-rank estimate must be within the
+            // documented relative error of the exact order statistic
+            // bracketing the interpolated rank.
+            let rank = p / 100.0 * (exact.len() - 1) as f64;
+            let lo = exact[rank.floor() as usize];
+            let hi = exact[rank.ceil() as usize];
+            assert!(
+                est >= lo * (1.0 - RELATIVE_ERROR - 1e-9)
+                    && est <= hi * (1.0 + RELATIVE_ERROR + 1e-9),
+                "p{p}: est {est} outside [{lo}, {hi}] +/- {RELATIVE_ERROR}"
+            );
+            // And stay close to the old interpolated report value:
+            // the guaranteed bound is the bracketing gap plus the
+            // bucket error on either side.
+            let interp = stats::percentile_sorted(&exact, p);
+            let tol = (hi - lo) + 2.0 * RELATIVE_ERROR * interp + 1e-9;
+            assert!(
+                (est - interp).abs() <= tol,
+                "p{p}: est {est} drifted from exact-sort {interp} (tol {tol})"
+            );
+        }
+        assert_eq!(r.max_ms, *exact.last().unwrap(), "max is exact");
     }
 
     #[test]
@@ -512,6 +637,53 @@ mod tests {
         assert_eq!(r.p50_ms, 0.0);
         assert_eq!(r.max_ms, 0.0);
         assert_eq!(r.queue_p95_ms, 0.0);
+    }
+
+    /// Shutting an engine down before any request completes must
+    /// return a zeroed report, not panic in percentile math. An empty
+    /// graph compiles without artifacts, so this runs everywhere.
+    #[test]
+    fn zero_request_shutdown_returns_zeroed_report() {
+        let plan = Arc::new(crate::coordinator::TaskGraph::new().compile().unwrap());
+        let engine = ServingEngine::start(plan, ServeConfig::with_workers(2)).unwrap();
+        let report = engine.shutdown();
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.p50_ms, 0.0);
+        assert_eq!(report.p99_ms, 0.0);
+        assert_eq!(report.max_ms, 0.0);
+        assert_eq!(report.dedup_hit_rate(), 0.0);
+        // And the zeroed report still serializes + summarizes cleanly.
+        let v = report.to_json();
+        assert_eq!(v.get("requests").as_u64(), Some(0));
+        assert!(report.summary().contains("0 requests"));
+    }
+
+    #[test]
+    fn serve_report_json_round_trips() {
+        let r = ServeReport {
+            workers: 3,
+            requests: 42,
+            wall: Duration::from_secs(2),
+            throughput_rps: 21.0,
+            p50_ms: 1.25,
+            p95_ms: 4.5,
+            h2d_dedup_hits: 10,
+            h2d_transfers: 30,
+            per_device: vec![DeviceBreakdown {
+                device: 1,
+                requests: 42,
+                p95_ms: 4.5,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let text = r.to_json().to_json_pretty(2);
+        let parsed = Value::parse(&text).expect("report JSON must re-parse");
+        assert_eq!(parsed.get("requests").as_u64(), Some(42));
+        assert_eq!(parsed.get("per_device").as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("per_device").as_arr().unwrap()[0].get("device").as_u64(), Some(1));
+        assert!((parsed.get("dedup_hit_rate").as_f64().unwrap() - 0.25).abs() < 1e-12);
     }
 
     #[test]

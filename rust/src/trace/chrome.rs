@@ -1,0 +1,144 @@
+//! Chrome trace-event JSON export (Perfetto / chrome://tracing).
+//!
+//! Emits the JSON object format: `{"traceEvents": [...],
+//! "displayTimeUnit": "ms"}` where each span is a complete event
+//! (`"ph": "X"`) with `ts`/`dur` in microseconds, `pid` = device index
+//! (one process group per device) and `tid` = recording worker thread
+//! (one track per worker). Metadata events (`"ph": "M"`) name each
+//! process group. Load the file at <https://ui.perfetto.dev> or
+//! `chrome://tracing` — overlapping H2D and kernel spans on different
+//! tracks of the same device group are the visual proof of pipelined
+//! replay.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tracer;
+use crate::substrate::json::{arr, num, obj, s, Value};
+
+/// Build the Chrome trace-event JSON object for everything the tracer
+/// has recorded.
+pub fn trace_value(tracer: &Tracer) -> Value {
+    let events = tracer.events();
+    let mut out = Vec::with_capacity(events.len() + 8);
+    let pids: BTreeSet<u64> = events.iter().map(|e| e.pid).collect();
+    for pid in pids {
+        out.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(pid as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s(&format!("device {pid}")))])),
+        ]));
+    }
+    for e in &events {
+        out.push(obj(vec![
+            ("ph", s("X")),
+            ("name", s(&e.name)),
+            ("cat", s(e.cat)),
+            ("ts", num(e.ts_us)),
+            ("dur", num(e.dur_us)),
+            ("pid", num(e.pid as f64)),
+            ("tid", num(e.tid as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("trace", num(e.trace as f64)),
+                    ("stage", num(e.stage as f64)),
+                ]),
+            ),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", arr(out)),
+        ("displayTimeUnit", s("ms")),
+        ("droppedEvents", num(tracer.dropped() as f64)),
+    ])
+}
+
+/// Serialize the tracer's events to `path` as pretty-printed trace-
+/// event JSON.
+pub fn write_trace(path: &Path, tracer: &Tracer) -> Result<()> {
+    let text = trace_value(tracer).to_json_pretty(2);
+    std::fs::write(path, text)
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+/// Validate a parsed trace-event document: the `traceEvents` array must
+/// exist and every complete (`"ph": "X"`) event must carry the required
+/// keys (`ph`, `ts`, `dur`, `pid`, `tid`, `name`). Returns the number
+/// of complete events.
+pub fn validate_trace(v: &Value) -> Result<usize> {
+    let events = v
+        .get("traceEvents")
+        .as_arr()
+        .context("trace document has no traceEvents array")?;
+    let mut complete = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .as_str()
+            .with_context(|| format!("event {i}: missing ph"))?;
+        for key in ["name", "pid", "tid"] {
+            if matches!(e.get(key), Value::Null) {
+                bail!("event {i}: missing required key {key}");
+            }
+        }
+        if ph == "X" {
+            for key in ["ts", "dur"] {
+                if e.get(key).as_f64().is_none() {
+                    bail!("event {i}: complete event missing numeric {key}");
+                }
+            }
+            complete += 1;
+        }
+    }
+    Ok(complete)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::json;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    fn sample_tracer() -> Arc<Tracer> {
+        let t = Arc::new(Tracer::new());
+        let now = Instant::now();
+        t.record_at("h2d b0", "copy_in", 0, 1, 0, now, Duration::from_micros(50));
+        t.record_at("kernel vector_add", "launch", 0, 1, 1, now, Duration::from_micros(200));
+        t.record_at("d2h t1", "copy_out", 1, 2, 2, now, Duration::from_micros(30));
+        t
+    }
+
+    #[test]
+    fn export_has_required_keys_and_round_trips() {
+        let t = sample_tracer();
+        let v = trace_value(&t);
+        let text = v.to_json_pretty(2);
+        let parsed = json::Value::parse(&text).expect("emitted trace must re-parse");
+        let n = validate_trace(&parsed).expect("emitted trace must validate");
+        assert_eq!(n, 3, "three complete events");
+        // Two device groups -> two process_name metadata events.
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .count();
+        assert_eq!(metas, 2);
+    }
+
+    #[test]
+    fn validate_rejects_missing_keys() {
+        let doc = obj(vec![(
+            "traceEvents",
+            arr(vec![obj(vec![("ph", s("X")), ("name", s("x"))])]),
+        )]);
+        assert!(validate_trace(&doc).is_err());
+        let no_events = obj(vec![("other", num(1.0))]);
+        assert!(validate_trace(&no_events).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! Mergeable log-bucketed streaming histogram for latency accounting.
+//!
+//! A DDSketch-style sketch: values map to geometrically spaced buckets
+//! `idx = ceil(ln(v) / ln(gamma))` with `gamma = (1 + e) / (1 - e)` for
+//! relative accuracy `e` ([`RELATIVE_ERROR`]). Bucket `i` covers
+//! `(gamma^(i-1), gamma^i]` and is summarised by its midpoint estimate
+//! `2 * gamma^i / (gamma + 1)`, which is within a factor `1 ± e` of
+//! every value in the bucket — so any quantile estimate is within `e`
+//! *relative* error of the true order statistic, regardless of how many
+//! values were recorded.
+//!
+//! Memory is O(occupied buckets) — about 1,400 buckets span nanoseconds
+//! to hours at 1% error — never O(recorded values), which is what lets
+//! the serve path account latencies for millions of requests without
+//! growing. Histograms merge by bucket-wise addition, so per-worker and
+//! per-device sketches combine into fleet aggregates losslessly (the
+//! merged sketch is identical to one that saw every value directly).
+
+use std::collections::BTreeMap;
+
+/// Documented relative error bound for quantile estimates: every
+/// percentile returned by [`LogHistogram::percentile`] is within
+/// `value * RELATIVE_ERROR` of the exact nearest-rank order statistic.
+pub const RELATIVE_ERROR: f64 = 0.01;
+
+/// Values at or below this (and non-finite values) land in the exact
+/// zero bucket instead of a log bucket.
+const MIN_TRACKABLE: f64 = 1e-9;
+
+/// Streaming histogram with bounded memory and mergeable state.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    /// Sparse log-spaced buckets: index -> count.
+    buckets: BTreeMap<i32, u64>,
+    /// Count of zero / sub-resolution / non-finite values.
+    zero: u64,
+    count: u64,
+    sum: f64,
+    /// Exact extrema (meaningful only when `count > 0`); percentile
+    /// estimates are clamped into `[min, max]` so single-sample and
+    /// tail queries stay exact.
+    min: f64,
+    max: f64,
+}
+
+fn gamma() -> f64 {
+    (1.0 + RELATIVE_ERROR) / (1.0 - RELATIVE_ERROR)
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value. Non-finite or sub-resolution values count
+    /// toward the zero bucket rather than being silently discarded.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        if v <= MIN_TRACKABLE {
+            self.zero += 1;
+        } else {
+            let idx = (v.ln() / gamma().ln()).ceil() as i32;
+            *self.buckets.entry(idx).or_insert(0) += 1;
+        }
+    }
+
+    /// Nearest-rank percentile estimate, within [`RELATIVE_ERROR`]
+    /// relative error of the exact order statistic. Returns 0.0 on an
+    /// empty histogram (no panic — the zero-request shutdown path
+    /// relies on this).
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0 * (self.count - 1) as f64).round() as u64;
+        let mut cum = self.zero;
+        if rank < cum {
+            return self.min.max(0.0);
+        }
+        let g = gamma();
+        for (&idx, &n) in &self.buckets {
+            cum += n;
+            if rank < cum {
+                let est = 2.0 * g.powi(idx) / (g + 1.0);
+                return est.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Bucket-wise merge; the result is identical to a histogram that
+    /// recorded both input streams directly (merge is associative and
+    /// commutative up to float summation order in `sum`).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.zero += other.zero;
+        for (&idx, &n) in &other.buckets {
+            *self.buckets.entry(idx).or_insert(0) += n;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Exact maximum recorded value (0.0 when empty).
+    pub fn max_value(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Exact minimum recorded value (0.0 when empty).
+    pub fn min_value(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    /// Number of occupied buckets — the actual memory footprint.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len() + usize::from(self.zero > 0)
+    }
+
+    /// Summary object for snapshot export.
+    pub fn to_json(&self) -> crate::substrate::json::Value {
+        use crate::substrate::json::{num, obj};
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("mean", num(self.mean())),
+            ("p50", num(self.percentile(50.0))),
+            ("p95", num(self.percentile(95.0))),
+            ("p99", num(self.percentile(99.0))),
+            ("min", num(self.min_value())),
+            ("max", num(self.max_value())),
+            ("buckets", num(self.bucket_count() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift so tests never depend on an RNG crate.
+    struct Rng(u64);
+    impl Rng {
+        fn next_f64(&mut self) -> f64 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            // Uniform in (0, 1].
+            ((self.0 >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+        }
+    }
+
+    const PCTS: [f64; 8] = [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0];
+
+    fn assert_agrees(values: &[f64], label: &str) {
+        let mut h = LogHistogram::new();
+        let mut sorted = values.to_vec();
+        for &v in values {
+            h.record(v);
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in PCTS {
+            let rank = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+            let exact = sorted[rank];
+            let est = h.percentile(p);
+            let rel = (est - exact).abs() / exact.abs().max(MIN_TRACKABLE);
+            assert!(
+                rel <= RELATIVE_ERROR + 1e-9,
+                "{label} p{p}: est {est} vs exact {exact} (rel err {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_percentiles_within_documented_error() {
+        let mut rng = Rng(0x9e3779b97f4a7c15);
+        let values: Vec<f64> = (0..10_000).map(|_| 0.5 + 1500.0 * rng.next_f64()).collect();
+        assert_agrees(&values, "uniform");
+    }
+
+    #[test]
+    fn heavy_tail_percentiles_within_documented_error() {
+        // Pareto-ish: u^-2 spans ~6 orders of magnitude.
+        let mut rng = Rng(0x51a7b2c3d4e5f607);
+        let values: Vec<f64> = (0..10_000)
+            .map(|_| {
+                let u = rng.next_f64();
+                1.0 / (u * u)
+            })
+            .collect();
+        assert_agrees(&values, "heavy-tail");
+    }
+
+    #[test]
+    fn single_sample_is_exact() {
+        let mut h = LogHistogram::new();
+        h.record(42.75);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 42.75, "p{p}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_value(), 42.75);
+        assert_eq!(h.min_value(), 42.75);
+    }
+
+    #[test]
+    fn empty_histogram_returns_zero_not_panic() {
+        let h = LogHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.max_value(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mut rng = Rng(7);
+        let part = |seedless: &mut Rng, scale: f64| {
+            let mut h = LogHistogram::new();
+            for _ in 0..1000 {
+                h.record(scale * seedless.next_f64());
+            }
+            h
+        };
+        let a = part(&mut rng, 1.0);
+        let b = part(&mut rng, 100.0);
+        let c = part(&mut rng, 10_000.0);
+
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.buckets, right.buckets);
+        assert_eq!(left.zero, right.zero);
+        assert_eq!(left.min_value(), right.min_value());
+        assert_eq!(left.max_value(), right.max_value());
+        assert!((left.sum() - right.sum()).abs() <= 1e-9 * left.sum().abs());
+        for p in PCTS {
+            assert_eq!(left.percentile(p), right.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_pass_recording() {
+        let mut rng = Rng(99);
+        let values: Vec<f64> = (0..4000).map(|_| 3.0 * rng.next_f64()).collect();
+        let mut whole = LogHistogram::new();
+        for &v in &values {
+            whole.record(v);
+        }
+        let mut merged = LogHistogram::new();
+        for chunk in values.chunks(517) {
+            let mut part = LogHistogram::new();
+            for &v in chunk {
+                part.record(v);
+            }
+            merged.merge(&part);
+        }
+        assert_eq!(whole.count(), merged.count());
+        assert_eq!(whole.buckets, merged.buckets);
+        for p in PCTS {
+            assert_eq!(whole.percentile(p), merged.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn zero_and_nonfinite_values_are_counted_not_lost() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(5.0);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn memory_is_bounded_by_buckets_not_samples() {
+        let mut rng = Rng(123);
+        let mut h = LogHistogram::new();
+        for _ in 0..200_000 {
+            h.record(1e-3 + 1e4 * rng.next_f64());
+        }
+        assert_eq!(h.count(), 200_000);
+        // ln(1e7) / ln(gamma) ~ 806 possible buckets over this range.
+        assert!(h.bucket_count() < 2000, "buckets: {}", h.bucket_count());
+    }
+}

@@ -1,0 +1,386 @@
+//! Span-based launch tracing, streaming latency histograms, and
+//! machine-readable metrics snapshots — the observability substrate.
+//!
+//! Three pieces, layered bottom-up:
+//!
+//! - [`LogHistogram`] — mergeable log-bucketed streaming histogram
+//!   (O(buckets) memory, documented [`RELATIVE_ERROR`] quantile bound)
+//!   that the serve path uses for per-phase latency distributions.
+//! - [`Tracer`] — per-request span recording into lock-light per-thread
+//!   ring buffers. Every recording thread owns its own bounded ring, so
+//!   a span record is a thread-local map probe plus an uncontended
+//!   mutex; worker threads never serialize on a shared log. Export
+//!   drains all rings into Chrome trace-event JSON ([`chrome`]) that
+//!   Perfetto renders with one track per worker thread and one process
+//!   group per device — overlapped H2D/compute is visually verifiable.
+//! - [`MetricsSnapshot`] — serializes counters, timers, histograms and
+//!   per-device breakdowns to JSON via `substrate::json`, wired into
+//!   `jacc run --trace` and `jacc serve-bench --json`.
+//!
+//! Span categories mirror the action stream: `copy_in` (H2D),
+//! `launch` (kernel), `copy_out` (D2H), `compile`, `stage` (pipeline
+//! stage windows), `serve` (queue-wait), `pool` (scatter/gather) and
+//! `launch_total` (whole-plan replay). Every span carries the request's
+//! trace id so one request can be followed across workers and devices.
+
+pub mod chrome;
+pub mod histogram;
+pub mod ring;
+pub mod snapshot;
+
+pub use histogram::{LogHistogram, RELATIVE_ERROR};
+pub use snapshot::MetricsSnapshot;
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ring::Ring;
+
+/// Default per-thread ring capacity (events). At ~100 bytes/event this
+/// bounds a worker's trace memory to a few MB regardless of uptime.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// One completed span, timestamped relative to the tracer's origin.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Human-readable span name (e.g. `kernel vector_add`, `h2d b3`).
+    pub name: String,
+    /// Category: `copy_in`, `launch`, `copy_out`, `compile`, `stage`,
+    /// `serve`, `pool`, `launch_total`.
+    pub cat: &'static str,
+    /// Start, microseconds since the tracer's origin.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Track group — the device index the span executed against
+    /// (0 for host-side spans).
+    pub pid: u64,
+    /// Recording thread's stable id (one Perfetto track per thread).
+    pub tid: u64,
+    /// Request trace id (0 = not tied to a request).
+    pub trace: u64,
+    /// Pipeline stage index, -1 when not applicable.
+    pub stage: i64,
+}
+
+/// One thread's event ring. The mutex is uncontended in steady state
+/// (only the owning thread pushes); the export path locks briefly to
+/// snapshot.
+#[derive(Debug)]
+struct ThreadRing {
+    tid: u64,
+    buf: Mutex<Ring<TraceEvent>>,
+}
+
+impl ThreadRing {
+    fn new(tid: u64, cap: usize) -> Self {
+        Self { tid, buf: Mutex::new(Ring::new(cap)) }
+    }
+
+    fn push(&self, mut ev: TraceEvent) {
+        ev.tid = self.tid;
+        self.buf.lock().unwrap().push(ev);
+    }
+
+    fn snapshot(&self) -> (Vec<TraceEvent>, u64) {
+        let buf = self.buf.lock().unwrap();
+        (buf.snapshot(), buf.dropped())
+    }
+}
+
+// Process-wide stable thread ids (Perfetto tracks). Thread ids are
+// shared across tracers so the same worker lands on the same track in
+// every trace it contributes to.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TRACER: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_TID: Cell<u64> = const { Cell::new(0) };
+    // tracer id -> this thread's ring for that tracer. Entries for
+    // dropped tracers linger until the thread exits; each is one Arc,
+    // a bounded leak accepted for a lock-free fast path.
+    static TRACER_RINGS: RefCell<HashMap<u64, Arc<ThreadRing>>> =
+        RefCell::new(HashMap::new());
+}
+
+fn current_tid() -> u64 {
+    THREAD_TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+/// Span recorder with per-thread ring buffers.
+///
+/// Cheap to share (`Arc<Tracer>`); recording touches only the calling
+/// thread's ring, so concurrent workers never contend. The tracer's
+/// central `rings` list holds an `Arc` to every ring ever registered,
+/// so events recorded by short-lived scoped threads survive the thread
+/// and are included in the export.
+#[derive(Debug)]
+pub struct Tracer {
+    id: u64,
+    origin: Instant,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    next_trace: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// Tracer whose per-thread rings hold at most `capacity` events.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            id: NEXT_TRACER.fetch_add(1, Ordering::Relaxed),
+            origin: Instant::now(),
+            capacity,
+            rings: Mutex::new(Vec::new()),
+            next_trace: AtomicU64::new(0),
+        }
+    }
+
+    /// Allocate the next request trace id (1-based; 0 means untraced).
+    pub fn trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// The calling thread's ring for this tracer, registering it on
+    /// first use.
+    fn ring(&self) -> Arc<ThreadRing> {
+        TRACER_RINGS.with(|map| {
+            let mut map = map.borrow_mut();
+            Arc::clone(map.entry(self.id).or_insert_with(|| {
+                let ring = Arc::new(ThreadRing::new(current_tid(), self.capacity));
+                self.rings.lock().unwrap().push(Arc::clone(&ring));
+                ring
+            }))
+        })
+    }
+
+    /// Record a completed span from its start instant and duration
+    /// (used when the span's start predates the recording call, e.g.
+    /// queue-wait measured at dequeue time).
+    pub fn record_at(
+        &self,
+        name: impl Into<String>,
+        cat: &'static str,
+        pid: u64,
+        trace: u64,
+        stage: i64,
+        start: Instant,
+        dur: Duration,
+    ) {
+        let ts_us = start.saturating_duration_since(self.origin).as_secs_f64() * 1e6;
+        self.ring().push(TraceEvent {
+            name: name.into(),
+            cat,
+            ts_us,
+            dur_us: dur.as_secs_f64() * 1e6,
+            pid,
+            tid: 0, // stamped by the ring
+            trace,
+            stage,
+        });
+    }
+
+    /// RAII span: records on drop with the elapsed duration.
+    pub fn span(
+        self: &Arc<Self>,
+        name: impl Into<String>,
+        cat: &'static str,
+        pid: u64,
+        trace: u64,
+        stage: i64,
+    ) -> Span {
+        Span {
+            tracer: Arc::clone(self),
+            name: name.into(),
+            cat,
+            pid,
+            trace,
+            stage,
+            start: Instant::now(),
+        }
+    }
+
+    /// Drain every ring into one list, sorted by start time (stable, so
+    /// same-timestamp events keep per-thread record order).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let rings = self.rings.lock().unwrap();
+        let mut all = Vec::new();
+        for ring in rings.iter() {
+            all.extend(ring.snapshot().0);
+        }
+        all.sort_by(|a, b| a.ts_us.partial_cmp(&b.ts_us).unwrap());
+        all
+    }
+
+    /// Total events lost to ring overwrite across all threads.
+    pub fn dropped(&self) -> u64 {
+        self.rings.lock().unwrap().iter().map(|r| r.snapshot().1).sum()
+    }
+
+    /// Total surviving events across all threads.
+    pub fn len(&self) -> usize {
+        self.rings.lock().unwrap().iter().map(|r| r.buf.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The tracer's time origin — spans' `ts_us` are relative to this.
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+}
+
+/// RAII guard from [`Tracer::span`]; records the span when dropped.
+#[derive(Debug)]
+pub struct Span {
+    tracer: Arc<Tracer>,
+    name: String,
+    cat: &'static str,
+    pid: u64,
+    trace: u64,
+    stage: i64,
+    start: Instant,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.tracer.record_at(
+            std::mem::take(&mut self.name),
+            self.cat,
+            self.pid,
+            self.trace,
+            self.stage,
+            self.start,
+            self.start.elapsed(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn multi_thread_recording_loses_nothing_and_keeps_span_order() {
+        let tracer = Arc::new(Tracer::new());
+        let threads = 8;
+        let per_thread = 500;
+        thread::scope(|s| {
+            for _ in 0..threads {
+                let tr = Arc::clone(&tracer);
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        let start = Instant::now();
+                        tr.record_at(
+                            format!("e{i}"),
+                            "launch",
+                            0,
+                            1,
+                            -1,
+                            start,
+                            Duration::from_nanos(10),
+                        );
+                    }
+                });
+            }
+        });
+        let events = tracer.events();
+        assert_eq!(events.len(), threads * per_thread, "no events may be lost");
+        assert_eq!(tracer.dropped(), 0);
+
+        // Per thread: all spans present, in record order (monotone
+        // start times + stable sort preserve per-ring order).
+        let mut by_tid: HashMap<u64, Vec<&TraceEvent>> = HashMap::new();
+        for e in &events {
+            by_tid.entry(e.tid).or_default().push(e);
+        }
+        assert_eq!(by_tid.len(), threads, "one track per thread");
+        for (tid, evs) in by_tid {
+            assert_eq!(evs.len(), per_thread, "tid {tid}");
+            for (i, e) in evs.iter().enumerate() {
+                assert_eq!(e.name, format!("e{i}"), "tid {tid} out of span order");
+            }
+            for w in evs.windows(2) {
+                assert!(w[0].ts_us <= w[1].ts_us, "tid {tid} timestamps regressed");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_overflow_keeps_newest_and_counts_dropped() {
+        let tracer = Arc::new(Tracer::with_capacity(16));
+        for i in 0..100 {
+            tracer.record_at(
+                format!("e{i}"),
+                "launch",
+                0,
+                0,
+                -1,
+                Instant::now(),
+                Duration::ZERO,
+            );
+        }
+        let events = tracer.events();
+        assert_eq!(events.len(), 16);
+        assert_eq!(tracer.dropped(), 84);
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        let expect: Vec<String> = (84..100).map(|i| format!("e{i}")).collect();
+        assert_eq!(names, expect.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let tracer = Arc::new(Tracer::new());
+        {
+            let _s = tracer.span("work", "stage", 2, 7, 3);
+            thread::sleep(Duration::from_millis(1));
+        }
+        let events = tracer.events();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.name, "work");
+        assert_eq!(e.cat, "stage");
+        assert_eq!(e.pid, 2);
+        assert_eq!(e.trace, 7);
+        assert_eq!(e.stage, 3);
+        assert!(e.dur_us >= 1000.0, "slept 1ms, got {}us", e.dur_us);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let tracer = Tracer::new();
+        let a = tracer.trace_id();
+        let b = tracer.trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn two_tracers_do_not_share_rings() {
+        let t1 = Arc::new(Tracer::new());
+        let t2 = Arc::new(Tracer::new());
+        t1.record_at("only-t1", "serve", 0, 0, -1, Instant::now(), Duration::ZERO);
+        assert_eq!(t1.len(), 1);
+        assert!(t2.is_empty());
+    }
+}

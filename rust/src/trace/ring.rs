@@ -1,0 +1,97 @@
+//! Fixed-capacity overwrite-oldest ring buffer for trace events.
+//!
+//! Each recording thread owns one ring, so pushes never contend with
+//! other threads; the only cross-thread synchronisation is the export
+//! path draining a snapshot. When a ring fills, the oldest events are
+//! overwritten and counted in `dropped` — tracing must never grow
+//! memory O(events) on a long-lived serving process, and a bounded
+//! recent window is exactly what a flight-recorder needs.
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO that overwrites the oldest element when full and
+/// remembers how many elements were lost that way.
+#[derive(Debug)]
+pub struct Ring<T> {
+    cap: usize,
+    buf: VecDeque<T>,
+    dropped: u64,
+}
+
+impl<T> Ring<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        Self { cap, buf: VecDeque::with_capacity(cap.min(1024)), dropped: 0 }
+    }
+
+    /// Append, evicting the oldest element if the ring is full.
+    pub fn push(&mut self, item: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events lost to overwrite since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest-to-newest iteration.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+}
+
+impl<T: Clone> Ring<T> {
+    /// Copy the surviving elements out, oldest first.
+    pub fn snapshot(&self) -> Vec<T> {
+        self.buf.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut r = Ring::new(4);
+        for i in 0..10u32 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.snapshot(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn under_capacity_drops_nothing() {
+        let mut r = Ring::new(8);
+        for i in 0..5u32 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.snapshot(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        let _ = Ring::<u32>::new(0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Machine-readable metrics snapshots.
+//!
+//! A [`MetricsSnapshot`] collects counters, timers, histograms and
+//! report rows into one JSON document (schema tag
+//! [`SCHEMA`]) serialized via `substrate::json` — so everything the
+//! snapshot emits is guaranteed to round-trip through
+//! `substrate::json::Value::parse`. `jacc serve-bench --json <path>`
+//! and `benches/serve_throughput.rs` (`BENCH_serve.json`) write these;
+//! `jacc trace-check --json <path>` re-parses and validates them.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Metrics;
+use crate::substrate::json::{s, Value};
+
+/// Schema tag stamped into every snapshot under the `"schema"` key.
+pub const SCHEMA: &str = "jacc.metrics.v1";
+
+/// Builder for one snapshot document.
+#[derive(Debug)]
+pub struct MetricsSnapshot {
+    fields: BTreeMap<String, Value>,
+}
+
+impl MetricsSnapshot {
+    /// Start a snapshot of the given kind (e.g. `"serve-bench"`,
+    /// `"serve_throughput"`).
+    pub fn new(kind: &str) -> Self {
+        let mut fields = BTreeMap::new();
+        fields.insert("schema".to_string(), s(SCHEMA));
+        fields.insert("kind".to_string(), s(kind));
+        Self { fields }
+    }
+
+    /// Set (or replace) a top-level field.
+    pub fn set(&mut self, key: &str, v: Value) -> &mut Self {
+        self.fields.insert(key.to_string(), v);
+        self
+    }
+
+    /// Attach a metrics registry's counters and timers under `scope`.
+    pub fn add_metrics(&mut self, scope: &str, m: &Metrics) -> &mut Self {
+        self.set(scope, m.to_json())
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::Obj(self.fields.clone())
+    }
+
+    pub fn to_json_pretty(&self) -> String {
+        self.to_value().to_json_pretty(2)
+    }
+
+    /// Write the snapshot to `path` as pretty-printed JSON.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_pretty())
+            .with_context(|| format!("writing snapshot to {}", path.display()))
+    }
+
+    /// Validate a parsed document as a snapshot: the schema tag and a
+    /// kind must be present.
+    pub fn validate(v: &Value) -> Result<()> {
+        let schema = v.get("schema").as_str().context("snapshot missing schema tag")?;
+        anyhow::ensure!(
+            schema == SCHEMA,
+            "unexpected snapshot schema {schema:?} (want {SCHEMA:?})"
+        );
+        v.get("kind").as_str().context("snapshot missing kind")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::json::num;
+    use std::time::Duration;
+
+    #[test]
+    fn snapshot_round_trips_through_parse() {
+        let metrics = Metrics::new();
+        metrics.add("plan.launches", 7);
+        metrics.time("exec.wall", Duration::from_millis(3));
+        let mut snap = MetricsSnapshot::new("unit-test");
+        snap.set("requests", num(7.0)).add_metrics("plan", &metrics);
+        let text = snap.to_json_pretty();
+        let parsed = Value::parse(&text).expect("snapshot must re-parse");
+        MetricsSnapshot::validate(&parsed).expect("snapshot must validate");
+        assert_eq!(parsed.get("kind").as_str(), Some("unit-test"));
+        assert_eq!(parsed.get("requests").as_u64(), Some(7));
+        assert_eq!(
+            parsed.get("plan").get("counters").get("plan.launches").as_u64(),
+            Some(7)
+        );
+    }
+
+    #[test]
+    fn validate_rejects_wrong_or_missing_schema() {
+        let bad = Value::parse(r#"{"kind": "x"}"#).unwrap();
+        assert!(MetricsSnapshot::validate(&bad).is_err());
+        let wrong = Value::parse(r#"{"schema": "other.v9", "kind": "x"}"#).unwrap();
+        assert!(MetricsSnapshot::validate(&wrong).is_err());
+    }
+}
