@@ -1,0 +1,197 @@
+//! Micro-batching window bench: the same request stream served through
+//! the `BatchingEngine` at increasing `--batch-max`, with member size
+//! fixed so larger caps genuinely coalesce more members per fused
+//! launch. Reports requests/s, fused-launch count, the members-per-
+//! batch distribution, the amortized per-request launch cost (the
+//! number batching exists to shrink — at `--batch-max 1` every request
+//! pays the full padded launch) and the latency tail.
+//!
+//! Run with:  cargo bench --bench batch_window -- \
+//!                [--requests 64] [--batch-max 1,2,4,8] \
+//!                [--window-us 200] [--smoke] [--json F]
+//!
+//! `--smoke` (CI) shrinks to batch-max {1,4} x 16 requests on the tiny
+//! profile and writes the sweep as a `jacc.metrics.v2` snapshot to
+//! `BENCH_batch.json` at the repository root (override with `--json`).
+//! The sweep FAILS if coalescing does not reduce the amortized launch
+//! cost versus `--batch-max 1` — the bench doubles as the acceptance
+//! gate for the batching subsystem.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jacc::api::*;
+use jacc::batch::{serve_batched, BatchConfig, BatchSpec};
+use jacc::substrate::cli::Cli;
+use jacc::substrate::json::{arr, num, obj, s, Value};
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("batch_window", "micro-batched serving over one plan")
+        .opt("benchmark", "vector_add", "benchmark kernel to serve")
+        .opt("requests", "64", "requests per batch-max configuration")
+        .opt("batch-max", "1,2,4,8", "comma-separated member caps to sweep")
+        .opt("window-us", "200", "batch window in microseconds")
+        .opt("profile", "", "artifact profile (default: JACC_PROFILE or scaled)")
+        .flag("smoke", "CI mode: batch-max 1,4 x 16 requests, tiny profile")
+        .opt(
+            "json",
+            "",
+            "metrics snapshot output path (--smoke defaults to BENCH_batch.json)",
+        )
+        .parse();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("batch_window: artifacts not built (make artifacts); skipping");
+        return Ok(());
+    }
+
+    let smoke = args.has_flag("smoke");
+    let name = args.get_or("benchmark", "vector_add").to_string();
+    let profile = if smoke {
+        "tiny".to_string()
+    } else {
+        let p = args.get_or("profile", "");
+        if p.is_empty() {
+            std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into())
+        } else {
+            p.to_string()
+        }
+    };
+    let requests = if smoke { 16 } else { args.get_usize("requests")? };
+    let window = Duration::from_micros(args.get_usize("window-us")? as u64);
+    let caps: Vec<usize> = if smoke {
+        vec![1, 4]
+    } else {
+        args.get_or("batch-max", "1,2,4,8")
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --batch-max list: {e}"))?
+    };
+    anyhow::ensure!(!caps.is_empty() && caps.iter().all(|&c| c > 0), "bad --batch-max list");
+    let json = {
+        let j = args.get_or("json", "");
+        if j.is_empty() && smoke {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_batch.json").to_string()
+        } else {
+            j.to_string()
+        }
+    };
+
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let entry = dev.runtime.manifest().find(&name, "pallas", &profile)?;
+    let n = entry.inputs[0].shape[0];
+    anyhow::ensure!(
+        entry.inputs.iter().all(|d| d.shape == vec![n] && d.dtype == DType::F32),
+        "batch_window drives rank-1 f32 kernels; {name}.{profile} has other inputs"
+    );
+
+    let mut task = Task::create(
+        &name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )?;
+    task.set_parameters(entry.inputs.iter().map(|d| Param::input(&d.name)).collect());
+    let input_names: Vec<String> = entry.inputs.iter().map(|d| d.name.clone()).collect();
+    let mut g = TaskGraph::new().with_profile(&profile);
+    g.execute_task_on(task, &dev)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.pallas.{profile}: {}", plan.stats.summary());
+
+    // Member size is fixed at 1/max-cap of the declared capacity, so
+    // the largest sweep point can exactly fill a fused launch and the
+    // comparison across caps serves identical request streams.
+    let max_cap = *caps.iter().max().expect("non-empty caps");
+    let rows = (n / max_cap).max(1);
+    let mut spec = BatchSpec::new();
+    for nm in &input_names {
+        spec = spec.concat(nm, 0);
+    }
+    let mk_bindings = |req: usize| {
+        let mut b = Bindings::new();
+        for (slot, nm) in input_names.iter().enumerate() {
+            let fill = (req % 13) as f32 + slot as f32;
+            b.set(nm, HostValue::f32(vec![rows], vec![fill; rows]));
+        }
+        b
+    };
+    // Warm once off the clock with a full-capacity launch.
+    {
+        let mut b = Bindings::new();
+        for nm in &input_names {
+            b.set(nm, HostValue::f32(vec![n], vec![0.0; n]));
+        }
+        plan.launch(&b)?;
+    }
+
+    println!(
+        "{:<10} {:>10} {:>8} {:>8} {:>8} {:>12} {:>10} {:>10}",
+        "batch-max", "req/s", "batches", "mem p50", "mem max", "amort ms/rq", "p99 ms", "wait p95"
+    );
+    let mut sweeps: Vec<Value> = Vec::with_capacity(caps.len());
+    let mut amortized: Vec<f64> = Vec::with_capacity(caps.len());
+    for &cap in &caps {
+        let reqs: Vec<Bindings> = (0..requests).map(&mk_bindings).collect();
+        let config = BatchConfig::new(cap, window);
+        let (reports, agg) = serve_batched(Arc::clone(&plan), &spec, config, reqs)?;
+        anyhow::ensure!(
+            reports.iter().all(|r| r.fresh_compiles == 0),
+            "batched serving path must never JIT"
+        );
+        anyhow::ensure!(agg.errors == 0, "serving errors: {}", agg.errors);
+        println!(
+            "{cap:<10} {:>10.0} {:>8} {:>8.1} {:>8.0} {:>12.4} {:>10.3} {:>10.3}",
+            agg.throughput_rps,
+            agg.batches,
+            agg.batch_p50,
+            agg.batch_max,
+            agg.amortized_launch_ms,
+            agg.p99_ms,
+            agg.batch_wait_p95_ms,
+        );
+        amortized.push(agg.amortized_launch_ms);
+        sweeps.push(obj(vec![
+            ("batch_max", num(cap as f64)),
+            ("window_us", num(window.as_micros() as f64)),
+            ("serve", agg.to_json()),
+        ]));
+    }
+
+    // The acceptance gate: coalescing must shrink the amortized
+    // per-request launch cost versus unbatched (--batch-max 1) serving.
+    if caps.len() > 1 && caps[0] == 1 {
+        let base = amortized[0];
+        let best = amortized[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+        anyhow::ensure!(
+            best < base,
+            "batching did not amortize: best {best:.4} ms/req >= unbatched {base:.4} ms/req"
+        );
+        println!("amortization OK: {base:.4} -> {best:.4} ms/req");
+    }
+
+    let mem = dev.memory.lock().unwrap();
+    anyhow::ensure!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
+    drop(mem);
+
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("batch_window");
+        snap.set("benchmark", s(&name))
+            .set("profile", s(&profile))
+            .set("requests", num(requests as f64))
+            .set("member_rows", num(rows as f64))
+            .set("smoke", Value::Bool(smoke))
+            .set("sweeps", arr(sweeps))
+            .add_metrics("plan", &plan.metrics);
+        snap.write(Path::new(&json))?;
+        println!("snapshot -> {json}");
+    }
+    println!("batch_window OK");
+    Ok(())
+}

@@ -213,6 +213,85 @@
 //! `jacc run --benchmark vector_add --devices 2`, or the device sweep
 //! `cargo bench --bench pool_scaling`.
 //!
+//! ## Micro-batching
+//!
+//! In the many-small-requests regime, per-request serving pays the
+//! full launch overhead (bind + validate + upload + dispatch +
+//! download) on every request. The
+//! [`BatchingEngine`](crate::batch::BatchingEngine) coalesces
+//! *compatible* queued requests into **one fused launch** — the SOMD
+//! model (one operation over many users' data in a single device
+//! pass) applied to the serving path:
+//!
+//! * A [`BatchSpec`](crate::batch::BatchSpec) declares, per plan
+//!   input, a **batch axis**
+//!   ([`BatchAxis::Concat`](crate::batch::BatchAxis) — members'
+//!   values are concatenated along it, the analog of the pool's
+//!   `Shard::Split`) or **shared**
+//!   ([`BatchAxis::Shared`](crate::batch::BatchAxis), the default —
+//!   bound once per fused launch; members must bind byte-identical
+//!   content, keyed by `HostValue::content_fingerprint`).
+//! * A forming batch closes on **size or deadline, whichever comes
+//!   first**: the member cap (`--batch-max`), the plan's declared
+//!   batch-axis capacity, or the window (`--batch-window-us`) — so a
+//!   lone request at low load waits at most the window (bounded p99),
+//!   never forever.
+//! * The fused launch concatenates member inputs with
+//!   `HostValue::concat_axis`, **zero-pads to the declared capacity**
+//!   (compiled plans validate bound shapes exactly), launches once on
+//!   the shared plan — or routes through a
+//!   [`PoolEngine`](crate::pool::PoolEngine) via
+//!   [`BatchingEngine::start_pool`](crate::batch::BatchingEngine::start_pool),
+//!   composing batching with least-loaded device routing — then
+//!   splits outputs back per member with `HostValue::split_offsets`,
+//!   discarding the padding rows. Results are **bit-for-bit identical**
+//!   to launching each request alone (`rust/tests/batch_serving.rs`
+//!   pins this, single-device and pooled).
+//!
+//! Latency attribution stays honest under batching: a member's
+//! `queue` ends when its batch *closes*, `launch` is its row-share of
+//! the fused launch wall (shares sum exactly to the fused cost), and
+//! `batch` is the remaining coalescing overhead — the three partition
+//! submit-to-reply exactly. `ServeReport` adds the fused-launch count,
+//! the members-per-batch distribution (`batch_p50/p95/max`) and the
+//! **amortized per-request launch cost** (`amortized_launch_ms`) —
+//! the number batching exists to shrink.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use jacc::api::*;
+//! use jacc::batch::{BatchConfig, BatchSpec, BatchingEngine};
+//! # fn main() -> anyhow::Result<()> {
+//! # let tasks = TaskGraph::new();
+//! let plan = Arc::new(tasks.compile()?);
+//! // "data" carries the batch axis; unlisted inputs are Shared.
+//! let spec = BatchSpec::new().concat("data", 0);
+//! let engine = BatchingEngine::start(
+//!     Arc::clone(&plan),
+//!     &spec,
+//!     BatchConfig::new(8, Duration::from_micros(200)),
+//! )?;
+//! let ticket = engine.submit(
+//!     Bindings::new().bind("data", HostValue::f32(vec![1024], vec![1.0; 1024])),
+//! )?;
+//! let member = ticket.wait()?;   // this member's output slice + timing share
+//! println!("fused with {} members, {} pad rows", member.batch_members, member.pad_rows);
+//! println!("{}", engine.shutdown().summary()); // batches, amortized ms/req
+//! # Ok(()) }
+//! ```
+//!
+//! The `Concat` contract is SOMD's: the kernel must treat rows along
+//! the batch axis independently (elementwise maps, per-row reductions
+//! along other axes). Kernels that mix rows across the batch axis
+//! would see co-members' and padding's data — leave those inputs
+//! `Shared` and serve them unbatched. Try it:
+//! `jacc serve-bench --benchmark vector_add --batch-max 8
+//! --batch-window-us 200` (add `--devices 2` to route fused batches
+//! through the pool), or the cap sweep `cargo bench --bench
+//! batch_window` — which fails unless coalescing beats `--batch-max 1`
+//! on amortized launch cost.
+//!
 //! ## Observability
 //!
 //! Three layers, all zero-cost when unused:
@@ -258,12 +337,16 @@ pub use crate::coordinator::{
     ExecutionOptions, ExecutionReport, GraphOutputs, InputSpec, LaunchSchedule, MemSpace,
     OptimizerConfig, Param, ParamSource, PipelineMode, PlanStats, Task, TaskGraph, TaskId,
 };
+pub use crate::batch::{
+    BatchAxis, BatchConfig, BatchPlanner, BatchSpec, BatchTicket, BatchingEngine, MemberReport,
+};
 pub use crate::memory::{DataId, MemoryError, Record};
 pub use crate::pool::{
     DevicePool, PoolConfig, PoolEngine, ReplicatedGraph, Shard, ShardSpec, ShardedReport,
 };
 pub use crate::runtime::{
     Access, Cuda, DType, DeviceContext, DeviceHandle, HostValue, Manifest, PjrtRuntime,
+    ShapeError,
 };
 pub use crate::serve::{
     DeviceBreakdown, RequestTiming, ServeConfig, ServeReport, ServingEngine, Ticket,

@@ -1,0 +1,680 @@
+//! [`BatchingEngine`] — admission queue, window former, and launcher
+//! workers for fused micro-batch execution.
+//!
+//! Thread topology: submitters push validated members into a bounded
+//! admission queue; **one** former thread runs the
+//! [`BatchWindow`](super::BatchWindow) state machine (a single former
+//! makes the close rules race-free by construction — batches form in
+//! strict arrival order); sealed batches flow through a second bounded
+//! queue to `launchers` worker threads that fuse, launch, split and
+//! reply. With a [`PoolEngine`] target the launchers route fused
+//! batches through least-outstanding-work device lanes instead of
+//! launching a single shared plan, so batching and multi-device
+//! routing compose.
+//!
+//! Timing attribution (the honest-percentiles contract): a member's
+//! `queue` ends when its batch *closes*, `launch` is its row-share of
+//! the fused launch wall (shares sum to the fused cost), and `batch`
+//! is the remaining close-to-reply overhead (fuse copies, co-member
+//! work, output scatter, pool lane wait) — the three partition
+//! submit-to-reply exactly, which `member_timing`'s unit tests assert.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, GraphOutputs};
+use crate::metrics::Metrics;
+use crate::pool::PoolEngine;
+use crate::serve::{BoundedQueue, Popped, RequestTiming, ServeReport};
+use crate::trace::{LogHistogram, Tracer};
+
+use super::planner::{BatchPlanner, BatchSpec};
+use super::window::{BatchWindow, CloseReason};
+
+/// Batching-engine sizing knobs.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Member cap per fused launch (`--batch-max`). 1 disables
+    /// coalescing (every request launches alone, still through the
+    /// batch path).
+    pub max_members: usize,
+    /// Row cap per fused launch along the batch axis; 0 (default)
+    /// means the plan's declared capacity. Clamped to the capacity
+    /// either way.
+    pub max_rows: usize,
+    /// How long a forming batch may wait for co-members
+    /// (`--batch-window-us`): the zero-load p99 bound.
+    pub window: Duration,
+    /// Launcher worker threads draining sealed batches.
+    pub launchers: usize,
+    /// Admission-queue bound (members in flight before submitters
+    /// block). Defaults to two full batches per launcher.
+    pub queue_depth: usize,
+    /// Optional span tracer: members record queue-wait and fused-launch
+    /// spans under their own trace ids.
+    pub tracer: Option<Arc<Tracer>>,
+}
+
+impl BatchConfig {
+    pub fn new(max_members: usize, window: Duration) -> Self {
+        let launchers = 2;
+        Self {
+            max_members,
+            max_rows: 0,
+            window,
+            launchers,
+            queue_depth: (2 * max_members.max(1) * launchers).max(4),
+            tracer: None,
+        }
+    }
+
+    /// Set the launcher thread count (resizes the default admission
+    /// bound to match).
+    pub fn with_launchers(mut self, launchers: usize) -> Self {
+        self.launchers = launchers;
+        self.queue_depth = (2 * self.max_members.max(1) * launchers.max(1)).max(4);
+        self
+    }
+
+    /// Attach a tracer; served members record spans into it.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+}
+
+/// What one member gets back from its fused launch.
+#[derive(Debug)]
+pub struct MemberReport {
+    /// This member's slice of every output (padding rows dropped).
+    pub outputs: GraphOutputs,
+    /// queue/batch/launch attribution for this member.
+    pub timing: RequestTiming,
+    /// How many members shared the fused launch.
+    pub batch_members: usize,
+    /// Total member rows in the fused launch (excluding padding).
+    pub batch_rows: usize,
+    /// Zero-padding rows the fused launch carried.
+    pub pad_rows: usize,
+    /// Fresh JIT compiles during the fused launch (0 on a warm plan).
+    pub fresh_compiles: usize,
+    /// Upload-cache hits / bus transfers of the *whole* fused launch
+    /// (shared across members, not per-member shares).
+    pub h2d_dedup_hits: u64,
+    pub h2d_transfers: u64,
+}
+
+/// A pending reply for one submitted member.
+pub struct BatchTicket {
+    rx: mpsc::Receiver<anyhow::Result<MemberReport>>,
+}
+
+impl BatchTicket {
+    fn channel() -> (mpsc::Sender<anyhow::Result<MemberReport>>, BatchTicket) {
+        let (tx, rx) = mpsc::channel();
+        (tx, BatchTicket { rx })
+    }
+
+    /// Block until this member's batch has been launched and split.
+    pub fn wait(self) -> anyhow::Result<MemberReport> {
+        self.rx
+            .recv()
+            .context("batching engine dropped the request (engine shut down?)")?
+    }
+}
+
+/// One queued member: validated bindings plus routing metadata.
+struct Member {
+    bindings: Bindings,
+    /// Rows along the batch axis (validated at submit).
+    rows: usize,
+    /// Compatibility key (shared-input content fingerprints).
+    key: (u64, u64),
+    submitted: Instant,
+    /// Trace id for span recording (0 when the engine has no tracer).
+    trace: u64,
+    reply: mpsc::Sender<anyhow::Result<MemberReport>>,
+}
+
+/// A sealed batch on its way to a launcher.
+struct FormedBatch {
+    members: Vec<Member>,
+    closed_at: Instant,
+}
+
+/// Where fused batches go.
+enum Target {
+    /// Launch directly on one shared compiled plan.
+    Plan(Arc<CompiledGraph>),
+    /// Route through a device pool's least-loaded lane.
+    Pool(PoolEngine),
+}
+
+/// State shared between submitters, the former and the launchers.
+struct Shared {
+    queue: BoundedQueue<Member>,
+    batches: BoundedQueue<FormedBatch>,
+    planner: BatchPlanner,
+    window: BatchWindow,
+    target: Target,
+    tracer: Option<Arc<Tracer>>,
+    /// `serve.batch.*` counters (launches, members, rows, pad rows,
+    /// close reasons).
+    metrics: Metrics,
+    latencies: Mutex<crate::serve::LatencyLog>,
+    /// Members-per-fused-launch distribution.
+    batch_sizes: Mutex<LogHistogram>,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    batches_launched: AtomicU64,
+    /// Sum of fused launch walls (nanoseconds) — the numerator of the
+    /// amortized per-request launch cost.
+    launch_total_ns: AtomicU64,
+    dedup_hits: AtomicU64,
+    h2d_transfers: AtomicU64,
+}
+
+/// Micro-batching serving engine: coalesces compatible requests into
+/// fused launches of one shared plan (or a device pool).
+pub struct BatchingEngine {
+    shared: Arc<Shared>,
+    former: Option<thread::JoinHandle<()>>,
+    launchers: Vec<thread::JoinHandle<()>>,
+    n_launchers: usize,
+    started: Instant,
+}
+
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = assert_send_sync::<Shared>();
+
+impl BatchingEngine {
+    /// Batch onto one shared compiled plan.
+    pub fn start(
+        plan: Arc<CompiledGraph>,
+        spec: &BatchSpec,
+        config: BatchConfig,
+    ) -> anyhow::Result<Self> {
+        let planner = BatchPlanner::new(&plan, spec)?;
+        Self::start_inner(Target::Plan(plan), planner, config)
+    }
+
+    /// Batch onto a device pool: fused batches are routed through
+    /// `pool`'s least-outstanding-work lanes. The engine owns the pool
+    /// for its lifetime (per-device rows surface in the shutdown
+    /// report).
+    pub fn start_pool(
+        pool: PoolEngine,
+        spec: &BatchSpec,
+        config: BatchConfig,
+    ) -> anyhow::Result<Self> {
+        let planner = BatchPlanner::new(pool.plan(), spec)?;
+        Self::start_inner(Target::Pool(pool), planner, config)
+    }
+
+    fn start_inner(
+        target: Target,
+        planner: BatchPlanner,
+        config: BatchConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(config.launchers > 0, "batching engine needs at least one launcher");
+        anyhow::ensure!(config.max_members > 0, "batching engine needs max_members >= 1");
+        let max_rows = if config.max_rows == 0 {
+            planner.capacity()
+        } else {
+            config.max_rows.min(planner.capacity())
+        };
+        let window = BatchWindow::new(config.max_members, max_rows, config.window);
+        let shared = Arc::new(Shared {
+            queue: BoundedQueue::new(config.queue_depth.max(1)),
+            batches: BoundedQueue::new((2 * config.launchers).max(2)),
+            planner,
+            window,
+            target,
+            tracer: config.tracer.clone(),
+            metrics: Metrics::new(),
+            latencies: Mutex::new(crate::serve::LatencyLog::default()),
+            batch_sizes: Mutex::new(LogHistogram::new()),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches_launched: AtomicU64::new(0),
+            launch_total_ns: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            h2d_transfers: AtomicU64::new(0),
+        });
+        let former = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("jacc-batch-former".into())
+                .spawn(move || former_loop(&shared))
+                .context("spawning batch former")?
+        };
+        let launchers = (0..config.launchers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("jacc-batch-launch-{i}"))
+                    .spawn(move || launcher_loop(&shared))
+                    .context("spawning batch launcher")
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            shared,
+            former: Some(former),
+            n_launchers: launchers.len(),
+            launchers,
+            started: Instant::now(),
+        })
+    }
+
+    /// The compatibility planner (batch axis, capacity).
+    pub fn planner(&self) -> &BatchPlanner {
+        &self.shared.planner
+    }
+
+    /// The engine's `serve.batch.*` counters.
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    /// Enqueue one request. Validates it against the batch spec first
+    /// (malformed requests are rejected here, never poisoning a formed
+    /// batch), then blocks while the admission queue is full
+    /// (backpressure); fails if the engine is shutting down.
+    pub fn submit(&self, bindings: Bindings) -> anyhow::Result<BatchTicket> {
+        let rows = self.shared.planner.member_rows(&bindings)?;
+        let key = self.shared.planner.compat_key(&bindings);
+        let trace = self.shared.tracer.as_ref().map_or(0, |t| t.trace_id());
+        let (tx, ticket) = BatchTicket::channel();
+        self.shared
+            .queue
+            .push(Member { bindings, rows, key, submitted: Instant::now(), trace, reply: tx })
+            .map_err(|_| anyhow!("batching engine is shut down"))?;
+        Ok(ticket)
+    }
+
+    /// Drain both queues, stop the threads and aggregate the run.
+    /// Batch stats ride in the standard [`ServeReport`]: `batches`,
+    /// members-per-batch percentiles, amortized per-request launch
+    /// cost, and (pool target) per-device rows.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.join_threads();
+        let wall = self.started.elapsed();
+        let shared = &self.shared;
+        let requests = shared.completed.load(Ordering::Relaxed);
+        let mut report = ServeReport {
+            workers: self.n_launchers,
+            requests,
+            errors: shared.errors.load(Ordering::Relaxed),
+            wall,
+            throughput_rps: if wall.as_secs_f64() > 0.0 {
+                requests as f64 / wall.as_secs_f64()
+            } else {
+                0.0
+            },
+            h2d_dedup_hits: shared.dedup_hits.load(Ordering::Relaxed),
+            h2d_transfers: shared.h2d_transfers.load(Ordering::Relaxed),
+            batches: shared.batches_launched.load(Ordering::Relaxed),
+            amortized_launch_ms: if requests > 0 {
+                shared.launch_total_ns.load(Ordering::Relaxed) as f64 / 1e6 / requests as f64
+            } else {
+                0.0
+            },
+            ..ServeReport::default()
+        };
+        shared.latencies.lock().unwrap().fill(&mut report);
+        {
+            let sizes = shared.batch_sizes.lock().unwrap();
+            report.batch_p50 = sizes.percentile(50.0);
+            report.batch_p95 = sizes.percentile(95.0);
+            report.batch_max = sizes.max_value();
+        }
+        if let Target::Pool(pool) = &shared.target {
+            report.per_device = pool.snapshot_report().per_device;
+        }
+        report
+    }
+
+    fn join_threads(&mut self) {
+        // Order matters: close admission, let the former seal what is
+        // left into the batch queue, then close that and join the
+        // launchers — nothing in flight is dropped.
+        self.shared.queue.close();
+        if let Some(f) = self.former.take() {
+            let _ = f.join();
+        }
+        self.shared.batches.close();
+        for l in self.launchers.drain(..) {
+            let _ = l.join();
+        }
+    }
+}
+
+impl Drop for BatchingEngine {
+    fn drop(&mut self) {
+        // Dropping without `shutdown()` still drains + joins cleanly
+        // (and drops a pool target, joining its lane workers).
+        self.join_threads();
+    }
+}
+
+/// The single window-former thread: pops members in arrival order and
+/// runs the close policy. A member that cannot join the forming batch
+/// (incompatible key, or rows that would overflow) seals the batch and
+/// seeds the next one — nothing is reordered past it.
+fn former_loop(shared: &Shared) {
+    let window = shared.window;
+    let mut pending: Option<Member> = None;
+    loop {
+        let first = match pending.take().or_else(|| shared.queue.pop()) {
+            Some(m) => m,
+            None => break, // closed + drained, nothing pending
+        };
+        let key = first.key;
+        let mut forming = window.open(Instant::now(), first.rows);
+        let mut members = vec![first];
+        let reason = loop {
+            if window.full(&forming) {
+                break CloseReason::Size;
+            }
+            match shared.queue.pop_deadline(window.deadline(&forming)) {
+                Popped::Item(m) => {
+                    if m.key == key && window.fits(&forming, m.rows) {
+                        window.admit(&mut forming, m.rows);
+                        members.push(m);
+                    } else {
+                        pending = Some(m);
+                        break CloseReason::Incompatible;
+                    }
+                }
+                Popped::TimedOut => break CloseReason::Deadline,
+                Popped::Closed => break CloseReason::Drained,
+            }
+        };
+        shared.metrics.incr(reason.counter());
+        shared.metrics.add("serve.batch.members", members.len() as u64);
+        shared.metrics.add("serve.batch.rows", forming.rows as u64);
+        let batch = FormedBatch { members, closed_at: Instant::now() };
+        if let Err(batch) = shared.batches.push(batch) {
+            // Launcher queue closed under us (shutdown race): fail the
+            // members rather than dropping their tickets silently.
+            reply_all_err(shared, batch, "batching engine shut down before launch");
+        }
+    }
+}
+
+fn launcher_loop(shared: &Shared) {
+    while let Some(batch) = shared.batches.pop() {
+        launch_batch(shared, batch);
+    }
+}
+
+fn launch_batch(shared: &Shared, batch: FormedBatch) {
+    let fused_result = {
+        let refs: Vec<&Bindings> = batch.members.iter().map(|m| &m.bindings).collect();
+        shared.planner.fuse(&refs)
+    };
+    let (fused, extents, pad_rows) = match fused_result {
+        Ok(f) => f,
+        Err(e) => return reply_all_err(shared, batch, &format!("batch fuse failed: {e}")),
+    };
+    shared.metrics.add("serve.batch.pad_rows", pad_rows as u64);
+    let batch_trace = shared.tracer.as_ref().map_or(0, |t| t.trace_id());
+    let t0 = Instant::now();
+    // (report, fused launch wall, h2d, kernel, device). For the pool
+    // target the lane's queue wait is *not* in the wall — it lands in
+    // the members' `batch` overhead component, where it belongs.
+    let launched = match &shared.target {
+        Target::Plan(plan) => {
+            let opts = ExecutionOptions {
+                tracer: shared.tracer.clone(),
+                trace_id: batch_trace,
+                ..ExecutionOptions::default()
+            };
+            plan.launch_with(&fused, opts).map(|rep| {
+                let wall = t0.elapsed();
+                let (h2d, kernel) = (rep.h2d, rep.launch);
+                (rep, wall, h2d, kernel, 0usize)
+            })
+        }
+        Target::Pool(pool) => pool
+            .submit(fused)
+            .and_then(|ticket| ticket.wait_timed())
+            .map(|(rep, t)| (rep, t.launch, t.h2d, t.kernel, t.device)),
+    };
+    let (rep, launch_wall, h2d, kernel, device) = match launched {
+        Ok(x) => x,
+        Err(e) => return reply_all_err(shared, batch, &format!("fused launch failed: {e}")),
+    };
+    shared.batches_launched.fetch_add(1, Ordering::Relaxed);
+    shared.launch_total_ns.fetch_add(launch_wall.as_nanos() as u64, Ordering::Relaxed);
+    shared.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
+    shared.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
+    shared.metrics.incr("serve.batch.launches");
+    shared.batch_sizes.lock().unwrap().record(batch.members.len() as f64);
+
+    let split = match shared.planner.split_outputs(&rep.outputs, &extents) {
+        Ok(s) => s,
+        Err(e) => return reply_all_err(shared, batch, &format!("batch output split failed: {e}")),
+    };
+    let total_rows: usize = extents.iter().sum();
+    let n_members = batch.members.len();
+    let closed_at = batch.closed_at;
+    let replied_at = Instant::now();
+    for ((member, outputs), &rows) in batch.members.into_iter().zip(split).zip(&extents) {
+        let timing = member_timing(
+            member.submitted,
+            closed_at,
+            replied_at,
+            launch_wall,
+            h2d,
+            kernel,
+            rows,
+            total_rows,
+            device,
+        );
+        if let Some(tracer) = &shared.tracer {
+            // Queue span: submit -> batch close, under the member's own
+            // trace id. Launch span: the shared fused-launch window,
+            // recorded once per member so each trace id shows where its
+            // request actually executed.
+            tracer.record_at(
+                "serve.queue",
+                "serve",
+                device as u64,
+                member.trace,
+                -1,
+                member.submitted,
+                timing.queue,
+            );
+            tracer.record_at(
+                "serve.batch.launch",
+                "serve",
+                device as u64,
+                member.trace,
+                -1,
+                t0,
+                launch_wall,
+            );
+        }
+        shared.latencies.lock().unwrap().record(&timing);
+        shared.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = member.reply.send(Ok(MemberReport {
+            outputs,
+            timing,
+            batch_members: n_members,
+            batch_rows: total_rows,
+            pad_rows,
+            fresh_compiles: rep.fresh_compiles,
+            h2d_dedup_hits: rep.h2d_dedup_hits,
+            h2d_transfers: rep.h2d_transfers,
+        }));
+    }
+}
+
+/// Fail every member of a batch with the same message (anyhow errors
+/// are not cloneable; each member gets a fresh one).
+fn reply_all_err(shared: &Shared, batch: FormedBatch, msg: &str) {
+    shared.errors.fetch_add(batch.members.len() as u64, Ordering::Relaxed);
+    shared.metrics.incr("serve.batch.launch_errors");
+    for member in batch.members {
+        let _ = member.reply.send(Err(anyhow!("{msg}")));
+    }
+}
+
+/// One member's timing attribution (ISSUE-7 satellite: queue-wait ends
+/// at batch *close*, launch is the member's row-share of the fused
+/// wall, and the three components partition submit-to-reply exactly).
+fn member_timing(
+    submitted: Instant,
+    closed_at: Instant,
+    replied_at: Instant,
+    launch_wall: Duration,
+    h2d: Duration,
+    kernel: Duration,
+    member_rows: usize,
+    batch_rows: usize,
+    device: usize,
+) -> RequestTiming {
+    let frac = member_rows as f64 / batch_rows.max(1) as f64;
+    let launch = launch_wall.mul_f64(frac);
+    let queue = closed_at.saturating_duration_since(submitted);
+    let post = replied_at.saturating_duration_since(closed_at);
+    // The fused launch happened inside [closed_at, replied_at], so the
+    // member's share is <= post; saturate anyway against clock skew.
+    let batch = post.saturating_sub(launch);
+    RequestTiming {
+        queue,
+        batch,
+        launch,
+        h2d: h2d.mul_f64(frac),
+        kernel: kernel.mul_f64(frac),
+        device,
+    }
+}
+
+/// Convenience driver: serve every request through a fresh batching
+/// engine (single shared plan) and return the per-member reports
+/// (input order) plus the aggregate. Replies are buffered per ticket,
+/// so launchers never block on a slow collector.
+pub fn serve_batched(
+    plan: Arc<CompiledGraph>,
+    spec: &BatchSpec,
+    config: BatchConfig,
+    requests: Vec<Bindings>,
+) -> anyhow::Result<(Vec<MemberReport>, ServeReport)> {
+    let engine = BatchingEngine::start(plan, spec, config)?;
+    let tickets = requests
+        .into_iter()
+        .map(|b| engine.submit(b))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reports = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok((reports, engine.shutdown()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_timing_partitions_total_latency() {
+        let t0 = Instant::now();
+        let submitted = t0;
+        let closed = t0 + Duration::from_millis(5);
+        let replied = t0 + Duration::from_millis(20);
+        let fused_wall = Duration::from_millis(12);
+        let t = member_timing(
+            submitted,
+            closed,
+            replied,
+            fused_wall,
+            Duration::from_millis(4),
+            Duration::from_millis(8),
+            3,
+            4,
+            1,
+        );
+        // Queue-wait ends at batch close, not at launcher pickup.
+        assert_eq!(t.queue, Duration::from_millis(5));
+        // Launch is the member's row-share of the fused wall: 3/4.
+        assert_eq!(t.launch, fused_wall.mul_f64(0.75));
+        assert_eq!(t.h2d, Duration::from_millis(3));
+        assert_eq!(t.kernel, Duration::from_millis(6));
+        // Regression (ISSUE 7): the split sums to total latency.
+        assert_eq!(t.queue + t.batch + t.launch, replied - submitted);
+        assert_eq!(t.total(), Duration::from_millis(20));
+        assert_eq!(t.device, 1);
+    }
+
+    #[test]
+    fn member_launch_shares_sum_to_fused_wall() {
+        let t0 = Instant::now();
+        let closed = t0 + Duration::from_millis(1);
+        let replied = t0 + Duration::from_millis(10);
+        let fused_wall = Duration::from_millis(8);
+        let extents = [1usize, 3, 4];
+        let total: usize = extents.iter().sum();
+        let share_sum: Duration = extents
+            .iter()
+            .map(|&r| {
+                member_timing(
+                    t0,
+                    closed,
+                    replied,
+                    fused_wall,
+                    Duration::ZERO,
+                    Duration::ZERO,
+                    r,
+                    total,
+                    0,
+                )
+                .launch
+            })
+            .sum();
+        assert_eq!(share_sum, fused_wall, "amortization is exact, not approximate");
+    }
+
+    #[test]
+    fn member_timing_saturates_against_clock_skew() {
+        let t0 = Instant::now();
+        // Reply "before" close (cross-thread Instant skew): batch
+        // component saturates to zero instead of panicking.
+        let t = member_timing(
+            t0 + Duration::from_millis(2),
+            t0 + Duration::from_millis(3),
+            t0 + Duration::from_millis(3),
+            Duration::from_millis(5),
+            Duration::ZERO,
+            Duration::ZERO,
+            1,
+            1,
+            0,
+        );
+        assert_eq!(t.batch, Duration::ZERO);
+        assert_eq!(t.launch, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn batch_config_defaults() {
+        let c = BatchConfig::new(8, Duration::from_micros(200));
+        assert_eq!(c.max_members, 8);
+        assert_eq!(c.max_rows, 0, "0 = plan capacity");
+        assert_eq!(c.launchers, 2);
+        assert_eq!(c.queue_depth, 32);
+        let c = c.with_launchers(4);
+        assert_eq!(c.queue_depth, 64);
+        // Tiny configs keep a workable floor.
+        assert_eq!(BatchConfig::new(1, Duration::ZERO).queue_depth, 4);
+    }
+
+    // Engine end-to-end paths (fused vs sequential bit-for-bit
+    // equivalence, single-device and pool targets, deadline bounds,
+    // fresh_compiles == 0) live in rust/tests/batch_serving.rs — they
+    // need built artifacts.
+}

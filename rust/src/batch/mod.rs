@@ -1,0 +1,71 @@
+//! Dynamic micro-batching: coalesce compatible queued requests into
+//! one fused plan execution.
+//!
+//! Every serving path so far ([`ServingEngine`](crate::serve::ServingEngine),
+//! [`PoolEngine`](crate::pool::PoolEngine)) launches one request's
+//! `Bindings` at a time, so the million-small-request regime pays full
+//! per-launch overhead (bind + validate + upload + dispatch + download)
+//! on every request. The SOMD model (arXiv 1312.4993, "Heterogeneous
+//! Programming with Single Operation Multiple Data") is the direct
+//! grounding: one operation applied to many users' data in a single
+//! device pass — also the core serving trick of every production
+//! inference stack.
+//!
+//! Three pieces:
+//!
+//! * [`BatchPlanner`] — decides which requests may share a launch. A
+//!   [`BatchSpec`] declares, per plan input, either a *batch axis*
+//!   ([`BatchAxis::Concat`], analogous to the pool's `Shard::Split`:
+//!   members' values are concatenated along it) or *shared*
+//!   ([`BatchAxis::Shared`], the default: every member must bind
+//!   byte-identical content, keyed by
+//!   [`HostValue::content_fingerprint`](crate::runtime::HostValue::content_fingerprint)
+//!   — the fused launch binds it once). Requests with different shared
+//!   content get different compatibility keys and never share a batch.
+//! * [`BatchWindow`] — the adaptive close policy: a forming batch
+//!   launches when it hits the member cap, fills the plan's declared
+//!   batch-axis capacity, or its deadline elapses — whichever comes
+//!   first, so p99 stays bounded at low load (a lone request waits at
+//!   most the window, never forever).
+//! * [`BatchingEngine`] — admission queue -> window former -> launcher
+//!   workers. The former seals batches; launchers fuse member inputs
+//!   with `concat_axis`, zero-pad the batch axis up to the declared
+//!   capacity (compiled plans validate bound shapes *exactly*, so the
+//!   fused launch always binds the full declared extent; padding rows
+//!   are dead work the kernel computes and the splitter discards),
+//!   launch once on the shared [`CompiledGraph`](crate::coordinator::CompiledGraph)
+//!   (or route through a [`PoolEngine`](crate::pool::PoolEngine)), then
+//!   split outputs back per member with
+//!   [`HostValue::split_offsets`](crate::runtime::HostValue::split_offsets).
+//!
+//! The contract a `Concat` axis declares is SOMD's: the kernel must
+//! treat rows along that axis independently (elementwise maps, per-row
+//! reductions along *other* axes — anything where row `i` of every
+//! output depends only on row `i` of the concat inputs). Kernels that
+//! mix rows (a sum over the batch axis) would see co-members' and
+//! padding's data; do not declare a batch axis for those.
+//!
+//! Observability: `serve.batch.*` counters (launches, members, rows,
+//! pad rows, close reasons) on [`BatchingEngine::metrics`], a
+//! members-per-batch `LogHistogram` surfaced as `ServeReport
+//! { batches, batch_p50/p95/max, amortized_launch_ms, .. }`, and — with
+//! a tracer attached — per-member `serve.queue` + `serve.batch.launch`
+//! spans carrying each member's own trace id over the shared fused
+//! window.
+//!
+//! When batching is a loss: large per-request payloads (concat +
+//! zero-pad copies scale with bytes, while per-launch overhead is
+//! amortized already), incompatible shapes (every distinct shared
+//! fingerprint fragments the batch key space), or plans whose declared
+//! batch capacity is barely above typical request rows (mostly padding,
+//! no coalescing headroom). `--batch-max 1` turns the engine into a
+//! slightly slower `ServingEngine`; keep it off unless requests are
+//! small and plentiful.
+
+mod engine;
+mod planner;
+mod window;
+
+pub use engine::{serve_batched, BatchConfig, BatchTicket, BatchingEngine, MemberReport};
+pub use planner::{BatchAxis, BatchPlanner, BatchSpec};
+pub use window::{BatchWindow, CloseReason, Forming};

@@ -1,0 +1,428 @@
+//! [`BatchPlanner`] — which requests may share a fused launch, and the
+//! concat/pad/split mechanics of fusing them.
+//!
+//! Mirrors the pool's `ShardSpec` shape: a [`BatchSpec`] maps input
+//! names to [`BatchAxis`] policies, unlisted inputs default to the safe
+//! choice ([`BatchAxis::Shared`]). Validation happens against the
+//! compiled plan's `InputSpec` declarations at engine start (axes in
+//! range, one common batch axis, equal declared capacities) and again
+//! per member at submit (dtype/rank/off-axis dims match, rows fit the
+//! capacity), so a malformed request is rejected before it can poison a
+//! batch.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::{Bindings, CompiledGraph, GraphOutputs};
+use crate::runtime::{DType, HostValue};
+
+/// Per-input batching policy for a fused launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchAxis {
+    /// Concatenate members' values along `axis` (the batch axis —
+    /// analogous to the pool's `Shard::Split`). Each member binds
+    /// `1..=capacity` rows along it; the fused launch binds the
+    /// concatenation, zero-padded to the plan's declared extent.
+    Concat { axis: usize },
+    /// Bind once for the whole batch: every member must bind
+    /// byte-identical content (enforced via `content_fingerprint` in
+    /// the compatibility key), matching the declared shape exactly.
+    Shared,
+}
+
+/// Input name -> [`BatchAxis`] policy map. Unlisted inputs are
+/// [`BatchAxis::Shared`].
+#[derive(Debug, Clone, Default)]
+pub struct BatchSpec {
+    policies: BTreeMap<String, BatchAxis>,
+}
+
+impl BatchSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style: concatenate `name` along `axis`.
+    pub fn concat(mut self, name: &str, axis: usize) -> Self {
+        self.set(name, BatchAxis::Concat { axis });
+        self
+    }
+
+    /// Builder-style: bind `name` once per batch (also the default for
+    /// inputs with no declared policy).
+    pub fn shared(mut self, name: &str) -> Self {
+        self.set(name, BatchAxis::Shared);
+        self
+    }
+
+    pub fn set(&mut self, name: &str, policy: BatchAxis) {
+        self.policies.insert(name.to_string(), policy);
+    }
+
+    /// The policy for `name` (default: `Shared`).
+    pub fn get(&self, name: &str) -> BatchAxis {
+        self.policies.get(name).copied().unwrap_or(BatchAxis::Shared)
+    }
+
+    /// Names with an explicitly declared policy.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.policies.keys().map(|s| s.as_str())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policies.is_empty()
+    }
+}
+
+/// One concat input's validated declaration surface.
+#[derive(Debug, Clone)]
+struct ConcatInput {
+    name: String,
+    /// Full declared shape (the fused binding must match it exactly).
+    decl_shape: Vec<usize>,
+    dtype: DType,
+}
+
+/// Compatibility + fuse/split logic for one compiled plan. Built once
+/// at engine start; all methods are `&self` (launcher threads share
+/// it).
+#[derive(Debug, Clone)]
+pub struct BatchPlanner {
+    /// The common batch axis every `Concat` input concatenates along.
+    axis: usize,
+    /// Declared extent along `axis` — the fused batch's row capacity.
+    capacity: usize,
+    concat: Vec<ConcatInput>,
+    /// Shared input names in sorted order (the compatibility key mixes
+    /// their fingerprints in this order, so it is deterministic).
+    shared: Vec<String>,
+}
+
+impl BatchPlanner {
+    /// Validate `spec` against the plan's input declarations. Requires
+    /// at least one `Concat` input (otherwise there is nothing to
+    /// batch), one common axis, and equal declared capacity along it
+    /// for every `Concat` input (each member contributes the same row
+    /// count to all of them).
+    pub fn new(plan: &CompiledGraph, spec: &BatchSpec) -> anyhow::Result<Self> {
+        for name in spec.names() {
+            if plan.input_spec(name).is_none() {
+                bail!(
+                    "batch policy names unknown input '{name}' (plan inputs: {:?})",
+                    plan.input_names().collect::<Vec<_>>()
+                );
+            }
+        }
+        let mut axis: Option<usize> = None;
+        let mut capacity: Option<usize> = None;
+        let mut concat = Vec::new();
+        let mut shared = Vec::new();
+        for name in plan.input_names() {
+            let decl = &plan.input_spec(name).expect("iterating plan inputs").decl;
+            match spec.get(name) {
+                BatchAxis::Shared => shared.push(name.to_string()),
+                BatchAxis::Concat { axis: a } => {
+                    if a >= decl.shape.len() {
+                        bail!(
+                            "batch input '{name}': axis {a} out of range for declared \
+                             shape {:?}",
+                            decl.shape
+                        );
+                    }
+                    match axis {
+                        None => axis = Some(a),
+                        Some(prev) if prev == a => {}
+                        Some(prev) => bail!(
+                            "batch inputs disagree on the batch axis ({prev} vs {a} on \
+                             '{name}'); all Concat inputs must share one axis so outputs \
+                             can be split back along it"
+                        ),
+                    }
+                    let cap = decl.shape[a];
+                    match capacity {
+                        None => capacity = Some(cap),
+                        Some(prev) if prev == cap => {}
+                        Some(prev) => bail!(
+                            "batch input '{name}': declared extent {cap} along axis {a} \
+                             != {prev} on earlier Concat inputs; members contribute the \
+                             same rows to every batched input"
+                        ),
+                    }
+                    concat.push(ConcatInput {
+                        name: name.to_string(),
+                        decl_shape: decl.shape.clone(),
+                        dtype: decl.dtype,
+                    });
+                }
+            }
+        }
+        let axis = axis
+            .ok_or_else(|| anyhow!("batch spec declares no Concat input; nothing to batch"))?;
+        let capacity = capacity.expect("capacity set with axis");
+        if capacity == 0 {
+            bail!("batch axis {axis} has declared extent 0; nothing can ever be admitted");
+        }
+        Ok(Self { axis, capacity, concat, shared })
+    }
+
+    /// The common batch axis.
+    pub fn axis(&self) -> usize {
+        self.axis
+    }
+
+    /// The fused batch's row capacity (the plan's declared extent along
+    /// the batch axis).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Validate one member's bindings and return its row count along
+    /// the batch axis. Checks: every input bound, no unknown names,
+    /// shared inputs match their declaration exactly, concat inputs
+    /// match dtype/rank/off-axis dims and agree on `1..=capacity` rows.
+    pub fn member_rows(&self, bindings: &Bindings) -> anyhow::Result<usize> {
+        let known =
+            |n: &str| self.concat.iter().any(|c| c.name == n) || self.shared.iter().any(|s| s == n);
+        for name in bindings.names() {
+            if !known(name) {
+                bail!("unknown binding '{name}' (not a plan input)");
+            }
+        }
+        let mut rows: Option<usize> = None;
+        for c in &self.concat {
+            let value = bindings
+                .get(&c.name)
+                .ok_or_else(|| anyhow!("batched input '{}' not bound", c.name))?;
+            if value.dtype() != c.dtype {
+                bail!(
+                    "batched input '{}': dtype {:?} != declared {:?}",
+                    c.name,
+                    value.dtype(),
+                    c.dtype
+                );
+            }
+            let shape = value.shape();
+            if shape.len() != c.decl_shape.len() {
+                bail!(
+                    "batched input '{}': rank {} != declared rank {} ({:?} vs {:?})",
+                    c.name,
+                    shape.len(),
+                    c.decl_shape.len(),
+                    shape,
+                    c.decl_shape
+                );
+            }
+            for (d, (&have, &want)) in shape.iter().zip(&c.decl_shape).enumerate() {
+                if d != self.axis && have != want {
+                    bail!(
+                        "batched input '{}': off-axis dim {d} is {have}, declared {want} \
+                         (only the batch axis {} may vary per member)",
+                        c.name,
+                        self.axis
+                    );
+                }
+            }
+            let r = shape[self.axis];
+            if r == 0 || r > self.capacity {
+                bail!(
+                    "batched input '{}': {r} rows along axis {} outside 1..={}",
+                    c.name,
+                    self.axis,
+                    self.capacity
+                );
+            }
+            match rows {
+                None => rows = Some(r),
+                Some(prev) if prev == r => {}
+                Some(prev) => bail!(
+                    "member's batched inputs disagree on rows ({prev} vs {r} on '{}')",
+                    c.name
+                ),
+            }
+        }
+        // Shared inputs must be bound and exactly declaration-shaped —
+        // the fused launch binds the first member's copy verbatim.
+        for name in &self.shared {
+            bindings
+                .get(name)
+                .ok_or_else(|| anyhow!("shared input '{name}' not bound"))?;
+        }
+        rows.ok_or_else(|| anyhow!("plan has no batched inputs"))
+    }
+
+    /// The member's compatibility key: a 128-bit mix of every shared
+    /// input's content fingerprint (in sorted name order). Members with
+    /// byte-identical shared inputs — the only ones a single fused
+    /// launch can serve, since shared inputs are bound once — get equal
+    /// keys; any shared-content difference changes the key. A plan with
+    /// no shared inputs keys every request identically.
+    pub fn compat_key(&self, bindings: &Bindings) -> (u64, u64) {
+        let prints = self
+            .shared
+            .iter()
+            .filter_map(|name| bindings.get(name))
+            .map(|v| v.content_fingerprint());
+        combine_fingerprints(prints)
+    }
+
+    /// Fuse members into one launchable `Bindings`: concatenate each
+    /// `Concat` input across members along the batch axis, zero-pad up
+    /// to the declared capacity, bind the first member's shared inputs.
+    /// Returns `(fused, extents, pad_rows)` — `extents[i]` is member
+    /// `i`'s rows, for splitting outputs back.
+    pub fn fuse(&self, members: &[&Bindings]) -> anyhow::Result<(Bindings, Vec<usize>, usize)> {
+        if members.is_empty() {
+            bail!("fuse: empty batch");
+        }
+        let extents: Vec<usize> = members
+            .iter()
+            .map(|b| {
+                self.concat
+                    .first()
+                    .and_then(|c| b.get(&c.name))
+                    .map(|v| v.shape()[self.axis])
+                    .ok_or_else(|| anyhow!("fuse: member missing batched input"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let total: usize = extents.iter().sum();
+        if total > self.capacity {
+            bail!("fuse: {total} member rows exceed batch capacity {}", self.capacity);
+        }
+        let pad_rows = self.capacity - total;
+        let mut fused = Bindings::new();
+        for c in &self.concat {
+            let mut parts: Vec<HostValue> = members
+                .iter()
+                .map(|b| {
+                    b.get(&c.name)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("fuse: member missing batched input '{}'", c.name))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            if pad_rows > 0 {
+                let mut pad_shape = c.decl_shape.clone();
+                pad_shape[self.axis] = pad_rows;
+                parts.push(zeros(c.dtype, pad_shape));
+            }
+            fused.set(&c.name, HostValue::concat_axis(self.axis, &parts)?);
+        }
+        for name in &self.shared {
+            let value = members[0]
+                .get(name)
+                .ok_or_else(|| anyhow!("fuse: shared input '{name}' not bound"))?;
+            fused.set(name, value.clone());
+        }
+        Ok((fused, extents, pad_rows))
+    }
+
+    /// Split the fused launch's outputs back per member. Every output
+    /// must carry the batch axis (extent >= the members' total rows);
+    /// trailing padding rows are discarded. Returns one `GraphOutputs`
+    /// per member, in member order.
+    pub fn split_outputs(
+        &self,
+        outputs: &GraphOutputs,
+        extents: &[usize],
+    ) -> anyhow::Result<Vec<GraphOutputs>> {
+        let total: usize = extents.iter().sum();
+        let mut per_member: Vec<GraphOutputs> =
+            (0..extents.len()).map(|_| GraphOutputs::default()).collect();
+        for (task, outs) in &outputs.by_task {
+            for (idx, value) in outs.iter().enumerate() {
+                let shape = value.shape();
+                if shape.len() <= self.axis || shape[self.axis] < total {
+                    bail!(
+                        "output {idx} of task {task:?} has shape {shape:?}, which cannot \
+                         carry {total} member rows along batch axis {}; batched plans \
+                         must carry the batch axis through every output",
+                        self.axis
+                    );
+                }
+                let mut split = extents.to_vec();
+                let tail = shape[self.axis] - total;
+                if tail > 0 {
+                    split.push(tail);
+                }
+                let parts = value.split_offsets(self.axis, &split)?;
+                for (member, part) in per_member.iter_mut().zip(parts) {
+                    member.by_task.entry(*task).or_default().push(part);
+                }
+            }
+        }
+        Ok(per_member)
+    }
+}
+
+/// Mix an ordered sequence of content fingerprints into one 128-bit
+/// compatibility key (two independent xor-multiply accumulators, same
+/// construction as `content_fingerprint` itself). Order-sensitive by
+/// design — callers feed sorted input names.
+pub(crate) fn combine_fingerprints(
+    prints: impl Iterator<Item = (u64, u64)>,
+) -> (u64, u64) {
+    const OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME_A: u64 = 0x100_0000_01b3;
+    const OFFSET_B: u64 = 0x9e37_79b9_7f4a_7c15;
+    const PRIME_B: u64 = 0xc2b2_ae3d_27d4_eb4f;
+    let mut a = OFFSET_A;
+    let mut b = OFFSET_B;
+    for (ka, kb) in prints {
+        a = (a ^ ka).wrapping_mul(PRIME_A);
+        b = (b ^ kb.rotate_left(17)).wrapping_mul(PRIME_B);
+    }
+    (a, b)
+}
+
+/// An all-zeros value of the given dtype/shape (batch padding).
+fn zeros(dtype: DType, shape: Vec<usize>) -> HostValue {
+    let count: usize = shape.iter().product();
+    match dtype {
+        DType::F32 => HostValue::f32(shape, vec![0.0; count]),
+        DType::I32 => HostValue::i32(shape, vec![0; count]),
+        DType::U32 => HostValue::u32(shape, vec![0; count]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_defaults_to_shared() {
+        let spec = BatchSpec::new().concat("x", 0).shared("k");
+        assert_eq!(spec.get("x"), BatchAxis::Concat { axis: 0 });
+        assert_eq!(spec.get("k"), BatchAxis::Shared);
+        assert_eq!(spec.get("unlisted"), BatchAxis::Shared);
+        assert_eq!(spec.names().collect::<Vec<_>>(), vec!["k", "x"]);
+        assert!(!spec.is_empty());
+        assert!(BatchSpec::new().is_empty());
+    }
+
+    #[test]
+    fn spec_set_overwrites() {
+        let mut spec = BatchSpec::new().concat("x", 1);
+        spec.set("x", BatchAxis::Shared);
+        assert_eq!(spec.get("x"), BatchAxis::Shared);
+    }
+
+    #[test]
+    fn combine_fingerprints_is_deterministic_and_content_sensitive() {
+        let a = HostValue::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostValue::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let c = HostValue::f32(vec![4], vec![1.0, 2.0, 3.0, 5.0]);
+        let key = |vals: &[&HostValue]| {
+            combine_fingerprints(vals.iter().map(|v| v.content_fingerprint()))
+        };
+        assert_eq!(key(&[&a]), key(&[&b]), "identical content, identical key");
+        assert_ne!(key(&[&a]), key(&[&c]), "one element differs");
+        assert_ne!(key(&[&a, &c]), key(&[&c, &a]), "order-sensitive by design");
+        // Empty shared set: constant key (all requests compatible).
+        assert_eq!(key(&[]), key(&[]));
+        assert_ne!(key(&[]), key(&[&a]));
+    }
+
+    // Plan-coupled paths (BatchPlanner::new validation, member_rows,
+    // fuse/split round trips through a real CompiledGraph) live in
+    // rust/tests/batch_serving.rs — they need built artifacts.
+}

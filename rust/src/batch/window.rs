@@ -1,0 +1,192 @@
+//! [`BatchWindow`] — the size-or-deadline close policy for a forming
+//! batch, kept as a pure state machine so every close rule is unit
+//! testable without threads or artifacts.
+//!
+//! A batch opens when its first member arrives and closes on whichever
+//! comes first:
+//!
+//! * **size** — the member cap (`--batch-max`) is reached;
+//! * **rows** — admitting more members would overflow the plan's
+//!   declared batch-axis capacity (the next member instead seeds the
+//!   next batch);
+//! * **deadline** — `window` has elapsed since the batch opened, so a
+//!   lone request at low load waits at most the window (the bounded-p99
+//!   guarantee);
+//! * **incompatible** — the next popped member has a different
+//!   compatibility key (it seeds the next batch);
+//! * **drained** — the admission queue closed (engine shutdown).
+
+use std::time::{Duration, Instant};
+
+/// Why a forming batch stopped accepting members (the
+/// `serve.batch.close.*` counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Hit the member cap or filled the row capacity.
+    Size,
+    /// The window deadline elapsed.
+    Deadline,
+    /// The next member could not join (different compatibility key, or
+    /// its rows would overflow the capacity).
+    Incompatible,
+    /// The admission queue closed (shutdown drain).
+    Drained,
+}
+
+impl CloseReason {
+    /// Metrics-counter name for this reason (static, `Metrics::incr`
+    /// requires `&'static str`).
+    pub fn counter(self) -> &'static str {
+        match self {
+            CloseReason::Size => "serve.batch.close.size",
+            CloseReason::Deadline => "serve.batch.close.deadline",
+            CloseReason::Incompatible => "serve.batch.close.incompatible",
+            CloseReason::Drained => "serve.batch.close.drained",
+        }
+    }
+}
+
+/// A batch currently accepting members.
+#[derive(Debug, Clone, Copy)]
+pub struct Forming {
+    pub members: usize,
+    pub rows: usize,
+    pub opened: Instant,
+}
+
+/// Close-policy configuration (immutable; the former thread owns the
+/// loop, this owns the rules).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchWindow {
+    max_members: usize,
+    max_rows: usize,
+    window: Duration,
+}
+
+impl BatchWindow {
+    /// `max_members` and `max_rows` are clamped to at least 1; a
+    /// zero-duration window closes every batch at its first poll (i.e.
+    /// batching degenerates to per-request launches plus whatever was
+    /// already queued).
+    pub fn new(max_members: usize, max_rows: usize, window: Duration) -> Self {
+        Self { max_members: max_members.max(1), max_rows: max_rows.max(1), window }
+    }
+
+    pub fn max_members(&self) -> usize {
+        self.max_members
+    }
+
+    pub fn max_rows(&self) -> usize {
+        self.max_rows
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Open a batch with its first member (`rows` rows) at `now`.
+    pub fn open(&self, now: Instant, rows: usize) -> Forming {
+        Forming { members: 1, rows, opened: now }
+    }
+
+    /// The instant this batch must close even if nothing else arrives.
+    pub fn deadline(&self, f: &Forming) -> Instant {
+        f.opened + self.window
+    }
+
+    /// Would a member with `rows` rows fit without overflowing the
+    /// member cap or row capacity?
+    pub fn fits(&self, f: &Forming, rows: usize) -> bool {
+        f.members < self.max_members && f.rows + rows <= self.max_rows
+    }
+
+    /// Record an admitted member.
+    pub fn admit(&self, f: &mut Forming, rows: usize) {
+        f.members += 1;
+        f.rows += rows;
+    }
+
+    /// Is the batch full (close now on size grounds, without waiting
+    /// for the deadline)?
+    pub fn full(&self, f: &Forming) -> bool {
+        f.members >= self.max_members || f.rows >= self.max_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_cap_closes_immediately() {
+        let w = BatchWindow::new(1, 100, Duration::from_millis(10));
+        let f = w.open(Instant::now(), 3);
+        assert!(w.full(&f), "--batch-max 1 closes without waiting");
+        assert!(!w.fits(&f, 1), "a full batch admits nothing");
+    }
+
+    #[test]
+    fn size_cap_after_admissions() {
+        let w = BatchWindow::new(3, 100, Duration::from_millis(10));
+        let mut f = w.open(Instant::now(), 1);
+        assert!(!w.full(&f));
+        assert!(w.fits(&f, 1));
+        w.admit(&mut f, 1);
+        assert!(!w.full(&f));
+        w.admit(&mut f, 1);
+        assert_eq!((f.members, f.rows), (3, 3));
+        assert!(w.full(&f), "member cap reached");
+    }
+
+    #[test]
+    fn row_capacity_closes_and_rejects_overflow() {
+        let w = BatchWindow::new(100, 8, Duration::from_millis(10));
+        let mut f = w.open(Instant::now(), 5);
+        assert!(!w.full(&f));
+        assert!(w.fits(&f, 3), "5 + 3 == capacity fits");
+        assert!(!w.fits(&f, 4), "5 + 4 overflows");
+        w.admit(&mut f, 3);
+        assert!(w.full(&f), "row capacity reached");
+        // A single member filling the capacity closes on open.
+        let g = w.open(Instant::now(), 8);
+        assert!(w.full(&g));
+    }
+
+    #[test]
+    fn deadline_is_open_plus_window() {
+        let w = BatchWindow::new(8, 100, Duration::from_millis(250));
+        let t0 = Instant::now();
+        let f = w.open(t0, 1);
+        assert_eq!(w.deadline(&f), t0 + Duration::from_millis(250));
+        // The deadline is anchored at open, not at later admissions —
+        // the first member's wait is what the window bounds.
+        let mut f2 = f;
+        w.admit(&mut f2, 1);
+        assert_eq!(w.deadline(&f2), t0 + Duration::from_millis(250));
+    }
+
+    #[test]
+    fn caps_clamp_to_one() {
+        let w = BatchWindow::new(0, 0, Duration::ZERO);
+        assert_eq!(w.max_members(), 1);
+        assert_eq!(w.max_rows(), 1);
+        let f = w.open(Instant::now(), 1);
+        assert!(w.full(&f));
+    }
+
+    #[test]
+    fn close_reason_counters_are_distinct() {
+        let names = [
+            CloseReason::Size.counter(),
+            CloseReason::Deadline.counter(),
+            CloseReason::Incompatible.counter(),
+            CloseReason::Drained.counter(),
+        ];
+        for (i, a) in names.iter().enumerate() {
+            assert!(a.starts_with("serve.batch.close."));
+            for b in names.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod api;
 pub mod baselines;
+pub mod batch;
 pub mod bench;
 pub mod coordinator;
 pub mod devicemodel;

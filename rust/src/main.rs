@@ -13,7 +13,9 @@
 //!                                         launching one shared compiled
 //!                                         plan; throughput + p50/p99
 //!                                         (--devices N = pool routing
-//!                                         with per-device breakdowns)
+//!                                         with per-device breakdowns;
+//!                                         --batch-max N = micro-batched
+//!                                         serving with fused launches)
 //!   jacc trace-check [--trace F] [--json F]  re-parse and validate trace /
 //!                                         snapshot files (CI smoke step)
 //!
@@ -32,9 +34,10 @@ use std::sync::Arc;
 use anyhow::Context;
 
 use jacc::api::*;
+use jacc::batch::{BatchConfig, BatchSpec, BatchingEngine};
 use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
 use jacc::devicemodel::{CostModel, DeviceSpec};
-use jacc::pool::serve_requests;
+use jacc::pool::{serve_requests, PoolEngine};
 use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
 use jacc::substrate::json::{num, s, Value};
@@ -72,6 +75,18 @@ fn main() -> anyhow::Result<()> {
         "virtual device pool width (run / serve-bench), 0 = JACC_VIRTUAL_DEVICES",
     )
     .flag("smoke", "CI mode (serve-bench): tiny profile, 8 requests, skip without artifacts")
+    .opt(
+        "batch-max",
+        "0",
+        "micro-batch member cap (serve-bench): coalesce up to N compatible requests into \
+         one fused launch; 0 = batching off",
+    )
+    .opt(
+        "batch-window-us",
+        "200",
+        "micro-batch window in microseconds (serve-bench --batch-max): how long a forming \
+         batch waits for co-members; bounds p99 at low load",
+    )
     .opt(
         "trace",
         "",
@@ -113,6 +128,8 @@ fn main() -> anyhow::Result<()> {
             args.has_flag("verbose"),
             args.get_or("json", ""),
             args.get_or("trace", ""),
+            args.get_usize("batch-max").unwrap_or(0),
+            args.get_usize("batch-window-us").unwrap_or(200),
         ),
         Some("trace-check") => trace_check(args.get_or("trace", ""), args.get_or("json", "")),
         other => {
@@ -417,6 +434,8 @@ fn serve_bench(
     verbose: bool,
     json: &str,
     trace: &str,
+    batch_max: usize,
+    batch_window_us: usize,
 ) -> anyhow::Result<()> {
     // CI smoke mode: tiny shapes, few requests, and a graceful skip
     // when the AOT artifacts are not built (mirrors the benches).
@@ -434,6 +453,12 @@ fn serve_bench(
     anyhow::ensure!(requests > 0, "--requests must be positive");
     let tracer = if trace.is_empty() { None } else { Some(Arc::new(Tracer::new())) };
     let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
+    if batch_max > 0 {
+        return serve_bench_batched(
+            name, profile, variant, workers, requests, batch_max, batch_window_us,
+            pool_width, verbose, json, &tracer, trace,
+        );
+    }
     if pool_width > 1 {
         return serve_bench_pool(
             name, profile, variant, workers, requests, queue_depth, pool_width, verbose,
@@ -551,6 +576,196 @@ fn serve_bench_pool(
     write_trace_file(tracer, trace)
 }
 
+/// Build the benchmark graph with named `Param::input` placeholders
+/// instead of baked host params, so every request binds its own data
+/// (the micro-batched serving path). Returns the graph plus the
+/// full-size binding set (the workload values, declaration-shaped) for
+/// warming and for slicing member-sized requests.
+fn build_bound_graph(
+    dev: &Arc<DeviceContext>,
+    name: &str,
+    profile: &str,
+    variant: &str,
+) -> anyhow::Result<(TaskGraph, Bindings)> {
+    let w = workloads::generate(dev.runtime.manifest(), name, profile)?;
+    let entry = dev.runtime.manifest().find(name, variant, profile)?;
+    let mut task = Task::create(
+        name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )?
+    .with_variant(variant);
+    task.set_parameters(entry.inputs.iter().map(|d| Param::input(&d.name)).collect());
+    let mut full = Bindings::new();
+    for (v, d) in w.params.iter().zip(&entry.inputs) {
+        full.set(&d.name, v.clone());
+    }
+    let mut g = TaskGraph::new().with_profile(profile);
+    g.execute_task_on(task, dev)?;
+    Ok((g, full))
+}
+
+/// Batch every bound input along axis 0 (the serve-bench batching
+/// policy: row-independent benchmarks whose inputs share the axis-0
+/// extent — vector_add, black_scholes, ...). Returns the spec plus the
+/// plan's declared batch capacity.
+fn batch_spec_axis0(plan: &CompiledGraph) -> anyhow::Result<(BatchSpec, usize)> {
+    let mut spec = BatchSpec::new();
+    let mut capacity: Option<usize> = None;
+    for name in plan.input_names() {
+        let decl = &plan.input_spec(name).expect("iterating plan inputs").decl;
+        let cap = *decl.shape.first().with_context(|| {
+            format!("input '{name}' is scalar; serve-bench batching needs an axis-0 extent")
+        })?;
+        match capacity {
+            None => capacity = Some(cap),
+            Some(prev) => anyhow::ensure!(
+                prev == cap,
+                "inputs disagree on the axis-0 extent ({prev} vs {cap} on '{name}'); \
+                 this benchmark has no uniform batch axis — pick a row-independent one \
+                 (vector_add, black_scholes)"
+            ),
+        }
+        spec = spec.concat(name, 0);
+    }
+    let capacity = capacity.context("plan has no bound inputs to batch")?;
+    Ok((spec, capacity))
+}
+
+/// One member-sized request: the leading `capacity / batch_max` rows
+/// (at least 1) of every full-size input, so `batch_max` members fill
+/// the plan's declared capacity.
+fn member_bindings(full: &Bindings, capacity: usize, batch_max: usize) -> anyhow::Result<Bindings> {
+    let rows = (capacity / batch_max.max(1)).max(1);
+    if rows >= capacity {
+        return Ok(full.clone());
+    }
+    let mut member = Bindings::new();
+    for name in full.names() {
+        let v = full.get(name).expect("iterating binding names");
+        let parts = v.split_offsets(0, &[rows, capacity - rows])?;
+        member.set(name, parts.into_iter().next().expect("two split parts"));
+    }
+    Ok(member)
+}
+
+/// Micro-batched serving (`--batch-max N`): compile one bound-input
+/// plan, coalesce compatible requests into fused launches through the
+/// batching engine (routed through a device pool when `--devices > 1`),
+/// and report the batch-size distribution + amortized per-request
+/// launch cost alongside the usual latency tail.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_batched(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    workers: usize,
+    requests: usize,
+    batch_max: usize,
+    batch_window_us: usize,
+    devices: usize,
+    verbose: bool,
+    json: &str,
+    tracer: &Option<Arc<Tracer>>,
+    trace: &str,
+) -> anyhow::Result<()> {
+    let window = std::time::Duration::from_micros(batch_window_us as u64);
+    let mut config = BatchConfig::new(batch_max, window).with_launchers(workers);
+    if let Some(t) = tracer {
+        config = config.with_tracer(Arc::clone(t));
+    }
+
+    let engine;
+    let member;
+    let pool; // kept open for the post-run ledger check
+    let single_dev;
+    if devices > 1 {
+        let p = DevicePool::open(devices)?;
+        let (g, full) = build_bound_graph(p.device(0), name, profile, variant)?;
+        let replicated = p.compile(&g)?;
+        println!(
+            "{name}.{variant}.{profile} x{devices} devices: replica plan {}",
+            replicated.replica(0).stats.summary()
+        );
+        // Warm every replica off the clock with the full-size bindings
+        // (persistent warming + upload cache), asserting no-JIT.
+        for (d, rep) in replicated.launch_all(&full)?.iter().enumerate() {
+            anyhow::ensure!(rep.fresh_compiles == 0, "device {d} re-JITted after plan build");
+        }
+        let (spec, capacity) = batch_spec_axis0(replicated.replica(0))?;
+        member = member_bindings(&full, capacity, batch_max)?;
+        let mut pool_cfg = PoolConfig::with_workers_per_device(workers);
+        if let Some(t) = tracer {
+            pool_cfg = pool_cfg.with_tracer(Arc::clone(t));
+        }
+        engine = BatchingEngine::start_pool(
+            PoolEngine::start(&replicated, pool_cfg)?,
+            &spec,
+            config,
+        )?;
+        pool = Some(p);
+        single_dev = None;
+    } else {
+        let dev = Cuda::get_device(0)?.create_device_context()?;
+        let (g, full) = build_bound_graph(&dev, name, profile, variant)?;
+        let plan = Arc::new(g.compile()?);
+        println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
+        plan.launch(&full)?; // warm off the clock
+        let (spec, capacity) = batch_spec_axis0(&plan)?;
+        member = member_bindings(&full, capacity, batch_max)?;
+        engine = BatchingEngine::start(Arc::clone(&plan), &spec, config)?;
+        pool = None;
+        single_dev = Some((dev, plan));
+    }
+
+    let tickets = (0..requests)
+        .map(|_| engine.submit(member.clone()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reports = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    for rep in &reports {
+        anyhow::ensure!(rep.fresh_compiles == 0, "batched serving path must never JIT");
+    }
+    let batch_metrics = engine.metrics().to_json();
+    let agg = engine.shutdown();
+    println!("serve-bench {}", agg.summary());
+
+    if let Some(p) = &pool {
+        check_pool_ledgers(p)?;
+    }
+    if let Some((dev, plan)) = &single_dev {
+        let mem = dev.memory.lock().unwrap();
+        anyhow::ensure!(
+            mem.used() <= mem.capacity(),
+            "ledger overcommitted: used {} > capacity {}",
+            mem.used(),
+            mem.capacity()
+        );
+        println!("ledger: used {} / {} B", mem.used(), mem.capacity());
+        drop(mem);
+        if verbose {
+            println!("launch metrics:\n{}", plan.metrics.report());
+        }
+    }
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("serve-bench-batch");
+        snap.set("benchmark", s(name))
+            .set("variant", s(variant))
+            .set("profile", s(profile))
+            .set("requests", num(requests as f64))
+            .set("batch_max", num(batch_max as f64))
+            .set("batch_window_us", num(batch_window_us as f64))
+            .set("devices", num(devices.max(1) as f64))
+            .set("serve", agg.to_json())
+            .set("batch", batch_metrics);
+        snap.write(Path::new(json))?;
+        println!("snapshot -> {json}");
+    }
+    write_trace_file(tracer, trace)
+}
+
 /// Validate observability artifacts: re-parse a `--trace` file through
 /// `substrate::json` and check the trace-event keys, and/or validate a
 /// `--json` metrics snapshot against its schema tag. Used by the CI
@@ -574,7 +789,7 @@ fn trace_check(trace: &str, json: &str) -> anyhow::Result<()> {
         MetricsSnapshot::validate(&v)?;
         println!(
             "trace-check: {json} OK (schema {}, kind {})",
-            jacc::trace::snapshot::SCHEMA,
+            v.get("schema").as_str().unwrap_or("?"),
             v.get("kind").as_str().unwrap_or("?"),
         );
     }

@@ -163,6 +163,14 @@ impl PoolEngine {
         self.lanes.len()
     }
 
+    /// The device-0 replica. All replicas are compiled from one graph
+    /// against one shared manifest, so this is the shape/dtype surface
+    /// the batching engine validates fused bindings against before
+    /// routing them here.
+    pub fn plan(&self) -> &Arc<CompiledGraph> {
+        &self.lanes[0].plan
+    }
+
     /// Current outstanding-work snapshot, in device order (what the
     /// next `submit` routes against).
     pub fn outstanding(&self) -> Vec<usize> {
@@ -194,9 +202,20 @@ impl PoolEngine {
     /// Drain every lane, stop the workers and aggregate the run into
     /// one [`ServeReport`] with per-device breakdown rows.
     pub fn shutdown(mut self) -> ServeReport {
-        let workers_per_device = self.workers_per_device;
         self.join_workers();
-        let wall = self.started.elapsed();
+        self.aggregate(self.started.elapsed())
+    }
+
+    /// Aggregate the per-lane stats *so far* without stopping the
+    /// engine — the batching engine embeds these per-device rows in its
+    /// own shutdown report while this pool keeps draining fused
+    /// batches. Numbers are a point-in-time snapshot, not a final tally.
+    pub fn snapshot_report(&self) -> ServeReport {
+        self.aggregate(self.started.elapsed())
+    }
+
+    fn aggregate(&self, wall: std::time::Duration) -> ServeReport {
+        let workers_per_device = self.workers_per_device;
         let mut merged = LatencyLog::default();
         let mut per_device = Vec::with_capacity(self.lanes.len());
         let mut requests = 0u64;

@@ -66,6 +66,26 @@ impl std::ops::Deref for DeviceBuffer {
 unsafe impl Send for DeviceBuffer {}
 unsafe impl Sync for DeviceBuffer {}
 
+/// Typed errors for the shape-composition primitives
+/// (`concat_axis` / `split_offsets`). Callers that need to distinguish
+/// "nothing to concatenate" from a genuine shape bug (the batching
+/// engine treats the former as an empty batch, the latter as a member
+/// error) can downcast through `anyhow::Error`.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ShapeError {
+    #[error("concat_axis: nothing to concatenate (empty values slice)")]
+    EmptyConcat,
+    #[error("split_offsets: empty extents slice")]
+    EmptyExtents,
+    #[error("axis {axis} out of range for shape {shape:?}")]
+    AxisOutOfRange { axis: usize, shape: Vec<usize> },
+    #[error(
+        "split_offsets: extents {extents:?} sum to {sum}, \
+         but axis {axis} has extent {have}"
+    )]
+    ExtentMismatch { axis: usize, extents: Vec<usize>, sum: usize, have: usize },
+}
+
 /// A typed host-side array (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostValue {
@@ -228,12 +248,86 @@ impl HostValue {
         })
     }
 
+    /// Split along `axis` into parts of the given (possibly uneven)
+    /// extents — the variable-extent counterpart of `split_axis`,
+    /// needed when batch members contribute different row counts to a
+    /// fused launch. The extents must sum to `shape[axis]` exactly;
+    /// part `k` keeps the original shape except `shape[axis] ==
+    /// extents[k]`. Zero extents are allowed and yield empty parts
+    /// (a padded batch drops its padding this way).
+    pub fn split_offsets(&self, axis: usize, extents: &[usize]) -> anyhow::Result<Vec<HostValue>> {
+        let shape = self.shape().to_vec();
+        if axis >= shape.len() {
+            return Err(ShapeError::AxisOutOfRange { axis, shape }.into());
+        }
+        if extents.is_empty() {
+            return Err(ShapeError::EmptyExtents.into());
+        }
+        let sum: usize = extents.iter().sum();
+        if sum != shape[axis] {
+            return Err(ShapeError::ExtentMismatch {
+                axis,
+                extents: extents.to_vec(),
+                sum,
+                have: shape[axis],
+            }
+            .into());
+        }
+        let outer: usize = shape[..axis].iter().product();
+        let inner: usize = shape[axis + 1..].iter().product();
+
+        fn scatter<T: Copy>(
+            data: &[T],
+            outer: usize,
+            axis_len: usize,
+            inner: usize,
+            extents: &[usize],
+        ) -> Vec<Vec<T>> {
+            let mut out: Vec<Vec<T>> =
+                extents.iter().map(|&e| Vec::with_capacity(outer * e * inner)).collect();
+            for o in 0..outer {
+                let base = o * axis_len * inner;
+                let mut off = 0usize;
+                for (dst, &e) in out.iter_mut().zip(extents) {
+                    let start = base + off * inner;
+                    dst.extend_from_slice(&data[start..start + e * inner]);
+                    off += e;
+                }
+            }
+            out
+        }
+
+        let part_shape = |e: usize| {
+            let mut s = shape.clone();
+            s[axis] = e;
+            s
+        };
+        Ok(match self {
+            HostValue::F32 { data, .. } => scatter(data, outer, shape[axis], inner, extents)
+                .into_iter()
+                .zip(extents)
+                .map(|(d, &e)| HostValue::F32 { shape: part_shape(e), data: d })
+                .collect(),
+            HostValue::I32 { data, .. } => scatter(data, outer, shape[axis], inner, extents)
+                .into_iter()
+                .zip(extents)
+                .map(|(d, &e)| HostValue::I32 { shape: part_shape(e), data: d })
+                .collect(),
+            HostValue::U32 { data, .. } => scatter(data, outer, shape[axis], inner, extents)
+                .into_iter()
+                .zip(extents)
+                .map(|(d, &e)| HostValue::U32 { shape: part_shape(e), data: d })
+                .collect(),
+        })
+    }
+
     /// Concatenate values along `axis` (row-major) — the gather half of
     /// the device pool's sharded launch. Every value must share dtype
-    /// and shape except (possibly) the extent along `axis`.
+    /// and shape except (possibly) the extent along `axis`. An empty
+    /// slice is a typed `ShapeError::EmptyConcat`.
     pub fn concat_axis(axis: usize, values: &[HostValue]) -> anyhow::Result<HostValue> {
         let Some(first) = values.first() else {
-            bail!("concat_axis: nothing to concatenate");
+            return Err(ShapeError::EmptyConcat.into());
         };
         let base_shape = first.shape().to_vec();
         if axis >= base_shape.len() {
@@ -517,5 +611,182 @@ mod tests {
         assert!(v.as_i32().is_err());
         assert!(v.as_u32().is_err());
         assert!(v.as_f32().is_ok());
+    }
+
+    #[test]
+    fn split_offsets_uneven_rank1() {
+        let v = HostValue::f32(vec![6], (0..6).map(|i| i as f32).collect());
+        let parts = v.split_offsets(0, &[1, 3, 2]).unwrap();
+        assert_eq!(parts[0].as_f32().unwrap(), &[0.0]);
+        assert_eq!(parts[1].as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(parts[2].as_f32().unwrap(), &[4.0, 5.0]);
+        assert_eq!(HostValue::concat_axis(0, &parts).unwrap(), v);
+    }
+
+    #[test]
+    fn split_offsets_inner_axis_and_zero_extent() {
+        // shape [2, 3]: rows [0,1,2], [3,4,5]; split axis 1 into 2+0+1.
+        let v = HostValue::i32(vec![2, 3], (0..6).collect());
+        let parts = v.split_offsets(1, &[2, 0, 1]).unwrap();
+        assert_eq!(parts[0].shape(), &[2, 2]);
+        assert_eq!(parts[0].as_i32().unwrap(), &[0, 1, 3, 4]);
+        assert_eq!(parts[1].shape(), &[2, 0]);
+        assert_eq!(parts[1].as_i32().unwrap(), &[] as &[i32]);
+        assert_eq!(parts[2].as_i32().unwrap(), &[2, 5]);
+        assert_eq!(HostValue::concat_axis(1, &parts).unwrap(), v);
+    }
+
+    #[test]
+    fn split_offsets_validates_with_typed_errors() {
+        let v = HostValue::f32(vec![4], vec![0.0; 4]);
+        let err = v.split_offsets(1, &[4]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ShapeError>(),
+            Some(&ShapeError::AxisOutOfRange { axis: 1, shape: vec![4] })
+        );
+        let err = v.split_offsets(0, &[]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ShapeError>(), Some(&ShapeError::EmptyExtents));
+        let err = v.split_offsets(0, &[1, 2]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ShapeError>(),
+            Some(ShapeError::ExtentMismatch { sum: 3, have: 4, .. })
+        ));
+    }
+
+    #[test]
+    fn concat_axis_empty_is_typed_error() {
+        let err = HostValue::concat_axis(0, &[]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ShapeError>(), Some(&ShapeError::EmptyConcat));
+    }
+
+    // ------------------------------------------------- property tests
+
+    /// Generator shared by the round-trip properties: a random shape of
+    /// rank 1-3 (dims 1-4), an axis, a dtype tag, and per-part extents
+    /// (0-3 rows each, so uneven and empty parts both occur).
+    fn gen_case(rng: &mut crate::substrate::prng::Rng) -> (Vec<usize>, usize, Vec<usize>, u8) {
+        let rank = 1 + rng.below(3) as usize;
+        let axis = rng.below(rank as u64) as usize;
+        let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(4) as usize).collect();
+        let parts = 1 + rng.below(4) as usize;
+        let extents: Vec<usize> = (0..parts).map(|_| rng.below(4) as usize).collect();
+        let dtype = rng.below(3) as u8;
+        (shape, axis, extents, dtype)
+    }
+
+    /// Build a value of the given dtype/shape with distinct elements so
+    /// any misplaced element breaks equality.
+    fn gen_value(shape: &[usize], dtype: u8, salt: usize) -> HostValue {
+        let count: usize = shape.iter().product();
+        match dtype {
+            0 => HostValue::f32(
+                shape.to_vec(),
+                (0..count).map(|i| (i + salt * 1000) as f32 * 0.5).collect(),
+            ),
+            1 => HostValue::i32(
+                shape.to_vec(),
+                (0..count).map(|i| (i + salt * 1000) as i32 - 7).collect(),
+            ),
+            _ => HostValue::u32(
+                shape.to_vec(),
+                (0..count).map(|i| (i + salt * 1000) as u32).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_concat_then_split_offsets_round_trips() {
+        use crate::substrate::proptest::{no_shrink, Runner};
+        Runner::new("concat/split_offsets round-trip", 80).run_result(gen_case, no_shrink, |case| {
+            let (shape, axis, extents, dtype) = case;
+            let parts: Vec<HostValue> = extents
+                .iter()
+                .enumerate()
+                .map(|(k, &e)| {
+                    let mut s = shape.clone();
+                    s[*axis] = e;
+                    gen_value(&s, *dtype, k)
+                })
+                .collect();
+            let fused = HostValue::concat_axis(*axis, &parts)
+                .map_err(|e| format!("concat failed: {e}"))?;
+            let total: usize = extents.iter().sum();
+            if fused.shape()[*axis] != total {
+                return Err(format!("fused axis extent {} != {total}", fused.shape()[*axis]));
+            }
+            let back = fused
+                .split_offsets(*axis, extents)
+                .map_err(|e| format!("split_offsets failed: {e}"))?;
+            if back != parts {
+                return Err(format!("round trip mismatch: {back:?} != {parts:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_split_axis_equals_split_offsets_on_even_extents() {
+        use crate::substrate::proptest::{no_shrink, Runner};
+        Runner::new("split_axis == split_offsets(even)", 80).run_result(
+            gen_case,
+            no_shrink,
+            |case| {
+                let (shape, axis, extents, dtype) = case;
+                // Force an evenly divisible extent along the axis.
+                let parts = extents.len();
+                let chunk = 1 + extents[0];
+                let mut s = shape.clone();
+                s[*axis] = parts * chunk;
+                let v = gen_value(&s, *dtype, 0);
+                let even = v
+                    .split_axis(*axis, parts)
+                    .map_err(|e| format!("split_axis failed: {e}"))?;
+                let uneven = v
+                    .split_offsets(*axis, &vec![chunk; parts])
+                    .map_err(|e| format!("split_offsets failed: {e}"))?;
+                if even != uneven {
+                    return Err("split_axis and split_offsets disagree".into());
+                }
+                if HostValue::concat_axis(*axis, &even)
+                    .map_err(|e| format!("concat failed: {e}"))?
+                    != v
+                {
+                    return Err("split_axis/concat_axis round trip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_concat_rejects_dtype_and_rank_mismatches() {
+        use crate::substrate::proptest::{no_shrink, Runner};
+        Runner::new("concat rejects mismatches", 60).run_result(gen_case, no_shrink, |case| {
+            let (shape, axis, _, dtype) = case;
+            let good = gen_value(shape, *dtype, 0);
+            // Dtype mismatch: same shape, rotated dtype tag.
+            let other = gen_value(shape, (dtype + 1) % 3, 1);
+            if HostValue::concat_axis(*axis, &[good.clone(), other]).is_ok() {
+                return Err("dtype mismatch accepted".into());
+            }
+            // Rank mismatch: one extra trailing dim.
+            let mut deeper = shape.clone();
+            deeper.push(2);
+            let ranked = gen_value(&deeper, *dtype, 2);
+            if HostValue::concat_axis(*axis, &[good.clone(), ranked]).is_ok() {
+                return Err("rank mismatch accepted".into());
+            }
+            // Off-axis extent mismatch (only expressible at rank >= 2).
+            if shape.len() >= 2 {
+                let other_dim = (axis + 1) % shape.len();
+                let mut bumped = shape.clone();
+                bumped[other_dim] += 1;
+                let wide = gen_value(&bumped, *dtype, 3);
+                if HostValue::concat_axis(*axis, &[good, wide]).is_ok() {
+                    return Err("off-axis extent mismatch accepted".into());
+                }
+            }
+            Ok(())
+        });
     }
 }

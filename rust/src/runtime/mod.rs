@@ -9,6 +9,6 @@ pub mod device;
 pub mod pjrt;
 
 pub use artifact::{Access, ArtifactEntry, DType, IoDecl, Manifest};
-pub use buffer::{DeviceBuffer, HostValue, SharedBuffer};
+pub use buffer::{DeviceBuffer, HostValue, ShapeError, SharedBuffer};
 pub use device::{Cuda, DeviceContext, DeviceHandle};
 pub use pjrt::{CompileStats, CompiledKernel, PjrtRuntime};

@@ -47,7 +47,7 @@ use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionRep
 use crate::substrate::json::{arr, num, obj, Value};
 use crate::trace::{LogHistogram, Tracer};
 
-pub use queue::BoundedQueue;
+pub use queue::{BoundedQueue, Popped};
 
 /// Engine sizing knobs.
 #[derive(Debug, Clone)]
@@ -84,9 +84,20 @@ impl Default for ServeConfig {
 /// a loaded device shows up as queue-wait, a slow kernel as launch).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RequestTiming {
-    /// Admission-queue wait (submit -> a worker picked it up).
+    /// Admission-queue wait. On the unbatched engines this ends when a
+    /// worker picks the request up; under the batching engine it ends
+    /// when the request's batch *closes* (the request stops waiting for
+    /// co-members and becomes launchable), so queue percentiles stay
+    /// honest about where time went.
     pub queue: Duration,
-    /// Plan launch time (bind + replay, including transfers).
+    /// Batching overhead: time between batch close and reply that is
+    /// not this request's launch share (fuse/concat, co-member work in
+    /// the fused launch, output scatter). Always zero on the unbatched
+    /// engines.
+    pub batch: Duration,
+    /// Plan launch time (bind + replay, including transfers). Under
+    /// batching this is the member's share of the fused launch wall
+    /// (proportional to its rows), so shares sum to the fused cost.
     pub launch: Duration,
     /// H2D-upload share of `launch` (from the launch's
     /// `ExecutionReport`; shrinks as the upload cache hits).
@@ -99,9 +110,11 @@ pub struct RequestTiming {
 }
 
 impl RequestTiming {
-    /// Total request latency (queue wait + launch).
+    /// Total request latency (queue wait + batch overhead + launch).
+    /// The three components partition the submit-to-reply wall exactly
+    /// (the batching engine's attribution test asserts this).
     pub fn total(&self) -> Duration {
-        self.queue + self.launch
+        self.queue + self.batch + self.launch
     }
 
     /// Attribution for one successful launch: the wall split the
@@ -112,7 +125,14 @@ impl RequestTiming {
         report: &ExecutionReport,
         device: usize,
     ) -> Self {
-        Self { queue, launch, h2d: report.h2d, kernel: report.launch, device }
+        Self {
+            queue,
+            batch: Duration::ZERO,
+            launch,
+            h2d: report.h2d,
+            kernel: report.launch,
+            device,
+        }
     }
 }
 
@@ -167,6 +187,7 @@ impl Ticket {
 pub(crate) struct LatencyLog {
     total_ms: LogHistogram,
     queue_ms: LogHistogram,
+    batch_ms: LogHistogram,
     launch_ms: LogHistogram,
     h2d_ms: LogHistogram,
     kernel_ms: LogHistogram,
@@ -176,6 +197,7 @@ impl LatencyLog {
     pub(crate) fn record(&mut self, timing: &RequestTiming) {
         self.total_ms.record(timing.total().as_secs_f64() * 1e3);
         self.queue_ms.record(timing.queue.as_secs_f64() * 1e3);
+        self.batch_ms.record(timing.batch.as_secs_f64() * 1e3);
         self.launch_ms.record(timing.launch.as_secs_f64() * 1e3);
         self.h2d_ms.record(timing.h2d.as_secs_f64() * 1e3);
         self.kernel_ms.record(timing.kernel.as_secs_f64() * 1e3);
@@ -184,6 +206,7 @@ impl LatencyLog {
     pub(crate) fn merge_from(&mut self, other: &LatencyLog) {
         self.total_ms.merge(&other.total_ms);
         self.queue_ms.merge(&other.queue_ms);
+        self.batch_ms.merge(&other.batch_ms);
         self.launch_ms.merge(&other.launch_ms);
         self.h2d_ms.merge(&other.h2d_ms);
         self.kernel_ms.merge(&other.kernel_ms);
@@ -200,6 +223,7 @@ impl LatencyLog {
         report.max_ms = self.total_ms.max_value();
         report.queue_p50_ms = self.queue_ms.percentile(50.0);
         report.queue_p95_ms = self.queue_ms.percentile(95.0);
+        report.batch_wait_p95_ms = self.batch_ms.percentile(95.0);
         report.launch_p95_ms = self.launch_ms.percentile(95.0);
         report.h2d_p95_ms = self.h2d_ms.percentile(95.0);
         report.kernel_p95_ms = self.kernel_ms.percentile(95.0);
@@ -306,6 +330,21 @@ pub struct ServeReport {
     pub h2d_dedup_hits: u64,
     /// Uploads that actually crossed the bus.
     pub h2d_transfers: u64,
+    /// Fused batch launches performed (0 on the unbatched engines —
+    /// all batch stats below stay zero there too).
+    pub batches: u64,
+    /// Members-per-fused-launch distribution: the batching engine's
+    /// coalescing quality (p50/p95 within histogram error, max exact).
+    pub batch_p50: f64,
+    pub batch_p95: f64,
+    pub batch_max: f64,
+    /// p95 of the batching-overhead latency component
+    /// (`RequestTiming::batch`).
+    pub batch_wait_p95_ms: f64,
+    /// Total fused launch wall divided by served requests — the
+    /// amortized per-request launch cost batching exists to shrink
+    /// (compare against `launch_p95_ms` at `--batch-max 1`).
+    pub amortized_launch_ms: f64,
     /// Per-device rows for pool runs (empty on a single-device engine).
     pub per_device: Vec<DeviceBreakdown>,
 }
@@ -353,6 +392,18 @@ impl ServeReport {
             self.dedup_hit_rate() * 100.0,
             if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
         );
+        if self.batches > 0 {
+            out.push_str(&format!(
+                "\n  batching: {} fused launches, members p50 {:.1} / p95 {:.1} / max {:.0}, \
+                 amortized launch {:.3} ms/req, batch wait p95 {:.2} ms",
+                self.batches,
+                self.batch_p50,
+                self.batch_p95,
+                self.batch_max,
+                self.amortized_launch_ms,
+                self.batch_wait_p95_ms,
+            ));
+        }
         for d in &self.per_device {
             out.push('\n');
             out.push_str(&d.line());
@@ -383,6 +434,12 @@ impl ServeReport {
             ("h2d_dedup_hits", num(self.h2d_dedup_hits as f64)),
             ("h2d_transfers", num(self.h2d_transfers as f64)),
             ("dedup_hit_rate", num(self.dedup_hit_rate())),
+            ("batches", num(self.batches as f64)),
+            ("batch_p50", num(self.batch_p50)),
+            ("batch_p95", num(self.batch_p95)),
+            ("batch_max", num(self.batch_max)),
+            ("batch_wait_p95_ms", num(self.batch_wait_p95_ms)),
+            ("amortized_launch_ms", num(self.amortized_launch_ms)),
             ("per_device", arr(self.per_device.iter().map(|d| d.to_json()).collect())),
         ])
     }
@@ -736,5 +793,37 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(t.total(), Duration::from_millis(5));
+        // The batching overhead component joins the partition.
+        let t = RequestTiming { batch: Duration::from_millis(4), ..t };
+        assert_eq!(t.total(), Duration::from_millis(9));
+    }
+
+    #[test]
+    fn batch_stats_in_summary_and_json() {
+        let quiet = ServeReport { requests: 5, ..Default::default() };
+        assert!(
+            !quiet.summary().contains("batching:"),
+            "unbatched reports must not print a batching line"
+        );
+        let r = ServeReport {
+            workers: 2,
+            requests: 16,
+            wall: Duration::from_secs(1),
+            batches: 4,
+            batch_p50: 4.0,
+            batch_p95: 6.0,
+            batch_max: 6.0,
+            batch_wait_p95_ms: 0.8,
+            amortized_launch_ms: 0.25,
+            ..Default::default()
+        };
+        let s = r.summary();
+        assert!(s.contains("4 fused launches"), "{s}");
+        assert!(s.contains("max 6"), "{s}");
+        assert!(s.contains("amortized launch 0.250 ms/req"), "{s}");
+        let v = Value::parse(&r.to_json().to_json_pretty(2)).unwrap();
+        assert_eq!(v.get("batches").as_u64(), Some(4));
+        assert!((v.get("amortized_launch_ms").as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert!((v.get("batch_p95").as_f64().unwrap() - 6.0).abs() < 1e-12);
     }
 }

@@ -6,6 +6,18 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Outcome of a deadline-bounded dequeue ([`BoundedQueue::pop_deadline`]).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Popped<T> {
+    /// An item arrived before the deadline.
+    Item(T),
+    /// The queue is closed and drained — no more items will ever come.
+    Closed,
+    /// The deadline passed with the queue still open but empty.
+    TimedOut,
+}
 
 struct State<T> {
     items: VecDeque<T>,
@@ -76,6 +88,32 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Dequeue with a deadline: blocks until an item arrives
+    /// (`Popped::Item`), the queue is closed and drained
+    /// (`Popped::Closed`), or `deadline` passes (`Popped::TimedOut`).
+    /// The batching engine's window former uses this so a forming batch
+    /// launches at its deadline even if no more requests ever arrive.
+    pub fn pop_deadline(&self, deadline: Instant) -> Popped<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Popped::Item(item);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            // A spurious or timeout wake re-enters the loop: the item /
+            // closed / deadline checks above decide, not the wait result.
+            let (guard, _res) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
     /// Close the queue: producers fail fast, consumers drain what is
     /// left and then see `None`.
     pub fn close(&self) {
@@ -136,6 +174,38 @@ mod tests {
         t.join().unwrap();
         assert_eq!(produced.load(Ordering::Acquire), 1);
         assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn pop_deadline_item_closed_timeout() {
+        use std::time::{Duration, Instant};
+        let q = BoundedQueue::new(2);
+        q.push(3).unwrap();
+        // Item already queued: returned immediately, deadline unused.
+        assert_eq!(q.pop_deadline(Instant::now() + Duration::from_secs(5)), Popped::Item(3));
+        // Empty + open: blocks until the deadline, then times out.
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_millis(20);
+        assert_eq!(q.pop_deadline(deadline), Popped::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "must honor the deadline");
+        // Already-expired deadline on an empty queue: immediate timeout.
+        assert_eq!(q.pop_deadline(Instant::now()), Popped::TimedOut);
+        // Closed + drained: Closed beats TimedOut.
+        q.close();
+        assert_eq!(q.pop_deadline(Instant::now() + Duration::from_secs(5)), Popped::Closed);
+    }
+
+    #[test]
+    fn pop_deadline_wakes_on_push() {
+        use std::time::{Duration, Instant};
+        let q = Arc::new(BoundedQueue::new(2));
+        let t = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.pop_deadline(Instant::now() + Duration::from_secs(10)))
+        };
+        thread::sleep(Duration::from_millis(20));
+        q.push(9u64).unwrap();
+        assert_eq!(t.join().unwrap(), Popped::Item(9), "push must wake a deadline waiter");
     }
 
     #[test]

@@ -17,7 +17,15 @@ use crate::metrics::Metrics;
 use crate::substrate::json::{s, Value};
 
 /// Schema tag stamped into every snapshot under the `"schema"` key.
-pub const SCHEMA: &str = "jacc.metrics.v1";
+/// v2 adds the micro-batching surface: the `"serve-bench-batch"` kind
+/// and the batch fields in `ServeReport::to_json` (`batches`,
+/// `batch_p50/p95/max`, `batch_wait_p95_ms`, `amortized_launch_ms`).
+pub const SCHEMA: &str = "jacc.metrics.v2";
+
+/// The pre-batching schema tag; [`MetricsSnapshot::validate`] still
+/// accepts documents written by older binaries (v1 is a strict subset
+/// of v2 — no field changed meaning, v2 only added fields).
+pub const SCHEMA_V1: &str = "jacc.metrics.v1";
 
 /// Builder for one snapshot document.
 #[derive(Debug)]
@@ -60,13 +68,13 @@ impl MetricsSnapshot {
             .with_context(|| format!("writing snapshot to {}", path.display()))
     }
 
-    /// Validate a parsed document as a snapshot: the schema tag and a
-    /// kind must be present.
+    /// Validate a parsed document as a snapshot: the schema tag (v2 or
+    /// the backward-compatible v1) and a kind must be present.
     pub fn validate(v: &Value) -> Result<()> {
         let schema = v.get("schema").as_str().context("snapshot missing schema tag")?;
         anyhow::ensure!(
-            schema == SCHEMA,
-            "unexpected snapshot schema {schema:?} (want {SCHEMA:?})"
+            schema == SCHEMA || schema == SCHEMA_V1,
+            "unexpected snapshot schema {schema:?} (want {SCHEMA:?} or legacy {SCHEMA_V1:?})"
         );
         v.get("kind").as_str().context("snapshot missing kind")?;
         Ok(())
@@ -103,5 +111,14 @@ mod tests {
         assert!(MetricsSnapshot::validate(&bad).is_err());
         let wrong = Value::parse(r#"{"schema": "other.v9", "kind": "x"}"#).unwrap();
         assert!(MetricsSnapshot::validate(&wrong).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_current_and_legacy_schema() {
+        let v2 = Value::parse(r#"{"schema": "jacc.metrics.v2", "kind": "x"}"#).unwrap();
+        MetricsSnapshot::validate(&v2).expect("current schema validates");
+        let v1 = Value::parse(r#"{"schema": "jacc.metrics.v1", "kind": "x"}"#).unwrap();
+        MetricsSnapshot::validate(&v1).expect("legacy v1 snapshots still validate");
+        assert_eq!(SCHEMA, "jacc.metrics.v2");
     }
 }

@@ -1,0 +1,335 @@
+//! Micro-batching equivalence tests: requests served through the
+//! batching engine must produce bit-for-bit the outputs of launching
+//! each request alone (hand-padded to the plan's declared capacity),
+//! on a single shared plan and routed through a 2-device pool; no
+//! serving launch may JIT and no ledger may overcommit. Requires
+//! `make artifacts` (tiny profile); every test no-ops gracefully when
+//! artifacts are absent.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jacc::api::*;
+use jacc::batch::{serve_batched, BatchConfig, BatchPlanner, BatchSpec, BatchingEngine};
+use jacc::pool::{PoolConfig, PoolEngine};
+
+const fn assert_send_sync<T: Send + Sync>() {}
+const _: () = assert_send_sync::<BatchingEngine>();
+
+fn device() -> Option<Arc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+/// A vector_add plan whose two inputs are rebound per launch; the
+/// declared axis-0 extent `n` is the batch capacity.
+fn vector_add_plan(dev: &Arc<DeviceContext>) -> (CompiledGraph, TaskId, usize) {
+    let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, dev).unwrap();
+    (g.compile().unwrap(), id, n)
+}
+
+/// Distinct, deterministic member-sized values for request `r`.
+fn member_values(r: usize, rows: usize) -> (HostValue, HostValue) {
+    let x: Vec<f32> = (0..rows).map(|i| ((i + r * 7) % 13) as f32 * 0.5).collect();
+    let y: Vec<f32> = (0..rows).map(|i| ((i * 3 + r) % 11) as f32 * 0.25).collect();
+    (HostValue::f32(vec![rows], x), HostValue::f32(vec![rows], y))
+}
+
+/// The unbatched reference: pad request `r` to the declared capacity
+/// by hand, launch it alone, split the member rows back out. Returns
+/// the output bits.
+fn unbatched_bits(plan: &CompiledGraph, id: TaskId, r: usize, rows: usize, n: usize) -> Vec<u32> {
+    let (x, y) = member_values(r, rows);
+    let pad = n - rows;
+    let zeros = HostValue::f32(vec![pad], vec![0.0; pad]);
+    let b = Bindings::new()
+        .bind("x", HostValue::concat_axis(0, &[x, zeros.clone()]).unwrap())
+        .bind("y", HostValue::concat_axis(0, &[y, zeros]).unwrap());
+    let rep = plan.launch(&b).unwrap();
+    assert_eq!(rep.fresh_compiles, 0, "reference launch {r}");
+    let parts = rep.outputs.single(id).unwrap().split_offsets(0, &[rows, pad]).unwrap();
+    parts[0].as_f32().unwrap().iter().map(|f| f.to_bits()).collect()
+}
+
+fn spec_xy() -> BatchSpec {
+    BatchSpec::new().concat("x", 0).concat("y", 0)
+}
+
+/// Fused launches must be bit-for-bit equivalent to padded solo
+/// launches, with `fresh_compiles == 0` throughout, coalescing
+/// actually happening, and amortized launch cost reported.
+#[test]
+fn batched_matches_unbatched_bit_for_bit() {
+    let Some(dev) = device() else { return };
+    let (plan, id, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    let rows = (n / 4).max(1);
+    let total = 12;
+
+    let expected: Vec<Vec<u32>> =
+        (0..total).map(|r| unbatched_bits(&plan, id, r, rows, n)).collect();
+
+    let requests: Vec<Bindings> = (0..total)
+        .map(|r| {
+            let (x, y) = member_values(r, rows);
+            Bindings::new().bind("x", x).bind("y", y)
+        })
+        .collect();
+    // A generous window: the single-threaded submitter enqueues far
+    // faster than 100ms, so batches close on size, not deadline.
+    let config = BatchConfig::new(4, Duration::from_millis(100));
+    let (reports, agg) = serve_batched(Arc::clone(&plan), &spec_xy(), config, requests).unwrap();
+
+    assert_eq!(reports.len(), total);
+    for (r, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.fresh_compiles, 0, "batched serving must never JIT (request {r})");
+        let got: Vec<u32> = rep
+            .outputs
+            .single(id)
+            .unwrap()
+            .as_f32()
+            .unwrap()
+            .iter()
+            .map(|f| f.to_bits())
+            .collect();
+        assert_eq!(got, expected[r], "request {r}: batched result diverged from unbatched");
+        assert!(rep.batch_members >= 1 && rep.batch_members <= 4, "request {r}");
+        assert_eq!(
+            rep.pad_rows,
+            n - rep.batch_rows,
+            "request {r}: fused launch always fills the declared capacity"
+        );
+        // The attribution satellite: the three components partition the
+        // member's total latency exactly.
+        let t = &rep.timing;
+        assert_eq!(t.queue + t.batch + t.launch, t.total(), "request {r}");
+    }
+    assert_eq!(agg.requests, total as u64);
+    assert_eq!(agg.errors, 0);
+    assert!(agg.batches >= 3, "12 requests with cap 4 need >= 3 fused launches");
+    assert!(agg.batches < total as u64, "some coalescing must have happened");
+    assert!(agg.batch_max >= 2.0, "at least one batch had co-members");
+    assert!(agg.amortized_launch_ms > 0.0);
+    assert!(agg.summary().contains("fused launches"), "{}", agg.summary());
+
+    let mem = dev.memory.lock().unwrap();
+    assert!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
+}
+
+/// The same equivalence routed through a 2-device pool: batches fuse
+/// first, then land on least-loaded device lanes; per-device rows show
+/// up in the aggregate and no ledger overcommits.
+#[test]
+fn batched_pool_matches_unbatched_bit_for_bit() {
+    if device().is_none() {
+        return;
+    }
+    let pool = DevicePool::open(2).unwrap();
+    let entry = pool
+        .device(0)
+        .runtime
+        .manifest()
+        .find("vector_add", "pallas", "tiny")
+        .unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let id = g.execute_task_on(task, pool.device(0)).unwrap();
+    let replicated = pool.compile(&g).unwrap();
+
+    let rows = (n / 4).max(1);
+    let total = 12;
+    let expected: Vec<Vec<u32>> = (0..total)
+        .map(|r| unbatched_bits(replicated.replica(0), id, r, rows, n))
+        .collect();
+
+    let engine = BatchingEngine::start_pool(
+        PoolEngine::start(&replicated, PoolConfig::with_workers_per_device(2)).unwrap(),
+        &spec_xy(),
+        BatchConfig::new(4, Duration::from_millis(100)),
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..total)
+        .map(|r| {
+            let (x, y) = member_values(r, rows);
+            engine.submit(Bindings::new().bind("x", x).bind("y", y)).unwrap()
+        })
+        .collect();
+    for (r, ticket) in tickets.into_iter().enumerate() {
+        let rep = ticket.wait().unwrap();
+        assert_eq!(rep.fresh_compiles, 0, "request {r}");
+        let got: Vec<u32> = rep
+            .outputs
+            .single(id)
+            .unwrap()
+            .as_f32()
+            .unwrap()
+            .iter()
+            .map(|f| f.to_bits())
+            .collect();
+        assert_eq!(got, expected[r], "request {r}: pooled batched result diverged");
+    }
+    let agg = engine.shutdown();
+    assert_eq!(agg.requests, total as u64);
+    assert_eq!(agg.errors, 0);
+    assert!(agg.batches >= 3);
+    assert_eq!(agg.per_device.len(), 2, "pool target reports per-device rows");
+    assert_eq!(
+        agg.per_device.iter().map(|d| d.requests).sum::<u64>(),
+        agg.batches,
+        "every fused launch landed on exactly one device lane"
+    );
+    for (d, (used, capacity)) in pool.ledger_usage().into_iter().enumerate() {
+        assert!(used <= capacity, "device {d} ledger overcommitted");
+    }
+}
+
+/// Requests whose *shared* input content differs must never share a
+/// fused launch: alternating contents force one-member batches.
+#[test]
+fn shared_input_content_splits_batches() {
+    let Some(dev) = device() else { return };
+    let (plan, id, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    let total = 4;
+
+    // x batches; y is shared — every member of a batch must bind
+    // byte-identical, declaration-shaped y. Members are small enough
+    // that same-key requests COULD coalesce; alternating y content is
+    // what keeps them apart.
+    let spec = BatchSpec::new().concat("x", 0);
+    let rows = (n / 4).max(1);
+    let y_a = HostValue::f32(vec![n], vec![1.0; n]);
+    let y_b = HostValue::f32(vec![n], vec![2.0; n]);
+    let requests: Vec<Bindings> = (0..total)
+        .map(|r| {
+            let x = HostValue::f32(vec![rows], vec![r as f32; rows]);
+            let y = if r % 2 == 0 { y_a.clone() } else { y_b.clone() };
+            Bindings::new().bind("x", x).bind("y", y)
+        })
+        .collect();
+    let config = BatchConfig::new(4, Duration::from_millis(10));
+    let (reports, agg) = serve_batched(Arc::clone(&plan), &spec, config, requests).unwrap();
+
+    for (r, rep) in reports.iter().enumerate() {
+        assert_eq!(
+            rep.batch_members, 1,
+            "request {r}: members with different shared content must not coalesce"
+        );
+        let got = rep.outputs.single(id).unwrap().as_f32().unwrap();
+        let want = r as f32 + if r % 2 == 0 { 1.0 } else { 2.0 };
+        assert!(got.iter().all(|&v| v == want), "request {r}");
+    }
+    assert_eq!(agg.batches, total as u64, "alternating keys force one batch per request");
+}
+
+/// At zero load a lone request is not stuck behind an unbounded wait:
+/// its batch closes at the window deadline, so queue-wait is ~window,
+/// and the padding accounting is honest.
+#[test]
+fn lone_request_closes_at_deadline() {
+    let Some(dev) = device() else { return };
+    let (plan, id, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    let rows = (n / 2).max(1);
+    let window = Duration::from_millis(5);
+
+    let engine = BatchingEngine::start(
+        Arc::clone(&plan),
+        &spec_xy(),
+        BatchConfig::new(8, window),
+    )
+    .unwrap();
+    let (x, y) = member_values(0, rows);
+    let rep = engine
+        .submit(Bindings::new().bind("x", x).bind("y", y))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(rep.batch_members, 1);
+    assert_eq!(rep.batch_rows, rows);
+    assert_eq!(rep.pad_rows, n - rows);
+    assert!(
+        rep.timing.queue >= window,
+        "queue-wait {:?} must cover the full window {window:?} (close at deadline)",
+        rep.timing.queue
+    );
+    assert!(
+        rep.timing.queue < window + Duration::from_secs(5),
+        "queue-wait {:?} is not bounded by the window",
+        rep.timing.queue
+    );
+    assert_eq!(
+        engine.metrics().counter("serve.batch.close.deadline"),
+        1,
+        "the lone request's batch closed on the deadline"
+    );
+    let got = rep.outputs.single(id).unwrap();
+    assert_eq!(got.shape(), &[rows], "padding rows are stripped from the reply");
+    engine.shutdown();
+}
+
+/// Malformed requests are rejected at submit (typed planner errors),
+/// never poisoning a formed batch; spec validation runs at start.
+#[test]
+fn submit_validates_before_batching() {
+    let Some(dev) = device() else { return };
+    let (plan, _, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+
+    // Unknown input name in the spec fails at engine start.
+    let err = BatchPlanner::new(&plan, &BatchSpec::new().concat("nope", 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown input 'nope'"), "{err}");
+    // A spec with no Concat input has nothing to batch.
+    let err = BatchPlanner::new(&plan, &BatchSpec::new()).unwrap_err().to_string();
+    assert!(err.contains("no Concat input"), "{err}");
+
+    let engine =
+        BatchingEngine::start(Arc::clone(&plan), &spec_xy(), BatchConfig::new(2, Duration::ZERO))
+            .unwrap();
+    // Members whose batched inputs disagree on rows are rejected.
+    let bad = Bindings::new()
+        .bind("x", HostValue::f32(vec![2], vec![0.0; 2]))
+        .bind("y", HostValue::f32(vec![1], vec![0.0]));
+    let err = engine.submit(bad).unwrap_err().to_string();
+    assert!(err.contains("disagree on rows"), "{err}");
+    // Oversized members can never fit a fused launch.
+    let bad = Bindings::new()
+        .bind("x", HostValue::f32(vec![n + 1], vec![0.0; n + 1]))
+        .bind("y", HostValue::f32(vec![n + 1], vec![0.0; n + 1]));
+    let err = engine.submit(bad).unwrap_err().to_string();
+    assert!(err.contains("outside 1..="), "{err}");
+    // A good request right after still serves fine.
+    let (x, y) = member_values(0, 1);
+    engine.submit(Bindings::new().bind("x", x).bind("y", y)).unwrap().wait().unwrap();
+    let agg = engine.shutdown();
+    assert_eq!(agg.requests, 1);
+    assert_eq!(agg.errors, 0, "rejected submissions never enter the engine");
+}
