@@ -10,7 +10,7 @@
 //! Run with:  cargo run --release --example pipeline
 
 use jacc::api::*;
-use jacc::coordinator::lowering::action_histogram;
+use jacc::coordinator::lowering::histogram_summary;
 
 fn build(dev: &std::sync::Arc<DeviceContext>, optimized: bool) -> anyhow::Result<(TaskGraph, TaskId)> {
     let m = dev.runtime.manifest();
@@ -43,12 +43,7 @@ fn bindings_for(n: usize, round: usize) -> (Bindings, f64) {
 }
 
 fn show(label: &str, actions: &[jacc::coordinator::Action]) {
-    let h = action_histogram(actions);
-    println!(
-        "{label}: {} actions  ({})",
-        actions.len(),
-        h.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(", ")
-    );
+    println!("{label}: {} actions  ({})", actions.len(), histogram_summary(actions));
 }
 
 fn main() -> anyhow::Result<()> {

@@ -1,0 +1,193 @@
+//! Happens-before verification: schedule coverage, dependency / stage
+//! ordering, same-stage race detection and barrier dominance.
+//!
+//! The ground truth is recomputed from the action stream itself via
+//! `lowering::dependency_edges` — the same walk `launch_schedule`
+//! levels into stages — so a schedule that was mutated after the fact
+//! (an edge dropped, a stage reordered, a buffer aliased) is checked
+//! against what the stream actually requires, not against what the
+//! schedule claims.
+
+use std::collections::HashMap;
+
+use crate::coordinator::lowering::{dependency_edges, Action, BufId, CopySource};
+use crate::coordinator::task::TaskId;
+
+use super::{AnalysisReport, Finding, PlanModel, Rule};
+
+/// One conflict-relevant location: a device buffer or a task's staged
+/// host slot (both are shared state under concurrent stage replay).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) enum Slot {
+    Buf(BufId),
+    Staged(TaskId),
+}
+
+impl Slot {
+    fn describe(&self) -> String {
+        match self {
+            Slot::Buf(b) => format!("buf {b}"),
+            Slot::Staged(t) => format!("staged outputs of task {t}"),
+        }
+    }
+
+    fn buf(&self) -> Option<BufId> {
+        match self {
+            Slot::Buf(b) => Some(*b),
+            Slot::Staged(_) => None,
+        }
+    }
+}
+
+/// The slots an action reads and writes (compiles and barriers touch
+/// nothing; barriers order via edges instead).
+pub(crate) fn touches(a: &Action) -> (Vec<Slot>, Vec<Slot>) {
+    match a {
+        Action::CopyIn { dest, source } => {
+            let reads = match source {
+                CopySource::StagedOutput { task, .. } => vec![Slot::Staged(*task)],
+                _ => Vec::new(),
+            };
+            (reads, vec![Slot::Buf(*dest)])
+        }
+        Action::Launch { args, outs, .. } => (
+            args.iter().map(|&b| Slot::Buf(b)).collect(),
+            outs.iter().map(|&b| Slot::Buf(b)).collect(),
+        ),
+        Action::CopyOut { task, bufs } => {
+            (bufs.iter().map(|&b| Slot::Buf(b)).collect(), vec![Slot::Staged(*task)])
+        }
+        Action::Compile { .. } | Action::Barrier => (Vec::new(), Vec::new()),
+    }
+}
+
+/// The slot a dependency edge `p -> i` conflicts on, if any (names the
+/// buffer in race diagnostics; ordering edges through barriers have
+/// none).
+fn conflict_slot(producer: &Action, consumer: &Action) -> Option<Slot> {
+    let (pr, pw) = touches(producer);
+    let (cr, cw) = touches(consumer);
+    // write/read, write/write, read/write — any pair with >= 1 write.
+    for w in &pw {
+        if cr.contains(w) || cw.contains(w) {
+            return Some(*w);
+        }
+    }
+    for w in &cw {
+        if pr.contains(w) {
+            return Some(*w);
+        }
+    }
+    None
+}
+
+pub(super) fn check(model: &PlanModel, report: &mut AnalysisReport) {
+    let n = model.actions.len();
+
+    // -- schedule-coverage: every stream index exactly once.
+    let mut seen = vec![0usize; n];
+    for (si, stage) in model.schedule.stages.iter().enumerate() {
+        for &idx in stage {
+            if idx >= n {
+                report.findings.push(Finding::new(
+                    Rule::ScheduleCoverage,
+                    Some(idx),
+                    None,
+                    format!("stage {si} schedules index {idx}, but the stream has {n} actions"),
+                ));
+                continue;
+            }
+            seen[idx] += 1;
+        }
+    }
+    for (idx, &count) in seen.iter().enumerate() {
+        if count == 0 {
+            report.findings.push(Finding::new(
+                Rule::ScheduleCoverage,
+                Some(idx),
+                None,
+                format!(
+                    "action {idx} ({}) is missing from the schedule — it would never execute",
+                    model.actions[idx].kind()
+                ),
+            ));
+        } else if count > 1 {
+            report.findings.push(Finding::new(
+                Rule::ScheduleCoverage,
+                Some(idx),
+                None,
+                format!(
+                    "action {idx} ({}) is scheduled {count} times — replay would repeat it",
+                    model.actions[idx].kind()
+                ),
+            ));
+        }
+    }
+
+    // Stage of each scheduled index (first occurrence wins; coverage
+    // errors above already flag duplicates).
+    let mut stage_of: HashMap<usize, usize> = HashMap::new();
+    for (si, stage) in model.schedule.stages.iter().enumerate() {
+        for &idx in stage {
+            stage_of.entry(idx).or_insert(si);
+        }
+    }
+
+    // -- ordering rules, against edges recomputed from the stream.
+    let deps = dependency_edges(&model.actions);
+    for (i, dep) in deps.iter().enumerate() {
+        let Some(&si) = stage_of.get(&i) else { continue };
+        for &p in dep {
+            let Some(&sp) = stage_of.get(&p) else { continue };
+            let barrier_edge = matches!(model.actions[i], Action::Barrier)
+                || matches!(model.actions[p], Action::Barrier);
+            match sp.cmp(&si) {
+                std::cmp::Ordering::Less => {}
+                std::cmp::Ordering::Equal if barrier_edge => {
+                    let (b, other) =
+                        if matches!(model.actions[i], Action::Barrier) { (i, p) } else { (p, i) };
+                    report.findings.push(Finding::new(
+                        Rule::BarrierOrder,
+                        Some(other),
+                        None,
+                        format!(
+                            "action {other} ({}) shares stage {si} with barrier {b} — \
+                             barriers must fully separate their sides",
+                            model.actions[other].kind()
+                        ),
+                    ));
+                }
+                std::cmp::Ordering::Equal => {
+                    let slot = conflict_slot(&model.actions[p], &model.actions[i]);
+                    report.findings.push(Finding::new(
+                        Rule::StageRace,
+                        Some(i),
+                        slot.and_then(|s| s.buf()),
+                        format!(
+                            "actions {p} ({}) and {i} ({}) run concurrently in stage {si} \
+                             but conflict on {} — a data race under staged replay",
+                            model.actions[p].kind(),
+                            model.actions[i].kind(),
+                            slot.map_or_else(|| "ordered state".to_string(), |s| s.describe()),
+                        ),
+                    ));
+                }
+                std::cmp::Ordering::Greater => {
+                    let rule = if barrier_edge { Rule::BarrierOrder } else { Rule::ScheduleOrder };
+                    let slot = conflict_slot(&model.actions[p], &model.actions[i]);
+                    report.findings.push(Finding::new(
+                        rule,
+                        Some(i),
+                        slot.and_then(|s| s.buf()),
+                        format!(
+                            "action {i} ({}) runs in stage {si} but depends on {p} ({}) \
+                             in stage {sp} — no sequential witness exists",
+                            model.actions[i].kind(),
+                            model.actions[p].kind(),
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}

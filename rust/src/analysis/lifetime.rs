@@ -1,0 +1,199 @@
+//! Buffer-lifetime analysis: first-def / last-use facts, init and
+//! write-once hazards, and the static memory accounting the capacity
+//! rule and the fusion/aliasing roadmap item consume.
+
+use std::collections::HashMap;
+
+use crate::coordinator::lowering::{Action, BufId};
+
+use super::hazards::{touches, Slot};
+use super::{AnalysisReport, Finding, PlanModel, Rule};
+
+/// Lifetime facts for one device buffer, in stream positions. The
+/// live range `[first_def, last_use]` is what buffer aliasing would
+/// reuse: two buffers with disjoint ranges can share storage.
+#[derive(Debug, Clone)]
+pub struct BufLifetime {
+    pub buf: BufId,
+    /// Statically derived size (0 when unknown — synthetic streams).
+    pub nbytes: u64,
+    /// Stream index of the first write.
+    pub first_def: Option<usize>,
+    /// Stream index of the last read (falls back to the first write
+    /// for never-read buffers, so the range is always well-formed).
+    pub last_use: Option<usize>,
+    pub reads: usize,
+    pub writes: usize,
+}
+
+pub(super) fn check(model: &PlanModel, report: &mut AnalysisReport) {
+    let mut lifetimes: HashMap<BufId, BufLifetime> = HashMap::new();
+    // Staged slots: task -> first CopyOut position (reads tracked only
+    // for init checking; staged slots are user-visible results, so
+    // "never read" is not dead).
+    let mut staged_def: HashMap<crate::coordinator::task::TaskId, usize> = HashMap::new();
+
+    for (i, a) in model.actions.iter().enumerate() {
+        let (reads, writes) = touches(a);
+        for r in &reads {
+            match r {
+                Slot::Buf(b) => match lifetimes.get_mut(b) {
+                    Some(lt) => {
+                        lt.reads += 1;
+                        lt.last_use = Some(i);
+                    }
+                    None => {
+                        report.findings.push(Finding::new(
+                            Rule::UseBeforeInit,
+                            Some(i),
+                            Some(*b),
+                            format!(
+                                "action {i} ({}) reads buf {b} before anything writes it",
+                                a.kind()
+                            ),
+                        ));
+                        // Record it anyway so later reads do not
+                        // re-report the same missing definition.
+                        lifetimes.insert(
+                            *b,
+                            BufLifetime {
+                                buf: *b,
+                                nbytes: model.buf_bytes.get(b).copied().unwrap_or(0),
+                                first_def: None,
+                                last_use: Some(i),
+                                reads: 1,
+                                writes: 0,
+                            },
+                        );
+                    }
+                },
+                Slot::Staged(t) => {
+                    if !staged_def.contains_key(t) {
+                        report.findings.push(Finding::new(
+                            Rule::UseBeforeInit,
+                            Some(i),
+                            None,
+                            format!(
+                                "action {i} ({}) reads staged outputs of task {t} before \
+                                 any CopyOut stages them",
+                                a.kind()
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        for w in &writes {
+            match w {
+                Slot::Buf(b) => match lifetimes.get_mut(b) {
+                    Some(lt) => {
+                        if lt.writes > 0 {
+                            report.findings.push(Finding::new(
+                                Rule::DoubleWrite,
+                                Some(i),
+                                Some(*b),
+                                format!(
+                                    "action {i} ({}) rewrites buf {b} (first written at \
+                                     {:?}) — plan streams are write-once; reuse blocks \
+                                     aliasing and invites hazards",
+                                    a.kind(),
+                                    lt.first_def,
+                                ),
+                            ));
+                        }
+                        lt.writes += 1;
+                        if lt.first_def.is_none() {
+                            lt.first_def = Some(i);
+                            lt.last_use.get_or_insert(i);
+                        }
+                    }
+                    None => {
+                        lifetimes.insert(
+                            *b,
+                            BufLifetime {
+                                buf: *b,
+                                nbytes: model.buf_bytes.get(b).copied().unwrap_or(0),
+                                first_def: Some(i),
+                                last_use: Some(i),
+                                reads: 0,
+                                writes: 1,
+                            },
+                        );
+                    }
+                },
+                Slot::Staged(t) => {
+                    staged_def.entry(*t).or_insert(i);
+                }
+            }
+        }
+    }
+
+    // -- dead-write: a device buffer written but never read feeds no
+    // launch and no copy-out — a dead intermediate the fusion /
+    // aliasing item can drop.
+    let mut sorted: Vec<BufLifetime> = lifetimes.into_values().collect();
+    sorted.sort_by_key(|lt| lt.buf);
+    for lt in &sorted {
+        if lt.writes > 0 && lt.reads == 0 {
+            report.findings.push(Finding::new(
+                Rule::DeadWrite,
+                lt.first_def,
+                Some(lt.buf),
+                format!(
+                    "buf {lt_buf} is written at {def:?} but never read — dead intermediate",
+                    lt_buf = lt.buf,
+                    def = lt.first_def,
+                ),
+            ));
+        }
+    }
+
+    // -- memory accounting: total footprint (what the executor holds —
+    // it frees nothing mid-launch) and the live-range peak (the
+    // aliasing lower bound), per device and overall.
+    let n = model.actions.len();
+    let mut delta = vec![0i64; n + 1];
+    let mut footprint_by_dev: HashMap<usize, u64> = HashMap::new();
+    let mut footprint = 0u64;
+    for lt in &sorted {
+        footprint += lt.nbytes;
+        if let Some(&slot) = model.buf_device.get(&lt.buf) {
+            *footprint_by_dev.entry(slot).or_insert(0) += lt.nbytes;
+        }
+        if let (Some(d), Some(u)) = (lt.first_def, lt.last_use) {
+            delta[d] += lt.nbytes as i64;
+            delta[u + 1] -= lt.nbytes as i64;
+        }
+    }
+    let mut live = 0i64;
+    let mut peak = 0i64;
+    for d in delta {
+        live += d;
+        peak = peak.max(live);
+    }
+    report.footprint_bytes = footprint;
+    report.peak_live_bytes = peak.max(0) as u64;
+    report.lifetimes = sorted;
+
+    // -- capacity-exceeded: pinned (persistent, build-time resident)
+    // plus projected transient bytes against each device ledger. The
+    // ledger evicts rather than corrupts, so this is a warning — but a
+    // plan that statically overcommits will thrash on every launch.
+    for (slot, budget) in model.devices.iter().enumerate() {
+        let transient = footprint_by_dev.get(&slot).copied().unwrap_or(0);
+        let projected = budget.pinned_bytes + transient;
+        if projected > budget.capacity {
+            report.findings.push(Finding::new(
+                Rule::CapacityExceeded,
+                None,
+                None,
+                format!(
+                    "device {}: projected {projected} B ({} B pinned + {transient} B \
+                     transient) exceeds the {} B ledger capacity — launches would evict \
+                     or OOM",
+                    budget.index, budget.pinned_bytes, budget.capacity,
+                ),
+            ));
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! Static plan verifier — compile-time analysis of the optimized
+//! action stream and its [`LaunchSchedule`].
+//!
+//! The paper's central promise is that the runtime handles data
+//! movement and synchronization *automatically* because the task graph
+//! captures all inter-task dataflow (§2.3). That promise is only
+//! trustworthy if the lowered stream and the dependency-staged
+//! schedule the executor replays are provably well-formed: same-stage
+//! actions really are independent (the overlapped executor runs them
+//! concurrently), every read is dominated by its writer, barriers are
+//! respected, and the plan's projected memory never silently exceeds
+//! the device ledger. This module checks all of that **statically** —
+//! before the first launch — and doubles as the fact base the
+//! fusion/aliasing optimizer item needs (per-buffer lifetimes, dead
+//! intermediates, live-range peak vs. total footprint).
+//!
+//! ## Rule catalog
+//!
+//! | rule | severity | meaning |
+//! |------|----------|---------|
+//! | `stage-race` | error | two same-stage actions touch one buffer / staged slot and at least one writes — a real data race under staged replay |
+//! | `schedule-order` | error | an action is staged at or before a dependency (no sequential witness exists) |
+//! | `schedule-coverage` | error | the schedule misses or duplicates a stream index |
+//! | `barrier-order` | error | an action is staged on the wrong side of (or concurrent with) a `Barrier` |
+//! | `use-before-init` | error | a buffer or staged slot is read before anything writes it |
+//! | `double-write` | warning | a buffer is written twice (plan streams are write-once; blocks aliasing) |
+//! | `dead-write` | warning | a device buffer is written but never read (dead intermediate — fusion/aliasing input) |
+//! | `capacity-exceeded` | warning | pinned + projected transient bytes exceed the device ledger capacity (the launch would thrash or OOM) |
+//!
+//! Diagnostics surface three ways: the `jacc lint` CLI (human table +
+//! `--json`), a `debug_assertions` pass inside `CompiledGraph::build`
+//! (every compile in tests is self-checking, zero release-mode launch
+//! overhead), and the mutation harness in [`mutate`] (seeded schedule
+//! defects must be rejected; lowering-produced streams always pass).
+
+mod hazards;
+mod lifetime;
+pub mod mutate;
+
+use std::collections::HashMap;
+
+use crate::coordinator::compiled::CompiledGraph;
+use crate::coordinator::lowering::{self, Action, BufId, CopySource, LaunchSchedule};
+use crate::coordinator::scheduler;
+use crate::coordinator::task::TaskId;
+use crate::substrate::json::{arr, num, obj, s, Value};
+
+pub use lifetime::BufLifetime;
+
+/// How bad a finding is. Errors mean the plan is unsound (the staged
+/// executor could race or read garbage); warnings mean the plan is
+/// legal but wasteful or at memory risk (the ledger evicts rather
+/// than corrupts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// The analyzer's rule catalog (see the module docs for the table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    StageRace,
+    ScheduleOrder,
+    ScheduleCoverage,
+    BarrierOrder,
+    UseBeforeInit,
+    DoubleWrite,
+    DeadWrite,
+    CapacityExceeded,
+}
+
+impl Rule {
+    /// Every rule, for "no dead rule" assertions in the test harness.
+    pub const ALL: [Rule; 8] = [
+        Rule::StageRace,
+        Rule::ScheduleOrder,
+        Rule::ScheduleCoverage,
+        Rule::BarrierOrder,
+        Rule::UseBeforeInit,
+        Rule::DoubleWrite,
+        Rule::DeadWrite,
+        Rule::CapacityExceeded,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::StageRace => "stage-race",
+            Rule::ScheduleOrder => "schedule-order",
+            Rule::ScheduleCoverage => "schedule-coverage",
+            Rule::BarrierOrder => "barrier-order",
+            Rule::UseBeforeInit => "use-before-init",
+            Rule::DoubleWrite => "double-write",
+            Rule::DeadWrite => "dead-write",
+            Rule::CapacityExceeded => "capacity-exceeded",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            Rule::StageRace
+            | Rule::ScheduleOrder
+            | Rule::ScheduleCoverage
+            | Rule::BarrierOrder
+            | Rule::UseBeforeInit => Severity::Error,
+            Rule::DoubleWrite | Rule::DeadWrite | Rule::CapacityExceeded => Severity::Warning,
+        }
+    }
+}
+
+/// One structured diagnostic.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub severity: Severity,
+    /// Stream index of the offending action, when one action is at
+    /// fault (capacity findings are whole-plan).
+    pub action_idx: Option<usize>,
+    /// The buffer involved, when the rule is about a device buffer.
+    pub buf: Option<BufId>,
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(
+        rule: Rule,
+        action_idx: Option<usize>,
+        buf: Option<BufId>,
+        message: String,
+    ) -> Self {
+        Finding { rule, severity: rule.severity(), action_idx, buf, message }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("rule", s(self.rule.name())),
+            ("severity", s(self.severity.name())),
+            ("message", s(&self.message)),
+        ];
+        if let Some(i) = self.action_idx {
+            fields.push(("action", num(i as f64)));
+        }
+        if let Some(b) = self.buf {
+            fields.push(("buf", num(b as f64)));
+        }
+        obj(fields)
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}]: {}", self.severity.name(), self.rule.name(), self.message)
+    }
+}
+
+/// Per-device memory budget the capacity rule checks against.
+#[derive(Debug, Clone)]
+pub struct DeviceBudget {
+    /// Device index (diagnostics only).
+    pub index: usize,
+    /// Ledger capacity in bytes.
+    pub capacity: u64,
+    /// Bytes already pinned for the plan's lifetime (persistent
+    /// parameters made resident at build time).
+    pub pinned_bytes: u64,
+}
+
+/// Everything the analyzer needs to know about a plan, decoupled from
+/// `CompiledGraph` so hand-built streams (unit tests, the mutation
+/// harness) analyze exactly like compiled ones. Build from a plan with
+/// [`PlanModel::from_compiled`] or from a bare stream with
+/// [`PlanModel::from_stream`].
+#[derive(Debug, Clone)]
+pub struct PlanModel {
+    pub actions: Vec<Action>,
+    pub schedule: LaunchSchedule,
+    /// Statically derived size of each device buffer (absent = size
+    /// unknown; lifetime rules still run, capacity accounting skips it).
+    pub buf_bytes: HashMap<BufId, u64>,
+    /// One budget per distinct device the plan touches (empty = no
+    /// capacity check, e.g. synthetic streams).
+    pub devices: Vec<DeviceBudget>,
+    /// Buffer -> index into `devices` (buffers of unlisted devices are
+    /// charged to budget 0 when present).
+    pub buf_device: HashMap<BufId, usize>,
+}
+
+impl PlanModel {
+    /// Model a bare action stream + schedule with no sizes and no
+    /// device budgets (hazard/lifetime rules only).
+    pub fn from_stream(actions: &[Action], schedule: &LaunchSchedule) -> PlanModel {
+        PlanModel {
+            actions: actions.to_vec(),
+            schedule: schedule.clone(),
+            buf_bytes: HashMap::new(),
+            devices: Vec::new(),
+            buf_device: HashMap::new(),
+        }
+    }
+
+    /// Model a compiled plan: its retired action stream, baked
+    /// schedule, manifest-derived buffer sizes and per-device ledger
+    /// budgets (capacity + bytes pinned by persistent parameters).
+    pub fn from_compiled(plan: &CompiledGraph) -> anyhow::Result<PlanModel> {
+        // Resolve every task's artifact entry once; sizes come from
+        // the manifest declarations the executor validates against.
+        let mut entries = HashMap::new();
+        for node in &plan.nodes {
+            let entry =
+                scheduler::resolve(node.device.runtime.manifest(), &node.task, &plan.profile)?;
+            entries.insert(node.id, entry.clone());
+        }
+
+        let mut buf_bytes: HashMap<BufId, u64> = HashMap::new();
+        for a in &plan.actions {
+            match a {
+                Action::CopyIn { dest, source } => {
+                    if let Some(nb) = copy_in_bytes(plan, &entries, source) {
+                        buf_bytes.insert(*dest, nb);
+                    }
+                }
+                Action::Launch { task, outs, .. } => {
+                    let Some(e) = entries.get(task) else { continue };
+                    if e.tuple_root {
+                        // One buffer carries the whole output tuple.
+                        if let Some(&b) = outs.first() {
+                            buf_bytes
+                                .insert(b, e.outputs.iter().map(|o| o.nbytes() as u64).sum());
+                        }
+                    } else {
+                        for (i, &b) in outs.iter().enumerate() {
+                            if let Some(o) = e.outputs.get(i) {
+                                buf_bytes.insert(b, o.nbytes() as u64);
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Device budgets: one per distinct device index, pinned bytes
+        // charged to the owning task's device.
+        let mut devices: Vec<DeviceBudget> = Vec::new();
+        let mut dev_slot: HashMap<usize, usize> = HashMap::new();
+        let mut task_dev: HashMap<TaskId, usize> = HashMap::new();
+        for node in &plan.nodes {
+            let slot = *dev_slot.entry(node.device.index).or_insert_with(|| {
+                let mem = node.device.memory.lock().unwrap();
+                devices.push(DeviceBudget {
+                    index: node.device.index,
+                    capacity: mem.capacity(),
+                    pinned_bytes: 0,
+                });
+                devices.len() - 1
+            });
+            task_dev.insert(node.id, slot);
+        }
+        for ((task, _), buf) in &plan.resident {
+            if let Some(&slot) = task_dev.get(task) {
+                devices[slot].pinned_bytes += buf.nbytes() as u64;
+            }
+        }
+
+        // A buffer lives on the device of the launch that touches it.
+        let mut buf_device: HashMap<BufId, usize> = HashMap::new();
+        for a in &plan.actions {
+            if let Action::Launch { task, args, outs, .. } = a {
+                if let Some(&slot) = task_dev.get(task) {
+                    for &b in args.iter().chain(outs) {
+                        buf_device.entry(b).or_insert(slot);
+                    }
+                }
+            }
+        }
+
+        Ok(PlanModel {
+            actions: plan.actions.clone(),
+            schedule: plan.schedule.clone(),
+            buf_bytes,
+            devices,
+            buf_device,
+        })
+    }
+}
+
+/// Static size of a `CopyIn`'s destination buffer, from the manifest
+/// declaration of the kernel-input slot it feeds (host and named-input
+/// params are shape-validated against exactly that declaration before
+/// any byte moves, so the declared size is the transferred size).
+fn copy_in_bytes(
+    plan: &CompiledGraph,
+    entries: &HashMap<TaskId, crate::runtime::artifact::ArtifactEntry>,
+    source: &CopySource,
+) -> Option<u64> {
+    match source {
+        CopySource::Param { task, param } => {
+            let e = entries.get(task)?;
+            let node = plan.nodes.iter().find(|n| n.id == *task)?;
+            let slots = lowering::param_slots(&node.task.params, e.inputs.len());
+            let slot = *slots.get(*param)?;
+            Some(e.inputs.get(slot)?.nbytes() as u64)
+        }
+        CopySource::CompositeField { task, field, .. } => {
+            Some(entries.get(task)?.inputs.get(*field)?.nbytes() as u64)
+        }
+        CopySource::StagedOutput { task, index } => {
+            Some(entries.get(task)?.outputs.get(*index)?.nbytes() as u64)
+        }
+    }
+}
+
+/// The verifier's full result: findings plus the lifetime / memory
+/// facts they were derived from (the fusion-aliasing fact base).
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    pub findings: Vec<Finding>,
+    /// Per-buffer first-def / last-use facts, sorted by buffer id.
+    pub lifetimes: Vec<BufLifetime>,
+    /// Peak of the live-range sweep — the lower bound buffer aliasing
+    /// could reach (the executor currently holds every buffer for the
+    /// whole launch, so this is informational until aliasing lands).
+    pub peak_live_bytes: u64,
+    /// Sum of all transient buffer sizes — what the executor actually
+    /// holds at once today; the capacity rule checks this.
+    pub footprint_bytes: u64,
+}
+
+impl AnalysisReport {
+    pub fn has_errors(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Error)
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.severity == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning)
+    }
+
+    /// Did `rule` fire at least once?
+    pub fn fired(&self, rule: Rule) -> bool {
+        self.findings.iter().any(|f| f.rule == rule)
+    }
+
+    /// A total order of stream indices that respects every dependency
+    /// edge — the proof that the staged schedule is equivalent to
+    /// *some* sequential replay of the stream. Exists exactly when no
+    /// ordering/coverage/race error fired: concatenating the stages
+    /// (stream order within each) is then a valid witness.
+    pub fn sequential_witness(&self, schedule: &LaunchSchedule) -> Option<Vec<usize>> {
+        if self.has_errors() {
+            return None;
+        }
+        Some(schedule.stages.iter().flatten().copied().collect())
+    }
+
+    /// One human line: "clean" or "E errors, W warnings".
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            return "clean".to_string();
+        }
+        let e = self.errors().count();
+        let w = self.warnings().count();
+        format!("{e} error(s), {w} warning(s)")
+    }
+
+    /// Machine-readable findings + memory facts (`jacc lint --json`).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("findings", arr(self.findings.iter().map(|f| f.to_json()).collect())),
+            ("peak_live_bytes", num(self.peak_live_bytes as f64)),
+            ("footprint_bytes", num(self.footprint_bytes as f64)),
+        ])
+    }
+}
+
+/// Run every rule over a plan model. Lowering-produced plans are clean
+/// by construction: streams are write-once, every dependency edge
+/// spans stages after ASAP leveling, and every buffer written is read
+/// by a consumer or copied out — the property the mutation harness
+/// and the proptest suite pin.
+pub fn analyze(model: &PlanModel) -> AnalysisReport {
+    let mut report = AnalysisReport::default();
+    hazards::check(model, &mut report);
+    lifetime::check(model, &mut report);
+    report
+}
+
+/// Analyze a compiled plan (model derivation + [`analyze`]). This is
+/// what `jacc lint` and the `CompiledGraph::build` debug assertion
+/// run.
+pub fn verify_compiled(plan: &CompiledGraph) -> anyhow::Result<AnalysisReport> {
+    Ok(analyze(&PlanModel::from_compiled(plan)?))
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,239 @@
+//! Mutation-based differential testing of the static verifier.
+//!
+//! The analyzer's acceptance contract has two sides: every
+//! lowering-produced plan is clean, and every *broken* plan is
+//! rejected. This module manufactures the broken side: given a clean
+//! stream + schedule, it seeds one defect per mutant — an action
+//! hoisted into its producer's stage, an action reordered above its
+//! producer, a dropped or duplicated schedule entry, an action pulled
+//! into a barrier's stage, an aliased or orphaned buffer id — each
+//! tagged with the rule that must fire. A rule no mutant or scenario
+//! can trigger is dead code; the test suite asserts there are none.
+
+use crate::coordinator::lowering::{dependency_edges, Action, LaunchSchedule};
+
+use super::{analyze, AnalysisReport, PlanModel, Rule};
+
+/// One seeded defect: the mutated stream/schedule plus the rule the
+/// analyzer must report for it.
+#[derive(Debug, Clone)]
+pub struct Mutant {
+    pub description: String,
+    pub expect: Rule,
+    pub actions: Vec<Action>,
+    pub schedule: LaunchSchedule,
+}
+
+impl Mutant {
+    /// Analyze this mutant (sizes and budgets are irrelevant to the
+    /// hazard rules the mutations target).
+    pub fn analyze(&self) -> AnalysisReport {
+        analyze(&PlanModel::from_stream(&self.actions, &self.schedule))
+    }
+
+    /// Did the analyzer report the seeded defect's rule?
+    pub fn detected(&self) -> bool {
+        self.analyze().fired(self.expect)
+    }
+}
+
+fn stage_of(schedule: &LaunchSchedule, idx: usize) -> Option<usize> {
+    schedule.stages.iter().position(|st| st.contains(&idx))
+}
+
+/// Move `idx` into stage `to`, keeping every other entry in place.
+fn move_to_stage(schedule: &LaunchSchedule, idx: usize, to: usize) -> LaunchSchedule {
+    let mut s = schedule.clone();
+    for stage in &mut s.stages {
+        stage.retain(|&i| i != idx);
+    }
+    s.stages[to].push(idx);
+    s.stages.retain(|st| !st.is_empty());
+    s
+}
+
+/// Generate every applicable mutant of a clean (stream, schedule)
+/// pair. The richer the source stream (chains, staged round-trips,
+/// barriers), the more rules get a mutant; `lower()`-shaped streams
+/// exercise all of them.
+pub fn mutants(actions: &[Action], schedule: &LaunchSchedule) -> Vec<Mutant> {
+    let mut out = Vec::new();
+    let deps = dependency_edges(actions);
+    let is_barrier = |i: usize| matches!(actions[i], Action::Barrier);
+
+    // All data edges p -> i that span stages (neither side a barrier):
+    // the raw material for the race and ordering mutants. Stored as
+    // (p, i, sp) tuples.
+    let cross_edges: Vec<(usize, usize, usize)> = deps
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| !is_barrier(i))
+        .flat_map(|(i, dep)| {
+            dep.iter()
+                .filter_map(|&p| {
+                    let (sp, si) = stage_of(schedule, p).zip(stage_of(schedule, i))?;
+                    (!is_barrier(p) && sp < si).then_some((p, i, sp))
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    // 1. Hoist a consumer into its producer's stage: the two now run
+    //    concurrently while conflicting — a stage race.
+    if let Some(&(p, i, sp)) = cross_edges.first() {
+        out.push(Mutant {
+            description: format!("hoist action {i} into producer {p}'s stage {sp}"),
+            expect: Rule::StageRace,
+            actions: actions.to_vec(),
+            schedule: move_to_stage(schedule, i, sp),
+        });
+    }
+
+    // 2. Reorder a consumer *above* its producer: no sequential
+    //    witness can exist. Needs an edge whose producer is not
+    //    already in stage 0 (any chain or staged round-trip has one:
+    //    launch -> copy-out at minimum).
+    if let Some(&(p, i, sp)) = cross_edges.iter().find(|&&(_, _, sp)| sp > 0) {
+        out.push(Mutant {
+            description: format!("reorder action {i} above producer {p} (stage {})", sp - 1),
+            expect: Rule::ScheduleOrder,
+            actions: actions.to_vec(),
+            schedule: move_to_stage(schedule, i, sp - 1),
+        });
+    }
+
+    // 3. Drop one scheduled entry (the defect a lost dependency edge
+    //    or a truncated stage list produces).
+    if let Some(&idx) = schedule.stages.last().and_then(|st| st.last()) {
+        let mut s = schedule.clone();
+        for stage in &mut s.stages {
+            stage.retain(|&i| i != idx);
+        }
+        s.stages.retain(|st| !st.is_empty());
+        out.push(Mutant {
+            description: format!("drop action {idx} from the schedule"),
+            expect: Rule::ScheduleCoverage,
+            actions: actions.to_vec(),
+            schedule: s,
+        });
+    }
+
+    // 4. Duplicate a scheduled entry (replay would run it twice).
+    if let Some(&idx) = schedule.stages.first().and_then(|st| st.first()) {
+        let mut s = schedule.clone();
+        s.stages.last_mut().expect("non-empty schedule").push(idx);
+        out.push(Mutant {
+            description: format!("schedule action {idx} twice"),
+            expect: Rule::ScheduleCoverage,
+            actions: actions.to_vec(),
+            schedule: s,
+        });
+    }
+
+    // 5. Pull an action into a barrier's stage: the host sync no
+    //    longer separates its sides.
+    if let Some(b) = (0..actions.len()).find(|&i| is_barrier(i)) {
+        let sb = stage_of(schedule, b);
+        let neighbor = (0..actions.len())
+            .find(|&k| !is_barrier(k) && stage_of(schedule, k) != sb);
+        if let (Some(sb), Some(k)) = (sb, neighbor) {
+            out.push(Mutant {
+                description: format!("move action {k} into barrier {b}'s stage {sb}"),
+                expect: Rule::BarrierOrder,
+                actions: actions.to_vec(),
+                schedule: move_to_stage(schedule, k, sb),
+            });
+        }
+    }
+
+    // 6. Alias a launch output onto one of its argument buffers: the
+    //    original output id is orphaned, so its readers see
+    //    uninitialized memory (and the argument is double-written).
+    let launch_with_reader = actions.iter().enumerate().find_map(|(i, a)| match a {
+        Action::Launch { args, outs, .. } if !args.is_empty() && !outs.is_empty() => {
+            let has_reader = actions.iter().skip(i + 1).any(|later| {
+                let (reads, _) = super::hazards::touches(later);
+                reads.contains(&super::hazards::Slot::Buf(outs[0]))
+            });
+            has_reader.then_some((i, args[0], outs[0]))
+        }
+        _ => None,
+    });
+    if let Some((i, arg, orphan)) = launch_with_reader {
+        let mut mutated = actions.to_vec();
+        if let Action::Launch { outs, .. } = &mut mutated[i] {
+            outs[0] = arg;
+        }
+        out.push(Mutant {
+            description: format!("alias launch {i}'s output buf {orphan} onto arg buf {arg}"),
+            expect: Rule::UseBeforeInit,
+            actions: mutated,
+            schedule: schedule.clone(),
+        });
+    }
+
+    // 7. Retarget a later CopyIn onto an earlier CopyIn's destination:
+    //    an explicit write-once violation.
+    let copyins: Vec<usize> = actions
+        .iter()
+        .enumerate()
+        .filter_map(|(i, a)| matches!(a, Action::CopyIn { .. }).then_some(i))
+        .collect();
+    if let (Some(&first), Some(&last)) = (copyins.first(), copyins.last()) {
+        if first != last {
+            let d0 = match &actions[first] {
+                Action::CopyIn { dest, .. } => *dest,
+                _ => unreachable!("index filtered to copy-ins"),
+            };
+            let mut mutated = actions.to_vec();
+            if let Action::CopyIn { dest, .. } = &mut mutated[last] {
+                *dest = d0;
+            }
+            out.push(Mutant {
+                description: format!(
+                    "retarget copy-in {last} onto buf {d0} (already written by copy-in {first})"
+                ),
+                expect: Rule::DoubleWrite,
+                actions: mutated,
+                schedule: schedule.clone(),
+            });
+        }
+    }
+
+    // 8. Redirect a CopyOut to read a different (already written)
+    //    buffer: the buffer it used to download becomes a dead write.
+    let copyout = actions.iter().enumerate().find_map(|(i, a)| match a {
+        Action::CopyOut { bufs, .. } if !bufs.is_empty() => {
+            let victim = bufs[0];
+            // Only a true orphaning: no one else reads the victim.
+            let other_reader = actions.iter().enumerate().any(|(j, b)| {
+                j != i && super::hazards::touches(b).0.contains(&super::hazards::Slot::Buf(victim))
+            });
+            // Redirect target: any buffer written before the CopyOut.
+            let target = actions.iter().take(i).find_map(|b| match b {
+                Action::CopyIn { dest, .. } if *dest != victim => Some(*dest),
+                _ => None,
+            });
+            if other_reader {
+                None
+            } else {
+                target.map(|t| (i, victim, t))
+            }
+        }
+        _ => None,
+    });
+    if let Some((i, victim, target)) = copyout {
+        let mut mutated = actions.to_vec();
+        if let Action::CopyOut { bufs, .. } = &mut mutated[i] {
+            *bufs = vec![target];
+        }
+        out.push(Mutant {
+            description: format!("redirect copy-out {i} from buf {victim} to buf {target}"),
+            expect: Rule::DeadWrite,
+            actions: mutated,
+            schedule: schedule.clone(),
+        });
+    }
+
+    out
+}

@@ -331,7 +331,42 @@
 //!   `ServeReport` quantiles are estimates within the documented
 //!   [`RELATIVE_ERROR`](crate::trace::RELATIVE_ERROR) (1%) of the
 //!   exact order statistics; `min`/`max` stay exact.
+//!
+//! ## Static analysis
+//!
+//! The paper's promise that the runtime "automatically handles data
+//! movement and synchronization" is *verified*, not assumed: the
+//! [`analysis`](crate::analysis) module checks every compiled plan's
+//! action stream + launch schedule statically, before the first
+//! launch. Rules (kebab-case names are what `jacc lint` and the JSON
+//! schema print):
+//!
+//! * **Errors** (the plan is unsound): `stage-race` (two same-stage
+//!   actions conflict on a buffer / staged slot with ≥ 1 write),
+//!   `schedule-order` (an action staged at or before a dependency —
+//!   no sequential witness exists), `schedule-coverage` (the schedule
+//!   misses or duplicates a stream index), `barrier-order` (an action
+//!   concurrent with a `Barrier`), `use-before-init` (a read with no
+//!   dominating write).
+//! * **Warnings** (legal but wasteful / at memory risk): `double-write`
+//!   (write-once violated; blocks aliasing), `dead-write` (an
+//!   intermediate nothing reads), `capacity-exceeded` (pinned +
+//!   projected transient bytes exceed the device ledger — launches
+//!   would evict or OOM; see
+//!   [`DeviceMemoryManager::headroom`](crate::memory::DeviceMemoryManager::headroom)).
+//!
+//! Surfaces: `jacc lint [--benchmark B] [--json out.json]` compiles
+//! each target plan and exits non-zero on any finding (CI runs it with
+//! `--smoke`); [`verify_compiled`](crate::analysis::verify_compiled)
+//! runs inside `TaskGraph::compile` under `debug_assertions` (every
+//! test compile is self-checking, zero release launch overhead); and
+//! [`analysis::mutate`](crate::analysis::mutate) seeds schedule
+//! defects the test suite proves every rule rejects. The
+//! [`AnalysisReport`](crate::analysis::AnalysisReport) also carries
+//! the per-buffer lifetime facts (first-def/last-use, live-range peak
+//! vs. footprint) the planned fusion/aliasing pass will consume.
 
+pub use crate::analysis::{AnalysisReport, BufLifetime, Finding, PlanModel, Rule, Severity};
 pub use crate::coordinator::{
     ActionTiming, AtomicDecl, AtomicOp, Bindings, CompiledGraph, CompiledNode, Dims,
     ExecutionOptions, ExecutionReport, GraphOutputs, InputSpec, LaunchSchedule, MemSpace,

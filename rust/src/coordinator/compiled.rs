@@ -294,7 +294,7 @@ impl CompiledGraph {
         stats.lower_optimize = lower_optimize;
         stats.build_wall = t_total.elapsed();
 
-        Ok(CompiledGraph {
+        let plan = CompiledGraph {
             nodes,
             actions,
             schedule,
@@ -303,7 +303,27 @@ impl CompiledGraph {
             profile: graph.profile.clone(),
             metrics: Metrics::new(),
             stats,
-        })
+        };
+
+        // Debug builds statically verify every plan before it can
+        // launch: same-stage independence, writer-dominated reads,
+        // barrier separation, schedule coverage. Compiled out of
+        // release builds — zero launch-path overhead.
+        #[cfg(debug_assertions)]
+        {
+            let report = crate::analysis::verify_compiled(&plan)?;
+            debug_assert!(
+                !report.has_errors(),
+                "static plan verification failed:\n{}",
+                report
+                    .errors()
+                    .map(|f| format!("  {f}"))
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            );
+        }
+
+        Ok(plan)
     }
 
     /// Execute the precomputed plan with this launch's input bindings.
@@ -410,8 +430,7 @@ impl CompiledGraph {
 mod tests {
     use super::*;
     use crate::coordinator::task::{Dims, Param};
-    use crate::runtime::artifact::Manifest;
-    use crate::runtime::device::Cuda;
+    use crate::runtime::device::test_device as device;
 
     #[test]
     fn bindings_builder_and_lookup() {
@@ -428,14 +447,6 @@ mod tests {
         b.set("x", HostValue::f32(vec![1], vec![9.0]));
         assert_eq!(b.get("x").unwrap().as_f32().unwrap(), &[9.0]);
         assert_eq!(b.len(), 2);
-    }
-
-    fn device() -> Option<Arc<DeviceContext>> {
-        let dir = Manifest::default_dir();
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
     }
 
     #[test]

@@ -271,16 +271,7 @@ impl TaskGraph {
 mod tests {
     use super::*;
     use crate::coordinator::task::{Dims, Param};
-    use crate::runtime::artifact::Manifest;
-    use crate::runtime::device::Cuda;
-
-    fn device() -> Option<Arc<DeviceContext>> {
-        let dir = Manifest::default_dir();
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
-    }
+    use crate::runtime::device::test_device as device;
 
     #[test]
     fn forward_output_reference_rejected() {

@@ -85,6 +85,17 @@ pub fn action_histogram(actions: &[Action]) -> std::collections::BTreeMap<&'stat
     h
 }
 
+/// One-line `kind=count` rendering of [`action_histogram`] — the single
+/// formatter behind `optimizer::summarize`, the pipeline example and
+/// the `jacc lint` table.
+pub fn histogram_summary(actions: &[Action]) -> String {
+    action_histogram(actions)
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
 /// The dependency-staged launch schedule a compiled plan bakes in at
 /// build time (the execution-side counterpart of the optimizer's
 /// "re-organize" pass): stage `k` contains only actions whose data
@@ -127,45 +138,23 @@ impl LaunchSchedule {
     }
 }
 
-/// Derive the dependency stages of an action stream. Dataflow edges
-/// come from the stream itself: a `Launch`/`CopyOut` depends on the
-/// *nearest preceding* writer of every buffer it reads, a staged-output
+/// The dataflow / ordering edges of an action stream: `edges[i]`
+/// lists the indices action `i` must run after. This is the single
+/// dependency definition shared by [`launch_schedule`] (which levels
+/// it into stages) and by `analysis::analyze` (which recomputes it to
+/// verify a schedule against the stream it claims to cover). One
+/// forward walk: a `Launch`/`CopyOut` depends on the *nearest
+/// preceding* writer of every buffer it reads, a staged-output
 /// `CopyIn` depends on the `CopyOut` that staged it, a rewrite of a
 /// live buffer or staged slot depends on every prior reader of the old
 /// value (anti-dependency — streams from `compile()` are write-once,
 /// but this function is public and must stay sound for hand-built
-/// streams that reuse ids), and a `Barrier` orders everything before
-/// it against everything after (so unoptimized streams, with their
-/// per-task barriers, degenerate to near-sequential stages — exactly
-/// the ablation contrast). After ASAP leveling, host-sourced `CopyIn`s
-/// are sunk to one stage below their earliest consumer so uploads
-/// overlap compute instead of front-loading the bus.
-pub fn launch_schedule(actions: &[Action]) -> LaunchSchedule {
+/// streams that reuse ids) and on the prior writer (output
+/// dependency), and a `Barrier` orders everything before it against
+/// everything after.
+pub fn dependency_edges(actions: &[Action]) -> Vec<Vec<usize>> {
     use std::collections::HashMap;
     let n = actions.len();
-    // Table sizes: distinct buffer slots / staged entries (executor
-    // pre-sizing).
-    let mut all_bufs: std::collections::HashSet<BufId> = std::collections::HashSet::new();
-    let mut staged_slots = 0usize;
-    for a in actions {
-        match a {
-            Action::CopyIn { dest, .. } => {
-                all_bufs.insert(*dest);
-            }
-            Action::Launch { outs, .. } => {
-                all_bufs.extend(outs.iter().copied());
-            }
-            Action::CopyOut { bufs, .. } => {
-                staged_slots += bufs.len();
-            }
-            _ => {}
-        }
-    }
-    let buf_slots = all_bufs.len();
-
-    // Dependency edges, built in one forward walk so every read sees
-    // the nearest preceding writer and every rewrite sees its prior
-    // readers. Barrier ordering rides along.
     let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut cur_writer: HashMap<BufId, usize> = HashMap::new();
     let mut buf_readers: HashMap<BufId, Vec<usize>> = HashMap::new();
@@ -255,6 +244,39 @@ pub fn launch_schedule(actions: &[Action]) -> LaunchSchedule {
             since_barrier.push(i);
         }
     }
+    deps
+}
+
+/// Derive the dependency stages of an action stream from its
+/// [`dependency_edges`]: ASAP leveling places each action one stage
+/// after its latest producer, so unoptimized streams, with their
+/// per-task barriers, degenerate to near-sequential stages — exactly
+/// the ablation contrast. After leveling, host-sourced `CopyIn`s are
+/// sunk to one stage below their earliest consumer so uploads overlap
+/// compute instead of front-loading the bus.
+pub fn launch_schedule(actions: &[Action]) -> LaunchSchedule {
+    let n = actions.len();
+    // Table sizes: distinct buffer slots / staged entries (executor
+    // pre-sizing).
+    let mut all_bufs: std::collections::HashSet<BufId> = std::collections::HashSet::new();
+    let mut staged_slots = 0usize;
+    for a in actions {
+        match a {
+            Action::CopyIn { dest, .. } => {
+                all_bufs.insert(*dest);
+            }
+            Action::Launch { outs, .. } => {
+                all_bufs.extend(outs.iter().copied());
+            }
+            Action::CopyOut { bufs, .. } => {
+                staged_slots += bufs.len();
+            }
+            _ => {}
+        }
+    }
+    let buf_slots = all_bufs.len();
+
+    let deps = dependency_edges(actions);
 
     // ASAP levels: an action runs one stage after its latest producer.
     let mut stage = vec![0usize; n];

@@ -20,6 +20,9 @@ pub mod task;
 pub use compiled::{Bindings, CompiledGraph, CompiledNode, InputSpec, PlanStats};
 pub use executor::{ActionTiming, ExecutionOptions, ExecutionReport, Executor, PipelineMode};
 pub use graph::{GraphOutputs, TaskGraph, TaskNode};
-pub use lowering::{action_histogram, launch_schedule, Action, BufId, CopySource, LaunchSchedule};
+pub use lowering::{
+    action_histogram, dependency_edges, histogram_summary, launch_schedule, Action, BufId,
+    CopySource, LaunchSchedule,
+};
 pub use optimizer::{optimize, OptimizerConfig};
 pub use task::{AtomicDecl, AtomicOp, Dims, MemSpace, Param, ParamSource, Task, TaskId};

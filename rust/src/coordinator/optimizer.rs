@@ -271,9 +271,9 @@ fn barrier_prune(actions: Vec<Action>, metrics: &Metrics) -> Vec<Action> {
 }
 
 /// Convenience: counts per kind after optimization (ablation tables).
+/// Delegates to the shared histogram formatter in `lowering`.
 pub fn summarize(actions: &[Action]) -> String {
-    let h = super::lowering::action_histogram(actions);
-    h.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
+    super::lowering::histogram_summary(actions)
 }
 
 #[cfg(test)]

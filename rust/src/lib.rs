@@ -19,6 +19,7 @@
 //! See `examples/quickstart.rs` for the task-graph API in action, and
 //! DESIGN.md for the paper-to-module map.
 
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod batch;

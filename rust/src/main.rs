@@ -18,6 +18,10 @@
 //!                                         serving with fused launches)
 //!   jacc trace-check [--trace F] [--json F]  re-parse and validate trace /
 //!                                         snapshot files (CI smoke step)
+//!   jacc lint        [--benchmark B] [...]  static plan verification: race /
+//!                                         lifetime / capacity findings over
+//!                                         compiled plans (CI gate; --json F
+//!                                         writes machine-readable findings)
 //!
 //! Observability: `run --trace out.json` records per-action spans
 //! (queue wait, H2D, kernel, D2H, stages) into a Chrome trace-event
@@ -36,11 +40,12 @@ use anyhow::Context;
 use jacc::api::*;
 use jacc::batch::{BatchConfig, BatchSpec, BatchingEngine};
 use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
+use jacc::coordinator::histogram_summary;
 use jacc::devicemodel::{CostModel, DeviceSpec};
 use jacc::pool::{serve_requests, PoolEngine};
 use jacc::serve::{serve_all, ServeConfig};
 use jacc::substrate::cli::Cli;
-use jacc::substrate::json::{num, s, Value};
+use jacc::substrate::json::{arr, num, obj, s, Value};
 use jacc::trace::{chrome, MetricsSnapshot, Tracer};
 
 fn main() -> anyhow::Result<()> {
@@ -132,10 +137,18 @@ fn main() -> anyhow::Result<()> {
             args.get_usize("batch-window-us").unwrap_or(200),
         ),
         Some("trace-check") => trace_check(args.get_or("trace", ""), args.get_or("json", "")),
+        Some("lint") => lint(
+            args.get_or("benchmark", ""),
+            args.get_or("profile", "scaled"),
+            args.get_or("variant", "pallas"),
+            args.has_flag("no-opt"),
+            args.has_flag("smoke"),
+            args.get_or("json", ""),
+        ),
         other => {
             eprintln!(
                 "unknown or missing subcommand {other:?}; try: devices | inspect | run | \
-                 suite | serve-bench | trace-check"
+                 suite | serve-bench | trace-check | lint"
             );
             std::process::exit(2);
         }
@@ -794,6 +807,143 @@ fn trace_check(trace: &str, json: &str) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `jacc lint` — compile each target plan and run the static verifier
+/// (see `jacc::analysis`): schedule coverage and races, buffer
+/// lifetimes, projected memory vs. the device ledger. Exits non-zero
+/// on any finding, so CI can gate on it.
+fn lint(
+    benchmark: &str,
+    profile: &str,
+    variant: &str,
+    no_opt: bool,
+    smoke: bool,
+    json: &str,
+) -> anyhow::Result<()> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        if smoke {
+            println!("lint --smoke: artifacts not built (make artifacts); skipping");
+            return Ok(());
+        }
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    let profile = if smoke { "tiny" } else { profile };
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+
+    // Target plans: one benchmark, or the full sweep — all eight
+    // single-task benchmarks plus the two multi-action example shapes
+    // (device-chained pipeline, persistent-param serving graph).
+    // Targets whose profile has no artifacts are skipped, not failed.
+    let mut targets: Vec<(String, TaskGraph)> = Vec::new();
+    let mut skipped = 0usize;
+    if benchmark.is_empty() {
+        for name in workloads::BENCHMARKS {
+            match build_graph(&dev, name, profile, variant, no_opt) {
+                Ok((g, _, _)) => targets.push((format!("{name}.{profile}"), g)),
+                Err(_) => skipped += 1,
+            }
+        }
+        match lint_pipeline_shape(&dev, no_opt) {
+            Ok(g) => targets.push(("pipeline.tiny".into(), g)),
+            Err(_) => skipped += 1,
+        }
+        match lint_pricing_shape(&dev, variant) {
+            Ok(g) => targets.push(("option_pricing.serve".into(), g)),
+            Err(_) => skipped += 1,
+        }
+    } else {
+        let (g, _, _) = build_graph(&dev, benchmark, profile, variant, no_opt)?;
+        targets.push((format!("{benchmark}.{profile}"), g));
+    }
+    anyhow::ensure!(!targets.is_empty(), "no plan could be built for profile '{profile}'");
+
+    let mut table = Table::new(&[
+        "plan", "actions", "stages", "stream", "footprint", "peak live", "verdict",
+    ]);
+    let mut all_findings: Vec<(String, jacc::analysis::Finding)> = Vec::new();
+    let mut plans_json = Vec::new();
+    for (label, g) in &targets {
+        let actions = g.optimized_actions()?;
+        let plan = g.compile()?;
+        let report = jacc::analysis::verify_compiled(&plan)?;
+        table.row(vec![
+            label.clone(),
+            plan.stats.actions.to_string(),
+            plan.stats.stages.to_string(),
+            histogram_summary(&actions),
+            format!("{} B", report.footprint_bytes),
+            format!("{} B", report.peak_live_bytes),
+            report.summary(),
+        ]);
+        plans_json.push(obj(vec![("plan", s(label)), ("report", report.to_json())]));
+        for f in &report.findings {
+            all_findings.push((label.clone(), f.clone()));
+        }
+    }
+    println!("{}", table.render());
+    if skipped > 0 {
+        println!("({skipped} target(s) skipped: artifacts absent for their profile)");
+    }
+    for (label, f) in &all_findings {
+        println!("  {label}: {f}");
+    }
+    if !json.is_empty() {
+        let v = obj(vec![
+            ("schema", s("jacc.lint.v1")),
+            ("kind", s("lint")),
+            ("plans", arr(plans_json)),
+            ("findings", num(all_findings.len() as f64)),
+        ]);
+        std::fs::write(json, v.to_json_pretty(2))?;
+        println!("lint: wrote {json}");
+    }
+    anyhow::ensure!(
+        all_findings.is_empty(),
+        "lint: {} finding(s) across {} plan(s)",
+        all_findings.len(),
+        targets.len()
+    );
+    println!("lint: {} plan(s) clean", targets.len());
+    Ok(())
+}
+
+/// The two-task pipeline shape (examples/pipeline.rs): a device-chained
+/// intermediate plus rebindable named inputs. Only the tiny profile
+/// ships these kernels, so the profile is fixed.
+fn lint_pipeline_shape(dev: &Arc<DeviceContext>, no_opt: bool) -> anyhow::Result<TaskGraph> {
+    let n = dev.runtime.manifest().find("pipe_vecadd", "pallas", "tiny")?.inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    if no_opt {
+        g = g.without_optimizations();
+    }
+    let mut add = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n))?.discard_output();
+    add.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let a = g.execute_task_on(add, dev)?;
+    let mut red = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n))?;
+    red.set_parameters(vec![Param::output("z", a, 0)]);
+    g.execute_task_on(red, dev)?;
+    Ok(g)
+}
+
+/// The serving shape (examples/option_pricing_service.rs): persistent
+/// device-resident book params plus named rebindable spot prices —
+/// exercises the pinned-bytes side of the capacity projection.
+fn lint_pricing_shape(dev: &Arc<DeviceContext>, variant: &str) -> anyhow::Result<TaskGraph> {
+    let e = dev.runtime.manifest().find("black_scholes", variant, "serve")?;
+    let n = e.inputs[0].shape[0];
+    let (iter, wg) = (Dims(e.iteration_space.clone()), Dims(e.workgroup.clone()));
+    let strike = HostValue::f32(vec![n], vec![100.0; n]);
+    let expiry = HostValue::f32(vec![n], vec![1.0; n]);
+    let mut task = Task::create("black_scholes", iter, wg)?.with_variant(variant);
+    task.set_parameters(vec![
+        Param::input("price"),
+        Param::persistent("strike", 1, 0, strike),
+        Param::persistent("t", 2, 0, expiry),
+    ]);
+    let mut g = TaskGraph::new().with_profile("serve");
+    g.execute_task_on(task, dev)?;
+    Ok(g)
 }
 
 fn suite(profile: &str, verbose: bool) -> anyhow::Result<()> {

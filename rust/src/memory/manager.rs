@@ -134,6 +134,13 @@ impl DeviceMemoryManager {
         self.used
     }
 
+    /// Bytes still admittable without evicting — what the static
+    /// capacity projection (`jacc lint`, `analysis::verify_compiled`)
+    /// compares a plan's transient footprint against.
+    pub fn headroom(&self) -> u64 {
+        self.capacity.saturating_sub(self.used)
+    }
+
     pub fn resident_count(&self) -> usize {
         self.resident.len()
     }
@@ -434,12 +441,14 @@ mod tests {
     fn lookup_miss_then_hit() {
         let Some(rt) = runtime() else { return };
         let mut mm = DeviceMemoryManager::new(1 << 20);
+        assert_eq!(mm.headroom(), 1 << 20);
         assert!(mm.lookup(1, 0).is_none());
         mm.insert(1, 0, 4096, upload(&rt, 1024, 1.0)).unwrap();
         assert!(mm.lookup(1, 0).is_some());
         assert_eq!(mm.stats.residency_hits, 1);
         assert_eq!(mm.stats.uploads, 1);
         assert_eq!(mm.used(), 4096);
+        assert_eq!(mm.headroom(), (1 << 20) - 4096);
     }
 
     #[test]

@@ -114,6 +114,18 @@ impl DeviceContext {
     }
 }
 
+/// Shared test fixture: open device 0 when the AOT artifacts are
+/// built, `None` otherwise so artifact-dependent tests no-op on
+/// machines without `make artifacts` (the same graceful-skip contract
+/// the integration tests follow).
+#[cfg(test)]
+pub(crate) fn test_device() -> Option<Arc<DeviceContext>> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,11 +153,7 @@ mod tests {
 
     #[test]
     fn context_carries_k20m_spec() {
-        let dir = Manifest::default_dir();
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
-        let ctx = Cuda::get_device(0).unwrap().create_device_context().unwrap();
+        let Some(ctx) = test_device() else { return };
         assert_eq!(ctx.spec.name, "tesla-k20m");
         assert_eq!(ctx.memory.lock().unwrap().capacity(), ctx.spec.mem_capacity);
         assert!(ctx.name().contains("cpu"));

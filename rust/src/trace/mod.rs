@@ -217,12 +217,20 @@ impl Tracer {
         }
     }
 
+    /// Snapshot the registered ring handles, then release the registry
+    /// lock. Every aggregate below iterates over this snapshot so the
+    /// registry lock is never held across the per-ring buffer locks —
+    /// holding both nests two lock levels and stalls threads that are
+    /// registering a new ring while a reader drains a slow ring.
+    fn ring_handles(&self) -> Vec<Arc<ThreadRing>> {
+        self.rings.lock().unwrap().clone()
+    }
+
     /// Drain every ring into one list, sorted by start time (stable, so
     /// same-timestamp events keep per-thread record order).
     pub fn events(&self) -> Vec<TraceEvent> {
-        let rings = self.rings.lock().unwrap();
         let mut all = Vec::new();
-        for ring in rings.iter() {
+        for ring in self.ring_handles() {
             all.extend(ring.snapshot().0);
         }
         all.sort_by(|a, b| a.ts_us.partial_cmp(&b.ts_us).unwrap());
@@ -231,12 +239,12 @@ impl Tracer {
 
     /// Total events lost to ring overwrite across all threads.
     pub fn dropped(&self) -> u64 {
-        self.rings.lock().unwrap().iter().map(|r| r.snapshot().1).sum()
+        self.ring_handles().iter().map(|r| r.snapshot().1).sum()
     }
 
     /// Total surviving events across all threads.
     pub fn len(&self) -> usize {
-        self.rings.lock().unwrap().iter().map(|r| r.buf.lock().unwrap().len()).sum()
+        self.ring_handles().iter().map(|r| r.buf.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -1,0 +1,134 @@
+//! Integration tests for the static plan verifier over *real* compiled
+//! plans (the unit suite in `src/analysis/tests.rs` covers synthetic
+//! streams): every lowering-produced plan must verify clean, every
+//! seeded schedule defect must be rejected, and the manifest-derived
+//! size/capacity facts must be populated. All tests no-op gracefully
+//! when the AOT artifacts (`make artifacts`) are absent.
+
+use std::sync::Arc;
+
+use jacc::analysis::{self, mutate::mutants, PlanModel, Rule};
+use jacc::api::*;
+use jacc::coordinator::launch_schedule;
+use jacc::substrate::prng::Rng;
+use jacc::substrate::proptest::{no_shrink, Runner};
+
+fn device() -> Option<Arc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+/// A random chain/fan graph over pipe_vecadd / pipe_reduce (the same
+/// family the coordinator property tests execute end-to-end).
+#[derive(Debug, Clone)]
+struct Shape {
+    stages: Vec<(bool, u64)>, // (consume previous stage's output, data seed)
+    reduce_at_end: bool,
+}
+
+fn random_shape(rng: &mut Rng) -> Shape {
+    let n = 1 + rng.below(4) as usize;
+    Shape {
+        stages: (0..n).map(|i| (i > 0 && rng.below(2) == 1, rng.next_u64())).collect(),
+        reduce_at_end: rng.below(2) == 1,
+    }
+}
+
+fn build(dev: &Arc<DeviceContext>, shape: &Shape) -> TaskGraph {
+    let m = dev.runtime.manifest();
+    let n = m.find("pipe_vecadd", "pallas", "tiny").unwrap().inputs[0].shape[0];
+    let mut g = TaskGraph::new().with_profile("tiny");
+    let mut prev: Option<TaskId> = None;
+    for &(consume_prev, seed) in &shape.stages {
+        let mut rng = Rng::new(seed);
+        let mut t = Task::create("pipe_vecadd", Dims::d1(n), Dims::d1(n)).unwrap();
+        let first = match (consume_prev, prev) {
+            (true, Some(p)) => Param::output("x", p, 0),
+            _ => Param::f32_slice("x", &rng.f32_vec(n, 0.0, 8.0)),
+        };
+        t.set_parameters(vec![first, Param::f32_slice("y", &rng.f32_vec(n, 0.0, 8.0))]);
+        prev = Some(g.execute_task_on(t, dev).unwrap());
+    }
+    if shape.reduce_at_end {
+        let mut t = Task::create("pipe_reduce", Dims::d1(n), Dims::d1(n)).unwrap();
+        t.set_parameters(vec![Param::output("z", prev.unwrap(), 0)]);
+        g.execute_task_on(t, dev).unwrap();
+    }
+    g
+}
+
+#[test]
+fn compiled_random_graphs_verify_clean() {
+    let Some(dev) = device() else { return };
+    Runner::new("lint-clean-compiled", 20).run_result(random_shape, no_shrink, |shape| {
+        let g = build(&dev, shape);
+        let plan = g.compile().map_err(|e| e.to_string())?;
+        let report = analysis::verify_compiled(&plan).map_err(|e| e.to_string())?;
+        if report.is_clean() {
+            Ok(())
+        } else {
+            Err(format!("findings on a compiled plan ({shape:?}): {:?}", report.findings))
+        }
+    });
+}
+
+#[test]
+fn compiled_plan_model_carries_sizes_and_budgets() {
+    let Some(dev) = device() else { return };
+    let g = build(&dev, &Shape { stages: vec![(false, 1), (true, 2)], reduce_at_end: true });
+    let plan = g.compile().unwrap();
+    let report = analysis::verify_compiled(&plan).unwrap();
+    assert!(report.is_clean(), "{:?}", report.findings);
+    // Manifest-derived sizes populated the memory facts.
+    assert!(report.footprint_bytes > 0, "buffer sizes must resolve from the manifest");
+    assert!(report.peak_live_bytes > 0);
+    assert!(report.peak_live_bytes <= report.footprint_bytes);
+    assert!(!report.lifetimes.is_empty());
+    assert!(report.lifetimes.iter().all(|lt| lt.nbytes > 0));
+    // And the capacity check ran against the real ledger (tiny shapes
+    // fit a K20m with room to spare).
+    assert!(!report.fired(Rule::CapacityExceeded), "{:?}", report.findings);
+}
+
+#[test]
+fn mutated_real_plans_are_rejected() {
+    let Some(dev) = device() else { return };
+    let g = build(&dev, &Shape { stages: vec![(false, 3), (true, 4)], reduce_at_end: true });
+    // The pre-retire optimized stream and its schedule — the same pair
+    // `CompiledGraph::build` bakes.
+    let actions = g.optimized_actions().unwrap();
+    let schedule = launch_schedule(&actions);
+    let model = PlanModel::from_stream(&actions, &schedule);
+    assert!(analysis::analyze(&model).is_clean(), "source plan must be clean");
+
+    let muts = mutants(&actions, &schedule);
+    assert!(!muts.is_empty(), "a real multi-task plan must yield mutants");
+    for m in &muts {
+        assert!(
+            m.detected(),
+            "mutant '{}' expected {:?} but findings were {:?}",
+            m.description,
+            m.expect,
+            m.analyze().findings
+        );
+    }
+    // The schedule-shape rules must all be reachable from a real plan.
+    for rule in [Rule::StageRace, Rule::ScheduleOrder, Rule::ScheduleCoverage] {
+        assert!(muts.iter().any(|m| m.expect == rule), "no mutant targets {rule:?}");
+    }
+}
+
+#[test]
+fn unoptimized_plans_also_verify_clean() {
+    let Some(dev) = device() else { return };
+    let g = build(&dev, &Shape { stages: vec![(false, 5), (true, 6)], reduce_at_end: false });
+    let naive = g.lower_actions().unwrap();
+    let schedule = launch_schedule(&naive);
+    let report = analysis::analyze(&PlanModel::from_stream(&naive, &schedule));
+    assert!(report.is_clean(), "naive lowering must be clean: {:?}", report.findings);
+    // Naive streams barrier after every task; the witness still exists.
+    assert!(report.sequential_witness(&schedule).is_some());
+}
