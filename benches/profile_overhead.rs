@@ -1,0 +1,169 @@
+//! Profiling-overhead gate: serve the same request stream through the
+//! `ServingEngine` twice — once bare, once with the full continuous-
+//! profiling surface attached (a `ProfileStore` fed by the executor
+//! hooks plus a `TelemetrySampler` polling the engine and ledger
+//! gauges) — and FAIL if the instrumented throughput drops more than
+//! 5% below the bare run. Observability that taxes the hot path is a
+//! regression, and this bench is where that contract is enforced.
+//!
+//! Run with:  cargo bench --bench profile_overhead -- \
+//!                [--requests 256] [--workers 2] [--trials 3] \
+//!                [--smoke] [--json F]
+//!
+//! `--smoke` (CI) uses the tiny profile and writes the comparison as a
+//! `jacc.metrics.v3` snapshot to `BENCH_profile.json` at the
+//! repository root (override with `--json`). Both configurations take
+//! the best of `--trials` runs, interleaved, so machine drift hits
+//! both sides equally.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jacc::api::*;
+use jacc::bench::workloads;
+use jacc::profile::{ledger_gauges, ProfileStore, TelemetrySampler};
+use jacc::serve::{serve_all, ServeConfig, ServingEngine};
+use jacc::substrate::cli::Cli;
+use jacc::substrate::json::{num, s, Value};
+
+/// The gate: instrumented throughput must stay within 5% of bare.
+const MAX_OVERHEAD: f64 = 0.05;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("profile_overhead", "sampler + profile-hook overhead gate")
+        .opt("benchmark", "vector_add", "benchmark kernel to serve")
+        .opt("requests", "256", "requests per trial")
+        .opt("workers", "2", "serving worker threads")
+        .opt("trials", "3", "trials per configuration (best-of)")
+        .flag("smoke", "CI mode: tiny profile")
+        .opt("json", "", "snapshot output path (--smoke defaults to BENCH_profile.json)")
+        .parse();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("profile_overhead: artifacts not built (make artifacts); skipping");
+        return Ok(());
+    }
+    let smoke = args.has_flag("smoke");
+    let name = args.get_or("benchmark", "vector_add").to_string();
+    let profile = if smoke {
+        "tiny".to_string()
+    } else {
+        std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into())
+    };
+    let requests = args.get_usize("requests")?;
+    let workers = args.get_usize("workers")?;
+    let trials = args.get_usize("trials")?.max(1);
+    let json = {
+        let j = args.get_or("json", "");
+        if j.is_empty() && smoke {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_profile.json").to_string()
+        } else {
+            j.to_string()
+        }
+    };
+
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let w = workloads::generate(dev.runtime.manifest(), &name, &profile)?;
+    let entry = dev.runtime.manifest().find(&name, "pallas", &profile)?;
+    let mut task = Task::create(
+        &name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )?;
+    task.set_parameters(
+        w.params
+            .iter()
+            .zip(&entry.inputs)
+            .map(|(v, d)| Param::host(&d.name, v.clone()))
+            .collect(),
+    );
+    let mut g = TaskGraph::new().with_profile(&profile);
+    g.execute_task_on(task, &dev)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.pallas.{profile}: {}", plan.stats.summary());
+    plan.launch(&Bindings::new())?; // warm off the clock
+
+    let bare = |_trial: usize| -> anyhow::Result<f64> {
+        let reqs = vec![Bindings::new(); requests];
+        let config = ServeConfig::with_workers(workers);
+        let (reports, agg) = serve_all(Arc::clone(&plan), config, reqs)?;
+        anyhow::ensure!(reports.iter().all(|r| r.fresh_compiles == 0), "bare run must never JIT");
+        anyhow::ensure!(agg.errors == 0, "bare run errors: {}", agg.errors);
+        Ok(agg.throughput_rps)
+    };
+    // The full surface under test: executor hooks + request timings
+    // into a store, plus a 1 ms gauge sampler running throughout.
+    let instrumented = |_trial: usize| -> anyhow::Result<(f64, u64, usize)> {
+        let store = Arc::new(ProfileStore::new());
+        let config = ServeConfig::with_workers(workers).with_profile(Arc::clone(&store));
+        let engine = ServingEngine::start(Arc::clone(&plan), config)?;
+        let mut gauges = engine.gauges();
+        gauges.extend(ledger_gauges(&dev));
+        let sampler = TelemetrySampler::start(gauges, Duration::from_millis(1), 4096)?;
+        let tickets = (0..requests)
+            .map(|_| engine.submit(Bindings::new()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let reports = tickets
+            .into_iter()
+            .map(|t| t.wait())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let agg = engine.shutdown();
+        let ts = sampler.stop();
+        anyhow::ensure!(
+            reports.iter().all(|r| r.fresh_compiles == 0),
+            "instrumented run must never JIT"
+        );
+        anyhow::ensure!(agg.errors == 0, "instrumented run errors: {}", agg.errors);
+        Ok((agg.throughput_rps, store.observations(), ts.samples.len()))
+    };
+
+    let mut best_bare = 0.0f64;
+    let mut best_inst = 0.0f64;
+    let mut observations = 0u64;
+    let mut samples = 0usize;
+    for t in 0..trials {
+        let b = bare(t)?;
+        let (i, obs, smp) = instrumented(t)?;
+        best_bare = best_bare.max(b);
+        best_inst = best_inst.max(i);
+        observations = observations.max(obs);
+        samples = samples.max(smp);
+        println!("trial {t}: bare {b:.0} req/s, instrumented {i:.0} req/s");
+    }
+    anyhow::ensure!(best_bare > 0.0, "bare runs recorded no throughput");
+    anyhow::ensure!(observations > 0, "instrumented runs recorded no profile observations");
+    let overhead = 1.0 - best_inst / best_bare;
+    println!(
+        "profile_overhead: bare {best_bare:.0} req/s vs instrumented {best_inst:.0} req/s \
+         => {:.1}% overhead ({observations} observations, {samples} gauge samples)",
+        overhead * 100.0
+    );
+
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("profile_overhead");
+        snap.set("benchmark", s(&name))
+            .set("profile", s(&profile))
+            .set("requests", num(requests as f64))
+            .set("workers", num(workers as f64))
+            .set("trials", num(trials as f64))
+            .set("smoke", Value::Bool(smoke))
+            .set("bare_rps", num(best_bare))
+            .set("instrumented_rps", num(best_inst))
+            .set("overhead_frac", num(overhead))
+            .set("observations", num(observations as f64))
+            .set("gauge_samples", num(samples as f64));
+        snap.write(Path::new(&json))?;
+        println!("snapshot -> {json}");
+    }
+    anyhow::ensure!(
+        best_inst >= (1.0 - MAX_OVERHEAD) * best_bare,
+        "profiling overhead {:.1}% exceeds the {:.0}% budget \
+         (bare {best_bare:.0} req/s, instrumented {best_inst:.0} req/s)",
+        overhead * 100.0,
+        MAX_OVERHEAD * 100.0
+    );
+    println!("profile_overhead OK (<= {:.0}% overhead)", MAX_OVERHEAD * 100.0);
+    Ok(())
+}

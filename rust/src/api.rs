@@ -332,6 +332,56 @@
 //!   [`RELATIVE_ERROR`](crate::trace::RELATIVE_ERROR) (1%) of the
 //!   exact order statistics; `min`/`max` stay exact.
 //!
+//! ## Profiling & telemetry
+//!
+//! The continuous-profiling layer ([`profile`](crate::profile)) turns
+//! the one-shot observability above into *aggregated, queryable*
+//! performance state — still zero-cost when unused:
+//!
+//! * **[`ProfileStore`](crate::profile::ProfileStore)** — pass one via
+//!   [`ExecutionOptions`] (field `profile`), or attach it to a serving
+//!   engine with `ServeConfig::with_profile` / `PoolConfig::with_profile`
+//!   / `BatchConfig::with_profile`, and every launch folds per-kernel
+//!   wall time, H2D/D2H bytes + effective bandwidth, per-stage walls
+//!   and launch overhead into EWMA + log-histogram summaries keyed by
+//!   `(plan fingerprint, task id)`; the engines also feed per-request
+//!   queue/launch timings. Ingestion bumps `profile.*` counters
+//!   (`profile.kernel_obs`, `profile.h2d_obs`, `profile.d2h_obs`,
+//!   `profile.stage_obs`, `profile.launch_obs`, `profile.request_obs`)
+//!   on the store's own `Metrics`.
+//!
+//! * **[`TelemetrySampler`](crate::profile::TelemetrySampler)** — a
+//!   background thread polling [`Gauge`](crate::profile::Gauge)
+//!   closures on a fixed interval into overwrite-oldest rings. The
+//!   engines export their gauges (`serve.queue_depth`;
+//!   `pool.d{d}.queue_depth` / `pool.d{d}.outstanding`;
+//!   `batch.queue_depth` / `batch.sealed_depth` /
+//!   `batch.window_occupancy`) and
+//!   [`ledger_gauges`](crate::profile::ledger_gauges) adds the
+//!   per-device memory ledger (`ledger.d{i}.used` /
+//!   `.headroom` / `.evictions` / `.dedup_hits`). `stop()` yields a
+//!   [`TimeSeries`](crate::profile::TimeSeries) written as JSON-lines
+//!   (schema `jacc.timeseries.v1`: a header line, then
+//!   `{"t": secs, "v": [..]}` sample rows), validated by
+//!   `jacc trace-check --timeseries F` alongside the
+//!   `jacc.metrics.v3` snapshots.
+//!
+//! * **[`CostModel::calibrate`](crate::devicemodel::CostModel::calibrate)**
+//!   — fits the analytic roofline model to measured kernel costs from
+//!   a `ProfileStore`, yielding a
+//!   [`CalibrationReport`](crate::devicemodel::CalibrationReport) with
+//!   per-kernel multiplicative scales, predicted-vs-measured relative
+//!   error, and a measured launch overhead. `jacc profile --benchmark B
+//!   --iters N` runs the fit-then-replay loop and prints the per-kernel
+//!   table (predicted / measured / rel err / scale); it fails unless
+//!   calibrated replay error beats uncalibrated.
+//!
+//! Surfaces: `jacc profile [--benchmark B] [--iters N] [--json F]
+//! [--telemetry F]`, `jacc serve-bench --telemetry ts.jsonl` (all three
+//! serving paths), `jacc trace-check --timeseries ts.jsonl`, and the
+//! overhead gate `cargo bench --bench profile_overhead` — which FAILS
+//! if the full instrumentation surface costs more than 5% throughput.
+//!
 //! ## Static analysis
 //!
 //! The paper's promise that the runtime "automatically handles data
@@ -375,9 +425,14 @@ pub use crate::coordinator::{
 pub use crate::batch::{
     BatchAxis, BatchConfig, BatchPlanner, BatchSpec, BatchTicket, BatchingEngine, MemberReport,
 };
+pub use crate::devicemodel::{CalibrationReport, CostModel, KernelCalibration, KernelCostEstimate};
 pub use crate::memory::{DataId, MemoryError, Record};
 pub use crate::pool::{
     DevicePool, PoolConfig, PoolEngine, ReplicatedGraph, Shard, ShardSpec, ShardedReport,
+};
+pub use crate::profile::{
+    ledger_gauges, Gauge, KernelProfile, PlanProfile, ProfileStore, RequestProfile, StatSummary,
+    TelemetrySampler, TimeSeries, TimeseriesError,
 };
 pub use crate::runtime::{
     Access, Cuda, DType, DeviceContext, DeviceHandle, HostValue, Manifest, PjrtRuntime,

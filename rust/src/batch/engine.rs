@@ -29,6 +29,7 @@ use anyhow::{anyhow, Context};
 use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, GraphOutputs};
 use crate::metrics::Metrics;
 use crate::pool::PoolEngine;
+use crate::profile::{Gauge, ProfileStore};
 use crate::serve::{BoundedQueue, Popped, RequestTiming, ServeReport};
 use crate::trace::{LogHistogram, Tracer};
 
@@ -57,6 +58,9 @@ pub struct BatchConfig {
     /// Optional span tracer: members record queue-wait and fused-launch
     /// spans under their own trace ids.
     pub tracer: Option<Arc<Tracer>>,
+    /// Optional profile store: fused launches feed per-kernel/stage
+    /// observations and every member's timing feeds the request summary.
+    pub profile: Option<Arc<ProfileStore>>,
 }
 
 impl BatchConfig {
@@ -69,6 +73,7 @@ impl BatchConfig {
             launchers,
             queue_depth: (2 * max_members.max(1) * launchers).max(4),
             tracer: None,
+            profile: None,
         }
     }
 
@@ -83,6 +88,13 @@ impl BatchConfig {
     /// Attach a tracer; served members record spans into it.
     pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
         self.tracer = Some(tracer);
+        self
+    }
+
+    /// Attach a profile store; fused launches and member timings feed
+    /// it for the lifetime of the engine.
+    pub fn with_profile(mut self, profile: Arc<ProfileStore>) -> Self {
+        self.profile = Some(profile);
         self
     }
 }
@@ -162,6 +174,7 @@ struct Shared {
     window: BatchWindow,
     target: Target,
     tracer: Option<Arc<Tracer>>,
+    profile: Option<Arc<ProfileStore>>,
     /// `serve.batch.*` counters (launches, members, rows, pad rows,
     /// close reasons).
     metrics: Metrics,
@@ -235,6 +248,7 @@ impl BatchingEngine {
             window,
             target,
             tracer: config.tracer.clone(),
+            profile: config.profile.clone(),
             metrics: Metrics::new(),
             latencies: Mutex::new(crate::serve::LatencyLog::default()),
             batch_sizes: Mutex::new(LogHistogram::new()),
@@ -278,6 +292,29 @@ impl BatchingEngine {
     /// The engine's `serve.batch.*` counters.
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
+    }
+
+    /// Telemetry gauges for a [`TelemetrySampler`](crate::profile::TelemetrySampler):
+    /// `batch.queue_depth` (admission queue), `batch.sealed_depth`
+    /// (formed batches awaiting a launcher) and `batch.window_occupancy`
+    /// (cumulative mean members per fused launch — how full the batch
+    /// window runs under the current load).
+    pub fn gauges(&self) -> Vec<Gauge> {
+        let q = Arc::clone(&self.shared);
+        let s = Arc::clone(&self.shared);
+        let w = Arc::clone(&self.shared);
+        vec![
+            Gauge::new("batch.queue_depth", move || q.queue.len() as f64),
+            Gauge::new("batch.sealed_depth", move || s.batches.len() as f64),
+            Gauge::new("batch.window_occupancy", move || {
+                let launches = w.metrics.counter("serve.batch.launches");
+                if launches == 0 {
+                    0.0
+                } else {
+                    w.metrics.counter("serve.batch.members") as f64 / launches as f64
+                }
+            }),
+        ]
     }
 
     /// Enqueue one request. Validates it against the batch spec first
@@ -432,6 +469,7 @@ fn launch_batch(shared: &Shared, batch: FormedBatch) {
             let opts = ExecutionOptions {
                 tracer: shared.tracer.clone(),
                 trace_id: batch_trace,
+                profile: shared.profile.clone(),
                 ..ExecutionOptions::default()
             };
             plan.launch_with(&fused, opts).map(|rep| {
@@ -501,6 +539,9 @@ fn launch_batch(shared: &Shared, batch: FormedBatch) {
             );
         }
         shared.latencies.lock().unwrap().record(&timing);
+        if let Some(profile) = &shared.profile {
+            profile.record_request(&timing);
+        }
         shared.completed.fetch_add(1, Ordering::Relaxed);
         let _ = member.reply.send(Ok(MemberReport {
             outputs,

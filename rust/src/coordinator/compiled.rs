@@ -171,6 +171,22 @@ pub struct CompiledGraph {
     /// Launch-side counters (`exec.*`, `plan.launches`).
     pub metrics: Metrics,
     pub stats: PlanStats,
+    /// Content fingerprint (FNV-1a over the profile, the per-task
+    /// artifact keys and the stream/schedule shape) — the stable
+    /// identity `profile::ProfileStore` keys observations under, so
+    /// profiles survive plan rebuilds of the same graph.
+    fingerprint: u64,
+}
+
+/// FNV-1a over one byte slice, continuing `h` (seed with
+/// [`FNV_OFFSET`]).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// The serving contract, checked at compile time: a plan may be shared
@@ -294,6 +310,15 @@ impl CompiledGraph {
         stats.lower_optimize = lower_optimize;
         stats.build_wall = t_total.elapsed();
 
+        // Stable plan identity: same graph shape + same artifact keys
+        // => same fingerprint across rebuilds and processes.
+        let mut fingerprint = fnv1a(FNV_OFFSET, graph.profile.as_bytes());
+        for node in &nodes {
+            fingerprint = fnv1a(fingerprint, node.key.as_bytes());
+        }
+        fingerprint = fnv1a(fingerprint, &(actions.len() as u64).to_le_bytes());
+        fingerprint = fnv1a(fingerprint, &(schedule.len() as u64).to_le_bytes());
+
         let plan = CompiledGraph {
             nodes,
             actions,
@@ -303,6 +328,7 @@ impl CompiledGraph {
             profile: graph.profile.clone(),
             metrics: Metrics::new(),
             stats,
+            fingerprint,
         };
 
         // Debug builds statically verify every plan before it can
@@ -347,6 +373,7 @@ impl CompiledGraph {
         self.metrics.incr("plan.launches");
         let pipeline = opts.pipeline;
         let tracer = opts.tracer.clone();
+        let profile = opts.profile.clone();
         let trace_id = opts.trace_id;
         let t0 = std::time::Instant::now();
         let mut exec = Executor::new(self, bindings, opts);
@@ -364,7 +391,16 @@ impl CompiledGraph {
             let pid = self.nodes.first().map(|n| n.device.index as u64).unwrap_or(0);
             tracer.record_at("plan.launch", "launch_total", pid, trace_id, -1, t0, t0.elapsed());
         }
+        if let Some(profile) = &profile {
+            profile.record_launch(self.fingerprint, &report);
+        }
         Ok(report)
+    }
+
+    /// The plan's content fingerprint — what profiling observations
+    /// are keyed under.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     /// The dependency-staged schedule pipelined launches replay.
@@ -431,6 +467,23 @@ mod tests {
     use super::*;
     use crate::coordinator::task::{Dims, Param};
     use crate::runtime::device::test_device as device;
+
+    #[test]
+    fn fingerprint_is_stable_and_input_sensitive() {
+        // Pure FNV-1a properties (no artifacts needed).
+        let h1 = fnv1a(FNV_OFFSET, b"vector_add.pallas.tiny");
+        let h2 = fnv1a(FNV_OFFSET, b"vector_add.pallas.tiny");
+        let h3 = fnv1a(FNV_OFFSET, b"vector_add.pallas.small");
+        assert_eq!(h1, h2, "deterministic");
+        assert_ne!(h1, h3, "key-sensitive");
+        assert_ne!(h1, FNV_OFFSET, "mixes its input");
+        // An empty plan still has a well-defined fingerprint, and a
+        // rebuild of the same graph reproduces it.
+        let a = TaskGraph::new().compile().unwrap();
+        let b = TaskGraph::new().compile().unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), 0);
+    }
 
     #[test]
     fn bindings_builder_and_lookup() {

@@ -46,6 +46,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context};
 use xla::PjRtBuffer;
 
+use crate::profile::ProfileStore;
 use crate::runtime::buffer::{DeviceBuffer, HostValue, SharedBuffer};
 use crate::runtime::pjrt::CompiledKernel;
 use crate::substrate::threadpool::scoped_map;
@@ -85,6 +86,11 @@ pub struct ExecutionOptions {
     /// Request trace id stamped on every span this launch records
     /// (0 = untraced / ad-hoc launch).
     pub trace_id: u64,
+    /// When set, per-action kernel/transfer observations and the
+    /// whole-launch wall are aggregated into the store, keyed by the
+    /// plan's fingerprint (`jacc profile`, `--telemetry` runs). `None`
+    /// costs nothing on the launch path.
+    pub profile: Option<Arc<ProfileStore>>,
 }
 
 impl Default for ExecutionOptions {
@@ -95,6 +101,7 @@ impl Default for ExecutionOptions {
             h2d_dedup: true,
             tracer: None,
             trace_id: 0,
+            profile: None,
         }
     }
 }
@@ -299,6 +306,9 @@ impl<'g> Executor<'g> {
                     t_stage.elapsed(),
                 );
             }
+            if let Some(profile) = &self.opts.profile {
+                profile.record_stage(self.plan.fingerprint(), stage_idx, t_stage.elapsed());
+            }
         }
         report.wall = t_wall.elapsed();
         Ok(report)
@@ -341,6 +351,24 @@ impl<'g> Executor<'g> {
                 t0,
                 t0.elapsed(),
             );
+        }
+        if let Some(profile) = &self.opts.profile {
+            let fp = self.plan.fingerprint();
+            match action {
+                Action::Launch { task, .. } => {
+                    let node = self.plan.node(*task);
+                    profile.record_kernel(fp, *task, &node.task.kernel, &node.key, fx.launch);
+                }
+                // Only actual bus transfers feed the bandwidth story —
+                // cache/residency hits moved no bytes.
+                Action::CopyIn { source, .. } if fx.h2d_transfers > 0 => {
+                    profile.record_h2d(fp, task_for_source(source), fx.h2d_bytes, fx.h2d);
+                }
+                Action::CopyOut { task, .. } => {
+                    profile.record_d2h(fp, *task, fx.d2h_bytes, fx.d2h);
+                }
+                _ => {}
+            }
         }
         Ok(fx)
     }
@@ -607,12 +635,7 @@ impl<'g> Executor<'g> {
     }
 
     fn device_for_source(&self, source: &CopySource) -> Arc<crate::runtime::DeviceContext> {
-        let task = match source {
-            CopySource::Param { task, .. }
-            | CopySource::CompositeField { task, .. }
-            | CopySource::StagedOutput { task, .. } => *task,
-        };
-        Arc::clone(&self.plan.node(task).device)
+        Arc::clone(&self.plan.node(task_for_source(source)).device)
     }
 
     fn do_launch(&self, task: TaskId, args: &[BufId], outs: &[BufId]) -> anyhow::Result<Effects> {
@@ -682,6 +705,16 @@ impl<'g> Executor<'g> {
         }
         fx.outputs = Some((task, host_outputs));
         Ok(fx)
+    }
+}
+
+/// The task a CopyIn's payload is destined for (which device it lands
+/// on, and which kernel profile the transfer is attributed to).
+fn task_for_source(source: &CopySource) -> TaskId {
+    match source {
+        CopySource::Param { task, .. }
+        | CopySource::CompositeField { task, .. }
+        | CopySource::StagedOutput { task, .. } => *task,
     }
 }
 

@@ -7,7 +7,11 @@
 //! accounting (how many microseconds each eliminated copy is worth on
 //! the modeled device).
 
+use std::collections::BTreeMap;
+
+use crate::profile::ProfileStore;
 use crate::runtime::artifact::ArtifactEntry;
+use crate::substrate::json::{arr, num, obj, s, Value};
 
 use super::spec::DeviceSpec;
 
@@ -122,6 +126,179 @@ impl CostModel {
         let memory_us = bytes / (self.spec.mem_bw_gbs * PER_CORE_BW_FRACTION * 1e3);
         compute_us.max(memory_us)
     }
+
+    /// Fit the analytic model against measured kernel walls from a
+    /// [`ProfileStore`]: for every manifest entry the store has
+    /// observations for (joined on artifact key, pooled across plan
+    /// fingerprints), derive a multiplicative per-kernel correction
+    /// `scale = measured / predicted`, report the uncalibrated relative
+    /// error, and fold the plans' measured launch overhead back in.
+    /// Kernels never profiled fall back to the geometric-mean scale.
+    pub fn calibrate(&self, store: &ProfileStore, entries: &[ArtifactEntry]) -> CalibrationReport {
+        // Pool measured kernel wall per artifact key: the same kernel
+        // may appear in several plans; weight by observation count.
+        let mut measured: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+        for (_, kp) in store.kernels() {
+            if kp.key.is_empty() || kp.kernel_us.count() == 0 {
+                continue;
+            }
+            let slot = measured.entry(kp.key.clone()).or_insert((0.0, 0));
+            slot.0 += kp.kernel_us.sum();
+            slot.1 += kp.kernel_us.count();
+        }
+        let mut per_kernel = Vec::new();
+        let mut err_sum = 0.0;
+        let mut log_scale_sum = 0.0;
+        for entry in entries {
+            let Some(&(sum, count)) = measured.get(&entry.key) else { continue };
+            let measured_us = sum / count as f64;
+            if measured_us <= 0.0 {
+                continue;
+            }
+            let predicted_us = self.estimate(entry).kernel_us;
+            let scale = if predicted_us > 0.0 { measured_us / predicted_us } else { 1.0 };
+            let rel_error = (predicted_us - measured_us).abs() / measured_us;
+            err_sum += rel_error;
+            log_scale_sum += scale.ln();
+            per_kernel.push(KernelCalibration {
+                key: entry.key.clone(),
+                observations: count,
+                predicted_us,
+                measured_us,
+                rel_error,
+                scale,
+            });
+        }
+        let n = per_kernel.len();
+        let (overhead_sum, overhead_count) = store
+            .plans()
+            .iter()
+            .fold((0.0, 0u64), |(sum, cnt), (_, p)| {
+                (sum + p.overhead_us.sum(), cnt + p.overhead_us.count())
+            });
+        CalibrationReport {
+            mean_rel_error: if n > 0 { err_sum / n as f64 } else { 0.0 },
+            default_scale: if n > 0 { (log_scale_sum / n as f64).exp() } else { 1.0 },
+            launch_overhead_us: if overhead_count > 0 {
+                overhead_sum / overhead_count as f64
+            } else {
+                self.spec.launch_overhead_us
+            },
+            per_kernel,
+        }
+    }
+}
+
+/// One kernel's measured-vs-predicted comparison from
+/// [`CostModel::calibrate`].
+#[derive(Debug, Clone)]
+pub struct KernelCalibration {
+    /// Artifact key the measurement joined the manifest on.
+    pub key: String,
+    /// Kernel-wall observations backing the measurement.
+    pub observations: u64,
+    /// Uncalibrated model prediction, microseconds.
+    pub predicted_us: f64,
+    /// Measured mean kernel wall, microseconds.
+    pub measured_us: f64,
+    /// `|predicted - measured| / measured` of the uncalibrated model.
+    pub rel_error: f64,
+    /// `measured / predicted` — the fitted multiplicative correction.
+    pub scale: f64,
+}
+
+impl KernelCalibration {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("key", s(&self.key)),
+            ("observations", num(self.observations as f64)),
+            ("predicted_us", num(self.predicted_us)),
+            ("measured_us", num(self.measured_us)),
+            ("rel_error", num(self.rel_error)),
+            ("scale", num(self.scale)),
+        ])
+    }
+}
+
+/// Fitted per-kernel corrections plus fallback scale and measured
+/// launch overhead — the output of [`CostModel::calibrate`].
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    /// One row per manifest entry with measurements, in manifest order.
+    pub per_kernel: Vec<KernelCalibration>,
+    /// Mean relative error of the *uncalibrated* model over the fit
+    /// set (what calibration improves on).
+    pub mean_rel_error: f64,
+    /// Geometric-mean scale, applied to kernels never profiled.
+    pub default_scale: f64,
+    /// Measured mean launch overhead across profiled plans,
+    /// microseconds (falls back to the spec's value when no plan
+    /// aggregates exist).
+    pub launch_overhead_us: f64,
+}
+
+impl Default for CalibrationReport {
+    fn default() -> Self {
+        Self {
+            per_kernel: Vec::new(),
+            mean_rel_error: 0.0,
+            default_scale: 1.0,
+            launch_overhead_us: 0.0,
+        }
+    }
+}
+
+impl CalibrationReport {
+    /// The correction for one artifact key (geometric-mean fallback for
+    /// kernels without measurements).
+    pub fn scale_for(&self, key: &str) -> f64 {
+        self.per_kernel.iter().find(|k| k.key == key).map_or(self.default_scale, |k| k.scale)
+    }
+
+    /// Calibrated kernel-time prediction for an artifact.
+    pub fn predict_us(&self, model: &CostModel, entry: &ArtifactEntry) -> f64 {
+        model.estimate(entry).kernel_us * self.scale_for(&entry.key)
+    }
+
+    /// Replay a (typically fresh) store through both models:
+    /// `(uncalibrated, calibrated)` mean relative error against the
+    /// replayed measurements. `(0, 0)` when nothing joins.
+    pub fn replay_error(
+        &self,
+        model: &CostModel,
+        store: &ProfileStore,
+        entries: &[ArtifactEntry],
+    ) -> (f64, f64) {
+        let mut before = 0.0;
+        let mut after = 0.0;
+        let mut n = 0usize;
+        for (_, kp) in store.kernels() {
+            let Some(entry) = entries.iter().find(|e| e.key == kp.key) else { continue };
+            let measured_us = kp.kernel_us.mean();
+            if measured_us <= 0.0 {
+                continue;
+            }
+            let raw = model.estimate(entry).kernel_us;
+            let calibrated = self.predict_us(model, entry);
+            before += (raw - measured_us).abs() / measured_us;
+            after += (calibrated - measured_us).abs() / measured_us;
+            n += 1;
+        }
+        if n == 0 {
+            (0.0, 0.0)
+        } else {
+            (before / n as f64, after / n as f64)
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("per_kernel", arr(self.per_kernel.iter().map(KernelCalibration::to_json).collect())),
+            ("mean_rel_error", num(self.mean_rel_error)),
+            ("default_scale", num(self.default_scale)),
+            ("launch_overhead_us", num(self.launch_overhead_us)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +379,92 @@ mod tests {
         let small = m.estimate(&entry(1, 1 << 10, 0, 0));
         let big = m.estimate(&entry(1, 1 << 30, 0, 0));
         assert!(big.h2d_us > 100.0 * small.h2d_us);
+    }
+
+    /// Feed a store from a synthetic device whose true kernel cost is a
+    /// known multiple of the model's prediction: calibration must
+    /// recover the scale and the calibrated replay error must be
+    /// strictly below the uncalibrated one.
+    #[test]
+    fn calibration_recovers_a_known_scale() {
+        use std::time::Duration;
+
+        use crate::profile::ProfileStore;
+
+        const TRUE_SCALE: f64 = 3.0;
+        let model = CostModel::new(DeviceSpec::host());
+        let mut a = entry(1 << 24, 8 << 20, 4 << 20, 0);
+        a.key = "a.pallas.tiny".into();
+        let mut b = entry(2 << 28, 1 << 20, 1 << 20, 0);
+        b.key = "b.pallas.tiny".into();
+        let entries = [a, b];
+
+        let feed = |store: &ProfileStore| {
+            for (task, e) in entries.iter().enumerate() {
+                let true_us = model.estimate(e).kernel_us * TRUE_SCALE;
+                for _ in 0..5 {
+                    let wall = Duration::from_secs_f64(true_us * 1e-6);
+                    store.record_kernel(1, task, &e.name, &e.key, wall);
+                }
+            }
+        };
+        let fit = ProfileStore::new();
+        feed(&fit);
+        let report = model.calibrate(&fit, &entries);
+        assert_eq!(report.per_kernel.len(), 2);
+        for k in &report.per_kernel {
+            assert_eq!(k.observations, 5);
+            assert!((k.scale - TRUE_SCALE).abs() < 1e-3, "{}: scale {}", k.key, k.scale);
+            assert!((k.rel_error - 2.0).abs() < 1e-3, "uncalibrated error is (3x-x)/x = 2");
+        }
+        assert!((report.mean_rel_error - 2.0).abs() < 1e-3);
+        assert!((report.default_scale - TRUE_SCALE).abs() < 1e-3, "geometric mean of equal scales");
+
+        // Replay a fresh store drawn from the same synthetic device.
+        let replay = ProfileStore::new();
+        feed(&replay);
+        let (before, after) = report.replay_error(&model, &replay, &entries);
+        assert!(after < before, "calibrated {after} must beat uncalibrated {before}");
+        assert!(before > 1.9);
+        assert!(after < 1e-2, "calibrated error collapses on the fit device: {after}");
+    }
+
+    #[test]
+    fn unprofiled_kernels_fall_back_to_the_default_scale() {
+        use std::time::Duration;
+
+        use crate::profile::ProfileStore;
+
+        let model = CostModel::new(DeviceSpec::host());
+        let mut seen = entry(1 << 24, 8 << 20, 4 << 20, 0);
+        seen.key = "seen.pallas.tiny".into();
+        let mut unseen = entry(1 << 20, 1 << 20, 1 << 20, 0);
+        unseen.key = "unseen.pallas.tiny".into();
+
+        let store = ProfileStore::new();
+        let true_us = model.estimate(&seen).kernel_us * 2.0;
+        store.record_kernel(9, 0, "seen", &seen.key, Duration::from_secs_f64(true_us * 1e-6));
+        let entries = [seen, unseen.clone()];
+        let report = model.calibrate(&store, &entries);
+        assert_eq!(report.per_kernel.len(), 1, "only the measured kernel gets a row");
+        let fallback = report.scale_for("unseen.pallas.tiny");
+        assert!((fallback - report.default_scale).abs() < 1e-12);
+        let predicted = report.predict_us(&model, &unseen);
+        let raw = model.estimate(&unseen).kernel_us;
+        assert!((predicted - raw * report.default_scale).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_store_calibrates_to_the_identity() {
+        use crate::profile::ProfileStore;
+
+        let model = CostModel::new(DeviceSpec::host());
+        let report = model.calibrate(&ProfileStore::new(), &[entry(1, 4, 4, 0)]);
+        assert!(report.per_kernel.is_empty());
+        assert_eq!(report.mean_rel_error, 0.0);
+        assert_eq!(report.default_scale, 1.0);
+        assert_eq!(report.launch_overhead_us, model.spec.launch_overhead_us);
+        let (before, after) = report.replay_error(&model, &ProfileStore::new(), &[]);
+        assert_eq!((before, after), (0.0, 0.0));
     }
 }

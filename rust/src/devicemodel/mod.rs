@@ -9,5 +9,5 @@ pub mod cost;
 pub mod scaling;
 pub mod spec;
 
-pub use cost::{CostModel, KernelCostEstimate};
+pub use cost::{CalibrationReport, CostModel, KernelCalibration, KernelCostEstimate};
 pub use spec::DeviceSpec;

@@ -29,6 +29,7 @@ pub mod devicemodel;
 pub mod memory;
 pub mod metrics;
 pub mod pool;
+pub mod profile;
 pub mod runtime;
 pub mod serve;
 pub mod substrate;

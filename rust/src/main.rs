@@ -16,8 +16,16 @@
 //!                                         with per-device breakdowns;
 //!                                         --batch-max N = micro-batched
 //!                                         serving with fused launches)
-//!   jacc trace-check [--trace F] [--json F]  re-parse and validate trace /
-//!                                         snapshot files (CI smoke step)
+//!   jacc profile     --benchmark B [...]  continuous profiling: N profiled
+//!                                         iterations into a ProfileStore,
+//!                                         cost-model calibration with a
+//!                                         per-kernel predicted / measured /
+//!                                         error table, replay verification
+//!                                         (--json F, --telemetry F)
+//!   jacc trace-check [--trace F] [--json F] [--timeseries F]
+//!                                         re-parse and validate trace /
+//!                                         snapshot / telemetry files
+//!                                         (CI smoke step)
 //!   jacc lint        [--benchmark B] [...]  static plan verification: race /
 //!                                         lifetime / capacity findings over
 //!                                         compiled plans (CI gate; --json F
@@ -26,8 +34,11 @@
 //! Observability: `run --trace out.json` records per-action spans
 //! (queue wait, H2D, kernel, D2H, stages) into a Chrome trace-event
 //! file viewable at <https://ui.perfetto.dev>; `serve-bench --json
-//! out.json` writes a machine-readable metrics snapshot. See the
-//! "Observability" section of `api.rs`.
+//! out.json` writes a machine-readable metrics snapshot;
+//! `serve-bench --telemetry ts.jsonl` samples gauges (queue depth,
+//! per-device ledgers, batch-window occupancy) into a
+//! `jacc.timeseries.v1` JSON-lines file. See the "Profiling &
+//! telemetry" section of `api.rs`.
 //!
 //! (The paper-table reproductions live in `cargo bench`; see
 //! benches/*.rs and EXPERIMENTS.md.)
@@ -42,8 +53,9 @@ use jacc::batch::{BatchConfig, BatchSpec, BatchingEngine};
 use jacc::bench::{fmt_secs, fmt_x, workloads, Harness, Table};
 use jacc::coordinator::histogram_summary;
 use jacc::devicemodel::{CostModel, DeviceSpec};
-use jacc::pool::{serve_requests, PoolEngine};
-use jacc::serve::{serve_all, ServeConfig};
+use jacc::pool::PoolEngine;
+use jacc::profile::{ledger_gauges, validate_lines, Gauge, ProfileStore, TelemetrySampler};
+use jacc::serve::{ServeConfig, ServingEngine};
 use jacc::substrate::cli::Cli;
 use jacc::substrate::json::{arr, num, obj, s, Value};
 use jacc::trace::{chrome, MetricsSnapshot, Tracer};
@@ -101,8 +113,16 @@ fn main() -> anyhow::Result<()> {
     .opt(
         "json",
         "",
-        "write a metrics snapshot to this path (serve-bench); input file for trace-check",
-    );
+        "write a metrics snapshot to this path (serve-bench / profile); input file for \
+         trace-check",
+    )
+    .opt(
+        "telemetry",
+        "",
+        "sample gauges into a jacc.timeseries.v1 JSON-lines file at this path \
+         (serve-bench / profile)",
+    )
+    .opt("timeseries", "", "input jacc.timeseries.v1 file to validate (trace-check)");
     let args = cli.parse();
 
     match args.positional().first().map(|s| s.as_str()) {
@@ -135,8 +155,22 @@ fn main() -> anyhow::Result<()> {
             args.get_or("trace", ""),
             args.get_usize("batch-max").unwrap_or(0),
             args.get_usize("batch-window-us").unwrap_or(200),
+            args.get_or("telemetry", ""),
         ),
-        Some("trace-check") => trace_check(args.get_or("trace", ""), args.get_or("json", "")),
+        Some("profile") => profile_cmd(
+            args.get_or("benchmark", ""),
+            args.get_or("profile", "scaled"),
+            args.get_or("variant", "pallas"),
+            args.get_usize("iters").unwrap_or(0),
+            args.has_flag("smoke"),
+            args.get_or("json", ""),
+            args.get_or("telemetry", ""),
+        ),
+        Some("trace-check") => trace_check(
+            args.get_or("trace", ""),
+            args.get_or("json", ""),
+            args.get_or("timeseries", ""),
+        ),
         Some("lint") => lint(
             args.get_or("benchmark", ""),
             args.get_or("profile", "scaled"),
@@ -148,7 +182,7 @@ fn main() -> anyhow::Result<()> {
         other => {
             eprintln!(
                 "unknown or missing subcommand {other:?}; try: devices | inspect | run | \
-                 suite | serve-bench | trace-check | lint"
+                 suite | serve-bench | profile | trace-check | lint"
             );
             std::process::exit(2);
         }
@@ -244,6 +278,34 @@ fn write_trace_file(tracer: &Option<Arc<Tracer>>, path: &str) -> anyhow::Result<
             "trace: {} spans ({} dropped) -> {path} (open at https://ui.perfetto.dev)",
             t.len(),
             t.dropped()
+        );
+    }
+    Ok(())
+}
+
+/// `--telemetry` sampling cadence and per-gauge ring capacity.
+const TELEMETRY_INTERVAL: std::time::Duration = std::time::Duration::from_millis(1);
+const TELEMETRY_CAPACITY: usize = 8192;
+
+/// Start a background gauge sampler when `--telemetry` is set.
+fn start_sampler(telemetry: &str, gauges: Vec<Gauge>) -> anyhow::Result<Option<TelemetrySampler>> {
+    if telemetry.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(TelemetrySampler::start(gauges, TELEMETRY_INTERVAL, TELEMETRY_CAPACITY)?))
+}
+
+/// Stop a `--telemetry` sampler and write the `jacc.timeseries.v1`
+/// JSON-lines artifact.
+fn write_timeseries(sampler: Option<TelemetrySampler>, telemetry: &str) -> anyhow::Result<()> {
+    if let Some(sampler) = sampler {
+        let ts = sampler.stop();
+        ts.write(Path::new(telemetry))?;
+        println!(
+            "telemetry: {} gauges x {} samples ({} dropped) -> {telemetry}",
+            ts.gauges.len(),
+            ts.samples.len(),
+            ts.dropped
         );
     }
     Ok(())
@@ -449,6 +511,7 @@ fn serve_bench(
     trace: &str,
     batch_max: usize,
     batch_window_us: usize,
+    telemetry: &str,
 ) -> anyhow::Result<()> {
     // CI smoke mode: tiny shapes, few requests, and a graceful skip
     // when the AOT artifacts are not built (mirrors the benches).
@@ -469,13 +532,13 @@ fn serve_bench(
     if batch_max > 0 {
         return serve_bench_batched(
             name, profile, variant, workers, requests, batch_max, batch_window_us,
-            pool_width, verbose, json, &tracer, trace,
+            pool_width, verbose, json, &tracer, trace, telemetry,
         );
     }
     if pool_width > 1 {
         return serve_bench_pool(
             name, profile, variant, workers, requests, queue_depth, pool_width, verbose,
-            json, &tracer, trace,
+            json, &tracer, trace, telemetry,
         );
     }
     let dev = Cuda::get_device(0)?.create_device_context()?;
@@ -493,10 +556,32 @@ fn serve_bench(
     if let Some(t) = &tracer {
         config = config.with_tracer(Arc::clone(t));
     }
-    let (reports, agg) =
-        serve_all(Arc::clone(&plan), config, vec![Bindings::new(); requests])?;
+    let store = (!telemetry.is_empty()).then(|| Arc::new(ProfileStore::new()));
+    if let Some(st) = &store {
+        config = config.with_profile(Arc::clone(st));
+    }
+    let engine = ServingEngine::start(Arc::clone(&plan), config)?;
+    let sampler = if telemetry.is_empty() {
+        None
+    } else {
+        let mut gauges = engine.gauges();
+        gauges.extend(ledger_gauges(&dev));
+        start_sampler(telemetry, gauges)?
+    };
+    let tickets = (0..requests)
+        .map(|_| engine.submit(Bindings::new()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reports = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let agg = engine.shutdown();
     for rep in &reports {
         anyhow::ensure!(rep.fresh_compiles == 0, "serving path must never JIT");
+    }
+    write_timeseries(sampler, telemetry)?;
+    if let Some(st) = &store {
+        println!("profile: {} observations recorded", st.observations());
     }
     println!("serve-bench {}", agg.summary());
     {
@@ -553,6 +638,7 @@ fn serve_bench_pool(
     json: &str,
     tracer: &Option<Arc<Tracer>>,
     trace: &str,
+    telemetry: &str,
 ) -> anyhow::Result<()> {
     let (pool, replicated) = open_replicated(name, profile, variant, false, devices)?;
     let mut config = PoolConfig::with_workers_per_device(workers_per_device);
@@ -562,9 +648,34 @@ fn serve_bench_pool(
     if let Some(t) = tracer {
         config = config.with_tracer(Arc::clone(t));
     }
-    let (reports, agg) = serve_requests(&replicated, config, vec![Bindings::new(); requests])?;
+    let store = (!telemetry.is_empty()).then(|| Arc::new(ProfileStore::new()));
+    if let Some(st) = &store {
+        config = config.with_profile(Arc::clone(st));
+    }
+    let engine = PoolEngine::start(&replicated, config)?;
+    let sampler = if telemetry.is_empty() {
+        None
+    } else {
+        let mut gauges = engine.gauges();
+        for d in 0..replicated.device_count() {
+            gauges.extend(ledger_gauges(pool.device(d)));
+        }
+        start_sampler(telemetry, gauges)?
+    };
+    let tickets = (0..requests)
+        .map(|_| engine.submit(Bindings::new()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reports = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let agg = engine.shutdown();
     for rep in &reports {
         anyhow::ensure!(rep.fresh_compiles == 0, "serving path must never JIT");
+    }
+    write_timeseries(sampler, telemetry)?;
+    if let Some(st) = &store {
+        println!("profile: {} observations recorded", st.observations());
     }
     println!("serve-bench {}", agg.summary());
     check_pool_ledgers(&pool)?;
@@ -681,11 +792,16 @@ fn serve_bench_batched(
     json: &str,
     tracer: &Option<Arc<Tracer>>,
     trace: &str,
+    telemetry: &str,
 ) -> anyhow::Result<()> {
     let window = std::time::Duration::from_micros(batch_window_us as u64);
     let mut config = BatchConfig::new(batch_max, window).with_launchers(workers);
     if let Some(t) = tracer {
         config = config.with_tracer(Arc::clone(t));
+    }
+    let store = (!telemetry.is_empty()).then(|| Arc::new(ProfileStore::new()));
+    if let Some(st) = &store {
+        config = config.with_profile(Arc::clone(st));
     }
 
     let engine;
@@ -731,6 +847,20 @@ fn serve_bench_batched(
         single_dev = Some((dev, plan));
     }
 
+    let sampler = if telemetry.is_empty() {
+        None
+    } else {
+        let mut gauges = engine.gauges();
+        if let Some((dev, _)) = &single_dev {
+            gauges.extend(ledger_gauges(dev));
+        }
+        if let Some(p) = &pool {
+            for d in 0..devices {
+                gauges.extend(ledger_gauges(p.device(d)));
+            }
+        }
+        start_sampler(telemetry, gauges)?
+    };
     let tickets = (0..requests)
         .map(|_| engine.submit(member.clone()))
         .collect::<anyhow::Result<Vec<_>>>()?;
@@ -743,6 +873,10 @@ fn serve_bench_batched(
     }
     let batch_metrics = engine.metrics().to_json();
     let agg = engine.shutdown();
+    write_timeseries(sampler, telemetry)?;
+    if let Some(st) = &store {
+        println!("profile: {} observations recorded", st.observations());
+    }
     println!("serve-bench {}", agg.summary());
 
     if let Some(p) = &pool {
@@ -780,13 +914,14 @@ fn serve_bench_batched(
 }
 
 /// Validate observability artifacts: re-parse a `--trace` file through
-/// `substrate::json` and check the trace-event keys, and/or validate a
-/// `--json` metrics snapshot against its schema tag. Used by the CI
-/// smoke step.
-fn trace_check(trace: &str, json: &str) -> anyhow::Result<()> {
+/// `substrate::json` and check the trace-event keys, validate a
+/// `--json` metrics snapshot against its schema tag, and/or validate a
+/// `--timeseries` telemetry file line by line. Used by the CI smoke
+/// step.
+fn trace_check(trace: &str, json: &str, timeseries: &str) -> anyhow::Result<()> {
     anyhow::ensure!(
-        !trace.is_empty() || !json.is_empty(),
-        "trace-check needs --trace <file> and/or --json <file>"
+        !trace.is_empty() || !json.is_empty() || !timeseries.is_empty(),
+        "trace-check needs --trace <file>, --json <file> and/or --timeseries <file>"
     );
     if !trace.is_empty() {
         let text =
@@ -806,6 +941,116 @@ fn trace_check(trace: &str, json: &str) -> anyhow::Result<()> {
             v.get("kind").as_str().unwrap_or("?"),
         );
     }
+    if !timeseries.is_empty() {
+        let text = std::fs::read_to_string(timeseries)
+            .with_context(|| format!("reading {timeseries}"))?;
+        let rows =
+            validate_lines(&text).with_context(|| format!("validating {timeseries}"))?;
+        println!("trace-check: {timeseries} OK ({rows} sample rows)");
+    }
+    Ok(())
+}
+
+/// `jacc profile` — the continuous-profiling report: run N profiled
+/// iterations of one benchmark plan into a [`ProfileStore`], calibrate
+/// the analytic cost model against the measurements, then replay the
+/// workload into a fresh store and verify the calibrated predictions
+/// beat the uncalibrated ones. `--telemetry` samples the device ledger
+/// gauges throughout; `--json` writes a `"profile"`-kind snapshot with
+/// the calibration table and the raw store.
+fn profile_cmd(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    iters: usize,
+    smoke: bool,
+    json: &str,
+    telemetry: &str,
+) -> anyhow::Result<()> {
+    let (name, profile, iters) = if smoke {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            println!("profile --smoke: artifacts not built (make artifacts); skipping");
+            return Ok(());
+        }
+        (if name.is_empty() { "vector_add" } else { name }, "tiny", 16)
+    } else {
+        (name, profile, if iters == 0 { 32 } else { iters })
+    };
+    anyhow::ensure!(!name.is_empty(), "--benchmark required");
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let (g, _, _) = build_graph(&dev, name, profile, variant, false)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
+    plan.launch(&Bindings::new())?; // warm off the clock (JIT, caches)
+
+    let entries = vec![dev.runtime.manifest().find(name, variant, profile)?.clone()];
+    let model = CostModel::new(dev.spec.clone());
+    let sampler = start_sampler(telemetry, ledger_gauges(&dev))?;
+
+    // Fit pass: N profiled launches into the store the model fits on.
+    let fit = Arc::new(ProfileStore::new());
+    let opts =
+        ExecutionOptions { profile: Some(Arc::clone(&fit)), ..ExecutionOptions::default() };
+    for _ in 0..iters {
+        plan.launch_with(&Bindings::new(), opts.clone())?;
+    }
+    let report = model.calibrate(&fit, &entries);
+
+    // Replay pass: a fresh store over the same workload — calibration
+    // must transfer, not just memorize the fit run.
+    let replay = Arc::new(ProfileStore::new());
+    let replay_opts =
+        ExecutionOptions { profile: Some(Arc::clone(&replay)), ..ExecutionOptions::default() };
+    for _ in 0..iters {
+        plan.launch_with(&Bindings::new(), replay_opts.clone())?;
+    }
+    write_timeseries(sampler, telemetry)?;
+    let (before, after) = report.replay_error(&model, &replay, &entries);
+
+    let mut t = Table::new(&["kernel", "obs", "predicted", "measured", "rel err", "scale"]);
+    for k in &report.per_kernel {
+        t.row(vec![
+            k.key.clone(),
+            k.observations.to_string(),
+            fmt_secs(k.predicted_us / 1e6),
+            fmt_secs(k.measured_us / 1e6),
+            format!("{:.1}%", k.rel_error * 100.0),
+            format!("{:.3}", k.scale),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "calibration over {iters} iters ({} observations): mean rel error {:.1}% raw -> \
+         {:.1}% calibrated on replay (default scale {:.3}, measured launch overhead \
+         {:.1} us)",
+        fit.observations(),
+        before * 100.0,
+        after * 100.0,
+        report.default_scale,
+        report.launch_overhead_us,
+    );
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("profile");
+        snap.set("benchmark", s(name))
+            .set("variant", s(variant))
+            .set("profile", s(profile))
+            .set("iters", num(iters as f64))
+            .set("calibration", report.to_json())
+            .set(
+                "replay",
+                obj(vec![
+                    ("uncalibrated_rel_error", num(before)),
+                    ("calibrated_rel_error", num(after)),
+                ]),
+            )
+            .set("store", fit.to_json());
+        snap.write(Path::new(json))?;
+        println!("snapshot -> {json}");
+    }
+    anyhow::ensure!(
+        after < before,
+        "calibrated replay error {after:.4} did not improve on uncalibrated {before:.4}"
+    );
     Ok(())
 }
 

@@ -2,9 +2,14 @@
 //! lowering/optimizing/executing task graphs. `jacc run --verbose` and
 //! the ablation benches read these to show exactly which actions the
 //! optimizer removed (paper §2.3 "eliminate, merge and re-organize"),
-//! and `trace::MetricsSnapshot` exports the whole registry as JSON
-//! (`jacc serve-bench --json`, `BENCH_serve.json`) so the perf
-//! trajectory is machine-readable.
+//! and `trace::MetricsSnapshot` exports the whole registry as a
+//! `jacc.metrics.v3` JSON snapshot (`jacc serve-bench --json`,
+//! `BENCH_serve.json`) so the perf trajectory is machine-readable.
+//! The continuous-profiling layer adds the `profile.*` namespace
+//! (`profile.kernel_obs`, `profile.h2d_obs`, `profile.d2h_obs`,
+//! `profile.stage_obs`, `profile.launch_obs`, `profile.request_obs`)
+//! on each `profile::ProfileStore`'s own registry, counting the
+//! observations folded into its summaries.
 //!
 //! Thread-safe and hot-path friendly: both counters and timers are
 //! `AtomicU64`s behind an `RwLock`ed registry — the write lock is only

@@ -26,6 +26,7 @@ use std::time::Instant;
 use anyhow::Context;
 
 use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionReport};
+use crate::profile::{Gauge, ProfileStore};
 use crate::serve::{
     BoundedQueue, DeviceBreakdown, LatencyLog, RequestTiming, ServeReport, Served, Ticket,
 };
@@ -44,6 +45,9 @@ pub struct PoolConfig {
     /// Optional span tracer: requests record queue-wait and launch
     /// spans under the serving lane's device group.
     pub tracer: Option<Arc<Tracer>>,
+    /// Optional profile store: routed requests record per-kernel and
+    /// request-timing observations into it.
+    pub profile: Option<Arc<ProfileStore>>,
 }
 
 impl PoolConfig {
@@ -52,12 +56,20 @@ impl PoolConfig {
             workers_per_device,
             queue_depth: 2 * workers_per_device.max(1),
             tracer: None,
+            profile: None,
         }
     }
 
     /// Attach a tracer; routed requests record spans into it.
     pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
         self.tracer = Some(tracer);
+        self
+    }
+
+    /// Attach a profile store; routed requests record observations
+    /// into it.
+    pub fn with_profile(mut self, profile: Arc<ProfileStore>) -> Self {
+        self.profile = Some(profile);
         self
     }
 }
@@ -93,6 +105,7 @@ struct Lane {
     h2d_transfers: AtomicU64,
     latencies: Mutex<LatencyLog>,
     tracer: Option<Arc<Tracer>>,
+    profile: Option<Arc<ProfileStore>>,
 }
 
 /// Index of the least-loaded lane; ties break to the lowest index so
@@ -135,6 +148,7 @@ impl PoolEngine {
                     h2d_transfers: AtomicU64::new(0),
                     latencies: Mutex::new(LatencyLog::default()),
                     tracer: config.tracer.clone(),
+                    profile: config.profile.clone(),
                 })
             })
             .collect();
@@ -175,6 +189,26 @@ impl PoolEngine {
     /// next `submit` routes against).
     pub fn outstanding(&self) -> Vec<usize> {
         self.lanes.iter().map(|l| l.outstanding.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Telemetry gauges over the engine's live state, for a
+    /// [`TelemetrySampler`](crate::profile::TelemetrySampler): per
+    /// device lane, `pool.d<i>.queue_depth` (admission-queue
+    /// occupancy) and `pool.d<i>.outstanding` (the routing signal).
+    pub fn gauges(&self) -> Vec<Gauge> {
+        let mut gauges = Vec::with_capacity(2 * self.lanes.len());
+        for lane in &self.lanes {
+            let d = lane.device;
+            let l = Arc::clone(lane);
+            gauges.push(Gauge::new(format!("pool.d{d}.queue_depth"), move || {
+                l.queue.len() as f64
+            }));
+            let l = Arc::clone(lane);
+            gauges.push(Gauge::new(format!("pool.d{d}.outstanding"), move || {
+                l.outstanding.load(Ordering::Relaxed) as f64
+            }));
+        }
+        gauges
     }
 
     /// Route one request to the least-loaded device lane. Blocks while
@@ -236,7 +270,7 @@ impl PoolEngine {
             // Reuse the aggregate fill for the lane's own percentiles.
             let mut lane_report = ServeReport::default();
             log.fill(&mut lane_report);
-            per_device.push(DeviceBreakdown {
+            let mut row = DeviceBreakdown {
                 device: lane.device,
                 requests: completed,
                 errors: lane_errors,
@@ -245,7 +279,15 @@ impl PoolEngine {
                 queue_p95_ms: lane_report.queue_p95_ms,
                 h2d_dedup_hits: lane_dedup,
                 h2d_transfers: lane_h2d,
-            });
+                ..DeviceBreakdown::default()
+            };
+            // Sample the lane device's memory ledger into the row
+            // (used/headroom/evictions/dedup) so pool runs show memory
+            // pressure without a separate trace.
+            if !lane.plan.is_empty() {
+                row.sample_ledger(&lane.plan.node(0).device);
+            }
+            per_device.push(row);
         }
         let mut report = ServeReport {
             workers: self.lanes.len() * workers_per_device,
@@ -300,6 +342,7 @@ fn lane_loop(lane: &Lane) {
         let opts = ExecutionOptions {
             tracer: lane.tracer.clone(),
             trace_id: req.trace,
+            profile: lane.profile.clone(),
             ..ExecutionOptions::default()
         };
         let t0 = Instant::now();
@@ -312,6 +355,9 @@ fn lane_loop(lane: &Lane) {
                 lane.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
                 lane.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
                 lane.latencies.lock().unwrap().record(&timing);
+                if let Some(profile) = &lane.profile {
+                    profile.record_request(&timing);
+                }
                 timing
             }
             Err(_) => {

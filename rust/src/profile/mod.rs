@@ -1,0 +1,57 @@
+//! Continuous profiling & telemetry (the feedback loop the paper's §5
+//! evaluation implies: know where time actually goes, then feed it
+//! back into the model).
+//!
+//! Three pieces:
+//! * [`ProfileStore`] — durable per-kernel / per-stage aggregates
+//!   (EWMA + log-histogram) keyed by (plan fingerprint, task id), fed
+//!   by the executor's action hooks and the serving engines' request
+//!   timings. Attach one via `ExecutionOptions::profile` or the
+//!   engines' `with_profile` config builders; `None` costs nothing.
+//! * [`TelemetrySampler`] — a background thread sampling [`Gauge`]s
+//!   (queue depth, per-device outstanding, ledger used/headroom,
+//!   batch-window occupancy) on a fixed interval into overwrite-oldest
+//!   rings, exported as a `jacc.timeseries.v1` JSON-lines artifact
+//!   ([`TimeSeries`]); `jacc serve-bench --telemetry F` and
+//!   `jacc profile --telemetry F` write one, `jacc trace-check
+//!   --timeseries F` validates it.
+//! * `CostModel::calibrate` (in [`crate::devicemodel`]) — fits the
+//!   measured kernel costs back into the static model and reports
+//!   per-kernel predicted-vs-measured relative error (`jacc profile`).
+
+pub mod sampler;
+pub mod store;
+pub mod timeseries;
+
+pub use sampler::{Gauge, GaugeSample, TelemetrySampler};
+pub use store::{KernelProfile, PlanProfile, ProfileStore, RequestProfile, StatSummary};
+pub use timeseries::{validate_lines, TimeSeries, TimeseriesError, SCHEMA as TIMESERIES_SCHEMA};
+
+use std::sync::Arc;
+
+use crate::runtime::DeviceContext;
+
+/// Memory-ledger gauges for one device: `ledger.d<i>.used`,
+/// `.headroom`, `.evictions` and `.dedup_hits` (bytes / counts from
+/// the device's [`DeviceMemoryManager`](crate::memory) ledger). Reading
+/// one takes the ledger lock briefly — the same lock launches take to
+/// note uploads, so samples are consistent.
+pub fn ledger_gauges(device: &Arc<DeviceContext>) -> Vec<Gauge> {
+    let i = device.index;
+    let (used, headroom, evictions, dedup) =
+        (Arc::clone(device), Arc::clone(device), Arc::clone(device), Arc::clone(device));
+    vec![
+        Gauge::new(format!("ledger.d{i}.used"), move || {
+            used.memory.lock().unwrap().used() as f64
+        }),
+        Gauge::new(format!("ledger.d{i}.headroom"), move || {
+            headroom.memory.lock().unwrap().headroom() as f64
+        }),
+        Gauge::new(format!("ledger.d{i}.evictions"), move || {
+            evictions.memory.lock().unwrap().stats.evictions as f64
+        }),
+        Gauge::new(format!("ledger.d{i}.dedup_hits"), move || {
+            dedup.memory.lock().unwrap().stats.dedup_hits as f64
+        }),
+    ]
+}

@@ -1,0 +1,265 @@
+//! Background gauge sampling into bounded rings.
+//!
+//! A [`TelemetrySampler`] owns one thread that reads every registered
+//! [`Gauge`] on a fixed interval and pushes the values into
+//! per-gauge overwrite-oldest [`Ring`]s — bounded memory no matter how
+//! long a serving process runs, with the most recent window always
+//! retained (the flight-recorder property the trace rings already
+//! have). [`TelemetrySampler::stop`] interrupts the interval sleep via
+//! a condvar (no up-to-one-interval shutdown stall), joins the thread
+//! and returns the collected [`TimeSeries`](super::TimeSeries) for
+//! export as a `jacc.timeseries.v1` artifact.
+//!
+//! Gauges are plain closures (`Fn() -> f64 + Send + Sync`) built by the
+//! engines' `gauges()` methods over their internal shared state (queue
+//! depth, per-device outstanding, batch-window occupancy) and by
+//! [`ledger_gauges`](super::ledger_gauges) over a device's memory
+//! ledger — reading one is a couple of atomic loads or one short lock,
+//! so sampling never perturbs the serving path it observes (the
+//! `benches/profile_overhead.rs` gate holds this to ≤5%).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::trace::ring::Ring;
+
+use super::timeseries::TimeSeries;
+
+/// One named metric source the sampler polls.
+pub struct Gauge {
+    name: String,
+    read: Box<dyn Fn() -> f64 + Send + Sync>,
+}
+
+impl Gauge {
+    pub fn new(name: impl Into<String>, read: impl Fn() -> f64 + Send + Sync + 'static) -> Self {
+        Self { name: name.into(), read: Box::new(read) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Read the current value.
+    pub fn read(&self) -> f64 {
+        (self.read)()
+    }
+}
+
+impl fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Gauge").field("name", &self.name).finish_non_exhaustive()
+    }
+}
+
+/// One sampled point: milliseconds since sampler start, and the value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaugeSample {
+    pub t_ms: f64,
+    pub value: f64,
+}
+
+struct SamplerShared {
+    /// Stop flag under the condvar's mutex — `stop()` flips it and
+    /// notifies, interrupting the interval wait immediately.
+    stop: Mutex<bool>,
+    cv: Condvar,
+    /// One ring per gauge, in registration order.
+    rings: Mutex<Vec<Ring<GaugeSample>>>,
+    ticks: AtomicU64,
+}
+
+/// Background sampling thread; see the module doc.
+pub struct TelemetrySampler {
+    shared: Arc<SamplerShared>,
+    handle: Option<thread::JoinHandle<()>>,
+    names: Vec<String>,
+    interval: Duration,
+}
+
+impl TelemetrySampler {
+    /// Spawn the sampling thread. `capacity` bounds each gauge's ring
+    /// (oldest samples are overwritten beyond it). The first sample is
+    /// taken immediately, then every `interval`.
+    pub fn start(
+        gauges: Vec<Gauge>,
+        interval: Duration,
+        capacity: usize,
+    ) -> anyhow::Result<TelemetrySampler> {
+        let names: Vec<String> = gauges.iter().map(|g| g.name.clone()).collect();
+        let shared = Arc::new(SamplerShared {
+            stop: Mutex::new(false),
+            cv: Condvar::new(),
+            rings: Mutex::new(names.iter().map(|_| Ring::new(capacity.max(1))).collect()),
+            ticks: AtomicU64::new(0),
+        });
+        let worker = Arc::clone(&shared);
+        let handle = thread::Builder::new()
+            .name("jacc-telemetry".into())
+            .spawn(move || sampler_loop(&worker, &gauges, interval))
+            .map_err(|e| anyhow::anyhow!("spawning telemetry sampler: {e}"))?;
+        Ok(TelemetrySampler { shared, handle: Some(handle), names, interval })
+    }
+
+    /// Gauge names in ring order.
+    pub fn gauge_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Sampling rounds completed so far.
+    pub fn sample_count(&self) -> u64 {
+        self.shared.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Signal the thread, join it, and drain the rings into an
+    /// exportable time-series. Returns promptly even mid-interval.
+    pub fn stop(mut self) -> TimeSeries {
+        self.halt();
+        let rings = self.shared.rings.lock().unwrap();
+        TimeSeries::from_rings(&self.names, self.interval, &rings)
+    }
+
+    fn halt(&mut self) {
+        *self.shared.stop.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TelemetrySampler {
+    fn drop(&mut self) {
+        // Dropping without `stop()` must not leak the thread.
+        self.halt();
+    }
+}
+
+fn sampler_loop(shared: &SamplerShared, gauges: &[Gauge], interval: Duration) {
+    let started = Instant::now();
+    loop {
+        // Read every gauge outside the ring lock (a gauge may take a
+        // short engine lock of its own).
+        let t_ms = started.elapsed().as_secs_f64() * 1e3;
+        let values: Vec<f64> = gauges.iter().map(|g| g.read()).collect();
+        {
+            let mut rings = shared.rings.lock().unwrap();
+            for (ring, value) in rings.iter_mut().zip(values) {
+                ring.push(GaugeSample { t_ms, value });
+            }
+        }
+        shared.ticks.fetch_add(1, Ordering::Relaxed);
+
+        let stop = shared.stop.lock().unwrap();
+        if *stop {
+            return;
+        }
+        let (stop, _timeout) = shared.cv.wait_timeout(stop, interval).unwrap();
+        if *stop {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicI64;
+
+    #[test]
+    fn samples_gauges_and_stops_cleanly() {
+        let counter = Arc::new(AtomicI64::new(5));
+        let c = Arc::clone(&counter);
+        let sampler = TelemetrySampler::start(
+            vec![
+                Gauge::new("test.counter", move || c.load(Ordering::Relaxed) as f64),
+                Gauge::new("test.constant", || 2.5),
+            ],
+            Duration::from_millis(2),
+            64,
+        )
+        .unwrap();
+        assert_eq!(sampler.gauge_names(), ["test.counter", "test.constant"]);
+        while sampler.sample_count() < 3 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        counter.store(9, Ordering::Relaxed);
+        let series = sampler.stop();
+        assert_eq!(series.gauges, ["test.counter", "test.constant"]);
+        assert!(series.samples.len() >= 3, "{} samples", series.samples.len());
+        let (_, first) = &series.samples[0];
+        assert_eq!(first[0], 5.0);
+        assert_eq!(first[1], 2.5);
+        // Timestamps are monotonic.
+        for w in series.samples.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+    }
+
+    /// The shutdown latency contract: stopping must interrupt the
+    /// interval sleep rather than wait it out, and the thread must be
+    /// joined (no leak) with its locks healthy (no poison).
+    #[test]
+    fn stop_interrupts_a_long_interval_without_leaking() {
+        let sampler = TelemetrySampler::start(
+            vec![Gauge::new("g", || 1.0)],
+            Duration::from_secs(3600),
+            8,
+        )
+        .unwrap();
+        // Let the immediate first sample land.
+        while sampler.sample_count() < 1 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let t0 = Instant::now();
+        let series = sampler.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop() stalled {:?} on a 1h interval",
+            t0.elapsed()
+        );
+        // stop() joined the thread and read the rings — a poisoned
+        // lock or leaked thread would have panicked or hung above.
+        assert_eq!(series.samples.len(), 1);
+        assert_eq!(series.samples[0].1, vec![1.0]);
+    }
+
+    #[test]
+    fn drop_without_stop_joins_the_thread() {
+        let sampler =
+            TelemetrySampler::start(vec![Gauge::new("g", || 0.0)], Duration::from_secs(3600), 8)
+                .unwrap();
+        let t0 = Instant::now();
+        drop(sampler);
+        assert!(t0.elapsed() < Duration::from_secs(5), "drop stalled {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn rings_overwrite_oldest_beyond_capacity() {
+        let sampler = TelemetrySampler::start(
+            vec![Gauge::new("g", || 1.0)],
+            Duration::from_micros(200),
+            4,
+        )
+        .unwrap();
+        while sampler.sample_count() < 10 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let series = sampler.stop();
+        assert_eq!(series.samples.len(), 4, "ring keeps only the recent window");
+        assert!(series.dropped >= 6, "dropped {}", series.dropped);
+    }
+
+    #[test]
+    fn zero_gauges_is_fine() {
+        let sampler =
+            TelemetrySampler::start(Vec::new(), Duration::from_millis(1), 4).unwrap();
+        thread::sleep(Duration::from_millis(3));
+        let series = sampler.stop();
+        assert!(series.gauges.is_empty());
+        assert!(series.samples.is_empty());
+    }
+}

@@ -1,0 +1,586 @@
+//! Durable per-kernel / per-stage performance facts.
+//!
+//! A [`ProfileStore`] turns the executor's span stream into queryable
+//! aggregates: for every (plan fingerprint, task) it keeps kernel wall
+//! time, H2D/D2H bytes and effective bandwidth, and per-launch overhead
+//! as EWMA + [`LogHistogram`] summaries ([`StatSummary`]). The store is
+//! fed from three places:
+//! * `Executor::exec_action` / `run_pipelined` record per-action kernel,
+//!   transfer and stage observations when
+//!   `ExecutionOptions::profile` is set,
+//! * `CompiledGraph::launch_with` records the whole-launch wall and the
+//!   derived launch overhead (wall minus attributed phases),
+//! * the serving engines (`ServingEngine` / `PoolEngine` /
+//!   `BatchingEngine`) record per-request timing attributions.
+//!
+//! All recording goes through one internal mutex — observations are
+//! short (a map lookup plus two float updates), and correctness under
+//! concurrent recording is what the stress test below locks in: counts
+//! and histogram buckets are order-independent, so a multi-threaded
+//! recording run aggregates to the same summaries as a serial replay.
+//!
+//! Fixed-name observation counters live on an internal [`Metrics`]
+//! registry under the `profile.*` namespace (`profile.kernel_obs`,
+//! `profile.h2d_obs`, `profile.d2h_obs`, `profile.stage_obs`,
+//! `profile.launch_obs`, `profile.request_obs`) so snapshots can report
+//! how much evidence backs the summaries.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::ExecutionReport;
+use crate::metrics::Metrics;
+use crate::serve::RequestTiming;
+use crate::substrate::json::{arr, num, obj, s, Value};
+use crate::trace::LogHistogram;
+
+/// EWMA smoothing factor: each new observation contributes 20%.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// One metric's streaming summary: an exponentially weighted moving
+/// average (recency-sensitive, what calibration feeds on) plus a
+/// [`LogHistogram`] (order-independent distribution with exact count
+/// and extrema).
+#[derive(Debug, Clone, Default)]
+pub struct StatSummary {
+    ewma: f64,
+    hist: LogHistogram,
+}
+
+impl StatSummary {
+    pub fn record(&mut self, v: f64) {
+        if self.hist.count() == 0 {
+            self.ewma = v;
+        } else {
+            self.ewma = EWMA_ALPHA * v + (1.0 - EWMA_ALPHA) * self.ewma;
+        }
+        self.hist.record(v);
+    }
+
+    /// Recency-weighted level (the calibration input).
+    pub fn ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    pub fn count(&self) -> u64 {
+        self.hist.count()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.hist.sum()
+    }
+
+    /// Arithmetic mean over all observations (order-independent).
+    pub fn mean(&self) -> f64 {
+        self.hist.mean()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.hist.percentile(p)
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.hist.max_value()
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("ewma", num(self.ewma)),
+            ("mean", num(self.mean())),
+            ("count", num(self.count() as f64)),
+            ("p50", num(self.percentile(50.0))),
+            ("p95", num(self.percentile(95.0))),
+            ("max", num(self.max_value())),
+        ])
+    }
+}
+
+/// Aggregated observations for one task of one plan.
+#[derive(Debug, Clone, Default)]
+pub struct KernelProfile {
+    /// Kernel name (e.g. `vector_add`).
+    pub name: String,
+    /// Artifact key (e.g. `vector_add.pallas.tiny`) — what calibration
+    /// joins against the manifest on.
+    pub key: String,
+    /// Kernel executions observed.
+    pub launches: u64,
+    /// Kernel wall per launch, microseconds.
+    pub kernel_us: StatSummary,
+    /// H2D upload wall per transfer, microseconds (actual bus
+    /// transfers only — cache hits don't pollute the bandwidth story).
+    pub h2d_us: StatSummary,
+    /// Total H2D bytes observed for this task.
+    pub h2d_bytes: u64,
+    /// Effective H2D bandwidth per transfer, GB/s.
+    pub h2d_gbs: StatSummary,
+    /// D2H download wall per transfer, microseconds.
+    pub d2h_us: StatSummary,
+    pub d2h_bytes: u64,
+    pub d2h_gbs: StatSummary,
+}
+
+impl KernelProfile {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("key", s(&self.key)),
+            ("launches", num(self.launches as f64)),
+            ("kernel_us", self.kernel_us.to_json()),
+            ("h2d_us", self.h2d_us.to_json()),
+            ("h2d_bytes", num(self.h2d_bytes as f64)),
+            ("h2d_gbs", self.h2d_gbs.to_json()),
+            ("d2h_us", self.d2h_us.to_json()),
+            ("d2h_bytes", num(self.d2h_bytes as f64)),
+            ("d2h_gbs", self.d2h_gbs.to_json()),
+        ])
+    }
+}
+
+/// Whole-launch aggregates for one plan fingerprint.
+#[derive(Debug, Clone, Default)]
+pub struct PlanProfile {
+    pub launches: u64,
+    /// Launch wall, microseconds.
+    pub wall_us: StatSummary,
+    /// Launch overhead: wall minus the attributed H2D + D2H + kernel
+    /// phases (clamped at zero) — scheduling, binding validation and
+    /// stage fan-out cost.
+    pub overhead_us: StatSummary,
+    /// Per-pipeline-stage wall, microseconds, keyed by stage index.
+    pub stages: BTreeMap<usize, StatSummary>,
+}
+
+impl PlanProfile {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("launches", num(self.launches as f64)),
+            ("wall_us", self.wall_us.to_json()),
+            ("overhead_us", self.overhead_us.to_json()),
+            (
+                "stages",
+                arr(self
+                    .stages
+                    .iter()
+                    .map(|(idx, st)| {
+                        obj(vec![("stage", num(*idx as f64)), ("wall_us", st.to_json())])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Request-level latency attribution summaries (milliseconds), fed by
+/// the serving engines.
+#[derive(Debug, Clone, Default)]
+pub struct RequestProfile {
+    pub requests: u64,
+    pub total_ms: StatSummary,
+    pub queue_ms: StatSummary,
+    pub batch_ms: StatSummary,
+    pub launch_ms: StatSummary,
+}
+
+impl RequestProfile {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("requests", num(self.requests as f64)),
+            ("total_ms", self.total_ms.to_json()),
+            ("queue_ms", self.queue_ms.to_json()),
+            ("batch_ms", self.batch_ms.to_json()),
+            ("launch_ms", self.launch_ms.to_json()),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// (plan fingerprint, task id) -> kernel aggregates.
+    kernels: BTreeMap<(u64, usize), KernelProfile>,
+    /// plan fingerprint -> whole-launch aggregates.
+    plans: BTreeMap<u64, PlanProfile>,
+    requests: RequestProfile,
+}
+
+fn us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
+/// Effective bandwidth in GB/s for `bytes` moved in `wall`.
+fn gbs(bytes: u64, wall: Duration) -> Option<f64> {
+    let secs = wall.as_secs_f64();
+    if secs > 0.0 && bytes > 0 { Some(bytes as f64 / secs / 1e9) } else { None }
+}
+
+/// Thread-safe aggregation of profiling observations. Cheap to share
+/// (`Arc<ProfileStore>`) across the executor and all serving engines.
+#[derive(Debug)]
+pub struct ProfileStore {
+    inner: Mutex<Inner>,
+    metrics: Metrics,
+}
+
+impl Default for ProfileStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Inner::default()), metrics: Metrics::new() }
+    }
+
+    /// Fixed-name observation counters (`profile.*`).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// One kernel execution: `wall` is the pure device-run share of the
+    /// launch action.
+    pub fn record_kernel(
+        &self,
+        fingerprint: u64,
+        task: usize,
+        name: &str,
+        key: &str,
+        wall: Duration,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        let k = inner.kernels.entry((fingerprint, task)).or_default();
+        if k.name.is_empty() {
+            k.name = name.to_string();
+            k.key = key.to_string();
+        }
+        k.launches += 1;
+        k.kernel_us.record(us(wall));
+        drop(inner);
+        self.metrics.incr("profile.kernel_obs");
+    }
+
+    /// One H2D transfer that actually crossed the bus, attributed to
+    /// the task whose parameter it feeds.
+    pub fn record_h2d(&self, fingerprint: u64, task: usize, bytes: u64, wall: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        let k = inner.kernels.entry((fingerprint, task)).or_default();
+        k.h2d_bytes += bytes;
+        k.h2d_us.record(us(wall));
+        if let Some(bw) = gbs(bytes, wall) {
+            k.h2d_gbs.record(bw);
+        }
+        drop(inner);
+        self.metrics.incr("profile.h2d_obs");
+    }
+
+    /// One D2H download, attributed to the producing task.
+    pub fn record_d2h(&self, fingerprint: u64, task: usize, bytes: u64, wall: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        let k = inner.kernels.entry((fingerprint, task)).or_default();
+        k.d2h_bytes += bytes;
+        k.d2h_us.record(us(wall));
+        if let Some(bw) = gbs(bytes, wall) {
+            k.d2h_gbs.record(bw);
+        }
+        drop(inner);
+        self.metrics.incr("profile.d2h_obs");
+    }
+
+    /// One pipeline stage's wall within a launch.
+    pub fn record_stage(&self, fingerprint: u64, stage: usize, wall: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .plans
+            .entry(fingerprint)
+            .or_default()
+            .stages
+            .entry(stage)
+            .or_default()
+            .record(us(wall));
+        drop(inner);
+        self.metrics.incr("profile.stage_obs");
+    }
+
+    /// One whole launch: records the wall and the derived launch
+    /// overhead (wall minus the attributed H2D/D2H/kernel phases).
+    pub fn record_launch(&self, fingerprint: u64, report: &ExecutionReport) {
+        let attributed = report.h2d + report.d2h + report.launch;
+        let overhead = report.wall.saturating_sub(attributed);
+        let mut inner = self.inner.lock().unwrap();
+        let p = inner.plans.entry(fingerprint).or_default();
+        p.launches += 1;
+        p.wall_us.record(us(report.wall));
+        p.overhead_us.record(us(overhead));
+        drop(inner);
+        self.metrics.incr("profile.launch_obs");
+    }
+
+    /// One served request's latency attribution.
+    pub fn record_request(&self, timing: &RequestTiming) {
+        let mut inner = self.inner.lock().unwrap();
+        let r = &mut inner.requests;
+        r.requests += 1;
+        r.total_ms.record(timing.total().as_secs_f64() * 1e3);
+        r.queue_ms.record(timing.queue.as_secs_f64() * 1e3);
+        r.batch_ms.record(timing.batch.as_secs_f64() * 1e3);
+        r.launch_ms.record(timing.launch.as_secs_f64() * 1e3);
+        drop(inner);
+        self.metrics.incr("profile.request_obs");
+    }
+
+    /// Snapshot of one task's aggregates.
+    pub fn kernel(&self, fingerprint: u64, task: usize) -> Option<KernelProfile> {
+        self.inner.lock().unwrap().kernels.get(&(fingerprint, task)).cloned()
+    }
+
+    /// Snapshot of every kernel aggregate, keyed by
+    /// (plan fingerprint, task id), in key order.
+    pub fn kernels(&self) -> Vec<((u64, usize), KernelProfile)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .kernels
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect()
+    }
+
+    /// Snapshot of one plan's whole-launch aggregates.
+    pub fn plan(&self, fingerprint: u64) -> Option<PlanProfile> {
+        self.inner.lock().unwrap().plans.get(&fingerprint).cloned()
+    }
+
+    /// Snapshot of every plan aggregate, in fingerprint order.
+    pub fn plans(&self) -> Vec<(u64, PlanProfile)> {
+        self.inner.lock().unwrap().plans.iter().map(|(fp, p)| (*fp, p.clone())).collect()
+    }
+
+    /// Snapshot of the request-level summaries.
+    pub fn requests(&self) -> RequestProfile {
+        self.inner.lock().unwrap().requests.clone()
+    }
+
+    /// Total observations recorded, across all kinds.
+    pub fn observations(&self) -> u64 {
+        [
+            "profile.kernel_obs",
+            "profile.h2d_obs",
+            "profile.d2h_obs",
+            "profile.stage_obs",
+            "profile.launch_obs",
+            "profile.request_obs",
+        ]
+        .iter()
+        .map(|k| self.metrics.counter(k))
+        .sum()
+    }
+
+    /// The whole store as one JSON object (embedded in
+    /// `jacc profile --json` snapshots).
+    pub fn to_json(&self) -> Value {
+        let inner = self.inner.lock().unwrap();
+        obj(vec![
+            (
+                "kernels",
+                arr(inner
+                    .kernels
+                    .iter()
+                    .map(|((fp, task), k)| {
+                        let mut o = k.to_json();
+                        if let Value::Obj(map) = &mut o {
+                            map.insert("fingerprint".into(), s(&format!("{fp:016x}")));
+                            map.insert("task".into(), num(*task as f64));
+                        }
+                        o
+                    })
+                    .collect()),
+            ),
+            (
+                "plans",
+                arr(inner
+                    .plans
+                    .iter()
+                    .map(|(fp, p)| {
+                        let mut o = p.to_json();
+                        if let Value::Obj(map) = &mut o {
+                            map.insert("fingerprint".into(), s(&format!("{fp:016x}")));
+                        }
+                        o
+                    })
+                    .collect()),
+            ),
+            ("requests", inner.requests.to_json()),
+            ("counters", self.metrics.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn stat_summary_ewma_and_distribution() {
+        let mut st = StatSummary::default();
+        st.record(10.0);
+        assert_eq!(st.ewma(), 10.0, "first observation seeds the EWMA");
+        st.record(20.0);
+        assert!((st.ewma() - (0.2 * 20.0 + 0.8 * 10.0)).abs() < 1e-12);
+        assert_eq!(st.count(), 2);
+        assert!((st.mean() - 15.0).abs() < 1e-12);
+        assert_eq!(st.max_value(), 20.0);
+    }
+
+    #[test]
+    fn kernel_transfer_and_bandwidth_aggregation() {
+        let store = ProfileStore::new();
+        let key = "vector_add.pallas.tiny";
+        store.record_kernel(7, 0, "vector_add", key, Duration::from_micros(50));
+        store.record_kernel(7, 0, "vector_add", key, Duration::from_micros(150));
+        // 1 MB in 1 ms = 1 GB/s.
+        store.record_h2d(7, 0, 1_000_000, Duration::from_millis(1));
+        store.record_d2h(7, 0, 2_000_000, Duration::from_millis(1));
+        let k = store.kernel(7, 0).unwrap();
+        assert_eq!(k.name, "vector_add");
+        assert_eq!(k.key, "vector_add.pallas.tiny");
+        assert_eq!(k.launches, 2);
+        assert!((k.kernel_us.mean() - 100.0).abs() < 1e-9);
+        assert_eq!(k.h2d_bytes, 1_000_000);
+        assert!((k.h2d_gbs.mean() - 1.0).abs() < 1e-6, "h2d {}", k.h2d_gbs.mean());
+        assert!((k.d2h_gbs.mean() - 2.0).abs() < 1e-6, "d2h {}", k.d2h_gbs.mean());
+        assert_eq!(store.metrics().counter("profile.kernel_obs"), 2);
+        assert_eq!(store.observations(), 4);
+        // Unknown keys return None, not a panic.
+        assert!(store.kernel(7, 99).is_none());
+        assert!(store.plan(99).is_none());
+    }
+
+    #[test]
+    fn launch_overhead_is_wall_minus_attributed_phases() {
+        let store = ProfileStore::new();
+        let report = ExecutionReport {
+            wall: Duration::from_micros(1000),
+            h2d: Duration::from_micros(200),
+            d2h: Duration::from_micros(100),
+            launch: Duration::from_micros(500),
+            ..ExecutionReport::default()
+        };
+        store.record_launch(42, &report);
+        let p = store.plan(42).unwrap();
+        assert_eq!(p.launches, 1);
+        assert!((p.wall_us.ewma() - 1000.0).abs() < 1e-9);
+        assert!((p.overhead_us.ewma() - 200.0).abs() < 1e-9);
+        // Over-attributed phases (concurrent stages sum past the wall)
+        // clamp to zero instead of going negative.
+        let over = ExecutionReport {
+            wall: Duration::from_micros(100),
+            launch: Duration::from_micros(400),
+            ..ExecutionReport::default()
+        };
+        store.record_launch(42, &over);
+        let p = store.plan(42).unwrap();
+        assert_eq!(p.overhead_us.max_value(), 200.0);
+        assert_eq!(p.overhead_us.count(), 2);
+    }
+
+    /// Concurrent recording aggregates to the same order-independent
+    /// summaries (counts, bucket-exact percentiles, sums) as a serial
+    /// replay of the same observations.
+    #[test]
+    fn concurrent_recording_matches_serial_reference() {
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 500;
+        // Deterministic per-(thread, i) observation values.
+        let value = |t: usize, i: usize| 1.0 + ((t * PER_THREAD + i) % 97) as f64;
+
+        let concurrent = Arc::new(ProfileStore::new());
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let store = Arc::clone(&concurrent);
+                scope.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        let v = value(t, i);
+                        store.record_kernel(
+                            1,
+                            t % 3,
+                            "k",
+                            "k.pallas.tiny",
+                            Duration::from_secs_f64(v * 1e-6),
+                        );
+                        store.record_request(&RequestTiming {
+                            launch: Duration::from_secs_f64(v * 1e-3),
+                            ..RequestTiming::default()
+                        });
+                    }
+                });
+            }
+        });
+
+        let serial = ProfileStore::new();
+        for t in 0..THREADS {
+            for i in 0..PER_THREAD {
+                let v = value(t, i);
+                let wall = Duration::from_secs_f64(v * 1e-6);
+                serial.record_kernel(1, t % 3, "k", "k.pallas.tiny", wall);
+                serial.record_request(&RequestTiming {
+                    launch: Duration::from_secs_f64(v * 1e-3),
+                    ..RequestTiming::default()
+                });
+            }
+        }
+
+        for task in 0..3 {
+            let c = concurrent.kernel(1, task).unwrap();
+            let s = serial.kernel(1, task).unwrap();
+            assert_eq!(c.launches, s.launches, "task {task}");
+            assert_eq!(c.kernel_us.count(), s.kernel_us.count());
+            // Histogram buckets are order-independent: percentiles are
+            // bit-identical; the float sum only reorders.
+            for p in [50.0, 95.0, 99.0] {
+                assert_eq!(c.kernel_us.percentile(p), s.kernel_us.percentile(p), "p{p}");
+            }
+            assert!((c.kernel_us.sum() - s.kernel_us.sum()).abs() <= 1e-9 * s.kernel_us.sum());
+        }
+        let (cr, sr) = (concurrent.requests(), serial.requests());
+        assert_eq!(cr.requests, sr.requests);
+        assert_eq!(cr.total_ms.percentile(95.0), sr.total_ms.percentile(95.0));
+        assert_eq!(concurrent.observations(), serial.observations());
+    }
+
+    /// An attached store on an empty plan records the launch itself and
+    /// nothing else — the zero-task serving path must not panic.
+    #[test]
+    fn empty_plan_launch_records_only_the_launch() {
+        use crate::coordinator::{Bindings, ExecutionOptions, TaskGraph};
+        let plan = TaskGraph::new().compile().unwrap();
+        let store = Arc::new(ProfileStore::new());
+        let opts =
+            ExecutionOptions { profile: Some(Arc::clone(&store)), ..ExecutionOptions::default() };
+        plan.launch_with(&Bindings::new(), opts).unwrap();
+        assert_eq!(store.metrics().counter("profile.launch_obs"), 1);
+        assert_eq!(store.metrics().counter("profile.kernel_obs"), 0);
+        let p = store.plan(plan.fingerprint()).expect("plan aggregates recorded");
+        assert_eq!(p.launches, 1);
+    }
+
+    #[test]
+    fn store_json_round_trips() {
+        let store = ProfileStore::new();
+        store.record_kernel(3, 1, "saxpy", "saxpy.pallas.small", Duration::from_micros(80));
+        store.record_stage(3, 0, Duration::from_micros(120));
+        store.record_request(&RequestTiming::default());
+        let text = store.to_json().to_json_pretty(2);
+        let v = Value::parse(&text).expect("profile JSON must re-parse");
+        let kernels = v.get("kernels").as_arr().unwrap();
+        assert_eq!(kernels.len(), 1);
+        assert_eq!(kernels[0].get("name").as_str(), Some("saxpy"));
+        assert_eq!(kernels[0].get("task").as_u64(), Some(1));
+        assert_eq!(v.get("requests").get("requests").as_u64(), Some(1));
+        assert_eq!(
+            v.get("counters").get("counters").get("profile.stage_obs").as_u64(),
+            Some(1)
+        );
+    }
+}

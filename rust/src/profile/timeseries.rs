@@ -1,0 +1,256 @@
+//! The `jacc.timeseries.v1` gauge time-series artifact.
+//!
+//! JSON-lines: one header object tagged with [`SCHEMA`] declaring the
+//! sampling interval and gauge names, then one object per sampling
+//! round with the timestamp (ms since sampler start) and a
+//! `values` map keyed by gauge name. JSON-lines rather than one
+//! document so a long-running process can append rounds without
+//! rewriting, and so `tail -f` / line-oriented tooling work on it
+//! directly. Every line is serialized via `substrate::json`, so the
+//! artifact always round-trips through `Value::parse`;
+//! [`validate_lines`] (what `jacc trace-check --timeseries` runs)
+//! re-parses each line and reports the first offending line and field
+//! through the typed [`TimeseriesError`].
+
+use std::path::Path;
+
+use crate::substrate::json::{arr, num, obj, s, Value};
+use crate::trace::ring::Ring;
+
+use super::sampler::GaugeSample;
+use std::time::Duration;
+
+/// Schema tag on the header line of every time-series artifact.
+pub const SCHEMA: &str = "jacc.timeseries.v1";
+
+/// What a time-series line can be rejected for — the error names the
+/// offending line (1-based) and field so a corrupt artifact is
+/// diagnosable from the message alone.
+#[derive(Debug, thiserror::Error)]
+pub enum TimeseriesError {
+    #[error("time-series is empty (expected a {SCHEMA} header line)")]
+    Empty,
+    #[error("line {line}: not valid JSON: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("line {line}: missing or mistyped field '{field}'")]
+    Field { line: usize, field: &'static str },
+    #[error("line 1: unexpected schema {found:?} (want {SCHEMA:?})")]
+    Schema { found: String },
+    #[error("line {line}: value for unknown gauge '{gauge}' (not in the header)")]
+    UnknownGauge { line: usize, gauge: String },
+}
+
+/// A drained sampler run, ready for export.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    /// Sampling interval the run was configured with.
+    pub interval: Duration,
+    /// Gauge names, in column order.
+    pub gauges: Vec<String>,
+    /// One row per sampling round: (ms since start, per-gauge values
+    /// in `gauges` order). Only the ring window survives — see
+    /// `dropped`.
+    pub samples: Vec<(f64, Vec<f64>)>,
+    /// Older rounds lost to ring overwrite.
+    pub dropped: u64,
+}
+
+impl TimeSeries {
+    /// Assemble from the sampler's per-gauge rings (all rings are
+    /// pushed in lockstep, so they hold the same rounds).
+    pub(crate) fn from_rings(
+        names: &[String],
+        interval: Duration,
+        rings: &[Ring<GaugeSample>],
+    ) -> TimeSeries {
+        let rows = rings.iter().map(Ring::len).min().unwrap_or(0);
+        let mut samples = Vec::with_capacity(rows);
+        let columns: Vec<Vec<GaugeSample>> = rings.iter().map(Ring::snapshot).collect();
+        for i in 0..rows {
+            let t_ms = columns[0][i].t_ms;
+            samples.push((t_ms, columns.iter().map(|c| c[i].value).collect()));
+        }
+        TimeSeries {
+            interval,
+            gauges: names.to_vec(),
+            samples,
+            dropped: rings.iter().map(Ring::dropped).max().unwrap_or(0),
+        }
+    }
+
+    fn header(&self) -> Value {
+        obj(vec![
+            ("schema", s(SCHEMA)),
+            ("kind", s("telemetry")),
+            ("interval_ms", num(self.interval.as_secs_f64() * 1e3)),
+            ("gauges", arr(self.gauges.iter().map(|g| s(g)).collect())),
+            ("dropped", num(self.dropped as f64)),
+        ])
+    }
+
+    /// The whole artifact as JSON-lines text (header + one line per
+    /// round, trailing newline).
+    pub fn to_json_lines(&self) -> String {
+        let mut out = self.header().to_json();
+        out.push('\n');
+        for (t_ms, values) in &self.samples {
+            let vals = self
+                .gauges
+                .iter()
+                .zip(values)
+                .map(|(g, v)| (g.as_str(), num(*v)))
+                .collect::<Vec<_>>();
+            let line = obj(vec![
+                ("t_ms", num(*t_ms)),
+                ("values", obj(vals)),
+            ]);
+            out.push_str(&line.to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the artifact to `path`.
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json_lines())
+            .map_err(|e| anyhow::anyhow!("writing time-series to {}: {e}", path.display()))
+    }
+}
+
+/// Validate a `jacc.timeseries.v1` artifact: the header's schema, kind,
+/// interval and gauge list, and every sample line's timestamp and
+/// values map (numeric, and only header-declared gauges). Returns the
+/// number of sample rows.
+pub fn validate_lines(text: &str) -> Result<usize, TimeseriesError> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty());
+
+    let Some((line, header)) = lines.next() else {
+        return Err(TimeseriesError::Empty);
+    };
+    let header = Value::parse(header)
+        .map_err(|e| TimeseriesError::Parse { line, msg: e.to_string() })?;
+    let schema = header
+        .get("schema")
+        .as_str()
+        .ok_or(TimeseriesError::Field { line, field: "schema" })?;
+    if schema != SCHEMA {
+        return Err(TimeseriesError::Schema { found: schema.to_string() });
+    }
+    header.get("kind").as_str().ok_or(TimeseriesError::Field { line, field: "kind" })?;
+    header
+        .get("interval_ms")
+        .as_f64()
+        .ok_or(TimeseriesError::Field { line, field: "interval_ms" })?;
+    let gauges: Vec<String> = header
+        .get("gauges")
+        .as_arr()
+        .ok_or(TimeseriesError::Field { line, field: "gauges" })?
+        .iter()
+        .map(|g| {
+            g.as_str()
+                .map(str::to_string)
+                .ok_or(TimeseriesError::Field { line, field: "gauges" })
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut rows = 0;
+    for (line, text) in lines {
+        let v = Value::parse(text)
+            .map_err(|e| TimeseriesError::Parse { line, msg: e.to_string() })?;
+        v.get("t_ms").as_f64().ok_or(TimeseriesError::Field { line, field: "t_ms" })?;
+        let values = match v.get("values") {
+            Value::Obj(map) => map,
+            _ => return Err(TimeseriesError::Field { line, field: "values" }),
+        };
+        for (name, value) in values {
+            if !gauges.iter().any(|g| g == name) {
+                return Err(TimeseriesError::UnknownGauge { line, gauge: name.clone() });
+            }
+            if value.as_f64().is_none() {
+                return Err(TimeseriesError::Field { line, field: "values" });
+            }
+        }
+        rows += 1;
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> TimeSeries {
+        TimeSeries {
+            interval: Duration::from_millis(10),
+            gauges: vec!["serve.queue_depth".into(), "ledger.d0.used".into()],
+            samples: vec![
+                (0.0, vec![3.0, 1024.0]),
+                (10.2, vec![5.0, 2048.0]),
+                (20.5, vec![0.0, 2048.0]),
+            ],
+            dropped: 2,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_validate() {
+        let text = series().to_json_lines();
+        assert_eq!(validate_lines(&text).unwrap(), 3);
+        // Every line individually re-parses as JSON.
+        for l in text.lines() {
+            Value::parse(l).expect("each line is standalone JSON");
+        }
+        let header = Value::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(header.get("schema").as_str(), Some(SCHEMA));
+        assert_eq!(header.get("dropped").as_u64(), Some(2));
+        let row = Value::parse(text.lines().nth(2).unwrap()).unwrap();
+        assert_eq!(row.get("values").get("serve.queue_depth").as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn empty_and_garbage_inputs_are_typed_errors() {
+        assert!(matches!(validate_lines(""), Err(TimeseriesError::Empty)));
+        assert!(matches!(
+            validate_lines("not json\n"),
+            Err(TimeseriesError::Parse { line: 1, .. })
+        ));
+        let wrong = r#"{"schema": "jacc.metrics.v2", "kind": "telemetry"}"#;
+        match validate_lines(wrong) {
+            Err(TimeseriesError::Schema { found }) => assert_eq!(found, "jacc.metrics.v2"),
+            other => panic!("expected schema error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_name_the_offending_line_and_field() {
+        let mut text = series().to_json_lines();
+        text.push_str("{\"values\": {\"serve.queue_depth\": 1}}\n");
+        match validate_lines(&text) {
+            Err(e @ TimeseriesError::Field { line: 5, field: "t_ms" }) => {
+                let msg = e.to_string();
+                assert!(msg.contains("line 5"), "{msg}");
+                assert!(msg.contains("t_ms"), "{msg}");
+            }
+            other => panic!("expected field error on line 5, got {other:?}"),
+        }
+
+        let mut text = series().to_json_lines();
+        text.push_str("{\"t_ms\": 30.0, \"values\": {\"bogus.gauge\": 1}}\n");
+        match validate_lines(&text) {
+            Err(TimeseriesError::UnknownGauge { line: 5, gauge }) => {
+                assert_eq!(gauge, "bogus.gauge");
+            }
+            other => panic!("expected unknown-gauge error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blank_lines_are_tolerated() {
+        let text = series().to_json_lines().replace('\n', "\n\n");
+        assert_eq!(validate_lines(&text).unwrap(), 3);
+    }
+}

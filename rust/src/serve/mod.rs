@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::Context;
 
 use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionReport};
+use crate::profile::{Gauge, ProfileStore};
 use crate::substrate::json::{arr, num, obj, Value};
 use crate::trace::{LogHistogram, Tracer};
 
@@ -60,16 +61,27 @@ pub struct ServeConfig {
     /// Optional span tracer: each request gets a trace id and records
     /// queue-wait plus per-action launch spans into it.
     pub tracer: Option<Arc<Tracer>>,
+    /// Optional profile store: served requests record their timing
+    /// attribution and per-action observations into it
+    /// (`jacc profile`, `jacc serve-bench --telemetry`).
+    pub profile: Option<Arc<ProfileStore>>,
 }
 
 impl ServeConfig {
     pub fn with_workers(workers: usize) -> Self {
-        Self { workers, queue_depth: 2 * workers.max(1), tracer: None }
+        Self { workers, queue_depth: 2 * workers.max(1), tracer: None, profile: None }
     }
 
     /// Attach a tracer; served requests record spans into it.
     pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
         self.tracer = Some(tracer);
+        self
+    }
+
+    /// Attach a profile store; served requests record per-kernel and
+    /// request-timing observations into it.
+    pub fn with_profile(mut self, profile: Arc<ProfileStore>) -> Self {
+        self.profile = Some(profile);
         self
     }
 }
@@ -235,6 +247,7 @@ struct Shared {
     plan: Arc<CompiledGraph>,
     queue: BoundedQueue<Request>,
     tracer: Option<Arc<Tracer>>,
+    profile: Option<Arc<ProfileStore>>,
     latencies: Mutex<LatencyLog>,
     completed: AtomicU64,
     errors: AtomicU64,
@@ -261,6 +274,17 @@ pub struct DeviceBreakdown {
     pub h2d_dedup_hits: u64,
     /// Uploads that actually crossed this device's bus.
     pub h2d_transfers: u64,
+    /// Memory-ledger state sampled at shutdown: bytes resident on the
+    /// device and bytes of remaining capacity — the memory-pressure
+    /// picture without a separate trace.
+    pub ledger_used: u64,
+    pub ledger_headroom: u64,
+    /// Ledger lifetime counters at shutdown: buffers evicted under
+    /// pressure, and uploads served from the content cache (the
+    /// manager's view; can exceed this run's `h2d_dedup_hits` if the
+    /// device served earlier runs).
+    pub ledger_evictions: u64,
+    pub ledger_dedup_hits: u64,
 }
 
 impl DeviceBreakdown {
@@ -269,7 +293,7 @@ impl DeviceBreakdown {
     pub fn line(&self) -> String {
         format!(
             "  device {}: {} requests, p50 {:.2} ms, p95 {:.2} ms (queue p95 {:.2} ms, \
-             h2d dedup {}/{}){}",
+             h2d dedup {}/{}; ledger {} B used / {} B free, {} evictions, {} dedup){}",
             self.device,
             self.requests,
             self.p50_ms,
@@ -277,8 +301,23 @@ impl DeviceBreakdown {
             self.queue_p95_ms,
             self.h2d_dedup_hits,
             self.h2d_dedup_hits + self.h2d_transfers,
+            self.ledger_used,
+            self.ledger_headroom,
+            self.ledger_evictions,
+            self.ledger_dedup_hits,
             if self.errors > 0 { format!(", {} ERRORS", self.errors) } else { String::new() },
         )
+    }
+
+    /// Sample the ledger gauges (`used`, `headroom`, `evictions`,
+    /// `dedup_hits`) from a device's memory manager into this row —
+    /// what the pool engine does for every lane at shutdown.
+    pub(crate) fn sample_ledger(&mut self, device: &crate::runtime::DeviceContext) {
+        let mem = device.memory.lock().unwrap();
+        self.ledger_used = mem.used();
+        self.ledger_headroom = mem.headroom();
+        self.ledger_evictions = mem.stats.evictions;
+        self.ledger_dedup_hits = mem.stats.dedup_hits;
     }
 
     /// Snapshot row (`jacc serve-bench --json`).
@@ -292,6 +331,10 @@ impl DeviceBreakdown {
             ("queue_p95_ms", num(self.queue_p95_ms)),
             ("h2d_dedup_hits", num(self.h2d_dedup_hits as f64)),
             ("h2d_transfers", num(self.h2d_transfers as f64)),
+            ("ledger_used", num(self.ledger_used as f64)),
+            ("ledger_headroom", num(self.ledger_headroom as f64)),
+            ("ledger_evictions", num(self.ledger_evictions as f64)),
+            ("ledger_dedup_hits", num(self.ledger_dedup_hits as f64)),
         ])
     }
 }
@@ -460,6 +503,7 @@ impl ServingEngine {
             plan,
             queue: BoundedQueue::new(config.queue_depth.max(1)),
             tracer: config.tracer.clone(),
+            profile: config.profile.clone(),
             latencies: Mutex::new(LatencyLog::default()),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -485,6 +529,15 @@ impl ServingEngine {
     /// The shared plan the workers launch.
     pub fn plan(&self) -> &Arc<CompiledGraph> {
         &self.shared.plan
+    }
+
+    /// Telemetry gauges over the engine's live state, for a
+    /// [`TelemetrySampler`](crate::profile::TelemetrySampler):
+    /// `serve.queue_depth` (admission-queue occupancy). Reading one is
+    /// a single atomic-ish queue-length probe.
+    pub fn gauges(&self) -> Vec<Gauge> {
+        let shared = Arc::clone(&self.shared);
+        vec![Gauge::new("serve.queue_depth", move || shared.queue.len() as f64)]
     }
 
     /// Enqueue one request. Blocks while the queue is full
@@ -549,6 +602,7 @@ fn worker_loop(shared: &Shared) {
         let opts = ExecutionOptions {
             tracer: shared.tracer.clone(),
             trace_id: req.trace,
+            profile: shared.profile.clone(),
             ..ExecutionOptions::default()
         };
         let t0 = Instant::now();
@@ -561,6 +615,9 @@ fn worker_loop(shared: &Shared) {
                 shared.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
                 shared.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
                 shared.latencies.lock().unwrap().record(&timing);
+                if let Some(profile) = &shared.profile {
+                    profile.record_request(&timing);
+                }
                 timing
             }
             Err(_) => {
@@ -782,6 +839,50 @@ mod tests {
         assert_eq!(r.dedup_hit_rate(), 1.0);
         r.h2d_transfers = 8;
         assert_eq!(r.dedup_hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn device_breakdown_reports_ledger_gauges() {
+        let d = DeviceBreakdown {
+            device: 2,
+            requests: 9,
+            ledger_used: 4096,
+            ledger_headroom: 1024,
+            ledger_evictions: 3,
+            ledger_dedup_hits: 7,
+            ..Default::default()
+        };
+        let line = d.line();
+        assert!(line.contains("ledger 4096 B used / 1024 B free"), "{line}");
+        assert!(line.contains("3 evictions, 7 dedup"), "{line}");
+        let v = Value::parse(&d.to_json().to_json_pretty(2)).unwrap();
+        assert_eq!(v.get("ledger_used").as_u64(), Some(4096));
+        assert_eq!(v.get("ledger_headroom").as_u64(), Some(1024));
+        assert_eq!(v.get("ledger_evictions").as_u64(), Some(3));
+        assert_eq!(v.get("ledger_dedup_hits").as_u64(), Some(7));
+    }
+
+    /// Requests served with a profile store attached land in its
+    /// request summaries (the zero-task plan exercises the full
+    /// engine path without artifacts).
+    #[test]
+    fn served_requests_feed_an_attached_profile_store() {
+        use crate::profile::ProfileStore;
+        let plan = Arc::new(crate::coordinator::TaskGraph::new().compile().unwrap());
+        let store = Arc::new(ProfileStore::new());
+        let config = ServeConfig::with_workers(2).with_profile(Arc::clone(&store));
+        let engine = ServingEngine::start(plan, config).unwrap();
+        assert_eq!(engine.gauges().len(), 1);
+        assert_eq!(engine.gauges()[0].name(), "serve.queue_depth");
+        let tickets: Vec<_> = (0..5).map(|_| engine.submit(Bindings::new()).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let report = engine.shutdown();
+        assert_eq!(report.requests, 5);
+        assert_eq!(store.requests().requests, 5);
+        assert_eq!(store.metrics().counter("profile.launch_obs"), 5);
+        assert!(store.requests().total_ms.max_value() >= 0.0);
     }
 
     #[test]

@@ -17,14 +17,20 @@ use crate::metrics::Metrics;
 use crate::substrate::json::{s, Value};
 
 /// Schema tag stamped into every snapshot under the `"schema"` key.
-/// v2 adds the micro-batching surface: the `"serve-bench-batch"` kind
-/// and the batch fields in `ServeReport::to_json` (`batches`,
-/// `batch_p50/p95/max`, `batch_wait_p95_ms`, `amortized_launch_ms`).
-pub const SCHEMA: &str = "jacc.metrics.v2";
+/// v3 adds the continuous-profiling surface: the `"profile"` kind
+/// (`jacc profile --json`), per-device ledger gauges on
+/// `ServeReport::to_json` per-device rows (`ledger_used`,
+/// `ledger_headroom`, `ledger_evictions`, `ledger_dedup_hits`), and the
+/// embedded `ProfileStore` / `CalibrationReport` documents.
+pub const SCHEMA: &str = "jacc.metrics.v3";
 
-/// The pre-batching schema tag; [`MetricsSnapshot::validate`] still
-/// accepts documents written by older binaries (v1 is a strict subset
-/// of v2 — no field changed meaning, v2 only added fields).
+/// The pre-profiling schema tag (micro-batching era);
+/// [`MetricsSnapshot::validate`] still accepts documents written by
+/// older binaries (each revision only added fields — none changed
+/// meaning).
+pub const SCHEMA_V2: &str = "jacc.metrics.v2";
+
+/// The original schema tag, still accepted on read.
 pub const SCHEMA_V1: &str = "jacc.metrics.v1";
 
 /// Builder for one snapshot document.
@@ -68,13 +74,14 @@ impl MetricsSnapshot {
             .with_context(|| format!("writing snapshot to {}", path.display()))
     }
 
-    /// Validate a parsed document as a snapshot: the schema tag (v2 or
-    /// the backward-compatible v1) and a kind must be present.
+    /// Validate a parsed document as a snapshot: the schema tag (v3 or
+    /// the backward-compatible v2/v1) and a kind must be present.
     pub fn validate(v: &Value) -> Result<()> {
         let schema = v.get("schema").as_str().context("snapshot missing schema tag")?;
         anyhow::ensure!(
-            schema == SCHEMA || schema == SCHEMA_V1,
-            "unexpected snapshot schema {schema:?} (want {SCHEMA:?} or legacy {SCHEMA_V1:?})"
+            schema == SCHEMA || schema == SCHEMA_V2 || schema == SCHEMA_V1,
+            "unexpected snapshot schema {schema:?} \
+             (want {SCHEMA:?} or legacy {SCHEMA_V2:?}/{SCHEMA_V1:?})"
         );
         v.get("kind").as_str().context("snapshot missing kind")?;
         Ok(())
@@ -114,11 +121,13 @@ mod tests {
     }
 
     #[test]
-    fn validate_accepts_current_and_legacy_schema() {
+    fn validate_accepts_current_and_legacy_schemas() {
+        let v3 = Value::parse(r#"{"schema": "jacc.metrics.v3", "kind": "x"}"#).unwrap();
+        MetricsSnapshot::validate(&v3).expect("current schema validates");
         let v2 = Value::parse(r#"{"schema": "jacc.metrics.v2", "kind": "x"}"#).unwrap();
-        MetricsSnapshot::validate(&v2).expect("current schema validates");
+        MetricsSnapshot::validate(&v2).expect("legacy v2 snapshots still validate");
         let v1 = Value::parse(r#"{"schema": "jacc.metrics.v1", "kind": "x"}"#).unwrap();
         MetricsSnapshot::validate(&v1).expect("legacy v1 snapshots still validate");
-        assert_eq!(SCHEMA, "jacc.metrics.v2");
+        assert_eq!(SCHEMA, "jacc.metrics.v3");
     }
 }
