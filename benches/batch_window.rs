@@ -11,7 +11,7 @@
 //!                [--window-us 200] [--smoke] [--json F]
 //!
 //! `--smoke` (CI) shrinks to batch-max {1,4} x 16 requests on the tiny
-//! profile and writes the sweep as a `jacc.metrics.v3` snapshot to
+//! profile and writes the sweep as a `jacc.metrics.v4` snapshot to
 //! `BENCH_batch.json` at the repository root (override with `--json`).
 //! The sweep FAILS if coalescing does not reduce the amortized launch
 //! cost versus `--batch-max 1` — the bench doubles as the acceptance

@@ -1,0 +1,248 @@
+//! Overload-protection bench: drive one serving engine past saturation
+//! with an open-loop heavy-tail (lognormal) arrival schedule and show
+//! that deadline-aware admission control keeps the interactive latency
+//! tail bounded while a no-admission baseline lets it grow with the
+//! queue. This is a GATE, not a report: the run FAILS unless, at 2x
+//! the measured closed-loop saturation rate,
+//!
+//!   * interactive p99 with admission beats the no-admission baseline,
+//!   * goodput with admission stays within 2x of the baseline's
+//!     (shedding trades completed requests for latency — it must not
+//!     collapse throughput), and
+//!   * every engine satisfies `served + errors + shed == submitted`.
+//!
+//! Run with:  cargo bench --bench overload_shed -- \
+//!                [--benchmark vector_add] [--requests N] [--workers N]
+//!                [--smoke] [--json F]
+//!
+//! `--smoke` (CI) shrinks to the tiny profile and writes the result as
+//! a `jacc.metrics.v4` snapshot to `BENCH_overload.json` at the
+//! repository root (override with `--json`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use jacc::api::*;
+use jacc::devicemodel::CostModel;
+use jacc::serve::loadgen::{self, OpenLoopSpec};
+use jacc::serve::{serve_all, AdmissionConfig, Priority, ServeConfig, ServingEngine};
+use jacc::substrate::cli::Cli;
+use jacc::substrate::json::{num, obj, s, Value};
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("overload_shed", "QoS gate: admission control under 2x overload")
+        .opt("benchmark", "vector_add", "benchmark kernel to serve")
+        .opt("requests", "0", "open-loop requests per run (0 = mode default)")
+        .opt("workers", "0", "serving worker threads (0 = mode default)")
+        .opt("profile", "", "artifact profile (default: JACC_PROFILE or scaled)")
+        .flag("smoke", "CI mode: tiny profile, small request counts")
+        .opt(
+            "json",
+            "",
+            "metrics snapshot output path (--smoke defaults to BENCH_overload.json)",
+        )
+        .parse();
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("overload_shed: artifacts not built (make artifacts); skipping");
+        return Ok(());
+    }
+
+    let smoke = args.has_flag("smoke");
+    let name = args.get_or("benchmark", "vector_add").to_string();
+    let profile = if smoke {
+        "tiny".to_string()
+    } else {
+        let p = args.get_or("profile", "");
+        if p.is_empty() {
+            std::env::var("JACC_PROFILE").unwrap_or_else(|_| "scaled".into())
+        } else {
+            p.to_string()
+        }
+    };
+    let workers = match args.get_usize("workers")? {
+        0 if smoke => 2,
+        0 => 4,
+        w => w,
+    };
+    let requests = match args.get_usize("requests")? {
+        0 if smoke => 160,
+        0 => 512,
+        r => r,
+    };
+    let sat_requests = if smoke { 64 } else { 256 };
+    let json = {
+        let j = args.get_or("json", "");
+        if j.is_empty() && smoke {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_overload.json").to_string()
+        } else {
+            j.to_string()
+        }
+    };
+
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let entry = dev.runtime.manifest().find(&name, "pallas", &profile)?;
+    let n = entry.inputs[0].shape[0];
+    anyhow::ensure!(
+        entry.inputs.iter().all(|d| d.shape == vec![n] && d.dtype == DType::F32),
+        "overload_shed drives rank-1 f32 kernels; {name}.{profile} has other inputs"
+    );
+
+    let mut task = Task::create(
+        &name,
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )?;
+    task.set_parameters(entry.inputs.iter().map(|d| Param::input(&d.name)).collect());
+    let input_names: Vec<String> = entry.inputs.iter().map(|d| d.name.clone()).collect();
+    let mut g = TaskGraph::new().with_profile(&profile);
+    g.execute_task_on(task, &dev)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.pallas.{profile}: {}", plan.stats.summary());
+
+    let mk_bindings = |req: usize| {
+        let mut b = Bindings::new();
+        for (slot, nm) in input_names.iter().enumerate() {
+            let fill = (req % 13) as f32 + slot as f32;
+            b.set(nm, HostValue::f32(vec![n], vec![fill; n]));
+        }
+        b
+    };
+    plan.launch(&mk_bindings(0))?;
+
+    // Phase 1 — measure closed-loop saturation: N workers pulling as
+    // fast as the plan can launch. The offered overload rate is 2x
+    // this, which a closed queue cannot absorb.
+    let reqs: Vec<Bindings> = (0..sat_requests).map(&mk_bindings).collect();
+    let (_, sat) = serve_all(Arc::clone(&plan), ServeConfig::with_workers(workers), reqs)?;
+    anyhow::ensure!(sat.errors == 0, "saturation run errored: {}", sat.errors);
+    anyhow::ensure!(sat.throughput_rps > 0.0, "saturation run measured zero throughput");
+    let offered = 2.0 * sat.throughput_rps;
+
+    // Deadline budget: generous against the unloaded latency tail (4x
+    // closed-loop p95) so feasible requests are admitted, but far
+    // below what an unbounded overload queue inflicts.
+    let model = CostModel::new(dev.spec.clone());
+    let predicted_us = jacc::analysis::predicted_plan_cost_us(&plan, &model)?;
+    let deadline_ms = (4.0 * sat.p95_ms).max(2.0 * predicted_us / 1000.0).max(0.5);
+    println!(
+        "saturation: {:.0} rps closed-loop (p95 {:.3} ms) -> offering {:.0} rps, \
+         deadline {:.2} ms, predicted launch {:.1} us",
+        sat.throughput_rps, sat.p95_ms, offered, deadline_ms, predicted_us
+    );
+
+    let spec = OpenLoopSpec::new(offered, requests)
+        .with_deadline(Duration::from_secs_f64(deadline_ms / 1e3));
+
+    // Phase 2 — baseline: no admission, queue deep enough to hold the
+    // whole run, so every request is served no matter how late.
+    let mut base_config = ServeConfig::with_workers(workers);
+    base_config.queue_depth = requests.max(2 * workers);
+    let base_engine = ServingEngine::start(Arc::clone(&plan), base_config)?;
+    let counter = AtomicUsize::new(0);
+    let base = loadgen::drive(&spec, |class| {
+        let i = counter.fetch_add(1, Ordering::Relaxed);
+        base_engine.submit_with(mk_bindings(i), class)
+    })?;
+    let base_agg = base_engine.shutdown();
+
+    // Phase 3 — admission on: the engine estimates time-to-completion
+    // (queue-wait p95 + predicted launch cost) and sheds doomed
+    // requests instead of serving them late; the shallow default
+    // queue bounds waiting for everyone admitted.
+    let adm_config = ServeConfig::with_workers(workers)
+        .with_admission(AdmissionConfig::new(predicted_us));
+    let adm_engine = ServingEngine::start(Arc::clone(&plan), adm_config)?;
+    let counter = AtomicUsize::new(0);
+    let adm = loadgen::drive(&spec, |class| {
+        let i = counter.fetch_add(1, Ordering::Relaxed);
+        adm_engine.submit_with(mk_bindings(i), class)
+    })?;
+    let adm_agg = adm_engine.shutdown();
+
+    println!("baseline  {}", base.line());
+    println!("admission {}", adm.line());
+    println!(
+        "{:<12} {:>14} {:>14} {:>12} {:>10}",
+        "run", "intr p99 ms", "goodput rps", "completed", "shed"
+    );
+    for (label, rep) in [("baseline", &base), ("admission", &adm)] {
+        println!(
+            "{label:<12} {:>14.3} {:>14.0} {:>12} {:>10}",
+            rep.p99_ms(Priority::Interactive),
+            rep.goodput_rps,
+            rep.completed,
+            rep.shed
+        );
+    }
+
+    // The gate.
+    for (label, agg) in [("baseline", &base_agg), ("admission", &adm_agg)] {
+        anyhow::ensure!(
+            agg.requests + agg.errors + agg.shed == agg.submitted,
+            "{label} accounting: served {} + errors {} + shed {} != submitted {}",
+            agg.requests,
+            agg.errors,
+            agg.shed,
+            agg.submitted
+        );
+    }
+    anyhow::ensure!(base.errors == 0, "baseline run errored: {}", base.errors);
+    anyhow::ensure!(adm.errors == 0, "admission run errored: {}", adm.errors);
+    anyhow::ensure!(base_agg.shed == 0, "baseline must not shed, shed {}", base_agg.shed);
+    anyhow::ensure!(
+        adm.lane_completed(Priority::Interactive) > 0,
+        "admission run starved the interactive lane entirely"
+    );
+    anyhow::ensure!(
+        adm.p99_ms(Priority::Interactive) < base.p99_ms(Priority::Interactive),
+        "GATE: interactive p99 with admission ({:.3} ms) must beat the no-admission \
+         baseline ({:.3} ms) at 2x saturation",
+        adm.p99_ms(Priority::Interactive),
+        base.p99_ms(Priority::Interactive)
+    );
+    anyhow::ensure!(
+        adm.goodput_rps >= 0.5 * base.goodput_rps,
+        "GATE: admission goodput ({:.0} rps) fell below half the baseline's ({:.0} rps) \
+         — shedding must trade latency for throughput, not collapse it",
+        adm.goodput_rps,
+        base.goodput_rps
+    );
+
+    let mem = dev.memory.lock().unwrap();
+    anyhow::ensure!(
+        mem.used() <= mem.capacity(),
+        "ledger overcommitted: used {} > capacity {}",
+        mem.used(),
+        mem.capacity()
+    );
+    drop(mem);
+
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("overload_shed");
+        snap.set("benchmark", s(&name))
+            .set("profile", s(&profile))
+            .set("workers", num(workers as f64))
+            .set("requests", num(requests as f64))
+            .set("smoke", Value::Bool(smoke))
+            .set("saturation_rps", num(sat.throughput_rps))
+            .set("offered_rps", num(offered))
+            .set("deadline_ms", num(deadline_ms))
+            .set("predicted_launch_us", num(predicted_us))
+            .set(
+                "baseline",
+                obj(vec![("open_loop", base.to_json()), ("serve", base_agg.to_json())]),
+            )
+            .set(
+                "admission",
+                obj(vec![("open_loop", adm.to_json()), ("serve", adm_agg.to_json())]),
+            );
+        snap.write(Path::new(&json))?;
+        println!("snapshot -> {json}");
+    }
+    println!("overload_shed OK (gate passed)");
+    Ok(())
+}

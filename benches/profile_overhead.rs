@@ -11,7 +11,7 @@
 //!                [--smoke] [--json F]
 //!
 //! `--smoke` (CI) uses the tiny profile and writes the comparison as a
-//! `jacc.metrics.v3` snapshot to `BENCH_profile.json` at the
+//! `jacc.metrics.v4` snapshot to `BENCH_profile.json` at the
 //! repository root (override with `--json`). Both configurations take
 //! the best of `--trials` runs, interleaved, so machine drift hits
 //! both sides equally.

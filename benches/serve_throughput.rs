@@ -11,7 +11,7 @@
 //!
 //! `--smoke` (CI) shrinks to 1 worker x 8 requests on the tiny
 //! profile so the concurrent path is exercised on every push, and
-//! writes the sweep as a `jacc.metrics.v3` snapshot to
+//! writes the sweep as a `jacc.metrics.v4` snapshot to
 //! `BENCH_serve.json` at the repository root (override with `--json`)
 //! so the serving perf trajectory accumulates across commits.
 

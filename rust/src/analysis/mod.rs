@@ -26,6 +26,7 @@
 //! | `double-write` | warning | a buffer is written twice (plan streams are write-once; blocks aliasing) |
 //! | `dead-write` | warning | a device buffer is written but never read (dead intermediate — fusion/aliasing input) |
 //! | `capacity-exceeded` | warning | pinned + projected transient bytes exceed the device ledger capacity (the launch would thrash or OOM) |
+//! | `deadline-budget` | warning | (advisory, `jacc lint --deadline-budget-us N`) the plan's calibrated predicted launch cost exceeds the given deadline budget — requests carrying that deadline would be shed at admission before launch |
 //!
 //! Diagnostics surface three ways: the `jacc lint` CLI (human table +
 //! `--json`), a `debug_assertions` pass inside `CompiledGraph::build`
@@ -77,11 +78,12 @@ pub enum Rule {
     DoubleWrite,
     DeadWrite,
     CapacityExceeded,
+    DeadlineBudget,
 }
 
 impl Rule {
     /// Every rule, for "no dead rule" assertions in the test harness.
-    pub const ALL: [Rule; 8] = [
+    pub const ALL: [Rule; 9] = [
         Rule::StageRace,
         Rule::ScheduleOrder,
         Rule::ScheduleCoverage,
@@ -90,6 +92,7 @@ impl Rule {
         Rule::DoubleWrite,
         Rule::DeadWrite,
         Rule::CapacityExceeded,
+        Rule::DeadlineBudget,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -102,6 +105,7 @@ impl Rule {
             Rule::DoubleWrite => "double-write",
             Rule::DeadWrite => "dead-write",
             Rule::CapacityExceeded => "capacity-exceeded",
+            Rule::DeadlineBudget => "deadline-budget",
         }
     }
 
@@ -112,7 +116,10 @@ impl Rule {
             | Rule::ScheduleCoverage
             | Rule::BarrierOrder
             | Rule::UseBeforeInit => Severity::Error,
-            Rule::DoubleWrite | Rule::DeadWrite | Rule::CapacityExceeded => Severity::Warning,
+            Rule::DoubleWrite
+            | Rule::DeadWrite
+            | Rule::CapacityExceeded
+            | Rule::DeadlineBudget => Severity::Warning,
         }
     }
 }
@@ -406,6 +413,46 @@ pub fn analyze(model: &PlanModel) -> AnalysisReport {
 /// run.
 pub fn verify_compiled(plan: &CompiledGraph) -> anyhow::Result<AnalysisReport> {
     Ok(analyze(&PlanModel::from_compiled(plan)?))
+}
+
+/// The cost model's predicted launch cost for one request of `plan`:
+/// the sum of per-kernel estimates over every task launch, in
+/// microseconds. This is the same quantity the serving path feeds an
+/// [`AdmissionConfig`](crate::serve::AdmissionConfig) as
+/// `predicted_launch_us`, so `jacc lint --deadline-budget-us` reasons
+/// about exactly what admission control would enforce.
+pub fn predicted_plan_cost_us(
+    plan: &CompiledGraph,
+    model: &crate::devicemodel::CostModel,
+) -> anyhow::Result<f64> {
+    let mut total_us = 0.0;
+    for node in &plan.nodes {
+        let entry =
+            scheduler::resolve(node.device.runtime.manifest(), &node.task, &plan.profile)?;
+        total_us += model.estimate(&entry).total_us();
+    }
+    Ok(total_us)
+}
+
+/// Advisory deadline-budget rule (`jacc lint --deadline-budget-us N`):
+/// fires when the plan's predicted launch cost alone already exceeds
+/// the budget — a request carrying that deadline is shed at admission
+/// before any queue wait, so serving this plan under that SLO can
+/// never succeed.
+pub fn check_deadline_budget(predicted_us: f64, budget_us: f64) -> Option<Finding> {
+    if predicted_us > budget_us {
+        return Some(Finding::new(
+            Rule::DeadlineBudget,
+            None,
+            None,
+            format!(
+                "predicted launch cost {predicted_us:.1} us exceeds the deadline budget \
+                 of {budget_us:.1} us: every request carrying this deadline would be \
+                 shed at admission"
+            ),
+        ));
+    }
+    None
 }
 
 #[cfg(test)]

@@ -285,6 +285,7 @@ fn mutants_all_detected_and_no_rule_is_dead() {
     fired.push(Rule::DeadWrite);
     fired.push(Rule::DoubleWrite);
     fired.push(Rule::CapacityExceeded);
+    fired.push(Rule::DeadlineBudget);
     for rule in Rule::ALL {
         assert!(fired.contains(&rule), "rule {rule:?} is dead: nothing can trigger it");
     }
@@ -296,6 +297,22 @@ fn mutants_all_detected_and_no_rule_is_dead() {
             "no mutant targets {rule:?}"
         );
     }
+}
+
+#[test]
+fn deadline_budget_rule_is_advisory_and_threshold_exact() {
+    // Within budget (or exactly at it): no finding.
+    assert!(check_deadline_budget(100.0, 100.0).is_none());
+    assert!(check_deadline_budget(99.9, 100.0).is_none());
+    // Over budget: one warning naming both numbers.
+    let f = check_deadline_budget(450.0, 100.0).expect("over-budget plan must warn");
+    assert_eq!(f.rule, Rule::DeadlineBudget);
+    assert_eq!(f.severity, Severity::Warning, "advisory, never a lint error");
+    assert!(f.action_idx.is_none() && f.buf.is_none(), "whole-plan finding");
+    assert!(f.message.contains("450.0"), "{}", f.message);
+    assert!(f.message.contains("100.0"), "{}", f.message);
+    let text = format!("{f}");
+    assert!(text.contains("warning [deadline-budget]"), "{text}");
 }
 
 #[test]

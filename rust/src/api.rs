@@ -364,7 +364,7 @@
 //!   (schema `jacc.timeseries.v1`: a header line, then
 //!   `{"t": secs, "v": [..]}` sample rows), validated by
 //!   `jacc trace-check --timeseries F` alongside the
-//!   `jacc.metrics.v3` snapshots.
+//!   `jacc.metrics.v4` snapshots.
 //!
 //! * **[`CostModel::calibrate`](crate::devicemodel::CostModel::calibrate)**
 //!   — fits the analytic roofline model to measured kernel costs from
@@ -415,6 +415,55 @@
 //! [`AnalysisReport`](crate::analysis::AnalysisReport) also carries
 //! the per-buffer lifetime facts (first-def/last-use, live-range peak
 //! vs. footprint) the planned fusion/aliasing pass will consume.
+//!
+//! ## Overload protection & QoS
+//!
+//! Under sustained overload an unprotected serving queue grows without
+//! bound and *every* request is served late. The admission subsystem
+//! ([`serve::admission`](crate::serve::admission)) sheds doomed work
+//! instead: each request may carry a
+//! [`RequestClass`](crate::serve::RequestClass) — a priority lane
+//! (`Interactive` / `Standard` / `Background`) plus an optional
+//! deadline budget — via `submit_with` on any of the three engines
+//! ([`ServingEngine`](crate::serve::ServingEngine),
+//! [`PoolEngine`](crate::pool::PoolEngine),
+//! [`BatchingEngine`](crate::batch::BatchingEngine)).
+//!
+//! **Admission formula.** With admission enabled
+//! ([`AdmissionConfig`](crate::serve::AdmissionConfig)), the estimated
+//! time-to-completion is `observed queue-wait p95 + calibrated
+//! predicted launch cost` (the cost-model estimate fed in at engine
+//! start — see [`CostModel`](crate::devicemodel::CostModel)). A
+//! request whose estimate already exceeds its budget is shed **at
+//! submit**; one whose queue wait consumed its budget is shed **at
+//! dequeue**; a full lane sheds **queue-full** instead of blocking the
+//! submitter. Every shed is the typed
+//! [`ServeError::Shed`](crate::serve::ServeError) (reason + priority —
+//! never a hang, never a silent drop), counted under the
+//! `serve.shed.*` metrics namespace and rolled into the
+//! [`ServeReport`](crate::serve::ServeReport) QoS block (`submitted`,
+//! `shed`, `shed_rate`, per-reason counters, per-priority p50/p95/p99
+//! rows). Engines satisfy `served + errors + shed == submitted`
+//! exactly.
+//!
+//! **Priority lanes.** The admission queue is strict-priority with an
+//! anti-starvation credit: after `starvation_credit` consecutive
+//! higher-priority pops (default 8), the oldest `Background` request
+//! is served next, so heavy interactive load ages but never starves
+//! batch work. The pool router's least-loaded pick is cost-weighted —
+//! lanes are compared by outstanding *predicted microseconds*, not
+//! request count.
+//!
+//! Surfaces: `jacc serve-bench --open-loop RATE [--deadline-ms D]
+//! [--priority-mix 20/60/20]` replays a lognormal heavy-tail open-loop
+//! schedule through the engine
+//! ([`serve::loadgen`](crate::serve::loadgen)); `benches/
+//! overload_shed.rs` is the CI gate (at 2x saturation, interactive p99
+//! with admission must beat the no-admission baseline without
+//! collapsing goodput); telemetry gains `serve.shed_depth` and
+//! `serve.admission_estimate_us` gauges; and `jacc lint
+//! --deadline-budget-us N` flags plans whose predicted launch cost
+//! alone busts the budget (advisory, never gating).
 
 pub use crate::analysis::{AnalysisReport, BufLifetime, Finding, PlanModel, Rule, Severity};
 pub use crate::coordinator::{
@@ -438,7 +487,10 @@ pub use crate::runtime::{
     Access, Cuda, DType, DeviceContext, DeviceHandle, HostValue, Manifest, PjrtRuntime,
     ShapeError,
 };
+pub use crate::serve::loadgen::{OpenLoopReport, OpenLoopSpec};
 pub use crate::serve::{
-    DeviceBreakdown, RequestTiming, ServeConfig, ServeReport, ServingEngine, Ticket,
+    AdmissionConfig, AdmissionController, BoundedQueue, CapacityError, DeviceBreakdown, Priority,
+    PriorityBreakdown, PriorityQueue, RequestClass, RequestTiming, ServeConfig, ServeError,
+    ServeReport, ServingEngine, ShedReason, Ticket,
 };
 pub use crate::trace::{LogHistogram, MetricsSnapshot, TraceEvent, Tracer, RELATIVE_ERROR};

@@ -18,7 +18,17 @@
 //! is the remaining close-to-reply overhead (fuse copies, co-member
 //! work, output scatter, pool lane wait) — the three partition
 //! submit-to-reply exactly, which `member_timing`'s unit tests assert.
+//!
+//! Overload protection ([`BatchConfig::with_admission`]): the
+//! admission queue becomes priority-ordered and deadline-doomed
+//! members are shed with a typed
+//! [`ServeError::Shed`](crate::serve::ServeError) — at submit, or by
+//! the former the moment it pops them (a doomed member never occupies
+//! a batch slot). Configure admission here, on the batch engine, not
+//! on a pool target: fused batches carry the default class, so a
+//! pool-side controller would shed whole batches.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -30,7 +40,11 @@ use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, GraphOutputs
 use crate::metrics::Metrics;
 use crate::pool::PoolEngine;
 use crate::profile::{Gauge, ProfileStore};
-use crate::serve::{BoundedQueue, Popped, RequestTiming, ServeReport};
+use crate::serve::admission::DEFAULT_STARVATION_CREDIT;
+use crate::serve::{
+    fill_qos, AdmissionConfig, AdmissionController, BoundedQueue, Popped, Priority, PriorityQueue,
+    PushError, QosTotals, RequestClass, RequestTiming, ServeError, ServeReport, ShedReason,
+};
 use crate::trace::{LogHistogram, Tracer};
 
 use super::planner::{BatchPlanner, BatchSpec};
@@ -61,6 +75,9 @@ pub struct BatchConfig {
     /// Optional profile store: fused launches feed per-kernel/stage
     /// observations and every member's timing feeds the request summary.
     pub profile: Option<Arc<ProfileStore>>,
+    /// Optional overload protection: deadline-aware admission on the
+    /// member queue, priority lanes, typed shedding.
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl BatchConfig {
@@ -74,6 +91,7 @@ impl BatchConfig {
             queue_depth: (2 * max_members.max(1) * launchers).max(4),
             tracer: None,
             profile: None,
+            admission: None,
         }
     }
 
@@ -95,6 +113,12 @@ impl BatchConfig {
     /// it for the lifetime of the engine.
     pub fn with_profile(mut self, profile: Arc<ProfileStore>) -> Self {
         self.profile = Some(profile);
+        self
+    }
+
+    /// Enable deadline-aware admission control on the member queue.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = Some(admission);
         self
     }
 }
@@ -132,16 +156,20 @@ impl BatchTicket {
     }
 
     /// Block until this member's batch has been launched and split.
+    ///
+    /// If the serving side dies without replying (a launcher panicked
+    /// and dropped this member's sender), this returns the typed
+    /// [`ServeError::WorkerLost`] rather than hanging or a bare
+    /// channel error — downcast via `anyhow::Error::downcast_ref`.
     pub fn wait(self) -> anyhow::Result<MemberReport> {
-        self.rx
-            .recv()
-            .context("batching engine dropped the request (engine shut down?)")?
+        self.rx.recv().map_err(|_| ServeError::WorkerLost)?
     }
 }
 
 /// One queued member: validated bindings plus routing metadata.
 struct Member {
     bindings: Bindings,
+    class: RequestClass,
     /// Rows along the batch axis (validated at submit).
     rows: usize,
     /// Compatibility key (shared-input content fingerprints).
@@ -168,20 +196,23 @@ enum Target {
 
 /// State shared between submitters, the former and the launchers.
 struct Shared {
-    queue: BoundedQueue<Member>,
+    queue: PriorityQueue<Member>,
     batches: BoundedQueue<FormedBatch>,
     planner: BatchPlanner,
     window: BatchWindow,
     target: Target,
     tracer: Option<Arc<Tracer>>,
     profile: Option<Arc<ProfileStore>>,
+    admission: Option<Arc<AdmissionController>>,
     /// `serve.batch.*` counters (launches, members, rows, pad rows,
     /// close reasons).
     metrics: Metrics,
     latencies: Mutex<crate::serve::LatencyLog>,
     /// Members-per-fused-launch distribution.
     batch_sizes: Mutex<LogHistogram>,
+    submitted: AtomicU64,
     completed: AtomicU64,
+    completed_by_priority: [AtomicU64; Priority::COUNT],
     errors: AtomicU64,
     batches_launched: AtomicU64,
     /// Sum of fused launch walls (nanoseconds) — the numerator of the
@@ -241,18 +272,25 @@ impl BatchingEngine {
             config.max_rows.min(planner.capacity())
         };
         let window = BatchWindow::new(config.max_members, max_rows, config.window);
+        let credit = config
+            .admission
+            .as_ref()
+            .map_or(DEFAULT_STARVATION_CREDIT, |a| a.starvation_credit);
         let shared = Arc::new(Shared {
-            queue: BoundedQueue::new(config.queue_depth.max(1)),
-            batches: BoundedQueue::new((2 * config.launchers).max(2)),
+            queue: PriorityQueue::new(config.queue_depth.max(1), credit)?,
+            batches: BoundedQueue::new((2 * config.launchers).max(2))?,
             planner,
             window,
             target,
             tracer: config.tracer.clone(),
             profile: config.profile.clone(),
+            admission: config.admission.map(|a| Arc::new(AdmissionController::new(a))),
             metrics: Metrics::new(),
             latencies: Mutex::new(crate::serve::LatencyLog::default()),
             batch_sizes: Mutex::new(LogHistogram::new()),
+            submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            completed_by_priority: Default::default(),
             errors: AtomicU64::new(0),
             batches_launched: AtomicU64::new(0),
             launch_total_ns: AtomicU64::new(0),
@@ -294,6 +332,13 @@ impl BatchingEngine {
         &self.shared.metrics
     }
 
+    /// The admission controller, when overload protection is enabled
+    /// (`BatchConfig::with_admission`). Its metrics carry the
+    /// `serve.shed.*` counters.
+    pub fn admission(&self) -> Option<&Arc<AdmissionController>> {
+        self.shared.admission.as_ref()
+    }
+
     /// Telemetry gauges for a [`TelemetrySampler`](crate::profile::TelemetrySampler):
     /// `batch.queue_depth` (admission queue), `batch.sealed_depth`
     /// (formed batches awaiting a launcher) and `batch.window_occupancy`
@@ -303,7 +348,7 @@ impl BatchingEngine {
         let q = Arc::clone(&self.shared);
         let s = Arc::clone(&self.shared);
         let w = Arc::clone(&self.shared);
-        vec![
+        let mut gauges = vec![
             Gauge::new("batch.queue_depth", move || q.queue.len() as f64),
             Gauge::new("batch.sealed_depth", move || s.batches.len() as f64),
             Gauge::new("batch.window_occupancy", move || {
@@ -314,22 +359,63 @@ impl BatchingEngine {
                     w.metrics.counter("serve.batch.members") as f64 / launches as f64
                 }
             }),
-        ]
+        ];
+        if let Some(adm) = &self.shared.admission {
+            let a = Arc::clone(adm);
+            gauges.push(Gauge::new("batch.shed_depth", move || a.shed_total() as f64));
+            let a = Arc::clone(adm);
+            gauges.push(Gauge::new("batch.admission_estimate_us", move || a.estimate_us()));
+        }
+        gauges
     }
 
-    /// Enqueue one request. Validates it against the batch spec first
-    /// (malformed requests are rejected here, never poisoning a formed
-    /// batch), then blocks while the admission queue is full
-    /// (backpressure); fails if the engine is shutting down.
+    /// Enqueue one request in the default class (`Standard`, no
+    /// deadline). Validates it against the batch spec first (malformed
+    /// requests are rejected here, never poisoning a formed batch),
+    /// then blocks while the admission queue is full (backpressure);
+    /// fails if the engine is shutting down.
     pub fn submit(&self, bindings: Bindings) -> anyhow::Result<BatchTicket> {
-        let rows = self.shared.planner.member_rows(&bindings)?;
-        let key = self.shared.planner.compat_key(&bindings);
-        let trace = self.shared.tracer.as_ref().map_or(0, |t| t.trace_id());
+        self.submit_with(bindings, RequestClass::default())
+    }
+
+    /// Enqueue one request with an explicit QoS class. With admission
+    /// enabled the submitter never blocks: deadline-doomed or
+    /// queue-full members fail fast with a typed
+    /// [`ServeError::Shed`]; a malformed request is still a plain
+    /// validation error (it never entered the engine, so it is not
+    /// counted as submitted or shed).
+    pub fn submit_with(
+        &self,
+        bindings: Bindings,
+        class: RequestClass,
+    ) -> anyhow::Result<BatchTicket> {
+        let shared = &self.shared;
+        let rows = shared.planner.member_rows(&bindings)?;
+        let key = shared.planner.compat_key(&bindings);
+        shared.submitted.fetch_add(1, Ordering::Relaxed);
+        let trace = shared.tracer.as_ref().map_or(0, |t| t.trace_id());
         let (tx, ticket) = BatchTicket::channel();
-        self.shared
-            .queue
-            .push(Member { bindings, rows, key, submitted: Instant::now(), trace, reply: tx })
-            .map_err(|_| anyhow!("batching engine is shut down"))?;
+        let member =
+            Member { bindings, class, rows, key, submitted: Instant::now(), trace, reply: tx };
+        if let Some(adm) = &shared.admission {
+            if let Err(shed) = adm.admit_at_submit(class) {
+                return Err(shed.into());
+            }
+            return match shared.queue.try_push(class.priority, member) {
+                Ok(()) => Ok(ticket),
+                Err(PushError::Full(_)) => {
+                    Err(adm.shed(ShedReason::QueueFull, class.priority).into())
+                }
+                Err(PushError::Closed(_)) => {
+                    shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                    Err(anyhow!("batching engine is shut down"))
+                }
+            };
+        }
+        shared.queue.push(class.priority, member).map_err(|_| {
+            shared.submitted.fetch_sub(1, Ordering::Relaxed);
+            anyhow!("batching engine is shut down")
+        })?;
         Ok(ticket)
     }
 
@@ -362,7 +448,23 @@ impl BatchingEngine {
             },
             ..ServeReport::default()
         };
-        shared.latencies.lock().unwrap().fill(&mut report);
+        let mut totals = QosTotals {
+            submitted: shared.submitted.load(Ordering::Relaxed),
+            ..QosTotals::default()
+        };
+        for (slot, count) in
+            totals.completed_by_priority.iter_mut().zip(&shared.completed_by_priority)
+        {
+            *slot = count.load(Ordering::Relaxed);
+        }
+        if let Some(adm) = &shared.admission {
+            totals.add_admission(adm);
+        }
+        {
+            let log = shared.latencies.lock().unwrap();
+            log.fill(&mut report);
+            fill_qos(&mut report, &totals, &log);
+        }
         {
             let sizes = shared.batch_sizes.lock().unwrap();
             report.batch_p50 = sizes.percentile(50.0);
@@ -398,15 +500,41 @@ impl Drop for BatchingEngine {
     }
 }
 
-/// The single window-former thread: pops members in arrival order and
-/// runs the close policy. A member that cannot join the forming batch
-/// (incompatible key, or rows that would overflow) seals the batch and
-/// seeds the next one — nothing is reordered past it.
+/// Dequeue-time admission for one popped member: a member whose queue
+/// wait already consumed its deadline budget is shed (typed reply)
+/// before it can occupy a batch slot. Returns `None` when shed.
+fn shed_if_doomed(shared: &Shared, member: Member) -> Option<Member> {
+    if let Some(adm) = &shared.admission {
+        if let Err(shed) = adm.check_at_dequeue(member.class, member.submitted.elapsed()) {
+            let _ = member.reply.send(Err(shed.into()));
+            return None;
+        }
+    }
+    Some(member)
+}
+
+/// Blocking pop that skips (and sheds) doomed members.
+fn pop_admitted(shared: &Shared) -> Option<Member> {
+    while let Some((_, member)) = shared.queue.pop() {
+        if let Some(member) = shed_if_doomed(shared, member) {
+            return Some(member);
+        }
+    }
+    None
+}
+
+/// The single window-former thread: pops members in priority order
+/// (arrival order within a lane) and runs the close policy. A member
+/// that cannot join the forming batch (incompatible key, or rows that
+/// would overflow) seals the batch and seeds the next one — nothing is
+/// reordered past it. (The seed member carried over from a sealed
+/// batch passed its dequeue check when first popped and is not
+/// re-checked.)
 fn former_loop(shared: &Shared) {
     let window = shared.window;
     let mut pending: Option<Member> = None;
     loop {
-        let first = match pending.take().or_else(|| shared.queue.pop()) {
+        let first = match pending.take().or_else(|| pop_admitted(shared)) {
             Some(m) => m,
             None => break, // closed + drained, nothing pending
         };
@@ -418,7 +546,8 @@ fn former_loop(shared: &Shared) {
                 break CloseReason::Size;
             }
             match shared.queue.pop_deadline(window.deadline(&forming)) {
-                Popped::Item(m) => {
+                Popped::Item((_, m)) => {
+                    let Some(m) = shed_if_doomed(shared, m) else { continue };
                     if m.key == key && window.fits(&forming, m.rows) {
                         window.admit(&mut forming, m.rows);
                         members.push(m);
@@ -445,7 +574,16 @@ fn former_loop(shared: &Shared) {
 
 fn launcher_loop(shared: &Shared) {
     while let Some(batch) = shared.batches.pop() {
-        launch_batch(shared, batch);
+        // A panic inside the fused launch must not take the launcher
+        // down — that would strand every later batch behind a dead
+        // thread. Contain it; the batch's reply senders drop with the
+        // panicked frame, so each member's `BatchTicket::wait` returns
+        // the typed `ServeError::WorkerLost`.
+        let members = batch.members.len() as u64;
+        if catch_unwind(AssertUnwindSafe(|| launch_batch(shared, batch))).is_err() {
+            shared.errors.fetch_add(members, Ordering::Relaxed);
+            shared.metrics.incr("serve.batch.launch_errors");
+        }
     }
 }
 
@@ -538,11 +676,13 @@ fn launch_batch(shared: &Shared, batch: FormedBatch) {
                 launch_wall,
             );
         }
-        shared.latencies.lock().unwrap().record(&timing);
+        shared.latencies.lock().unwrap().record(&timing, member.class.priority);
         if let Some(profile) = &shared.profile {
             profile.record_request(&timing);
         }
         shared.completed.fetch_add(1, Ordering::Relaxed);
+        shared.completed_by_priority[member.class.priority.index()]
+            .fetch_add(1, Ordering::Relaxed);
         let _ = member.reply.send(Ok(MemberReport {
             outputs,
             timing,

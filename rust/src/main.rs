@@ -15,7 +15,10 @@
 //!                                         (--devices N = pool routing
 //!                                         with per-device breakdowns;
 //!                                         --batch-max N = micro-batched
-//!                                         serving with fused launches)
+//!                                         serving with fused launches;
+//!                                         --open-loop RATE = heavy-tail
+//!                                         overload run with deadline-aware
+//!                                         admission and load shedding)
 //!   jacc profile     --benchmark B [...]  continuous profiling: N profiled
 //!                                         iterations into a ProfileStore,
 //!                                         cost-model calibration with a
@@ -55,7 +58,8 @@ use jacc::coordinator::histogram_summary;
 use jacc::devicemodel::{CostModel, DeviceSpec};
 use jacc::pool::PoolEngine;
 use jacc::profile::{ledger_gauges, validate_lines, Gauge, ProfileStore, TelemetrySampler};
-use jacc::serve::{ServeConfig, ServingEngine};
+use jacc::serve::loadgen::{self, OpenLoopSpec};
+use jacc::serve::{AdmissionConfig, Priority, ServeConfig, ServingEngine};
 use jacc::substrate::cli::Cli;
 use jacc::substrate::json::{arr, num, obj, s, Value};
 use jacc::trace::{chrome, MetricsSnapshot, Tracer};
@@ -122,7 +126,33 @@ fn main() -> anyhow::Result<()> {
         "sample gauges into a jacc.timeseries.v1 JSON-lines file at this path \
          (serve-bench / profile)",
     )
-    .opt("timeseries", "", "input jacc.timeseries.v1 file to validate (trace-check)");
+    .opt("timeseries", "", "input jacc.timeseries.v1 file to validate (trace-check)")
+    .opt(
+        "open-loop",
+        "0",
+        "offered load in requests/s (serve-bench): replay a lognormal open-loop arrival \
+         schedule against the single-plan engine instead of the closed-loop driver; \
+         0 = closed loop",
+    )
+    .opt(
+        "deadline-ms",
+        "0",
+        "deadline budget per request in ms (serve-bench --open-loop): enables \
+         deadline-aware admission control; doomed requests are shed, not served late; \
+         0 = no deadlines",
+    )
+    .opt(
+        "priority-mix",
+        "20/60/20",
+        "interactive/standard/background shares for generated open-loop traffic \
+         (serve-bench --open-loop)",
+    )
+    .opt(
+        "deadline-budget-us",
+        "0",
+        "advisory lint budget in us: warn when a plan's predicted launch cost alone \
+         exceeds this deadline (requests carrying it would always be shed); 0 = off",
+    );
     let args = cli.parse();
 
     match args.positional().first().map(|s| s.as_str()) {
@@ -156,6 +186,9 @@ fn main() -> anyhow::Result<()> {
             args.get_usize("batch-max").unwrap_or(0),
             args.get_usize("batch-window-us").unwrap_or(200),
             args.get_or("telemetry", ""),
+            args.get_or("open-loop", "0").parse::<f64>().unwrap_or(0.0),
+            args.get_or("deadline-ms", "0").parse::<f64>().unwrap_or(0.0),
+            args.get_or("priority-mix", "20/60/20"),
         ),
         Some("profile") => profile_cmd(
             args.get_or("benchmark", ""),
@@ -178,6 +211,7 @@ fn main() -> anyhow::Result<()> {
             args.has_flag("no-opt"),
             args.has_flag("smoke"),
             args.get_or("json", ""),
+            args.get_or("deadline-budget-us", "0").parse::<f64>().unwrap_or(0.0),
         ),
         other => {
             eprintln!(
@@ -512,6 +546,9 @@ fn serve_bench(
     batch_max: usize,
     batch_window_us: usize,
     telemetry: &str,
+    open_loop: f64,
+    deadline_ms: f64,
+    priority_mix: &str,
 ) -> anyhow::Result<()> {
     // CI smoke mode: tiny shapes, few requests, and a graceful skip
     // when the AOT artifacts are not built (mirrors the benches).
@@ -528,6 +565,16 @@ fn serve_bench(
     anyhow::ensure!(workers > 0, "--workers must be positive");
     anyhow::ensure!(requests > 0, "--requests must be positive");
     let tracer = if trace.is_empty() { None } else { Some(Arc::new(Tracer::new())) };
+    if open_loop > 0.0 {
+        anyhow::ensure!(
+            batch_max == 0,
+            "--open-loop drives the single-plan engine; drop --batch-max"
+        );
+        return serve_bench_open_loop(
+            name, profile, variant, workers, requests, queue_depth, open_loop, deadline_ms,
+            priority_mix, verbose, json, &tracer, trace, telemetry,
+        );
+    }
     let pool_width = if devices == 0 { Cuda::device_count() } else { devices };
     if batch_max > 0 {
         return serve_bench_batched(
@@ -620,6 +667,140 @@ fn serve_bench(
         println!("snapshot -> {json}");
     }
     write_trace_file(&tracer, trace)
+}
+
+/// Parse `"20/60/20"` into interactive / standard / background shares
+/// (normalized later by the load generator).
+fn parse_priority_mix(text: &str) -> anyhow::Result<[f64; 3]> {
+    let parts = text
+        .split('/')
+        .map(|p| p.trim().parse::<f64>())
+        .collect::<Result<Vec<f64>, _>>()
+        .with_context(|| format!("--priority-mix {text:?} (want e.g. 20/60/20)"))?;
+    anyhow::ensure!(
+        parts.len() == 3 && parts.iter().all(|v| *v >= 0.0) && parts.iter().sum::<f64>() > 0.0,
+        "--priority-mix wants three non-negative shares summing above zero, \
+         e.g. 20/60/20 (got {text:?})"
+    );
+    Ok([parts[0], parts[1], parts[2]])
+}
+
+/// Open-loop overload driver (`--open-loop RATE`): generate a
+/// lognormal heavy-tail arrival schedule at the offered rate, submit
+/// each request at its scheduled instant with a generated priority
+/// class (and the `--deadline-ms` budget when set), and report
+/// per-priority latency plus shed accounting. Admission control is
+/// always on for this path: the engine sheds requests whose estimated
+/// completion (queue-wait p95 + calibrated predicted launch cost)
+/// would bust their deadline, instead of serving them late.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_open_loop(
+    name: &str,
+    profile: &str,
+    variant: &str,
+    workers: usize,
+    requests: usize,
+    queue_depth: usize,
+    rate_rps: f64,
+    deadline_ms: f64,
+    priority_mix: &str,
+    verbose: bool,
+    json: &str,
+    tracer: &Option<Arc<Tracer>>,
+    trace: &str,
+    telemetry: &str,
+) -> anyhow::Result<()> {
+    let mix = parse_priority_mix(priority_mix)?;
+    let dev = Cuda::get_device(0)?.create_device_context()?;
+    let (g, _id, _) = build_graph(&dev, name, profile, variant, false)?;
+    let plan = Arc::new(g.compile()?);
+    println!("{name}.{variant}.{profile}: {}", plan.stats.summary());
+    plan.launch(&Bindings::new())?;
+
+    // The admission estimate needs the plan's predicted launch cost:
+    // sum the calibrated cost model over every kernel the plan runs.
+    let model = CostModel::new(dev.spec.clone());
+    let predicted_us = jacc::analysis::predicted_plan_cost_us(&plan, &model)?;
+
+    let mut config =
+        ServeConfig::with_workers(workers).with_admission(AdmissionConfig::new(predicted_us));
+    if queue_depth > 0 {
+        config.queue_depth = queue_depth;
+    }
+    if let Some(t) = tracer {
+        config = config.with_tracer(Arc::clone(t));
+    }
+    let store = (!telemetry.is_empty()).then(|| Arc::new(ProfileStore::new()));
+    if let Some(st) = &store {
+        config = config.with_profile(Arc::clone(st));
+    }
+    let engine = ServingEngine::start(Arc::clone(&plan), config)?;
+    let sampler = if telemetry.is_empty() {
+        None
+    } else {
+        let mut gauges = engine.gauges();
+        gauges.extend(ledger_gauges(&dev));
+        start_sampler(telemetry, gauges)?
+    };
+
+    let mut spec = OpenLoopSpec::new(rate_rps, requests).with_mix(mix);
+    if deadline_ms > 0.0 {
+        spec = spec.with_deadline(std::time::Duration::from_secs_f64(deadline_ms / 1e3));
+    }
+    println!(
+        "open-loop: offering {rate_rps:.0} rps over {requests} requests \
+         (mix {priority_mix}, deadline {deadline_ms} ms, \
+         predicted launch {predicted_us:.1} us)"
+    );
+    let report = loadgen::drive(&spec, |class| engine.submit_with(Bindings::new(), class))?;
+    let agg = engine.shutdown();
+    anyhow::ensure!(
+        agg.requests + agg.errors + agg.shed == agg.submitted,
+        "accounting: served {} + errors {} + shed {} != submitted {}",
+        agg.requests,
+        agg.errors,
+        agg.shed,
+        agg.submitted
+    );
+    write_timeseries(sampler, telemetry)?;
+    if let Some(st) = &store {
+        println!("profile: {} observations recorded", st.observations());
+    }
+    println!("open-loop {}", report.line());
+    println!(
+        "open-loop p99 by lane: interactive {:.2} ms, standard {:.2} ms, \
+         background {:.2} ms",
+        report.p99_ms(Priority::Interactive),
+        report.p99_ms(Priority::Standard),
+        report.p99_ms(Priority::Background)
+    );
+    println!("serve-bench {}", agg.summary());
+    {
+        let mem = dev.memory.lock().unwrap();
+        anyhow::ensure!(
+            mem.used() <= mem.capacity(),
+            "ledger overcommitted: used {} > capacity {}",
+            mem.used(),
+            mem.capacity()
+        );
+    }
+    if verbose {
+        println!("launch metrics:\n{}", plan.metrics.report());
+    }
+    if !json.is_empty() {
+        let mut snap = MetricsSnapshot::new("serve-bench");
+        snap.set("benchmark", s(name))
+            .set("variant", s(variant))
+            .set("profile", s(profile))
+            .set("workers", num(workers as f64))
+            .set("requests", num(requests as f64))
+            .set("serve", agg.to_json())
+            .set("open_loop", report.to_json())
+            .add_metrics("plan", &plan.metrics);
+        snap.write(Path::new(json))?;
+        println!("snapshot -> {json}");
+    }
+    write_trace_file(tracer, trace)
 }
 
 /// Pool-routed serving: one plan replica per device, every request
@@ -1057,7 +1238,11 @@ fn profile_cmd(
 /// `jacc lint` — compile each target plan and run the static verifier
 /// (see `jacc::analysis`): schedule coverage and races, buffer
 /// lifetimes, projected memory vs. the device ledger. Exits non-zero
-/// on any finding, so CI can gate on it.
+/// on any finding, so CI can gate on it. `--deadline-budget-us N`
+/// additionally flags plans whose predicted launch cost alone exceeds
+/// the budget (requests carrying that deadline would always be shed at
+/// admission) — advisory only, never gating.
+#[allow(clippy::too_many_arguments)]
 fn lint(
     benchmark: &str,
     profile: &str,
@@ -1065,6 +1250,7 @@ fn lint(
     no_opt: bool,
     smoke: bool,
     json: &str,
+    deadline_budget_us: f64,
 ) -> anyhow::Result<()> {
     if !Manifest::default_dir().join("manifest.json").exists() {
         if smoke {
@@ -1107,11 +1293,19 @@ fn lint(
         "plan", "actions", "stages", "stream", "footprint", "peak live", "verdict",
     ]);
     let mut all_findings: Vec<(String, jacc::analysis::Finding)> = Vec::new();
+    let mut advisories: Vec<(String, jacc::analysis::Finding)> = Vec::new();
+    let model = CostModel::new(dev.spec.clone());
     let mut plans_json = Vec::new();
     for (label, g) in &targets {
         let actions = g.optimized_actions()?;
         let plan = g.compile()?;
         let report = jacc::analysis::verify_compiled(&plan)?;
+        if deadline_budget_us > 0.0 {
+            let cost = jacc::analysis::predicted_plan_cost_us(&plan, &model)?;
+            if let Some(f) = jacc::analysis::check_deadline_budget(cost, deadline_budget_us) {
+                advisories.push((label.clone(), f));
+            }
+        }
         table.row(vec![
             label.clone(),
             plan.stats.actions.to_string(),
@@ -1133,12 +1327,16 @@ fn lint(
     for (label, f) in &all_findings {
         println!("  {label}: {f}");
     }
+    for (label, f) in &advisories {
+        println!("  advisory {label}: {f}");
+    }
     if !json.is_empty() {
         let v = obj(vec![
             ("schema", s("jacc.lint.v1")),
             ("kind", s("lint")),
             ("plans", arr(plans_json)),
             ("findings", num(all_findings.len() as f64)),
+            ("advisories", num(advisories.len() as f64)),
         ]);
         std::fs::write(json, v.to_json_pretty(2))?;
         println!("lint: wrote {json}");
@@ -1149,7 +1347,15 @@ fn lint(
         all_findings.len(),
         targets.len()
     );
-    println!("lint: {} plan(s) clean", targets.len());
+    if advisories.is_empty() {
+        println!("lint: {} plan(s) clean", targets.len());
+    } else {
+        println!(
+            "lint: {} plan(s) clean ({} advisory deadline-budget finding(s), not gating)",
+            targets.len(),
+            advisories.len()
+        );
+    }
     Ok(())
 }
 

@@ -3,7 +3,7 @@
 //! the ablation benches read these to show exactly which actions the
 //! optimizer removed (paper §2.3 "eliminate, merge and re-organize"),
 //! and `trace::MetricsSnapshot` exports the whole registry as a
-//! `jacc.metrics.v3` JSON snapshot (`jacc serve-bench --json`,
+//! `jacc.metrics.v4` JSON snapshot (`jacc serve-bench --json`,
 //! `BENCH_serve.json`) so the perf trajectory is machine-readable.
 //! The continuous-profiling layer adds the `profile.*` namespace
 //! (`profile.kernel_obs`, `profile.h2d_obs`, `profile.d2h_obs`,

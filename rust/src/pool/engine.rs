@@ -1,14 +1,22 @@
 //! [`PoolEngine`] — the device-balanced serving engine: whole requests
 //! routed across the replicas of a [`ReplicatedGraph`].
 //!
-//! Each pool device gets its own *lane*: a bounded admission queue, a
+//! Each pool device gets its own *lane*: a bounded priority queue, a
 //! set of worker threads launching that device's replica, and an
 //! outstanding-work counter. [`submit`] routes a request to the lane
-//! with the least outstanding work (submitted-but-unfinished requests;
-//! ties break to the lowest device index), so a device stuck on a slow
-//! request stops attracting new ones — Tornado-style dynamic
-//! scheduling at request granularity rather than compile-time
-//! placement.
+//! with the least outstanding *predicted work* — each queued-or-in-
+//! flight request is weighted by the lane's calibrated predicted
+//! launch cost in microseconds (weight 1 when admission is off, which
+//! degrades to plain request counting; ties break to the lowest
+//! device index) — so a device stuck on a slow request stops
+//! attracting new ones: Tornado-style dynamic scheduling at request
+//! granularity rather than compile-time placement.
+//!
+//! With [`PoolConfig::with_admission`] each lane also gets its own
+//! [`AdmissionController`]: deadline-doomed requests are shed at
+//! submit or at dequeue with a typed [`ServeError::Shed`] (see
+//! [`crate::serve::admission`] for the estimate formula), and lanes
+//! serve strict priority order with the anti-starvation credit.
 //!
 //! [`shutdown`] aggregates every lane into one [`ServeReport`] whose
 //! `per_device` rows attribute requests, errors and queue-wait tails
@@ -18,6 +26,7 @@
 //! [`submit`]: PoolEngine::submit
 //! [`shutdown`]: PoolEngine::shutdown
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -27,8 +36,11 @@ use anyhow::Context;
 
 use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionReport};
 use crate::profile::{Gauge, ProfileStore};
+use crate::serve::admission::DEFAULT_STARVATION_CREDIT;
 use crate::serve::{
-    BoundedQueue, DeviceBreakdown, LatencyLog, RequestTiming, ServeReport, Served, Ticket,
+    fill_qos, AdmissionConfig, AdmissionController, DeviceBreakdown, LatencyLog, Priority,
+    PriorityQueue, PushError, QosTotals, RequestClass, RequestTiming, ServeError, ServeReport,
+    Served, ShedReason, Ticket,
 };
 use crate::trace::Tracer;
 
@@ -48,6 +60,11 @@ pub struct PoolConfig {
     /// Optional profile store: routed requests record per-kernel and
     /// request-timing observations into it.
     pub profile: Option<Arc<ProfileStore>>,
+    /// Optional overload protection: every lane gets its own
+    /// [`AdmissionController`] built from this config, and the
+    /// router's least-loaded pick becomes cost-weighted by
+    /// `predicted_launch_us`.
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl PoolConfig {
@@ -57,6 +74,7 @@ impl PoolConfig {
             queue_depth: 2 * workers_per_device.max(1),
             tracer: None,
             profile: None,
+            admission: None,
         }
     }
 
@@ -72,6 +90,12 @@ impl PoolConfig {
         self.profile = Some(profile);
         self
     }
+
+    /// Enable deadline-aware admission control on every lane.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = Some(admission);
+        self
+    }
 }
 
 impl Default for PoolConfig {
@@ -83,6 +107,7 @@ impl Default for PoolConfig {
 /// One queued pool request.
 struct PoolRequest {
     bindings: Bindings,
+    class: RequestClass,
     submitted: Instant,
     /// Trace id for span recording (0 when the engine has no tracer).
     trace: u64,
@@ -93,11 +118,20 @@ struct PoolRequest {
 struct Lane {
     device: usize,
     plan: Arc<CompiledGraph>,
-    queue: BoundedQueue<PoolRequest>,
-    /// Requests submitted to this lane and not yet finished (the
-    /// routing signal — includes queued *and* in-flight work).
+    queue: PriorityQueue<PoolRequest>,
+    /// Requests submitted to this lane and not yet finished (includes
+    /// queued *and* in-flight work).
     outstanding: AtomicUsize,
+    /// The routing signal: outstanding work in predicted microseconds
+    /// (`outstanding * cost_weight`). With admission off the weight is
+    /// 1 and this is just the request count.
+    outstanding_us: AtomicU64,
+    /// Predicted launch cost of one request on this lane, µs, floored
+    /// at 1 so queued work is never weightless.
+    cost_weight: u64,
+    admission: Option<Arc<AdmissionController>>,
     completed: AtomicU64,
+    completed_by_priority: [AtomicU64; Priority::COUNT],
     errors: AtomicU64,
     /// Upload-cache hits / bus transfers on this lane (per-device dedup
     /// rows in the report).
@@ -108,12 +142,22 @@ struct Lane {
     profile: Option<Arc<ProfileStore>>,
 }
 
-/// Index of the least-loaded lane; ties break to the lowest index so
-/// an idle pool fills devices in order.
-pub fn pick_least_loaded(outstanding: &[usize]) -> usize {
+impl Lane {
+    /// Undo the outstanding-work accounting for one request (finished,
+    /// shed at dequeue, or failed to enqueue).
+    fn retire(&self) {
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        self.outstanding_us.fetch_sub(self.cost_weight, Ordering::Relaxed);
+    }
+}
+
+/// Index of the least-loaded lane by outstanding predicted work (µs);
+/// ties break to the lowest index so an idle pool fills devices in
+/// order.
+pub fn pick_least_loaded(outstanding_us: &[u64]) -> usize {
     let mut best = 0usize;
-    for (i, &load) in outstanding.iter().enumerate() {
-        if load < outstanding[best] {
+    for (i, &load) in outstanding_us.iter().enumerate() {
+        if load < outstanding_us[best] {
             best = i;
         }
     }
@@ -125,6 +169,7 @@ pub struct PoolEngine {
     lanes: Vec<Arc<Lane>>,
     workers: Vec<thread::JoinHandle<()>>,
     workers_per_device: usize,
+    submitted: AtomicU64,
     started: Instant,
 }
 
@@ -135,23 +180,38 @@ impl PoolEngine {
             config.workers_per_device > 0,
             "pool engine needs at least one worker per device"
         );
-        let lanes: Vec<Arc<Lane>> = (0..replicated.device_count())
+        let credit = config
+            .admission
+            .as_ref()
+            .map_or(DEFAULT_STARVATION_CREDIT, |a| a.starvation_credit);
+        let cost_weight = config
+            .admission
+            .as_ref()
+            .map_or(1, |a| a.predicted_launch_us.max(1.0) as u64);
+        let lanes = (0..replicated.device_count())
             .map(|d| {
-                Arc::new(Lane {
+                Ok(Arc::new(Lane {
                     device: replicated.device(d).index,
                     plan: Arc::clone(replicated.replica(d)),
-                    queue: BoundedQueue::new(config.queue_depth.max(1)),
+                    queue: PriorityQueue::new(config.queue_depth.max(1), credit)?,
                     outstanding: AtomicUsize::new(0),
+                    outstanding_us: AtomicU64::new(0),
+                    cost_weight,
+                    admission: config
+                        .admission
+                        .clone()
+                        .map(|a| Arc::new(AdmissionController::new(a))),
                     completed: AtomicU64::new(0),
+                    completed_by_priority: Default::default(),
                     errors: AtomicU64::new(0),
                     dedup_hits: AtomicU64::new(0),
                     h2d_transfers: AtomicU64::new(0),
                     latencies: Mutex::new(LatencyLog::default()),
                     tracer: config.tracer.clone(),
                     profile: config.profile.clone(),
-                })
+                }))
             })
-            .collect();
+            .collect::<anyhow::Result<Vec<Arc<Lane>>>>()?;
         let mut workers = Vec::with_capacity(lanes.len() * config.workers_per_device);
         for lane in &lanes {
             for w in 0..config.workers_per_device {
@@ -168,6 +228,7 @@ impl PoolEngine {
             lanes,
             workers,
             workers_per_device: config.workers_per_device,
+            submitted: AtomicU64::new(0),
             started: Instant::now(),
         })
     }
@@ -185,18 +246,25 @@ impl PoolEngine {
         &self.lanes[0].plan
     }
 
-    /// Current outstanding-work snapshot, in device order (what the
-    /// next `submit` routes against).
+    /// Current outstanding-request snapshot, in device order.
     pub fn outstanding(&self) -> Vec<usize> {
         self.lanes.iter().map(|l| l.outstanding.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Current outstanding predicted work in µs, in device order (what
+    /// the next `submit` routes against).
+    pub fn outstanding_us(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.outstanding_us.load(Ordering::Relaxed)).collect()
     }
 
     /// Telemetry gauges over the engine's live state, for a
     /// [`TelemetrySampler`](crate::profile::TelemetrySampler): per
     /// device lane, `pool.d<i>.queue_depth` (admission-queue
-    /// occupancy) and `pool.d<i>.outstanding` (the routing signal).
+    /// occupancy) and `pool.d<i>.outstanding` (the routing signal);
+    /// with admission enabled also `pool.d<i>.admission_estimate_us`
+    /// (the lane's live time-to-completion estimate).
     pub fn gauges(&self) -> Vec<Gauge> {
-        let mut gauges = Vec::with_capacity(2 * self.lanes.len());
+        let mut gauges = Vec::with_capacity(3 * self.lanes.len());
         for lane in &self.lanes {
             let d = lane.device;
             let l = Arc::clone(lane);
@@ -207,27 +275,62 @@ impl PoolEngine {
             gauges.push(Gauge::new(format!("pool.d{d}.outstanding"), move || {
                 l.outstanding.load(Ordering::Relaxed) as f64
             }));
+            if let Some(adm) = &lane.admission {
+                let a = Arc::clone(adm);
+                gauges.push(Gauge::new(format!("pool.d{d}.admission_estimate_us"), move || {
+                    a.estimate_us()
+                }));
+            }
         }
         gauges
     }
 
-    /// Route one request to the least-loaded device lane. Blocks while
-    /// that lane's queue is full (backpressure); fails only if the
-    /// engine is shutting down.
+    /// Route one request in the default class (`Standard`, no
+    /// deadline) to the least-loaded device lane. Blocks while that
+    /// lane's queue is full (backpressure); fails only if the engine
+    /// is shutting down.
     pub fn submit(&self, bindings: Bindings) -> anyhow::Result<Ticket> {
-        let loads = self.outstanding();
+        self.submit_with(bindings, RequestClass::default())
+    }
+
+    /// Route one request with an explicit QoS class. With admission
+    /// enabled the submitter never blocks: deadline-doomed or
+    /// queue-full requests fail fast with a typed
+    /// [`ServeError::Shed`].
+    pub fn submit_with(&self, bindings: Bindings, class: RequestClass) -> anyhow::Result<Ticket> {
+        let loads = self.outstanding_us();
         let lane = &self.lanes[pick_least_loaded(&loads)];
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(adm) = &lane.admission {
+            if let Err(shed) = adm.admit_at_submit(class) {
+                return Err(shed.into());
+            }
+        }
         // Count the request before enqueueing so racing submitters see
-        // it; undo if the queue is already closed.
+        // it; undo if the push does not land.
         lane.outstanding.fetch_add(1, Ordering::Relaxed);
+        lane.outstanding_us.fetch_add(lane.cost_weight, Ordering::Relaxed);
         let (tx, ticket) = Ticket::channel();
         let trace = lane.tracer.as_ref().map_or(0, |t| t.trace_id());
-        if lane
-            .queue
-            .push(PoolRequest { bindings, submitted: Instant::now(), trace, reply: tx })
-            .is_err()
-        {
-            lane.outstanding.fetch_sub(1, Ordering::Relaxed);
+        let request =
+            PoolRequest { bindings, class, submitted: Instant::now(), trace, reply: tx };
+        if let Some(adm) = &lane.admission {
+            return match lane.queue.try_push(class.priority, request) {
+                Ok(()) => Ok(ticket),
+                Err(PushError::Full(_)) => {
+                    lane.retire();
+                    Err(adm.shed(ShedReason::QueueFull, class.priority).into())
+                }
+                Err(PushError::Closed(_)) => {
+                    lane.retire();
+                    self.submitted.fetch_sub(1, Ordering::Relaxed);
+                    Err(anyhow::anyhow!("pool engine is shut down"))
+                }
+            };
+        }
+        if lane.queue.push(class.priority, request).is_err() {
+            lane.retire();
+            self.submitted.fetch_sub(1, Ordering::Relaxed);
             anyhow::bail!("pool engine is shut down");
         }
         Ok(ticket)
@@ -256,6 +359,10 @@ impl PoolEngine {
         let mut errors = 0u64;
         let mut dedup_hits = 0u64;
         let mut h2d_transfers = 0u64;
+        let mut totals = QosTotals {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            ..QosTotals::default()
+        };
         for lane in &self.lanes {
             let completed = lane.completed.load(Ordering::Relaxed);
             let lane_errors = lane.errors.load(Ordering::Relaxed);
@@ -265,6 +372,14 @@ impl PoolEngine {
             errors += lane_errors;
             dedup_hits += lane_dedup;
             h2d_transfers += lane_h2d;
+            for (slot, count) in
+                totals.completed_by_priority.iter_mut().zip(&lane.completed_by_priority)
+            {
+                *slot += count.load(Ordering::Relaxed);
+            }
+            if let Some(adm) = &lane.admission {
+                totals.add_admission(adm);
+            }
             let log = lane.latencies.lock().unwrap();
             merged.merge_from(&log);
             // Reuse the aggregate fill for the lane's own percentiles.
@@ -305,6 +420,7 @@ impl PoolEngine {
             ..ServeReport::default()
         };
         merged.fill(&mut report);
+        fill_qos(&mut report, &totals, &merged);
         report
     }
 
@@ -326,8 +442,19 @@ impl Drop for PoolEngine {
 }
 
 fn lane_loop(lane: &Lane) {
-    while let Some(req) = lane.queue.pop() {
+    while let Some((_, req)) = lane.queue.pop() {
         let queue = req.submitted.elapsed();
+        // Dequeue-time admission: shed a request whose wait already
+        // consumed its budget instead of launching doomed work.
+        if let Some(adm) = &lane.admission {
+            if let Err(shed) = adm.check_at_dequeue(req.class, queue) {
+                lane.retire();
+                let timing =
+                    RequestTiming { queue, device: lane.device, ..RequestTiming::default() };
+                let _ = req.reply.send((Err(shed.into()), timing));
+                continue;
+            }
+        }
         if let Some(tracer) = &lane.tracer {
             tracer.record_at(
                 "serve.queue",
@@ -346,15 +473,22 @@ fn lane_loop(lane: &Lane) {
             ..ExecutionOptions::default()
         };
         let t0 = Instant::now();
-        let result = lane.plan.launch_with(&req.bindings, opts);
+        // A panicking launch must not take the lane worker down with
+        // it — that would strand every queued request behind a dead
+        // thread. Contain it and reply with the typed worker-lost
+        // error instead.
+        let result = catch_unwind(AssertUnwindSafe(|| lane.plan.launch_with(&req.bindings, opts)))
+            .unwrap_or_else(|_| Err(ServeError::WorkerLost.into()));
         let launch = t0.elapsed();
         let timing = match &result {
             Ok(rep) => {
                 let timing = RequestTiming::from_launch(queue, launch, rep, lane.device);
                 lane.completed.fetch_add(1, Ordering::Relaxed);
+                lane.completed_by_priority[req.class.priority.index()]
+                    .fetch_add(1, Ordering::Relaxed);
                 lane.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
                 lane.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
-                lane.latencies.lock().unwrap().record(&timing);
+                lane.latencies.lock().unwrap().record(&timing, req.class.priority);
                 if let Some(profile) = &lane.profile {
                     profile.record_request(&timing);
                 }
@@ -367,7 +501,7 @@ fn lane_loop(lane: &Lane) {
         };
         // The request is finished either way: stop attracting routing
         // pressure for it before replying.
-        lane.outstanding.fetch_sub(1, Ordering::Relaxed);
+        lane.retire();
         let _ = req.reply.send((result, timing));
     }
 }
@@ -403,6 +537,9 @@ mod tests {
         assert_eq!(pick_least_loaded(&[2, 2, 2]), 0, "ties break to lowest index");
         assert_eq!(pick_least_loaded(&[5, 0, 0, 4]), 1, "first minimum wins");
         assert_eq!(pick_least_loaded(&[1, 0]), 1);
+        // Cost weighting: a lane holding one slow request loses to a
+        // lane holding three fast ones.
+        assert_eq!(pick_least_loaded(&[5_000, 3 * 120]), 1);
     }
 
     #[test]
@@ -410,11 +547,15 @@ mod tests {
         let c = PoolConfig::default();
         assert_eq!(c.workers_per_device, 2);
         assert_eq!(c.queue_depth, 4);
+        assert!(c.admission.is_none());
         let c = PoolConfig::with_workers_per_device(3);
         assert_eq!(c.queue_depth, 6);
+        let c = PoolConfig::default().with_admission(AdmissionConfig::new(250.0));
+        assert_eq!(c.admission.unwrap().predicted_launch_us, 250.0);
     }
 
     // End-to-end routing tests (requests spread across devices,
     // per-device rows summing to the aggregate) live in
-    // rust/tests/pool_sharding.rs — they need built artifacts.
+    // rust/tests/pool_sharding.rs — they need built artifacts; QoS
+    // shed/shutdown-under-load paths in rust/tests/overload_qos.rs.
 }

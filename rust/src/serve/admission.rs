@@ -1,0 +1,496 @@
+//! Deadline-aware admission control and load shedding for the serving
+//! path (ROADMAP: "Overload protection and QoS for the request path").
+//!
+//! Under overload a bounded queue alone turns every request into a
+//! tail-latency casualty: requests rot in the queue, miss any deadline
+//! they had, and still consume a launch slot when they finally reach a
+//! worker. The [`AdmissionController`] sheds doomed work instead. Each
+//! request carries a [`RequestClass`] — a [`Priority`] lane plus an
+//! optional deadline budget — and admission estimates time-to-
+//! completion as
+//!
+//! ```text
+//! estimate_us = observed queue-wait p95 + calibrated predicted launch cost
+//! ```
+//!
+//! where the queue-wait p95 comes from a streaming
+//! [`LogHistogram`](crate::trace::LogHistogram) of dequeue-time wait
+//! observations and the predicted launch cost is the
+//! [`CostModel`](crate::devicemodel::CostModel) estimate for the plan
+//! (calibrated against measured `ProfileStore` costs by `jacc
+//! profile`). A request is shed:
+//!
+//! - **at submit** when the estimate already exceeds its budget
+//!   ([`ShedReason::DeadlineAtSubmit`]),
+//! - **at dequeue** when its actual wait plus the predicted launch cost
+//!   exceeds the budget ([`ShedReason::DeadlineAtDequeue`]), or
+//! - **at submit** when the admission queue is full
+//!   ([`ShedReason::QueueFull`] — with admission enabled submitters
+//!   never block; overload sheds instead of propagating backpressure).
+//!
+//! Shed requests receive a typed [`ServeError::Shed`] (reachable
+//! through `anyhow::Error::downcast_ref`), never a hang or a silent
+//! drop, and are counted under the `serve.shed.*` metrics namespace by
+//! reason and by priority.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::Metrics;
+use crate::trace::LogHistogram;
+
+/// Priority lane of a request. Lanes are strict-priority —
+/// `Interactive` is always served before `Standard`, which beats
+/// `Background` — tempered by the anti-starvation credit
+/// ([`AdmissionConfig::starvation_credit`]) so `Background` cannot be
+/// starved forever by a sustained higher-priority flood.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive, user-facing traffic. Served first.
+    Interactive,
+    /// The default lane.
+    #[default]
+    Standard,
+    /// Best-effort traffic (backfills, batch jobs). Served only when
+    /// the higher lanes are empty, except for the starvation credit.
+    Background,
+}
+
+impl Priority {
+    /// All lanes, highest priority first (the dequeue scan order).
+    pub const ALL: [Priority; 3] =
+        [Priority::Interactive, Priority::Standard, Priority::Background];
+
+    /// Number of lanes (array-sizing constant).
+    pub const COUNT: usize = 3;
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Background => "background",
+        }
+    }
+
+    /// Lane index: 0 = highest priority.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    /// The `serve.shed.*` counter for sheds of this priority.
+    pub fn shed_counter(self) -> &'static str {
+        match self {
+            Priority::Interactive => "serve.shed.interactive",
+            Priority::Standard => "serve.shed.standard",
+            Priority::Background => "serve.shed.background",
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// QoS class of one request: a priority lane plus an optional deadline
+/// budget (total submit-to-reply time the caller is willing to wait).
+/// `Default` is `Standard` with no deadline — exactly the pre-QoS
+/// behavior, which is what the plain `submit` paths use.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestClass {
+    pub priority: Priority,
+    /// Deadline budget. `None` disables deadline shedding for this
+    /// request (it can still be shed on a full queue when admission is
+    /// enabled).
+    pub deadline: Option<Duration>,
+}
+
+impl RequestClass {
+    pub fn new(priority: Priority) -> Self {
+        Self { priority, deadline: None }
+    }
+
+    pub fn interactive() -> Self {
+        Self::new(Priority::Interactive)
+    }
+
+    pub fn standard() -> Self {
+        Self::new(Priority::Standard)
+    }
+
+    pub fn background() -> Self {
+        Self::new(Priority::Background)
+    }
+
+    /// Attach a deadline budget.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// At submit: queue-wait p95 + predicted launch cost already
+    /// exceeds the request's deadline budget — it is doomed before it
+    /// enters the queue.
+    DeadlineAtSubmit,
+    /// At dequeue: the request's actual queue wait plus the predicted
+    /// launch cost exceeds its budget — launching it would only burn a
+    /// worker slot on an answer the caller has given up on.
+    DeadlineAtDequeue,
+    /// At submit: the admission queue is full. With admission enabled
+    /// overload sheds instead of blocking the submitter.
+    QueueFull,
+}
+
+impl ShedReason {
+    pub const ALL: [ShedReason; 3] =
+        [ShedReason::DeadlineAtSubmit, ShedReason::DeadlineAtDequeue, ShedReason::QueueFull];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::DeadlineAtSubmit => "deadline-submit",
+            ShedReason::DeadlineAtDequeue => "deadline-dequeue",
+            ShedReason::QueueFull => "queue-full",
+        }
+    }
+
+    /// The `serve.shed.*` counter for this reason.
+    pub fn counter(self) -> &'static str {
+        match self {
+            ShedReason::DeadlineAtSubmit => "serve.shed.deadline_submit",
+            ShedReason::DeadlineAtDequeue => "serve.shed.deadline_dequeue",
+            ShedReason::QueueFull => "serve.shed.queue_full",
+        }
+    }
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedReason::DeadlineAtSubmit => {
+                f.write_str("deadline unmeetable at submit (estimated completion exceeds budget)")
+            }
+            ShedReason::DeadlineAtDequeue => {
+                f.write_str("deadline exceeded at dequeue (queue wait consumed the budget)")
+            }
+            ShedReason::QueueFull => f.write_str("admission queue full"),
+        }
+    }
+}
+
+/// Typed serving-path errors. Callers that need to distinguish a shed
+/// request (expected under overload; retry later or degrade) from a
+/// real launch failure downcast the `anyhow::Error` they got from
+/// `Ticket::wait`:
+///
+/// ```ignore
+/// match err.downcast_ref::<ServeError>() {
+///     Some(ServeError::Shed { reason, .. }) => { /* back off */ }
+///     Some(ServeError::WorkerLost) => { /* engine lost a worker */ }
+///     _ => { /* launch failure */ }
+/// }
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum ServeError {
+    /// The request was load-shed instead of served.
+    #[error("request shed: {reason} ({priority} priority)")]
+    Shed { reason: ShedReason, priority: Priority },
+    /// The worker serving this request died (panicked mid-launch or
+    /// dropped the reply channel). The request was accepted but never
+    /// completed; the engine itself keeps serving.
+    #[error("serving worker lost (panicked or dropped the reply channel)")]
+    WorkerLost,
+}
+
+/// Default anti-starvation credit: after this many consecutive
+/// higher-priority pops bypass a waiting `Background` request, one
+/// `Background` request is served out of strict order.
+pub const DEFAULT_STARVATION_CREDIT: u64 = 8;
+
+/// Admission-control knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Calibrated predicted launch cost for one request of the served
+    /// plan, in microseconds (`CostModel::estimate(...).total_us()`, or
+    /// `CalibrationReport::predict_us` once `jacc profile` has run).
+    /// Added to the observed queue-wait p95 to form the admission
+    /// estimate; also the per-request weight of the pool router's
+    /// cost-weighted least-loaded pick.
+    pub predicted_launch_us: f64,
+    /// Anti-starvation credit for the `Background` lane: after this
+    /// many consecutive pops that bypassed a waiting `Background`
+    /// request, one `Background` request is served even though higher
+    /// lanes are non-empty. `0` disables the guard (pure strict
+    /// priority).
+    pub starvation_credit: u64,
+}
+
+impl AdmissionConfig {
+    pub fn new(predicted_launch_us: f64) -> Self {
+        Self { predicted_launch_us, starvation_credit: DEFAULT_STARVATION_CREDIT }
+    }
+
+    pub fn with_starvation_credit(mut self, credit: u64) -> Self {
+        self.starvation_credit = credit;
+        self
+    }
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self::new(0.0)
+    }
+}
+
+/// Deadline-aware admission controller shared between submitters and
+/// workers. Tracks queue-wait observations in a streaming histogram,
+/// caches the p95 for lock-free estimate reads, and counts every shed
+/// under `serve.shed.*` by reason and by priority.
+pub struct AdmissionController {
+    config: AdmissionConfig,
+    /// Queue-wait observations (microseconds), recorded at dequeue for
+    /// every request — served or shed — so the estimate tracks the
+    /// queue the next submitter would actually join.
+    waits_us: Mutex<LogHistogram>,
+    /// Cached queue-wait p95 (f64 bits) refreshed on every
+    /// observation; `estimate_us` reads it without taking the lock.
+    wait_p95_bits: AtomicU64,
+    metrics: Metrics,
+}
+
+impl AdmissionController {
+    pub fn new(config: AdmissionConfig) -> Self {
+        Self {
+            config,
+            waits_us: Mutex::new(LogHistogram::new()),
+            wait_p95_bits: AtomicU64::new(0.0f64.to_bits()),
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.config
+    }
+
+    /// The `serve.shed.*` counters (by reason and by priority).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Observed queue-wait p95 in microseconds (0 until the first
+    /// observation).
+    pub fn queue_wait_p95_us(&self) -> f64 {
+        f64::from_bits(self.wait_p95_bits.load(Ordering::Relaxed))
+    }
+
+    /// Current time-to-completion estimate for a newly submitted
+    /// request: observed queue-wait p95 plus the calibrated predicted
+    /// launch cost. Lock-free (telemetry gauges sample this).
+    pub fn estimate_us(&self) -> f64 {
+        self.queue_wait_p95_us() + self.config.predicted_launch_us
+    }
+
+    /// Record one observed queue wait and refresh the cached p95.
+    pub fn observe_wait(&self, wait: Duration) {
+        let mut h = self.waits_us.lock().unwrap();
+        h.record(wait.as_secs_f64() * 1e6);
+        let p95 = h.percentile(95.0);
+        self.wait_p95_bits.store(p95.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Admission check at submit: sheds when the current estimate
+    /// already exceeds the request's deadline budget.
+    pub fn admit_at_submit(&self, class: RequestClass) -> Result<(), ServeError> {
+        if let Some(budget) = class.deadline {
+            if self.estimate_us() > budget.as_secs_f64() * 1e6 {
+                return Err(self.shed(ShedReason::DeadlineAtSubmit, class.priority));
+            }
+        }
+        Ok(())
+    }
+
+    /// Admission check at dequeue: records the observed wait, then
+    /// sheds when the wait plus the predicted launch cost exceeds the
+    /// request's budget (launching it would only waste the slot).
+    pub fn check_at_dequeue(
+        &self,
+        class: RequestClass,
+        waited: Duration,
+    ) -> Result<(), ServeError> {
+        self.observe_wait(waited);
+        if let Some(budget) = class.deadline {
+            let projected_us = waited.as_secs_f64() * 1e6 + self.config.predicted_launch_us;
+            if projected_us > budget.as_secs_f64() * 1e6 {
+                return Err(self.shed(ShedReason::DeadlineAtDequeue, class.priority));
+            }
+        }
+        Ok(())
+    }
+
+    /// Count one shed (by reason and by priority) and build the typed
+    /// error the caller receives.
+    pub fn shed(&self, reason: ShedReason, priority: Priority) -> ServeError {
+        self.metrics.incr(reason.counter());
+        self.metrics.incr(priority.shed_counter());
+        ServeError::Shed { reason, priority }
+    }
+
+    /// Total requests shed so far (the `serve.shed_depth` gauge).
+    pub fn shed_total(&self) -> u64 {
+        ShedReason::ALL.iter().map(|r| self.metrics.counter(r.counter())).sum()
+    }
+
+    pub fn shed_by_reason(&self, reason: ShedReason) -> u64 {
+        self.metrics.counter(reason.counter())
+    }
+
+    pub fn shed_by_priority(&self, priority: Priority) -> u64 {
+        self.metrics.counter(priority.shed_counter())
+    }
+}
+
+impl fmt::Debug for AdmissionController {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AdmissionController")
+            .field("config", &self.config)
+            .field("queue_wait_p95_us", &self.queue_wait_p95_us())
+            .field("shed_total", &self.shed_total())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_lanes_order_and_names() {
+        assert_eq!(Priority::ALL.len(), Priority::COUNT);
+        assert_eq!(Priority::ALL[0], Priority::Interactive);
+        assert_eq!(Priority::ALL[2], Priority::Background);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i, "index matches scan order");
+        }
+        assert_eq!(Priority::default(), Priority::Standard);
+        assert_eq!(Priority::Interactive.name(), "interactive");
+        assert_eq!(Priority::Background.shed_counter(), "serve.shed.background");
+    }
+
+    #[test]
+    fn request_class_builders() {
+        let c = RequestClass::default();
+        assert_eq!(c.priority, Priority::Standard);
+        assert_eq!(c.deadline, None);
+        let c = RequestClass::interactive().with_deadline(Duration::from_millis(5));
+        assert_eq!(c.priority, Priority::Interactive);
+        assert_eq!(c.deadline, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn no_deadline_always_admits() {
+        let adm = AdmissionController::new(AdmissionConfig::new(1e9));
+        assert!(adm.admit_at_submit(RequestClass::standard()).is_ok());
+        assert!(adm.check_at_dequeue(RequestClass::standard(), Duration::from_secs(10)).is_ok());
+        assert_eq!(adm.shed_total(), 0);
+    }
+
+    #[test]
+    fn submit_sheds_when_estimate_exceeds_budget() {
+        // Predicted launch cost alone (1 s) exceeds a 1 ms budget:
+        // shed before the queue, even with no wait observations yet.
+        let adm = AdmissionController::new(AdmissionConfig::new(1e6));
+        let class = RequestClass::interactive().with_deadline(Duration::from_millis(1));
+        let err = adm.admit_at_submit(class).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::Shed {
+                reason: ShedReason::DeadlineAtSubmit,
+                priority: Priority::Interactive
+            }
+        );
+        assert_eq!(adm.shed_by_reason(ShedReason::DeadlineAtSubmit), 1);
+        assert_eq!(adm.shed_by_priority(Priority::Interactive), 1);
+        assert_eq!(adm.metrics().counter("serve.shed.deadline_submit"), 1);
+        // A generous budget admits.
+        let class = RequestClass::interactive().with_deadline(Duration::from_secs(10));
+        assert!(adm.admit_at_submit(class).is_ok());
+    }
+
+    #[test]
+    fn observed_waits_raise_the_estimate_until_submits_shed() {
+        let adm = AdmissionController::new(AdmissionConfig::new(100.0));
+        let class = RequestClass::standard().with_deadline(Duration::from_millis(10));
+        // Fresh controller: estimate = 0 + 100 us, well under 10 ms.
+        assert!(adm.admit_at_submit(class).is_ok());
+        // Observe a run of 50 ms queue waits: p95 rises past the
+        // budget and submits start shedding.
+        for _ in 0..32 {
+            adm.observe_wait(Duration::from_millis(50));
+        }
+        assert!(adm.queue_wait_p95_us() > 10_000.0);
+        assert!(adm.estimate_us() > adm.queue_wait_p95_us());
+        let err = adm.admit_at_submit(class).unwrap_err();
+        assert!(matches!(err, ServeError::Shed { reason: ShedReason::DeadlineAtSubmit, .. }));
+    }
+
+    #[test]
+    fn dequeue_sheds_on_consumed_budget_and_records_wait() {
+        let adm = AdmissionController::new(AdmissionConfig::new(0.0));
+        let class = RequestClass::background().with_deadline(Duration::from_millis(1));
+        // Wait within budget: admitted, wait recorded.
+        assert!(adm.check_at_dequeue(class, Duration::from_micros(100)).is_ok());
+        assert!(adm.queue_wait_p95_us() > 0.0);
+        // Wait past budget: shed at dequeue.
+        let err = adm.check_at_dequeue(class, Duration::from_millis(5)).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::Shed {
+                reason: ShedReason::DeadlineAtDequeue,
+                priority: Priority::Background
+            }
+        );
+        assert_eq!(adm.shed_by_reason(ShedReason::DeadlineAtDequeue), 1);
+        assert_eq!(adm.shed_total(), 1);
+    }
+
+    #[test]
+    fn shed_counters_split_by_reason_and_priority() {
+        let adm = AdmissionController::new(AdmissionConfig::default());
+        adm.shed(ShedReason::QueueFull, Priority::Interactive);
+        adm.shed(ShedReason::QueueFull, Priority::Standard);
+        adm.shed(ShedReason::DeadlineAtDequeue, Priority::Standard);
+        assert_eq!(adm.shed_total(), 3);
+        assert_eq!(adm.shed_by_reason(ShedReason::QueueFull), 2);
+        assert_eq!(adm.shed_by_priority(Priority::Standard), 2);
+        assert_eq!(adm.metrics().counter("serve.shed.queue_full"), 2);
+        assert_eq!(adm.metrics().counter("serve.shed.interactive"), 1);
+    }
+
+    #[test]
+    fn serve_error_downcasts_through_anyhow() {
+        let err: anyhow::Error =
+            ServeError::Shed { reason: ShedReason::QueueFull, priority: Priority::Standard }.into();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::Shed { reason, priority }) => {
+                assert_eq!(*reason, ShedReason::QueueFull);
+                assert_eq!(*priority, Priority::Standard);
+            }
+            other => panic!("expected typed Shed, got {other:?}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("admission queue full"), "{msg}");
+        assert!(msg.contains("standard"), "{msg}");
+        let lost: anyhow::Error = ServeError::WorkerLost.into();
+        assert!(matches!(lost.downcast_ref::<ServeError>(), Some(ServeError::WorkerLost)));
+    }
+}

@@ -1,0 +1,416 @@
+//! Open-loop, heavy-tail load generation for overload testing.
+//!
+//! The closed-loop drivers elsewhere in the tree (`serve_all`, the
+//! bench sweeps) measure the system *below* its knee: each in-flight
+//! request waits for its reply before the next submit, so offered load
+//! self-limits at saturation and queue delay never compounds. Real
+//! traffic does not behave that way — arrivals keep coming whether or
+//! not the system is keeping up. [`drive`] replays a precomputed
+//! lognormal (heavy-tail) arrival schedule against an engine at a
+//! fixed offered rate and measures latency **from each request's
+//! scheduled arrival time**, not from its submit time, so delay the
+//! generator itself accumulates when the engine pushes back is charged
+//! to the requests that suffered it (no coordinated omission).
+//!
+//! `benches/overload_shed.rs` uses this to hold the admission gate:
+//! at 2x the measured saturation rate, Interactive p99 with admission
+//! enabled must beat the no-admission baseline while goodput stays
+//! within bounds. `jacc serve-bench --open-loop RATE` exposes the same
+//! driver on the CLI.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::admission::{Priority, RequestClass, ServeError};
+use super::Ticket;
+use crate::substrate::json::{num, obj, Value};
+use crate::trace::LogHistogram;
+
+/// One open-loop run: offered rate, request count, arrival shape, and
+/// the QoS class mix stamped onto the generated requests.
+#[derive(Debug, Clone)]
+pub struct OpenLoopSpec {
+    /// Offered load in requests per second (the open-loop rate — the
+    /// generator does not slow down when the engine falls behind).
+    pub rate_rps: f64,
+    /// Total requests to generate.
+    pub requests: usize,
+    /// Lognormal sigma of the inter-arrival distribution. `0.0` gives
+    /// uniform spacing; `1.0` (the default) gives the bursty heavy
+    /// tail that makes overload realistic. The mean inter-arrival is
+    /// `1 / rate_rps` regardless of sigma.
+    pub sigma: f64,
+    /// RNG seed: identical specs generate identical schedules and
+    /// class sequences, so baseline and admission runs see the same
+    /// traffic.
+    pub seed: u64,
+    /// Interactive / Standard / Background shares (normalized over
+    /// their sum).
+    pub mix: [f64; Priority::COUNT],
+    /// Deadline budget stamped onto every generated request (`None` =
+    /// no deadlines).
+    pub deadline: Option<Duration>,
+}
+
+impl OpenLoopSpec {
+    pub fn new(rate_rps: f64, requests: usize) -> Self {
+        Self {
+            rate_rps,
+            requests,
+            sigma: 1.0,
+            seed: 0x9e37_79b9_7f4a_7c15,
+            mix: [0.2, 0.6, 0.2],
+            deadline: None,
+        }
+    }
+
+    pub fn with_sigma(mut self, sigma: f64) -> Self {
+        self.sigma = sigma;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_mix(mut self, mix: [f64; Priority::COUNT]) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// What one open-loop run produced. The accounting invariant
+/// `completed + shed + errors == offered` holds exactly — every
+/// generated request resolves one way (the engine never silently drops
+/// a ticket).
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    pub offered: usize,
+    /// Requests that completed successfully.
+    pub completed: u64,
+    /// Requests shed by admission control (at submit or at dequeue).
+    pub shed: u64,
+    /// Requests that failed for any non-shed reason.
+    pub errors: u64,
+    /// Generator wall time (first scheduled arrival to last reply).
+    pub wall: Duration,
+    /// Non-shed completions per second of wall time — the throughput
+    /// that survives overload protection.
+    pub goodput_rps: f64,
+    /// Per-priority-lane latency from *scheduled arrival* to reply,
+    /// milliseconds, completed requests only.
+    pub latency_ms: [LogHistogram; Priority::COUNT],
+}
+
+impl OpenLoopReport {
+    pub fn p50_ms(&self, priority: Priority) -> f64 {
+        self.latency_ms[priority.index()].percentile(50.0)
+    }
+
+    pub fn p95_ms(&self, priority: Priority) -> f64 {
+        self.latency_ms[priority.index()].percentile(95.0)
+    }
+
+    pub fn p99_ms(&self, priority: Priority) -> f64 {
+        self.latency_ms[priority.index()].percentile(99.0)
+    }
+
+    /// Completed requests in one lane.
+    pub fn lane_completed(&self, priority: Priority) -> u64 {
+        self.latency_ms[priority.index()].count()
+    }
+
+    /// One human line per run (the overload bench prints these).
+    pub fn line(&self) -> String {
+        format!(
+            "offered {} ({} completed, {} shed, {} errors) in {:.2} s = {:.0} rps goodput; \
+             interactive p99 {:.2} ms, standard p99 {:.2} ms, background p99 {:.2} ms",
+            self.offered,
+            self.completed,
+            self.shed,
+            self.errors,
+            self.wall.as_secs_f64(),
+            self.goodput_rps,
+            self.p99_ms(Priority::Interactive),
+            self.p99_ms(Priority::Standard),
+            self.p99_ms(Priority::Background),
+        )
+    }
+
+    /// Snapshot form (`jacc serve-bench --open-loop --json`).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("offered", num(self.offered as f64)),
+            ("completed", num(self.completed as f64)),
+            ("shed", num(self.shed as f64)),
+            ("errors", num(self.errors as f64)),
+            ("wall_s", num(self.wall.as_secs_f64())),
+            ("goodput_rps", num(self.goodput_rps)),
+            ("interactive_p99_ms", num(self.p99_ms(Priority::Interactive))),
+            ("standard_p99_ms", num(self.p99_ms(Priority::Standard))),
+            ("background_p99_ms", num(self.p99_ms(Priority::Background))),
+        ])
+    }
+}
+
+/// Deterministic xorshift64* generator (no external RNG crates
+/// offline; quality is ample for load shapes).
+struct XorShift(u64);
+
+impl XorShift {
+    fn new(seed: u64) -> Self {
+        // Avoid the all-zeros fixed point.
+        Self(seed.max(1))
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in the open interval (0, 1).
+    fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 0.5) / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box-Muller.
+    fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+}
+
+/// The arrival schedule: offsets from t0 of each request's scheduled
+/// arrival, nondecreasing. Inter-arrival gaps are lognormal with mean
+/// `1 / rate_rps` (sigma from the spec; `mu = ln(1/rate) - sigma^2/2`
+/// keeps the mean fixed while sigma fattens the tail).
+pub fn arrival_offsets(spec: &OpenLoopSpec) -> Vec<Duration> {
+    let mean_gap = 1.0 / spec.rate_rps.max(1e-9);
+    let mut rng = XorShift::new(spec.seed);
+    let mut at = 0.0f64;
+    (0..spec.requests)
+        .map(|_| {
+            let gap = if spec.sigma > 0.0 {
+                let mu = mean_gap.ln() - spec.sigma * spec.sigma / 2.0;
+                (mu + spec.sigma * rng.next_gaussian()).exp()
+            } else {
+                mean_gap
+            };
+            at += gap;
+            Duration::from_secs_f64(at)
+        })
+        .collect()
+}
+
+/// The QoS class sequence: one class per generated request, priorities
+/// drawn from the normalized mix, all stamped with the spec's
+/// deadline. Seeded independently of the arrival schedule so changing
+/// one does not reshuffle the other.
+pub fn class_sequence(spec: &OpenLoopSpec) -> Vec<RequestClass> {
+    let total: f64 = spec.mix.iter().sum();
+    let mix = if total > 0.0 { spec.mix.map(|m| m / total) } else { [0.0, 1.0, 0.0] };
+    let mut rng = XorShift::new(spec.seed ^ 0xc2b2_ae3d_27d4_eb4f);
+    (0..spec.requests)
+        .map(|_| {
+            let u = rng.next_f64();
+            let priority = if u < mix[0] {
+                Priority::Interactive
+            } else if u < mix[0] + mix[1] {
+                Priority::Standard
+            } else {
+                Priority::Background
+            };
+            let mut class = RequestClass::new(priority);
+            class.deadline = spec.deadline;
+            class
+        })
+        .collect()
+}
+
+/// Replay `spec` open-loop against an engine: `submit` is called once
+/// per generated request at (or as soon as possible after) its
+/// scheduled arrival, regardless of how the engine is keeping up.
+///
+/// Latency is measured from the scheduled arrival to the reply, on a
+/// dedicated collector thread, so submit-side pushback is charged to
+/// the requests that experienced it. A submit that fails with a typed
+/// [`ServeError::Shed`] counts as shed; any other submit failure
+/// aborts the run (the engine is gone, not overloaded).
+pub fn drive<S>(spec: &OpenLoopSpec, submit: S) -> anyhow::Result<OpenLoopReport>
+where
+    S: Fn(RequestClass) -> anyhow::Result<Ticket>,
+{
+    anyhow::ensure!(spec.rate_rps > 0.0, "open-loop rate must be positive");
+    let offsets = arrival_offsets(spec);
+    let classes = class_sequence(spec);
+    let (tx, rx) = mpsc::channel::<(RequestClass, Instant, Ticket)>();
+    let collector = thread::spawn(move || {
+        let mut latency_ms: [LogHistogram; Priority::COUNT] = Default::default();
+        let (mut completed, mut shed, mut errors) = (0u64, 0u64, 0u64);
+        while let Ok((class, scheduled, ticket)) = rx.recv() {
+            match ticket.wait() {
+                Ok(_) => {
+                    let lat = scheduled.elapsed().as_secs_f64() * 1e3;
+                    latency_ms[class.priority.index()].record(lat);
+                    completed += 1;
+                }
+                Err(err) => match err.downcast_ref::<ServeError>() {
+                    Some(ServeError::Shed { .. }) => shed += 1,
+                    _ => errors += 1,
+                },
+            }
+        }
+        (latency_ms, completed, shed, errors)
+    });
+    let t0 = Instant::now();
+    let mut shed_at_submit = 0u64;
+    for (off, class) in offsets.iter().zip(classes) {
+        let scheduled = t0 + *off;
+        let now = Instant::now();
+        if scheduled > now {
+            thread::sleep(scheduled - now);
+        }
+        match submit(class) {
+            Ok(ticket) => {
+                let _ = tx.send((class, scheduled, ticket));
+            }
+            Err(err)
+                if matches!(
+                    err.downcast_ref::<ServeError>(),
+                    Some(ServeError::Shed { .. })
+                ) =>
+            {
+                shed_at_submit += 1;
+            }
+            Err(err) => {
+                drop(tx);
+                let _ = collector.join();
+                return Err(err);
+            }
+        }
+    }
+    drop(tx);
+    let (latency_ms, completed, shed, errors) =
+        collector.join().expect("open-loop collector thread panicked");
+    let wall = t0.elapsed();
+    let goodput_rps =
+        if wall.as_secs_f64() > 0.0 { completed as f64 / wall.as_secs_f64() } else { 0.0 };
+    Ok(OpenLoopReport {
+        offered: offsets.len(),
+        completed,
+        shed: shed + shed_at_submit,
+        errors,
+        wall,
+        goodput_rps,
+        latency_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::coordinator::{Bindings, TaskGraph};
+    use crate::serve::{AdmissionConfig, ServeConfig, ServingEngine};
+
+    #[test]
+    fn arrival_schedule_is_deterministic_and_mean_preserving() {
+        let spec = OpenLoopSpec::new(1000.0, 2000);
+        let a = arrival_offsets(&spec);
+        let b = arrival_offsets(&spec);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 2000);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets are nondecreasing");
+        // Mean inter-arrival stays 1/rate despite the heavy tail
+        // (sampling error over 2000 lognormal draws is well under 25%).
+        let total = a.last().unwrap().as_secs_f64();
+        let mean_gap = total / 2000.0;
+        assert!((mean_gap - 1e-3).abs() < 0.25e-3, "mean gap {mean_gap}");
+        // A different seed produces a different schedule.
+        let c = arrival_offsets(&OpenLoopSpec::new(1000.0, 2000).with_seed(7));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn zero_sigma_gives_uniform_spacing() {
+        let spec = OpenLoopSpec::new(100.0, 5).with_sigma(0.0);
+        let a = arrival_offsets(&spec);
+        for (i, off) in a.iter().enumerate() {
+            let expect = (i + 1) as f64 * 0.01;
+            assert!((off.as_secs_f64() - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn class_sequence_follows_the_mix() {
+        let spec = OpenLoopSpec::new(100.0, 4)
+            .with_mix([1.0, 0.0, 0.0])
+            .with_deadline(Duration::from_millis(9));
+        for class in class_sequence(&spec) {
+            assert_eq!(class.priority, Priority::Interactive);
+            assert_eq!(class.deadline, Some(Duration::from_millis(9)));
+        }
+        let spec = OpenLoopSpec::new(100.0, 3000).with_mix([0.2, 0.6, 0.2]);
+        let seq = class_sequence(&spec);
+        let interactive = seq.iter().filter(|c| c.priority == Priority::Interactive).count();
+        let background = seq.iter().filter(|c| c.priority == Priority::Background).count();
+        assert!((interactive as f64 / 3000.0 - 0.2).abs() < 0.05, "{interactive}");
+        assert!((background as f64 / 3000.0 - 0.2).abs() < 0.05, "{background}");
+        assert!(seq.iter().all(|c| c.deadline.is_none()));
+    }
+
+    /// Full artifact-free e2e: the zero-task plan serves an open-loop
+    /// run; every generated request resolves and the accounting
+    /// invariant holds exactly.
+    #[test]
+    fn drive_accounts_for_every_generated_request() {
+        let plan = Arc::new(TaskGraph::new().compile().unwrap());
+        let engine = ServingEngine::start(plan, ServeConfig::with_workers(2)).unwrap();
+        let spec = OpenLoopSpec::new(5000.0, 200).with_sigma(0.5);
+        let report = drive(&spec, |class| engine.submit_with(Bindings::new(), class)).unwrap();
+        assert_eq!(report.offered, 200);
+        assert_eq!(report.completed + report.shed + report.errors, 200);
+        assert_eq!(report.errors, 0, "the zero-task plan cannot fail");
+        assert_eq!(report.shed, 0, "no admission, no deadline: nothing sheds");
+        let agg = engine.shutdown();
+        assert_eq!(agg.submitted, 200);
+        assert_eq!(agg.requests + agg.errors + agg.shed, agg.submitted);
+        // Lanes sum to the total.
+        let lane_sum: u64 = Priority::ALL.iter().map(|p| report.lane_completed(*p)).sum();
+        assert_eq!(lane_sum, report.completed);
+        assert!(report.line().contains("offered 200"), "{}", report.line());
+    }
+
+    /// With admission and a zero deadline every request sheds (at
+    /// submit once the estimate is warm, at dequeue before that) and
+    /// the report says so — typed, counted, no hangs.
+    #[test]
+    fn drive_counts_sheds_under_impossible_deadlines() {
+        let plan = Arc::new(TaskGraph::new().compile().unwrap());
+        let config = ServeConfig::with_workers(1).with_admission(AdmissionConfig::new(0.0));
+        let engine = ServingEngine::start(plan, config).unwrap();
+        let spec =
+            OpenLoopSpec::new(5000.0, 100).with_sigma(0.0).with_deadline(Duration::ZERO);
+        let report = drive(&spec, |class| engine.submit_with(Bindings::new(), class)).unwrap();
+        assert_eq!(report.offered, 100);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.shed, 100, "every request sheds, at submit or at dequeue");
+        let agg = engine.shutdown();
+        assert_eq!(agg.requests + agg.errors + agg.shed, agg.submitted);
+        assert_eq!(agg.shed, 100);
+    }
+}

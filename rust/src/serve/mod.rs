@@ -28,14 +28,27 @@
 //! queue-wait and launch spans under a per-request trace id
 //! (`jacc serve-bench --trace`).
 //!
+//! Overload protection is layered on via [`admission`]: requests may
+//! carry a [`RequestClass`] (priority lane + deadline budget), the
+//! admission queue becomes priority-aware, and an
+//! [`AdmissionController`] sheds doomed requests at submit or at
+//! dequeue with a typed [`ServeError::Shed`] instead of letting them
+//! rot in the queue (see the module docs on [`admission`] for the
+//! estimate formula). [`loadgen`] is the open-loop, heavy-tail load
+//! generator that proves the behavior past saturation
+//! (`benches/overload_shed.rs`, `jacc serve-bench --open-loop`).
+//!
 //! The multi-device counterpart — request routing across the replicas
 //! of a device pool, with per-device breakdowns in the same
 //! [`ServeReport`] — is [`crate::pool::PoolEngine`].
 //!
 //! [`submit`]: ServingEngine::submit
 
+pub mod admission;
+pub mod loadgen;
 pub mod queue;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -45,10 +58,13 @@ use anyhow::Context;
 
 use crate::coordinator::{Bindings, CompiledGraph, ExecutionOptions, ExecutionReport};
 use crate::profile::{Gauge, ProfileStore};
-use crate::substrate::json::{arr, num, obj, Value};
+use crate::substrate::json::{arr, num, obj, s, Value};
 use crate::trace::{LogHistogram, Tracer};
 
-pub use queue::{BoundedQueue, Popped};
+pub use admission::{
+    AdmissionConfig, AdmissionController, Priority, RequestClass, ServeError, ShedReason,
+};
+pub use queue::{BoundedQueue, CapacityError, Popped, PriorityQueue, PushError};
 
 /// Engine sizing knobs.
 #[derive(Debug, Clone)]
@@ -65,11 +81,22 @@ pub struct ServeConfig {
     /// attribution and per-action observations into it
     /// (`jacc profile`, `jacc serve-bench --telemetry`).
     pub profile: Option<Arc<ProfileStore>>,
+    /// Optional overload protection. When set, the admission queue
+    /// becomes priority-aware, deadline-carrying requests are shed at
+    /// submit/dequeue when doomed, and a full queue sheds instead of
+    /// blocking the submitter (see [`admission`]).
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl ServeConfig {
     pub fn with_workers(workers: usize) -> Self {
-        Self { workers, queue_depth: 2 * workers.max(1), tracer: None, profile: None }
+        Self {
+            workers,
+            queue_depth: 2 * workers.max(1),
+            tracer: None,
+            profile: None,
+            admission: None,
+        }
     }
 
     /// Attach a tracer; served requests record spans into it.
@@ -82,6 +109,12 @@ impl ServeConfig {
     /// request-timing observations into it.
     pub fn with_profile(mut self, profile: Arc<ProfileStore>) -> Self {
         self.profile = Some(profile);
+        self
+    }
+
+    /// Enable deadline-aware admission control and load shedding.
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = Some(admission);
         self
     }
 }
@@ -155,6 +188,8 @@ pub(crate) type Served = (anyhow::Result<ExecutionReport>, RequestTiming);
 /// One queued request: launch bindings + where to send the result.
 struct Request {
     bindings: Bindings,
+    /// QoS class (priority lane + optional deadline budget).
+    class: RequestClass,
     submitted: Instant,
     /// Trace id for span recording (0 when the engine has no tracer).
     trace: u64,
@@ -179,11 +214,13 @@ impl Ticket {
 
     /// Block until served, returning the queue-wait/launch split and
     /// the serving device alongside the report.
+    ///
+    /// A reply-channel disconnect (the worker died without answering —
+    /// e.g. panicked while holding the reply sender) surfaces as a
+    /// typed [`ServeError::WorkerLost`], never a hang: `mpsc::recv`
+    /// returns as soon as every sender is gone.
     pub fn wait_timed(self) -> anyhow::Result<(ExecutionReport, RequestTiming)> {
-        let (result, timing) = self
-            .rx
-            .recv()
-            .context("serving worker dropped the request (engine shut down?)")?;
+        let (result, timing) = self.rx.recv().map_err(|_| ServeError::WorkerLost)?;
         Ok((result?, timing))
     }
 }
@@ -203,16 +240,21 @@ pub(crate) struct LatencyLog {
     launch_ms: LogHistogram,
     h2d_ms: LogHistogram,
     kernel_ms: LogHistogram,
+    /// Per-priority-lane total latency (the QoS rows of the report:
+    /// strict priority should show up as a lower Interactive tail).
+    priority_ms: [LogHistogram; Priority::COUNT],
 }
 
 impl LatencyLog {
-    pub(crate) fn record(&mut self, timing: &RequestTiming) {
-        self.total_ms.record(timing.total().as_secs_f64() * 1e3);
+    pub(crate) fn record(&mut self, timing: &RequestTiming, priority: Priority) {
+        let total = timing.total().as_secs_f64() * 1e3;
+        self.total_ms.record(total);
         self.queue_ms.record(timing.queue.as_secs_f64() * 1e3);
         self.batch_ms.record(timing.batch.as_secs_f64() * 1e3);
         self.launch_ms.record(timing.launch.as_secs_f64() * 1e3);
         self.h2d_ms.record(timing.h2d.as_secs_f64() * 1e3);
         self.kernel_ms.record(timing.kernel.as_secs_f64() * 1e3);
+        self.priority_ms[priority.index()].record(total);
     }
 
     pub(crate) fn merge_from(&mut self, other: &LatencyLog) {
@@ -222,6 +264,15 @@ impl LatencyLog {
         self.launch_ms.merge(&other.launch_ms);
         self.h2d_ms.merge(&other.h2d_ms);
         self.kernel_ms.merge(&other.kernel_ms);
+        for (mine, theirs) in self.priority_ms.iter_mut().zip(&other.priority_ms) {
+            mine.merge(theirs);
+        }
+    }
+
+    /// (p50, p95, p99) of one priority lane's total latency.
+    pub(crate) fn priority_stats(&self, lane: usize) -> (f64, f64, f64) {
+        let h = &self.priority_ms[lane];
+        (h.percentile(50.0), h.percentile(95.0), h.percentile(99.0))
     }
 
     /// Fold this log into `report`'s percentile fields. Histogram
@@ -245,11 +296,19 @@ impl LatencyLog {
 /// State shared between submitters and workers.
 struct Shared {
     plan: Arc<CompiledGraph>,
-    queue: BoundedQueue<Request>,
+    queue: PriorityQueue<Request>,
     tracer: Option<Arc<Tracer>>,
     profile: Option<Arc<ProfileStore>>,
+    /// Overload protection (None = legacy blocking backpressure).
+    admission: Option<Arc<AdmissionController>>,
     latencies: Mutex<LatencyLog>,
+    /// Accepted submissions (including requests later shed at
+    /// dequeue; excluding submits rejected by engine shutdown). The
+    /// ledger the QoS accounting invariant is checked against:
+    /// `completed + errors + shed == submitted`.
+    submitted: AtomicU64,
     completed: AtomicU64,
+    completed_by_priority: [AtomicU64; Priority::COUNT],
     errors: AtomicU64,
     /// Upload-cache hits / actual bus transfers across all served
     /// requests (the dedup hit-rate in the report).
@@ -339,6 +398,105 @@ impl DeviceBreakdown {
     }
 }
 
+/// One priority lane's slice of a run (the QoS rows of a
+/// [`ServeReport`]). Only lanes with traffic (served or shed) get a
+/// row.
+#[derive(Debug, Clone)]
+pub struct PriorityBreakdown {
+    pub priority: Priority,
+    /// Successfully served requests in this lane.
+    pub requests: u64,
+    /// Requests of this priority shed by admission control.
+    pub shed: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl PriorityBreakdown {
+    /// One row of the per-priority table (`summary()` appends these
+    /// when QoS is in play).
+    pub fn line(&self) -> String {
+        format!(
+            "  {}: {} served, {} shed, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+            self.priority.name(),
+            self.requests,
+            self.shed,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+        )
+    }
+
+    /// Snapshot row (`jacc serve-bench --json`, schema
+    /// `jacc.metrics.v4`).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("priority", s(self.priority.name())),
+            ("requests", num(self.requests as f64)),
+            ("shed", num(self.shed as f64)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+        ])
+    }
+}
+
+/// QoS accounting totals an engine gathers at shutdown (the pool sums
+/// these across lanes) before folding them into a [`ServeReport`] via
+/// [`fill_qos`].
+#[derive(Debug, Default)]
+pub(crate) struct QosTotals {
+    pub submitted: u64,
+    /// Indexed like [`ShedReason::ALL`].
+    pub shed_by_reason: [u64; 3],
+    /// Indexed by [`Priority::index`].
+    pub shed_by_priority: [u64; Priority::COUNT],
+    /// Indexed by [`Priority::index`].
+    pub completed_by_priority: [u64; Priority::COUNT],
+}
+
+impl QosTotals {
+    /// Fold one admission controller's shed counters in (a pool lane,
+    /// or the single engine's controller).
+    pub(crate) fn add_admission(&mut self, adm: &AdmissionController) {
+        for (slot, reason) in self.shed_by_reason.iter_mut().zip(ShedReason::ALL) {
+            *slot += adm.shed_by_reason(reason);
+        }
+        for (slot, priority) in self.shed_by_priority.iter_mut().zip(Priority::ALL) {
+            *slot += adm.shed_by_priority(priority);
+        }
+    }
+}
+
+/// Fold QoS totals into a report: shed counts by reason, shed rate,
+/// and one [`PriorityBreakdown`] row per lane with traffic.
+pub(crate) fn fill_qos(report: &mut ServeReport, totals: &QosTotals, log: &LatencyLog) {
+    report.submitted = totals.submitted;
+    report.shed_deadline_submit = totals.shed_by_reason[0];
+    report.shed_deadline_dequeue = totals.shed_by_reason[1];
+    report.shed_queue_full = totals.shed_by_reason[2];
+    report.shed = totals.shed_by_reason.iter().sum();
+    report.shed_rate = if totals.submitted > 0 {
+        report.shed as f64 / totals.submitted as f64
+    } else {
+        0.0
+    };
+    report.per_priority = Priority::ALL
+        .into_iter()
+        .filter_map(|priority| {
+            let lane = priority.index();
+            let requests = totals.completed_by_priority[lane];
+            let shed = totals.shed_by_priority[lane];
+            if requests + shed == 0 {
+                return None;
+            }
+            let (p50_ms, p95_ms, p99_ms) = log.priority_stats(lane);
+            Some(PriorityBreakdown { priority, requests, shed, p50_ms, p95_ms, p99_ms })
+        })
+        .collect();
+}
+
 /// Aggregate results of one engine run.
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
@@ -388,6 +546,23 @@ pub struct ServeReport {
     /// amortized per-request launch cost batching exists to shrink
     /// (compare against `launch_p95_ms` at `--batch-max 1`).
     pub amortized_launch_ms: f64,
+    /// Accepted submissions (served + errored + shed). The QoS
+    /// accounting invariant every engine maintains:
+    /// `requests + errors + shed == submitted` — with healthy launches
+    /// (`errors == 0`) that is exactly `completed + shed == submitted`.
+    pub submitted: u64,
+    /// Requests shed by admission control (never launched; their
+    /// tickets resolve to a typed `ServeError::Shed`).
+    pub shed: u64,
+    /// `shed / submitted` (0.0 when nothing was submitted).
+    pub shed_rate: f64,
+    /// Shed split by reason (the `serve.shed.*` counters).
+    pub shed_deadline_submit: u64,
+    pub shed_deadline_dequeue: u64,
+    pub shed_queue_full: u64,
+    /// Per-priority-lane rows (lanes with traffic only; empty when the
+    /// run carried no QoS classes and nothing was shed).
+    pub per_priority: Vec<PriorityBreakdown>,
     /// Per-device rows for pool runs (empty on a single-device engine).
     pub per_device: Vec<DeviceBreakdown>,
 }
@@ -447,6 +622,25 @@ impl ServeReport {
                 self.batch_wait_p95_ms,
             ));
         }
+        // QoS block only when it is in play: something was shed, or
+        // traffic spanned more than one priority lane. Legacy
+        // (no-admission, all-standard) summaries are unchanged.
+        if self.shed > 0 || self.per_priority.len() > 1 {
+            out.push_str(&format!(
+                "\n  qos: {} submitted, {} shed ({:.1}%): {} deadline@submit, \
+                 {} deadline@dequeue, {} queue-full",
+                self.submitted,
+                self.shed,
+                self.shed_rate * 100.0,
+                self.shed_deadline_submit,
+                self.shed_deadline_dequeue,
+                self.shed_queue_full,
+            ));
+            for p in &self.per_priority {
+                out.push('\n');
+                out.push_str(&p.line());
+            }
+        }
         for d in &self.per_device {
             out.push('\n');
             out.push_str(&d.line());
@@ -483,6 +677,13 @@ impl ServeReport {
             ("batch_max", num(self.batch_max)),
             ("batch_wait_p95_ms", num(self.batch_wait_p95_ms)),
             ("amortized_launch_ms", num(self.amortized_launch_ms)),
+            ("submitted", num(self.submitted as f64)),
+            ("shed", num(self.shed as f64)),
+            ("shed_rate", num(self.shed_rate)),
+            ("shed_deadline_submit", num(self.shed_deadline_submit as f64)),
+            ("shed_deadline_dequeue", num(self.shed_deadline_dequeue as f64)),
+            ("shed_queue_full", num(self.shed_queue_full as f64)),
+            ("per_priority", arr(self.per_priority.iter().map(|p| p.to_json()).collect())),
             ("per_device", arr(self.per_device.iter().map(|d| d.to_json()).collect())),
         ])
     }
@@ -499,13 +700,20 @@ impl ServingEngine {
     /// Spawn `config.workers` threads serving launches of `plan`.
     pub fn start(plan: Arc<CompiledGraph>, config: ServeConfig) -> anyhow::Result<Self> {
         anyhow::ensure!(config.workers > 0, "serving engine needs at least one worker");
+        let credit =
+            config.admission.as_ref().map_or(admission::DEFAULT_STARVATION_CREDIT, |a| {
+                a.starvation_credit
+            });
         let shared = Arc::new(Shared {
             plan,
-            queue: BoundedQueue::new(config.queue_depth.max(1)),
+            queue: PriorityQueue::new(config.queue_depth.max(1), credit)?,
             tracer: config.tracer.clone(),
             profile: config.profile.clone(),
+            admission: config.admission.map(|a| Arc::new(AdmissionController::new(a))),
             latencies: Mutex::new(LatencyLog::default()),
+            submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            completed_by_priority: Default::default(),
             errors: AtomicU64::new(0),
             dedup_hits: AtomicU64::new(0),
             h2d_transfers: AtomicU64::new(0),
@@ -531,24 +739,72 @@ impl ServingEngine {
         &self.shared.plan
     }
 
-    /// Telemetry gauges over the engine's live state, for a
-    /// [`TelemetrySampler`](crate::profile::TelemetrySampler):
-    /// `serve.queue_depth` (admission-queue occupancy). Reading one is
-    /// a single atomic-ish queue-length probe.
-    pub fn gauges(&self) -> Vec<Gauge> {
-        let shared = Arc::clone(&self.shared);
-        vec![Gauge::new("serve.queue_depth", move || shared.queue.len() as f64)]
+    /// The admission controller, when overload protection is enabled
+    /// (`ServeConfig::with_admission`).
+    pub fn admission(&self) -> Option<&Arc<AdmissionController>> {
+        self.shared.admission.as_ref()
     }
 
-    /// Enqueue one request. Blocks while the queue is full
-    /// (backpressure); fails only if the engine is shutting down.
+    /// Telemetry gauges over the engine's live state, for a
+    /// [`TelemetrySampler`](crate::profile::TelemetrySampler):
+    /// `serve.queue_depth` (admission-queue occupancy), plus — with
+    /// admission enabled — `serve.shed_depth` (cumulative sheds) and
+    /// `serve.admission_estimate_us` (the live time-to-completion
+    /// estimate). Reading one is a single atomic-ish probe.
+    pub fn gauges(&self) -> Vec<Gauge> {
+        let shared = Arc::clone(&self.shared);
+        let mut gauges = vec![Gauge::new("serve.queue_depth", move || shared.queue.len() as f64)];
+        if let Some(adm) = &self.shared.admission {
+            let a = Arc::clone(adm);
+            gauges.push(Gauge::new("serve.shed_depth", move || a.shed_total() as f64));
+            let a = Arc::clone(adm);
+            gauges.push(Gauge::new("serve.admission_estimate_us", move || a.estimate_us()));
+        }
+        gauges
+    }
+
+    /// Enqueue one request in the default class (`Standard`, no
+    /// deadline). Without admission this blocks while the queue is
+    /// full (backpressure) and fails only if the engine is shutting
+    /// down; see [`submit_with`](ServingEngine::submit_with) for the
+    /// admission-enabled semantics.
     pub fn submit(&self, bindings: Bindings) -> anyhow::Result<Ticket> {
+        self.submit_with(bindings, RequestClass::default())
+    }
+
+    /// Enqueue one request with an explicit QoS class.
+    ///
+    /// With admission enabled the submitter never blocks: a request
+    /// whose deadline is already unmeetable, or that arrives to a full
+    /// queue, fails fast with a typed [`ServeError::Shed`] (reachable
+    /// via `anyhow::Error::downcast_ref`). Without admission the
+    /// priority lane still orders the queue but nothing is shed.
+    pub fn submit_with(&self, bindings: Bindings, class: RequestClass) -> anyhow::Result<Ticket> {
+        let shared = &self.shared;
+        shared.submitted.fetch_add(1, Ordering::Relaxed);
+        let trace = shared.tracer.as_ref().map_or(0, |t| t.trace_id());
         let (tx, ticket) = Ticket::channel();
-        let trace = self.shared.tracer.as_ref().map_or(0, |t| t.trace_id());
-        self.shared
-            .queue
-            .push(Request { bindings, submitted: Instant::now(), trace, reply: tx })
-            .map_err(|_| anyhow::anyhow!("serving engine is shut down"))?;
+        let request =
+            Request { bindings, class, submitted: Instant::now(), trace, reply: tx };
+        if let Some(adm) = &shared.admission {
+            if let Err(shed) = adm.admit_at_submit(class) {
+                return Err(shed.into());
+            }
+            return match shared.queue.try_push(class.priority, request) {
+                Ok(()) => Ok(ticket),
+                Err(PushError::Full(_)) => {
+                    Err(adm.shed(ShedReason::QueueFull, class.priority).into())
+                }
+                Err(PushError::Closed(_)) => {
+                    shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                    Err(anyhow::anyhow!("serving engine is shut down"))
+                }
+            };
+        }
+        shared.queue.push(class.priority, request).map_err(|_| {
+            shared.submitted.fetch_sub(1, Ordering::Relaxed);
+            anyhow::anyhow!("serving engine is shut down")
+        })?;
         Ok(ticket)
     }
 
@@ -574,7 +830,21 @@ impl ServingEngine {
             h2d_transfers: shared.h2d_transfers.load(Ordering::Relaxed),
             ..ServeReport::default()
         };
-        shared.latencies.lock().unwrap().fill(&mut report);
+        let mut totals = QosTotals {
+            submitted: shared.submitted.load(Ordering::Relaxed),
+            ..QosTotals::default()
+        };
+        for (slot, count) in
+            totals.completed_by_priority.iter_mut().zip(&shared.completed_by_priority)
+        {
+            *slot = count.load(Ordering::Relaxed);
+        }
+        if let Some(adm) = &shared.admission {
+            totals.add_admission(adm);
+        }
+        let log = shared.latencies.lock().unwrap();
+        log.fill(&mut report);
+        fill_qos(&mut report, &totals, &log);
         report
     }
 
@@ -594,8 +864,18 @@ impl Drop for ServingEngine {
 }
 
 fn worker_loop(shared: &Shared) {
-    while let Some(req) = shared.queue.pop() {
+    while let Some((_, req)) = shared.queue.pop() {
         let queue = req.submitted.elapsed();
+        // Dequeue-time admission: a request whose queue wait already
+        // consumed its deadline budget is shed here instead of burning
+        // a launch slot on an answer the caller has given up on.
+        if let Some(adm) = &shared.admission {
+            if let Err(shed) = adm.check_at_dequeue(req.class, queue) {
+                let timing = RequestTiming { queue, ..RequestTiming::default() };
+                let _ = req.reply.send((Err(shed.into()), timing));
+                continue;
+            }
+        }
         if let Some(tracer) = &shared.tracer {
             tracer.record_at("serve.queue", "serve", 0, req.trace, -1, req.submitted, queue);
         }
@@ -606,15 +886,22 @@ fn worker_loop(shared: &Shared) {
             ..ExecutionOptions::default()
         };
         let t0 = Instant::now();
-        let result = shared.plan.launch_with(&req.bindings, opts);
+        // A panicking launch must not kill the worker: with the thread
+        // gone, everything still queued would wait forever for a pop
+        // that never comes. Catch the unwind, answer this request with
+        // a typed WorkerLost, and keep serving.
+        let result = catch_unwind(AssertUnwindSafe(|| shared.plan.launch_with(&req.bindings, opts)))
+            .unwrap_or_else(|_| Err(ServeError::WorkerLost.into()));
         let launch = t0.elapsed();
         let timing = match &result {
             Ok(rep) => {
                 let timing = RequestTiming::from_launch(queue, launch, rep, 0);
                 shared.completed.fetch_add(1, Ordering::Relaxed);
+                shared.completed_by_priority[req.class.priority.index()]
+                    .fetch_add(1, Ordering::Relaxed);
                 shared.dedup_hits.fetch_add(rep.h2d_dedup_hits, Ordering::Relaxed);
                 shared.h2d_transfers.fetch_add(rep.h2d_transfers, Ordering::Relaxed);
-                shared.latencies.lock().unwrap().record(&timing);
+                shared.latencies.lock().unwrap().record(&timing, req.class.priority);
                 if let Some(profile) = &shared.profile {
                     profile.record_request(&timing);
                 }
@@ -670,13 +957,17 @@ mod tests {
         // Deliberately unsorted totals: 5,1,3,2,4 ms with queue 1 ms
         // and launch (total-1) ms each.
         for &ms in &[5.0, 1.0, 3.0, 2.0, 4.0] {
-            log.record(&RequestTiming {
-                queue: Duration::from_millis(1),
-                launch: Duration::from_secs_f64((ms - 1.0) / 1e3),
-                h2d: Duration::from_secs_f64((ms - 1.0) / 2e3),
-                kernel: Duration::from_secs_f64((ms - 1.0) / 2e3),
-                device: 0,
-            });
+            log.record(
+                &RequestTiming {
+                    queue: Duration::from_millis(1),
+                    batch: Duration::ZERO,
+                    launch: Duration::from_secs_f64((ms - 1.0) / 1e3),
+                    h2d: Duration::from_secs_f64((ms - 1.0) / 2e3),
+                    kernel: Duration::from_secs_f64((ms - 1.0) / 2e3),
+                    device: 0,
+                },
+                Priority::Standard,
+            );
         }
         let mut r = ServeReport::default();
         log.fill(&mut r);
@@ -710,11 +1001,14 @@ mod tests {
             let u = ((x >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
             let total_ms = 0.2 + 50.0 / (u + 0.05); // skewed tail
             exact.push(total_ms);
-            log.record(&RequestTiming {
-                queue: Duration::ZERO,
-                launch: Duration::from_secs_f64(total_ms / 1e3),
-                ..RequestTiming::default()
-            });
+            log.record(
+                &RequestTiming {
+                    queue: Duration::ZERO,
+                    launch: Duration::from_secs_f64(total_ms / 1e3),
+                    ..RequestTiming::default()
+                },
+                Priority::Standard,
+            );
         }
         exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut r = ServeReport::default();
@@ -926,5 +1220,194 @@ mod tests {
         assert_eq!(v.get("batches").as_u64(), Some(4));
         assert!((v.get("amortized_launch_ms").as_f64().unwrap() - 0.25).abs() < 1e-12);
         assert!((v.get("batch_p95").as_f64().unwrap() - 6.0).abs() < 1e-12);
+    }
+
+    /// A dropped reply sender (worker died without answering) maps to
+    /// the typed `ServeError::WorkerLost`, never a hang.
+    #[test]
+    fn dropped_reply_sender_is_typed_worker_lost() {
+        let (tx, ticket) = Ticket::channel();
+        drop(tx);
+        let err = ticket.wait().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::WorkerLost)),
+            "{err}"
+        );
+    }
+
+    /// Deterministic dequeue shed: a zero deadline with zero predicted
+    /// cost admits at submit (estimate 0 is not > budget 0) but any
+    /// real queue wait exceeds the budget at dequeue. The zero-task
+    /// plan makes this run without artifacts.
+    #[test]
+    fn zero_deadline_sheds_at_dequeue_with_typed_error() {
+        let plan = Arc::new(crate::coordinator::TaskGraph::new().compile().unwrap());
+        let mut config =
+            ServeConfig::with_workers(1).with_admission(AdmissionConfig::new(0.0));
+        // Deep queue: every request must reach dequeue rather than
+        // bounce off a full queue as a QueueFull shed.
+        config.queue_depth = 64;
+        let engine = ServingEngine::start(plan, config).unwrap();
+        let class = RequestClass::interactive().with_deadline(Duration::ZERO);
+        let tickets: Vec<_> =
+            (0..4).map(|_| engine.submit_with(Bindings::new(), class).unwrap()).collect();
+        let mut shed = 0u64;
+        for t in tickets {
+            let err = t.wait().unwrap_err();
+            match err.downcast_ref::<ServeError>() {
+                Some(ServeError::Shed { reason: ShedReason::DeadlineAtDequeue, priority }) => {
+                    assert_eq!(*priority, Priority::Interactive);
+                    shed += 1;
+                }
+                other => panic!("expected DeadlineAtDequeue shed, got {other:?}"),
+            }
+        }
+        let report = engine.shutdown();
+        assert_eq!(shed, 4);
+        assert_eq!(report.submitted, 4);
+        assert_eq!(report.shed, 4);
+        assert_eq!(report.shed_deadline_dequeue, 4);
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+        assert!((report.shed_rate - 1.0).abs() < 1e-12);
+        // The interactive lane gets a QoS row even though nothing
+        // completed, and the summary prints the QoS block.
+        assert_eq!(report.per_priority.len(), 1);
+        assert_eq!(report.per_priority[0].priority, Priority::Interactive);
+        assert_eq!(report.per_priority[0].shed, 4);
+        assert!(report.summary().contains("qos: 4 submitted, 4 shed"), "{}", report.summary());
+    }
+
+    /// An unmeetable deadline (predicted cost alone exceeds it) sheds
+    /// at submit: the caller gets the typed error straight back and no
+    /// ticket ever enters the queue.
+    #[test]
+    fn doomed_deadline_sheds_at_submit() {
+        let plan = Arc::new(crate::coordinator::TaskGraph::new().compile().unwrap());
+        let config =
+            ServeConfig::with_workers(1).with_admission(AdmissionConfig::new(1e6));
+        let engine = ServingEngine::start(plan, config).unwrap();
+        let class = RequestClass::standard().with_deadline(Duration::from_millis(1));
+        let err = engine.submit_with(Bindings::new(), class).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServeError>(),
+                Some(ServeError::Shed { reason: ShedReason::DeadlineAtSubmit, .. })
+            ),
+            "{err}"
+        );
+        // No deadline: admitted and served normally despite the huge
+        // predicted cost.
+        let ok = engine.submit_with(Bindings::new(), RequestClass::background()).unwrap();
+        ok.wait().unwrap();
+        let report = engine.shutdown();
+        assert_eq!(report.submitted, 2);
+        assert_eq!(report.shed, 1);
+        assert_eq!(report.shed_deadline_submit, 1);
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+        // Mixed lanes (standard shed + background served): both rows.
+        assert_eq!(report.per_priority.len(), 2);
+    }
+
+    /// With admission enabled the engine grows shed/estimate gauges;
+    /// without it the legacy single gauge is unchanged.
+    #[test]
+    fn admission_gauges_appear_only_when_enabled() {
+        let plan = Arc::new(crate::coordinator::TaskGraph::new().compile().unwrap());
+        let engine = ServingEngine::start(
+            Arc::clone(&plan),
+            ServeConfig::with_workers(1).with_admission(AdmissionConfig::new(250.0)),
+        )
+        .unwrap();
+        let gauges = engine.gauges();
+        let names: Vec<_> = gauges.iter().map(|g| g.name().to_string()).collect();
+        assert_eq!(
+            names,
+            vec!["serve.queue_depth", "serve.shed_depth", "serve.admission_estimate_us"]
+        );
+        // The estimate gauge starts at exactly the predicted launch
+        // cost (no wait observations yet).
+        assert_eq!(engine.admission().unwrap().estimate_us(), 250.0);
+        drop(engine);
+        let engine = ServingEngine::start(plan, ServeConfig::with_workers(1)).unwrap();
+        assert_eq!(engine.gauges().len(), 1, "no admission -> legacy gauge set");
+        assert!(engine.admission().is_none());
+    }
+
+    /// Shutdown under load: every accepted request's ticket resolves —
+    /// drained (served) or shed — never a dropped reply sender. The
+    /// accounting invariant holds exactly.
+    #[test]
+    fn shutdown_under_load_resolves_every_ticket() {
+        let plan = Arc::new(crate::coordinator::TaskGraph::new().compile().unwrap());
+        let config = ServeConfig { queue_depth: 64, ..ServeConfig::with_workers(2) };
+        let engine = ServingEngine::start(plan, config).unwrap();
+        let tickets: Vec<_> =
+            (0..48).map(|_| engine.submit(Bindings::new()).unwrap()).collect();
+        // Shut down immediately with the queue still loaded: workers
+        // must drain everything already accepted.
+        let report = engine.shutdown();
+        let mut served = 0u64;
+        for t in tickets {
+            // Every ticket resolves (no hang, no disconnect): the
+            // zero-task plan cannot fail, so all must be Ok.
+            t.wait().unwrap();
+            served += 1;
+        }
+        assert_eq!(served, 48);
+        assert_eq!(report.submitted, 48);
+        assert_eq!(report.requests, 48, "a full drain serves everything accepted");
+        assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+    }
+
+    /// QoS block renders in summary + JSON with mixed-priority rows.
+    #[test]
+    fn qos_summary_and_json_rows() {
+        let r = ServeReport {
+            workers: 2,
+            requests: 90,
+            submitted: 100,
+            shed: 10,
+            shed_rate: 0.1,
+            shed_deadline_submit: 3,
+            shed_deadline_dequeue: 5,
+            shed_queue_full: 2,
+            per_priority: vec![
+                PriorityBreakdown {
+                    priority: Priority::Interactive,
+                    requests: 40,
+                    shed: 2,
+                    p50_ms: 1.0,
+                    p95_ms: 2.0,
+                    p99_ms: 3.0,
+                },
+                PriorityBreakdown {
+                    priority: Priority::Background,
+                    requests: 50,
+                    shed: 8,
+                    p50_ms: 5.0,
+                    p95_ms: 9.0,
+                    p99_ms: 12.0,
+                },
+            ],
+            ..Default::default()
+        };
+        let text = r.summary();
+        assert!(text.contains("qos: 100 submitted, 10 shed (10.0%)"), "{text}");
+        assert!(text.contains("3 deadline@submit, 5 deadline@dequeue, 2 queue-full"), "{text}");
+        assert!(text.contains("interactive: 40 served, 2 shed"), "{text}");
+        assert!(text.contains("background: 50 served, 8 shed"), "{text}");
+        let v = Value::parse(&r.to_json().to_json_pretty(2)).unwrap();
+        assert_eq!(v.get("submitted").as_u64(), Some(100));
+        assert_eq!(v.get("shed").as_u64(), Some(10));
+        assert!((v.get("shed_rate").as_f64().unwrap() - 0.1).abs() < 1e-12);
+        let rows = v.get("per_priority").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("priority").as_str(), Some("interactive"));
+        assert_eq!(rows[1].get("shed").as_u64(), Some(8));
+        // A quiet legacy report prints no QoS block.
+        let quiet = ServeReport { requests: 5, submitted: 5, ..Default::default() };
+        assert!(!quiet.summary().contains("qos:"), "{}", quiet.summary());
     }
 }

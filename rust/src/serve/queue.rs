@@ -1,12 +1,40 @@
-//! A bounded MPMC queue (Mutex + Condvar; crossbeam is not available
-//! offline). The serving engine's admission queue: producers block when
-//! the queue is full (backpressure instead of unbounded memory growth),
-//! workers block when it is empty, and `close()` drains gracefully —
-//! pending items are still handed out, then `pop` returns `None`.
+//! Bounded MPMC queues (Mutex + Condvar; crossbeam is not available
+//! offline) for the serving path.
+//!
+//! [`BoundedQueue`] is the plain FIFO admission queue: producers block
+//! when the queue is full (backpressure instead of unbounded memory
+//! growth), workers block when it is empty, and `close()` drains
+//! gracefully — pending items are still handed out, then `pop` returns
+//! `None`. [`PriorityQueue`] layers the QoS lanes on top: one FIFO per
+//! [`Priority`], strict-priority dequeue with a configurable
+//! anti-starvation credit for the `Background` lane, and a
+//! non-blocking `try_push` so admission control can shed on overload
+//! instead of blocking the submitter.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
+
+use super::admission::Priority;
+
+/// Queue construction was handed a zero capacity. A zero-capacity
+/// bounded queue could never accept a push — producers would block
+/// forever on a `not_full` signal that cannot come — so both queue
+/// types reject it at construction instead of minting a dead queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("queue capacity must be at least 1 (a zero-capacity queue can never accept a push)")]
+pub struct CapacityError;
+
+/// Outcome of a failed non-blocking push ([`PriorityQueue::try_push`]).
+/// Either way the rejected item comes back to the caller.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue is at capacity right now (overload — the admission
+    /// layer turns this into a `queue-full` shed).
+    Full(T),
+    /// The queue is closed (shutdown racing a submit).
+    Closed(T),
+}
 
 /// Outcome of a deadline-bounded dequeue ([`BoundedQueue::pop_deadline`]).
 #[derive(Debug, PartialEq, Eq)]
@@ -24,7 +52,15 @@ struct State<T> {
     closed: bool,
 }
 
-/// Bounded multi-producer / multi-consumer queue.
+/// Bounded multi-producer / multi-consumer FIFO queue.
+///
+/// # Capacity invariant
+///
+/// `capacity >= 1`, enforced at construction: [`BoundedQueue::new`]
+/// returns [`CapacityError`] for a zero bound rather than constructing
+/// a queue that can never accept a push. Every constructed queue can
+/// therefore always make progress — a producer blocked in `push` is
+/// waiting on a consumer or a `close()`, never on an impossibility.
 pub struct BoundedQueue<T> {
     state: Mutex<State<T>>,
     not_empty: Condvar,
@@ -33,14 +69,19 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
-    pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0, "queue capacity must be positive");
-        Self {
+    /// Build a queue bounded at `capacity` items. Rejects `capacity ==
+    /// 0` with a typed [`CapacityError`] (see the capacity invariant on
+    /// the type).
+    pub fn new(capacity: usize) -> Result<Self, CapacityError> {
+        if capacity == 0 {
+            return Err(CapacityError);
+        }
+        Ok(Self {
             state: Mutex::new(State { items: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity,
-        }
+        })
     }
 
     pub fn capacity(&self) -> usize {
@@ -125,6 +166,183 @@ impl<T> BoundedQueue<T> {
     }
 }
 
+struct PrioState<T> {
+    /// One FIFO per lane, indexed by `Priority::index()` (0 = highest).
+    lanes: [VecDeque<T>; Priority::COUNT],
+    closed: bool,
+    /// Consecutive pops that bypassed a waiting `Background` item —
+    /// the anti-starvation ledger.
+    bypassed: u64,
+}
+
+impl<T> PrioState<T> {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// Bounded MPMC queue with strict-priority lanes and an anti-starvation
+/// credit.
+///
+/// Dequeue scans lanes highest-priority first (`Interactive` →
+/// `Standard` → `Background`). Pure strict priority would let a
+/// sustained higher-priority flood starve `Background` forever, so the
+/// queue keeps a bypass ledger: every pop that skips a waiting
+/// `Background` item increments it, and once it reaches
+/// `starvation_credit` the next pop serves `Background` out of order
+/// and resets the ledger. `starvation_credit == 0` disables the guard.
+///
+/// # Capacity invariant
+///
+/// `capacity >= 1` (the bound covers all lanes together), enforced at
+/// construction exactly like [`BoundedQueue`]: [`PriorityQueue::new`]
+/// returns [`CapacityError`] for a zero bound.
+pub struct PriorityQueue<T> {
+    state: Mutex<PrioState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    starvation_credit: u64,
+}
+
+impl<T> PriorityQueue<T> {
+    /// Build a priority queue bounded at `capacity` items across all
+    /// lanes. Rejects `capacity == 0` with a typed [`CapacityError`].
+    pub fn new(capacity: usize, starvation_credit: u64) -> Result<Self, CapacityError> {
+        if capacity == 0 {
+            return Err(CapacityError);
+        }
+        Ok(Self {
+            state: Mutex::new(PrioState {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                closed: false,
+                bypassed: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            starvation_credit,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items queued across all lanes.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue into `priority`'s lane, blocking while the queue is
+    /// full. Returns the item back as `Err` if the queue was closed.
+    pub fn push(&self, priority: Priority, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.len() < self.capacity {
+                st.lanes[priority.index()].push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking enqueue: fails fast with [`PushError::Full`] when
+    /// the queue is at capacity (the admission layer sheds instead of
+    /// blocking the submitter) or [`PushError::Closed`] after shutdown.
+    pub fn try_push(&self, priority: Priority, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.lanes[priority.index()].push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next item by lane priority (see the type docs for the
+    /// starvation guard), blocking while all lanes are empty. Returns
+    /// `None` once the queue is closed *and* fully drained.
+    pub fn pop(&self) -> Option<(Priority, T)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(hit) = Self::take(&mut st, self.starvation_credit) {
+                self.not_full.notify_one();
+                return Some(hit);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Deadline-bounded [`pop`](PriorityQueue::pop) (the batching
+    /// engine's window former).
+    pub fn pop_deadline(&self, deadline: Instant) -> Popped<(Priority, T)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(hit) = Self::take(&mut st, self.starvation_credit) {
+                self.not_full.notify_one();
+                return Popped::Item(hit);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain what is
+    /// left and then see `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Lane selection under the lock: strict priority, except that once
+    /// `credit` consecutive pops have bypassed a waiting `Background`
+    /// item, `Background` is served out of order and the ledger resets.
+    fn take(st: &mut PrioState<T>, credit: u64) -> Option<(Priority, T)> {
+        if credit > 0 && st.bypassed >= credit && !st.lanes[Priority::Background.index()].is_empty()
+        {
+            st.bypassed = 0;
+            let item = st.lanes[Priority::Background.index()].pop_front().unwrap();
+            return Some((Priority::Background, item));
+        }
+        for priority in Priority::ALL {
+            if let Some(item) = st.lanes[priority.index()].pop_front() {
+                match priority {
+                    Priority::Background => st.bypassed = 0,
+                    _ if !st.lanes[Priority::Background.index()].is_empty() => st.bypassed += 1,
+                    _ => {}
+                }
+                return Some((priority, item));
+            }
+        }
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,8 +351,19 @@ mod tests {
     use std::thread;
 
     #[test]
+    fn zero_capacity_rejected_with_typed_error() {
+        assert_eq!(BoundedQueue::<u64>::new(0).err(), Some(CapacityError));
+        assert_eq!(PriorityQueue::<u64>::new(0, 4).err(), Some(CapacityError));
+        // And the error converts into anyhow like every other typed
+        // error on the serving path.
+        let err: anyhow::Error = CapacityError.into();
+        assert!(err.to_string().contains("capacity must be at least 1"), "{err}");
+        assert!(BoundedQueue::<u64>::new(1).is_ok(), "the minimum capacity constructs");
+    }
+
+    #[test]
     fn fifo_within_capacity() {
-        let q = BoundedQueue::new(4);
+        let q = BoundedQueue::new(4).unwrap();
         q.push(1).unwrap();
         q.push(2).unwrap();
         assert_eq!(q.len(), 2);
@@ -145,7 +374,7 @@ mod tests {
 
     #[test]
     fn close_drains_then_none() {
-        let q = BoundedQueue::new(4);
+        let q = BoundedQueue::new(4).unwrap();
         q.push(7).unwrap();
         q.close();
         assert_eq!(q.pop(), Some(7), "pending item survives close");
@@ -155,7 +384,7 @@ mod tests {
 
     #[test]
     fn backpressure_blocks_producer_until_consumed() {
-        let q = Arc::new(BoundedQueue::new(1));
+        let q = Arc::new(BoundedQueue::new(1).unwrap());
         q.push(0u64).unwrap();
         let produced = Arc::new(AtomicU64::new(0));
         let t = {
@@ -179,7 +408,7 @@ mod tests {
     #[test]
     fn pop_deadline_item_closed_timeout() {
         use std::time::{Duration, Instant};
-        let q = BoundedQueue::new(2);
+        let q = BoundedQueue::new(2).unwrap();
         q.push(3).unwrap();
         // Item already queued: returned immediately, deadline unused.
         assert_eq!(q.pop_deadline(Instant::now() + Duration::from_secs(5)), Popped::Item(3));
@@ -198,7 +427,7 @@ mod tests {
     #[test]
     fn pop_deadline_wakes_on_push() {
         use std::time::{Duration, Instant};
-        let q = Arc::new(BoundedQueue::new(2));
+        let q = Arc::new(BoundedQueue::new(2).unwrap());
         let t = {
             let q = Arc::clone(&q);
             thread::spawn(move || q.pop_deadline(Instant::now() + Duration::from_secs(10)))
@@ -213,7 +442,7 @@ mod tests {
         const PRODUCERS: usize = 4;
         const CONSUMERS: usize = 4;
         const PER_PRODUCER: usize = 250;
-        let q = Arc::new(BoundedQueue::new(8));
+        let q = Arc::new(BoundedQueue::new(8).unwrap());
         let sum = Arc::new(AtomicU64::new(0));
         let count = Arc::new(AtomicU64::new(0));
         let consumers: Vec<_> = (0..CONSUMERS)
@@ -249,5 +478,104 @@ mod tests {
         let n = (PRODUCERS * PER_PRODUCER) as u64;
         assert_eq!(count.load(Ordering::Relaxed), n);
         assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn priority_pop_serves_lanes_strictly() {
+        let q = PriorityQueue::new(8, 0).unwrap();
+        q.push(Priority::Background, 30u64).unwrap();
+        q.push(Priority::Standard, 20).unwrap();
+        q.push(Priority::Interactive, 10).unwrap();
+        q.push(Priority::Interactive, 11).unwrap();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop(), Some((Priority::Interactive, 10)), "FIFO within the lane");
+        assert_eq!(q.pop(), Some((Priority::Interactive, 11)));
+        assert_eq!(q.pop(), Some((Priority::Standard, 20)));
+        assert_eq!(q.pop(), Some((Priority::Background, 30)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn starvation_credit_forces_background_through_a_flood() {
+        // Credit 2: every third pop under a sustained interactive
+        // flood must serve the waiting background item.
+        let q = PriorityQueue::new(16, 2).unwrap();
+        q.push(Priority::Background, 100u64).unwrap();
+        q.push(Priority::Background, 101).unwrap();
+        for i in 0..6 {
+            q.push(Priority::Interactive, i).unwrap();
+        }
+        let order: Vec<_> = (0..8).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(
+            order,
+            vec![
+                (Priority::Interactive, 0),
+                (Priority::Interactive, 1),
+                (Priority::Background, 100), // credit exhausted after 2 bypasses
+                (Priority::Interactive, 2),
+                (Priority::Interactive, 3),
+                (Priority::Background, 101),
+                (Priority::Interactive, 4),
+                (Priority::Interactive, 5),
+            ]
+        );
+    }
+
+    #[test]
+    fn zero_credit_disables_the_starvation_guard() {
+        let q = PriorityQueue::new(16, 0).unwrap();
+        q.push(Priority::Background, 99u64).unwrap();
+        for i in 0..5 {
+            q.push(Priority::Interactive, i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some((Priority::Interactive, i)));
+        }
+        assert_eq!(q.pop(), Some((Priority::Background, 99)), "served only once lanes drain");
+    }
+
+    #[test]
+    fn try_push_full_closed_and_success() {
+        let q = PriorityQueue::new(2, 4).unwrap();
+        assert!(q.try_push(Priority::Standard, 1u64).is_ok());
+        assert!(q.try_push(Priority::Interactive, 2).is_ok());
+        // At capacity (the bound spans all lanes): Full, item returned.
+        assert_eq!(q.try_push(Priority::Interactive, 3), Err(PushError::Full(3)));
+        assert_eq!(q.pop(), Some((Priority::Interactive, 2)));
+        assert!(q.try_push(Priority::Background, 4).is_ok(), "slot freed by the pop");
+        q.close();
+        assert_eq!(q.try_push(Priority::Standard, 5), Err(PushError::Closed(5)));
+        // Close still drains.
+        assert_eq!(q.pop(), Some((Priority::Standard, 1)));
+        assert_eq!(q.pop(), Some((Priority::Background, 4)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn priority_pop_deadline_and_close() {
+        use std::time::{Duration, Instant};
+        let q = PriorityQueue::new(4, 4).unwrap();
+        q.push(Priority::Standard, 7u64).unwrap();
+        assert_eq!(
+            q.pop_deadline(Instant::now() + Duration::from_secs(5)),
+            Popped::Item((Priority::Standard, 7))
+        );
+        assert_eq!(q.pop_deadline(Instant::now() + Duration::from_millis(10)), Popped::TimedOut);
+        q.close();
+        assert_eq!(q.pop_deadline(Instant::now() + Duration::from_secs(5)), Popped::Closed);
+    }
+
+    #[test]
+    fn priority_blocking_push_wakes_on_pop() {
+        let q = Arc::new(PriorityQueue::new(1, 4).unwrap());
+        q.push(Priority::Standard, 0u64).unwrap();
+        let t = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(Priority::Interactive, 1).unwrap())
+        };
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some((Priority::Standard, 0)));
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some((Priority::Interactive, 1)));
     }
 }

@@ -17,17 +17,21 @@ use crate::metrics::Metrics;
 use crate::substrate::json::{s, Value};
 
 /// Schema tag stamped into every snapshot under the `"schema"` key.
-/// v3 adds the continuous-profiling surface: the `"profile"` kind
-/// (`jacc profile --json`), per-device ledger gauges on
-/// `ServeReport::to_json` per-device rows (`ledger_used`,
-/// `ledger_headroom`, `ledger_evictions`, `ledger_dedup_hits`), and the
-/// embedded `ProfileStore` / `CalibrationReport` documents.
-pub const SCHEMA: &str = "jacc.metrics.v3";
+/// v4 adds the overload-protection surface: `ServeReport::to_json`
+/// gains `submitted`, `shed`, `shed_rate`, the per-reason shed
+/// counters (`shed_deadline_submit` / `shed_deadline_dequeue` /
+/// `shed_queue_full`) and `per_priority` lane rows, the `serve.shed.*`
+/// counter namespace rides in attached metrics scopes, and
+/// `serve-bench --open-loop` runs embed an `open_loop` document.
+pub const SCHEMA: &str = "jacc.metrics.v4";
 
-/// The pre-profiling schema tag (micro-batching era);
+/// The pre-QoS schema tag (continuous-profiling era);
 /// [`MetricsSnapshot::validate`] still accepts documents written by
 /// older binaries (each revision only added fields — none changed
 /// meaning).
+pub const SCHEMA_V3: &str = "jacc.metrics.v3";
+
+/// The micro-batching-era schema tag, still accepted on read.
 pub const SCHEMA_V2: &str = "jacc.metrics.v2";
 
 /// The original schema tag, still accepted on read.
@@ -74,14 +78,14 @@ impl MetricsSnapshot {
             .with_context(|| format!("writing snapshot to {}", path.display()))
     }
 
-    /// Validate a parsed document as a snapshot: the schema tag (v3 or
-    /// the backward-compatible v2/v1) and a kind must be present.
+    /// Validate a parsed document as a snapshot: the schema tag (v4 or
+    /// the backward-compatible v3/v2/v1) and a kind must be present.
     pub fn validate(v: &Value) -> Result<()> {
         let schema = v.get("schema").as_str().context("snapshot missing schema tag")?;
         anyhow::ensure!(
-            schema == SCHEMA || schema == SCHEMA_V2 || schema == SCHEMA_V1,
+            schema == SCHEMA || schema == SCHEMA_V3 || schema == SCHEMA_V2 || schema == SCHEMA_V1,
             "unexpected snapshot schema {schema:?} \
-             (want {SCHEMA:?} or legacy {SCHEMA_V2:?}/{SCHEMA_V1:?})"
+             (want {SCHEMA:?} or legacy {SCHEMA_V3:?}/{SCHEMA_V2:?}/{SCHEMA_V1:?})"
         );
         v.get("kind").as_str().context("snapshot missing kind")?;
         Ok(())
@@ -122,12 +126,14 @@ mod tests {
 
     #[test]
     fn validate_accepts_current_and_legacy_schemas() {
+        let v4 = Value::parse(r#"{"schema": "jacc.metrics.v4", "kind": "x"}"#).unwrap();
+        MetricsSnapshot::validate(&v4).expect("current schema validates");
         let v3 = Value::parse(r#"{"schema": "jacc.metrics.v3", "kind": "x"}"#).unwrap();
-        MetricsSnapshot::validate(&v3).expect("current schema validates");
+        MetricsSnapshot::validate(&v3).expect("legacy v3 snapshots still validate");
         let v2 = Value::parse(r#"{"schema": "jacc.metrics.v2", "kind": "x"}"#).unwrap();
         MetricsSnapshot::validate(&v2).expect("legacy v2 snapshots still validate");
         let v1 = Value::parse(r#"{"schema": "jacc.metrics.v1", "kind": "x"}"#).unwrap();
         MetricsSnapshot::validate(&v1).expect("legacy v1 snapshots still validate");
-        assert_eq!(SCHEMA, "jacc.metrics.v3");
+        assert_eq!(SCHEMA, "jacc.metrics.v4");
     }
 }

@@ -1,0 +1,295 @@
+//! Overload-protection and QoS robustness tests across all three
+//! serving engines: a panicking worker surfaces as the typed
+//! `ServeError::WorkerLost` (never a hang, never a dropped reply),
+//! shutdown under load resolves every accepted ticket, and admission
+//! sheds carry typed errors with exact accounting
+//! (`served + errors + shed == submitted`). Requires `make artifacts`
+//! (tiny profile); every test no-ops gracefully when artifacts are
+//! absent.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+use jacc::api::*;
+use jacc::batch::{BatchConfig, BatchSpec, BatchingEngine};
+use jacc::pool::{DevicePool, PoolConfig, PoolEngine};
+use jacc::serve::{
+    AdmissionConfig, Priority, RequestClass, ServeConfig, ServeError, ServingEngine, ShedReason,
+};
+
+fn device() -> Option<Arc<DeviceContext>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Cuda::get_device(0).unwrap().create_device_context().unwrap())
+}
+
+/// A vector_add plan whose two inputs are rebound per launch.
+fn vector_add_plan(dev: &Arc<DeviceContext>) -> (CompiledGraph, usize) {
+    let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+    let n = entry.inputs[0].shape[0];
+    let mut task = Task::create(
+        "vector_add",
+        Dims(entry.iteration_space.clone()),
+        Dims(entry.workgroup.clone()),
+    )
+    .unwrap();
+    task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+    let mut g = TaskGraph::new().with_profile("tiny");
+    g.execute_task_on(task, dev).unwrap();
+    (g.compile().unwrap(), n)
+}
+
+fn bindings_for(n: usize, seed: usize) -> Bindings {
+    let x: Vec<f32> = (0..n).map(|i| ((i + seed * 7) % 13) as f32 * 0.5).collect();
+    let y: Vec<f32> = (0..n).map(|i| ((i * 3 + seed) % 11) as f32 * 0.25).collect();
+    Bindings::new()
+        .bind("x", HostValue::f32(vec![n], x))
+        .bind("y", HostValue::f32(vec![n], y))
+}
+
+/// Poison a device's memory-ledger mutex: the next launch that locks
+/// it panics inside the worker thread — the injected "worker died
+/// while holding the reply sender" failure.
+fn poison_ledger(dev: &Arc<DeviceContext>) {
+    let dev = Arc::clone(dev);
+    let _ = catch_unwind(AssertUnwindSafe(move || {
+        let _guard = dev.memory.lock().unwrap();
+        panic!("inject: poison the ledger so the next launch panics");
+    }));
+}
+
+fn assert_worker_lost(err: &anyhow::Error) {
+    assert!(
+        matches!(err.downcast_ref::<ServeError>(), Some(ServeError::WorkerLost)),
+        "expected typed WorkerLost, got: {err}"
+    );
+}
+
+/// A panicking launch inside a serving worker must answer the request
+/// with the typed `WorkerLost` — not kill the worker, not hang the
+/// caller — and the engine keeps answering subsequent requests.
+#[test]
+fn worker_panic_is_typed_worker_lost_single_engine() {
+    let Some(dev) = device() else { return };
+    let (plan, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    plan.launch(&bindings_for(n, 0)).unwrap();
+    poison_ledger(&dev);
+
+    let engine = ServingEngine::start(Arc::clone(&plan), ServeConfig::with_workers(2)).unwrap();
+    let tickets: Vec<_> =
+        (0..6).map(|r| engine.submit(bindings_for(n, r)).unwrap()).collect();
+    for t in tickets {
+        let err = t.wait().unwrap_err();
+        assert_worker_lost(&err);
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.submitted, 6);
+    assert_eq!(report.errors, 6, "every panicked launch counts as an error");
+    assert_eq!(report.requests, 0);
+    assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+}
+
+/// The pool lane loop contains a panicking replica the same way: the
+/// ticket resolves with the typed error instead of stranding queued
+/// requests behind a dead lane thread.
+#[test]
+fn worker_panic_is_typed_worker_lost_pool_engine() {
+    let Some(_dev) = device() else { return };
+    let pool = DevicePool::open(2).unwrap();
+    let (g, n) = {
+        let dev = pool.device(0);
+        let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+        let n = entry.inputs[0].shape[0];
+        let mut task = Task::create(
+            "vector_add",
+            Dims(entry.iteration_space.clone()),
+            Dims(entry.workgroup.clone()),
+        )
+        .unwrap();
+        task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+        let mut g = TaskGraph::new().with_profile("tiny");
+        g.execute_task_on(task, dev).unwrap();
+        (g, n)
+    };
+    let replicated = pool.compile(&g).unwrap();
+    let engine =
+        PoolEngine::start(&replicated, PoolConfig::with_workers_per_device(1)).unwrap();
+    for d in 0..pool.len() {
+        poison_ledger(pool.device(d));
+    }
+    let tickets: Vec<_> =
+        (0..4).map(|r| engine.submit(bindings_for(n, r)).unwrap()).collect();
+    for t in tickets {
+        let err = t.wait().unwrap_err();
+        assert_worker_lost(&err);
+    }
+    // Dropping (not shutdown) joins the lanes without sampling the
+    // poisoned ledgers into breakdown rows.
+    drop(engine);
+}
+
+/// A panicking fused launch drops every member's reply sender at once;
+/// each ticket still resolves with the typed error and the launcher
+/// thread survives to serve the next batch.
+#[test]
+fn worker_panic_is_typed_worker_lost_batch_engine() {
+    let Some(dev) = device() else { return };
+    let (plan, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    plan.launch(&bindings_for(n, 0)).unwrap();
+    poison_ledger(&dev);
+
+    let spec = BatchSpec::new().concat("x", 0).concat("y", 0);
+    let rows = (n / 4).max(1);
+    let engine = BatchingEngine::start(
+        Arc::clone(&plan),
+        &spec,
+        BatchConfig::new(2, Duration::from_millis(20)),
+    )
+    .unwrap();
+    let member = |r: usize| {
+        let x: Vec<f32> = (0..rows).map(|i| (i + r) as f32).collect();
+        let y: Vec<f32> = vec![1.0; rows];
+        Bindings::new()
+            .bind("x", HostValue::f32(vec![rows], x))
+            .bind("y", HostValue::f32(vec![rows], y))
+    };
+    let tickets: Vec<_> = (0..4).map(|r| engine.submit(member(r)).unwrap()).collect();
+    for t in tickets {
+        let err = t.wait().unwrap_err();
+        assert_worker_lost(&err);
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.submitted, 4);
+    assert_eq!(report.errors, 4);
+    assert_eq!(report.requests, 0);
+    assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+}
+
+/// Shutdown with the pool queues still loaded: every accepted ticket
+/// resolves (drained, never a dropped reply sender) and the accounting
+/// invariant holds exactly.
+#[test]
+fn pool_shutdown_under_load_resolves_every_ticket() {
+    let Some(_dev) = device() else { return };
+    let pool = DevicePool::open(2).unwrap();
+    let (g, n) = {
+        let dev = pool.device(0);
+        let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+        let n = entry.inputs[0].shape[0];
+        let mut task = Task::create(
+            "vector_add",
+            Dims(entry.iteration_space.clone()),
+            Dims(entry.workgroup.clone()),
+        )
+        .unwrap();
+        task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+        let mut g = TaskGraph::new().with_profile("tiny");
+        g.execute_task_on(task, dev).unwrap();
+        (g, n)
+    };
+    let replicated = pool.compile(&g).unwrap();
+    let engine =
+        PoolEngine::start(&replicated, PoolConfig::with_workers_per_device(1)).unwrap();
+    let tickets: Vec<_> =
+        (0..24).map(|r| engine.submit(bindings_for(n, r)).unwrap()).collect();
+    let report = engine.shutdown();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(report.submitted, 24);
+    assert_eq!(report.requests, 24, "a full drain serves everything accepted");
+    assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+}
+
+/// Same contract for the batching engine: members still queued or
+/// forming at shutdown are sealed, launched and answered.
+#[test]
+fn batch_shutdown_under_load_resolves_every_ticket() {
+    let Some(dev) = device() else { return };
+    let (plan, n) = vector_add_plan(&dev);
+    let plan = Arc::new(plan);
+    plan.launch(&bindings_for(n, 0)).unwrap();
+    let spec = BatchSpec::new().concat("x", 0).concat("y", 0);
+    let rows = (n / 4).max(1);
+    let engine = BatchingEngine::start(
+        Arc::clone(&plan),
+        &spec,
+        BatchConfig::new(4, Duration::from_millis(50)),
+    )
+    .unwrap();
+    let member = |r: usize| {
+        let x: Vec<f32> = (0..rows).map(|i| (i + r) as f32).collect();
+        let y: Vec<f32> = vec![1.0; rows];
+        Bindings::new()
+            .bind("x", HostValue::f32(vec![rows], x))
+            .bind("y", HostValue::f32(vec![rows], y))
+    };
+    let tickets: Vec<_> = (0..16).map(|r| engine.submit(member(r)).unwrap()).collect();
+    let report = engine.shutdown();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(report.submitted, 16);
+    assert_eq!(report.requests, 16, "a full drain serves everything accepted");
+    assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+}
+
+/// Admission threads through the pool router: a zero deadline admits
+/// at submit (estimate 0 is not over budget 0) but any real queue wait
+/// busts it at dequeue — every ticket gets the typed shed error, and
+/// the per-lane shed counts roll up into exact aggregate accounting.
+#[test]
+fn pool_admission_sheds_with_typed_error_and_exact_accounting() {
+    let Some(_dev) = device() else { return };
+    let pool = DevicePool::open(2).unwrap();
+    let (g, n) = {
+        let dev = pool.device(0);
+        let entry = dev.runtime.manifest().find("vector_add", "pallas", "tiny").unwrap();
+        let n = entry.inputs[0].shape[0];
+        let mut task = Task::create(
+            "vector_add",
+            Dims(entry.iteration_space.clone()),
+            Dims(entry.workgroup.clone()),
+        )
+        .unwrap();
+        task.set_parameters(vec![Param::input("x"), Param::input("y")]);
+        let mut g = TaskGraph::new().with_profile("tiny");
+        g.execute_task_on(task, dev).unwrap();
+        (g, n)
+    };
+    let replicated = pool.compile(&g).unwrap();
+    let mut config =
+        PoolConfig::with_workers_per_device(1).with_admission(AdmissionConfig::new(0.0));
+    // Deep queues: every request must reach dequeue, not bounce off a
+    // full lane as a QueueFull shed.
+    config.queue_depth = 64;
+    let engine = PoolEngine::start(&replicated, config).unwrap();
+    let class = RequestClass::interactive().with_deadline(Duration::ZERO);
+    let tickets: Vec<_> = (0..6)
+        .map(|r| engine.submit_with(bindings_for(n, r), class).unwrap())
+        .collect();
+    for t in tickets {
+        let err = t.wait().unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::Shed { reason: ShedReason::DeadlineAtDequeue, priority }) => {
+                assert_eq!(*priority, Priority::Interactive);
+            }
+            other => panic!("expected DeadlineAtDequeue shed, got {other:?}"),
+        }
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.submitted, 6);
+    assert_eq!(report.shed, 6);
+    assert_eq!(report.shed_deadline_dequeue, 6);
+    assert_eq!(report.requests, 0);
+    assert_eq!(report.requests + report.errors + report.shed, report.submitted);
+    assert_eq!(report.per_priority.len(), 1);
+    assert_eq!(report.per_priority[0].priority, Priority::Interactive);
+    assert_eq!(report.per_priority[0].shed, 6);
+}
